@@ -1,0 +1,106 @@
+//! Tables 4 & 5 (paper Appendix B) — ablations of Algorithm 1 on the VP
+//! and VE CIFAR-stand-in models:
+//!
+//!   no change [q=2, r=0.9, delta(x', x'_prev)]
+//!   delta(x') only (Eq. 4)            | no extrapolation (EM proposal)
+//!   q = inf                           | r in {0.5, 0.8, 1.0}
+//!   Lamba integration variants (r=0.5; +extrapolation; q=inf; theta=0.8)
+//!
+//! Run with --process vp (Table 4) or --process ve (Table 5); default both.
+//!
+//!   cargo bench --offline --bench ablations -- [--samples N] [--process vp|ve]
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gofast::bench::Table;
+use gofast::runtime::Runtime;
+use gofast::solvers::adaptive::{AdaptiveOpts, ErrNorm};
+use gofast::solvers::lamba::LambaOpts;
+use gofast::solvers::Spec;
+use gofast::Result;
+
+fn main() -> Result<()> {
+    let args = bench_args();
+    let samples = args.usize_or("samples", 48)?;
+    let eps = args.f64_or("eps-rel", 0.02)?; // paper App. B ran the tight setting
+    let processes = args.str_list_or("process", &["vp", "ve"]);
+
+    let rt = Runtime::new(&artifacts())?;
+    let mut table = Table::new(&["change", "process", "IS*", "FID*", "NFE", "reject%"]);
+
+    for pname in &processes {
+        let model = rt.model(pname)?;
+        let (net, refstats) = ref_stats(&rt, &model)?;
+        println!("== ablations on {pname} (Table {}) ==", if pname == "vp" { 4 } else { 5 });
+
+        let base = AdaptiveOpts { eps_rel: eps, ..Default::default() };
+        let rows: Vec<(&str, Spec)> = vec![
+            ("no change [q=2, r=0.9, delta(x',x'prev)]", Spec::AdaptiveComposed(base)),
+            (
+                "delta(x')",
+                Spec::AdaptiveComposed(AdaptiveOpts { prev_in_delta: false, ..base }),
+            ),
+            (
+                "no extrapolation (Euler-Maruyama)",
+                Spec::AdaptiveComposed(AdaptiveOpts { extrapolate: false, ..base }),
+            ),
+            (
+                "q = inf",
+                Spec::AdaptiveComposed(AdaptiveOpts { norm: ErrNorm::LInf, ..base }),
+            ),
+            ("r = 0.5", Spec::AdaptiveComposed(AdaptiveOpts { r: 0.5, ..base })),
+            ("r = 0.8", Spec::AdaptiveComposed(AdaptiveOpts { r: 0.8, ..base })),
+            ("r = 1.0", Spec::AdaptiveComposed(AdaptiveOpts { r: 1.0, ..base })),
+            (
+                "r=0.5, Lamba integration",
+                Spec::Lamba(LambaOpts { eps_rel: eps, norm: ErrNorm::L2, ..Default::default() }),
+            ),
+            (
+                "r=0.5, Lamba integration, extrapolation",
+                Spec::Lamba(LambaOpts {
+                    eps_rel: eps,
+                    norm: ErrNorm::L2,
+                    extrapolate: true,
+                    ..Default::default()
+                }),
+            ),
+            (
+                "r=0.5, Lamba integration, q=inf",
+                Spec::Lamba(LambaOpts { eps_rel: eps, ..Default::default() }),
+            ),
+            (
+                "r=0.5, Lamba integration, q=inf, theta=0.8",
+                Spec::Lamba(LambaOpts { eps_rel: eps, safety: 0.8, ..Default::default() }),
+            ),
+        ];
+        for (label, spec) in rows {
+            let out = generate(&model, &spec, samples, 5)?;
+            let (fid, is) = eval_fid(&net, &refstats, &out)?;
+            let steps_attempted = if out.mean_nfe.is_nan() {
+                f64::NAN
+            } else {
+                100.0 * out.rejections as f64
+                    / ((out.mean_nfe * samples as f64 / 2.0) + out.rejections as f64)
+            };
+            println!(
+                "  {label:<44} IS* {:>5} FID* {:>8} NFE {:>7}",
+                fmt_f(is, 2),
+                fmt_f(fid, 2),
+                fmt_f(out.mean_nfe, 0)
+            );
+            table.row(vec![
+                label.to_string(),
+                pname.clone(),
+                fmt_f(is, 2),
+                fmt_f(fid, 2),
+                fmt_f(out.mean_nfe, 0),
+                fmt_f(steps_attempted, 1),
+            ]);
+        }
+    }
+    println!("\n=== Tables 4-5 (eps_rel={eps}, {samples} samples) ===\n");
+    print!("{}", table.render());
+    write_outputs("ablations", &table)
+}

@@ -1,0 +1,139 @@
+//! Shared bench plumbing: artifact discovery, reference FID* stats,
+//! batched generation with a `Spec`, CSV output under bench_out/.
+//! Included by every paper-table bench via `#[path = "common.rs"]`.
+
+#![allow(dead_code)]
+
+use gofast::bench::Table;
+use gofast::cli::Args;
+use gofast::metrics::{self, FeatureStats};
+use gofast::rng::Rng;
+use gofast::runtime::{FidNet, Model, Runtime};
+use gofast::solvers::{Ctx, SolveOpts, Spec};
+use gofast::tensor::{read_f32_file, Tensor};
+use gofast::{json, Context, Result};
+use std::path::PathBuf;
+
+pub fn bench_args() -> Args {
+    // cargo bench passes "--bench" through; drop it and any bare positionals
+    let items = std::env::args().skip(1).filter(|a| a != "--bench");
+    Args::parse(items).expect("parsing bench args")
+}
+
+pub fn artifacts() -> PathBuf {
+    let p = PathBuf::from("artifacts");
+    if !p.join("manifest.json").exists() {
+        eprintln!("bench skipped: artifacts/manifest.json missing (run `make artifacts`)");
+        std::process::exit(0);
+    }
+    p
+}
+
+/// Reference feature stats for a model's eval dataset split.
+pub fn ref_stats<'rt>(rt: &'rt Runtime, model: &Model) -> Result<(FidNet<'rt>, FeatureStats)> {
+    let fid_name = if model.meta.dim == 768 { "fid16" } else { "fid32" };
+    let net = rt.fid_net(fid_name).context("fid net missing — rerun `make artifacts`")?;
+    let dataset = &model.meta.dataset;
+    let meta = json::parse_file(&rt.root().join("data").join(format!("{dataset}.meta.json")))?;
+    let n_total = meta.req("n")?.as_usize()?;
+    let n = n_total.min(2048);
+    let all = read_f32_file(
+        &rt.root().join("data").join(format!("{dataset}.bin")),
+        &[n_total, model.meta.dim],
+    )?;
+    let refs = Tensor::from_vec(&[n, model.meta.dim], all.data[..n * model.meta.dim].to_vec())?;
+    let (f, _) = metrics::extract_features(&net, &refs)?;
+    Ok((net, metrics::feature_stats(&f)))
+}
+
+pub struct GenOutcome {
+    pub images_unit: Tensor,
+    pub mean_nfe: f64,
+    pub rejections: u64,
+    pub wall_s: f64,
+    pub converged: bool,
+}
+
+/// Generate `samples` images with `spec`, batching at the model's widest
+/// bucket. A solver error (divergence guard) is reported as
+/// converged=false rather than aborting the table.
+pub fn generate(model: &Model, spec: &Spec, samples: usize, seed: u64) -> Result<GenOutcome> {
+    let bucket = *model.buckets("adaptive_step").last().unwrap();
+    let ctx = Ctx::new(model, bucket, SolveOpts::default());
+    let mut rng = Rng::new(seed);
+    let mut images = Tensor::zeros(&[samples, model.meta.dim]);
+    let mut nfe_sum = 0u64;
+    let mut rejections = 0u64;
+    let t0 = std::time::Instant::now();
+    let mut done = 0;
+    while done < samples {
+        let take = (samples - done).min(bucket);
+        match spec.run(&ctx, &mut rng) {
+            Ok(res) => {
+                for i in 0..take {
+                    images.row_mut(done + i).copy_from_slice(res.x.row(i));
+                }
+                nfe_sum += res.nfe_per_sample[..take].iter().sum::<u64>();
+                rejections += res.rejections;
+                done += take;
+            }
+            Err(e) => {
+                eprintln!("  [{}] did not converge: {e:#}", spec.name());
+                return Ok(GenOutcome {
+                    images_unit: images,
+                    mean_nfe: f64::NAN,
+                    rejections,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                    converged: false,
+                });
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    model.meta.process().to_unit_range(&mut images);
+    Ok(GenOutcome {
+        images_unit: images,
+        mean_nfe: nfe_sum as f64 / samples as f64,
+        rejections,
+        wall_s: wall,
+        converged: true,
+    })
+}
+
+/// Evaluate FID*/IS* for an outcome.
+pub fn eval_fid(
+    net: &FidNet,
+    refstats: &FeatureStats,
+    out: &GenOutcome,
+) -> Result<(f64, f64)> {
+    if !out.converged {
+        return Ok((f64::NAN, f64::NAN));
+    }
+    metrics::evaluate(net, &out.images_unit, refstats)
+}
+
+pub fn write_outputs(name: &str, table: &Table) -> Result<()> {
+    std::fs::create_dir_all("bench_out")?;
+    let csv_path = format!("bench_out/{name}.csv");
+    std::fs::write(&csv_path, table.to_csv())?;
+    println!("\n[{name}] csv -> {csv_path}");
+    Ok(())
+}
+
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    if v.is_nan() {
+        "diverged".to_string()
+    } else {
+        format!("{v:.prec$}")
+    }
+}
+
+/// Round a mean NFE to the nearest EM step count with the same budget.
+pub fn em_steps_for_nfe(nfe: f64) -> usize {
+    (nfe.round() as usize).saturating_sub(1).max(2) // minus the denoise eval
+}
+
+pub fn variants_present(rt: &Runtime, wanted: &[&str]) -> Vec<String> {
+    let have = rt.variant_names();
+    wanted.iter().filter(|w| have.iter().any(|h| h == *w)).map(|s| s.to_string()).collect()
+}

@@ -1,0 +1,67 @@
+//! Figure 1 — FID* vs NFE for the adaptive solver (sweeping eps_rel)
+//! against Euler–Maruyama at the matched budget: the paper's headline
+//! plot. Emits a CSV series and an ASCII rendering.
+//!
+//!   cargo bench --offline --bench figure1 -- [--samples N] [--model vp]
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gofast::bench::{ascii_plot, Table};
+use gofast::runtime::Runtime;
+use gofast::solvers::{adaptive::AdaptiveOpts, Spec};
+use gofast::Result;
+
+fn main() -> Result<()> {
+    let args = bench_args();
+    let samples = args.usize_or("samples", 48)?;
+    let models = args.str_list_or("model", &["vp", "ve"]);
+    let eps_list = args.f64_list_or("eps", &[0.01, 0.02, 0.05, 0.10, 0.50])?;
+
+    let rt = Runtime::new(&artifacts())?;
+    let mut table = Table::new(&["model", "series", "eps_rel", "NFE", "FID*"]);
+
+    for mname in &models {
+        let Ok(model) = rt.model(mname) else { continue };
+        let (net, refstats) = ref_stats(&rt, &model)?;
+        let mut ours: Vec<(f64, f64)> = Vec::new();
+        let mut em: Vec<(f64, f64)> = Vec::new();
+        println!("== figure 1 series on {mname} ==");
+        for &eps in &eps_list {
+            let out =
+                generate(&model, &Spec::Adaptive(AdaptiveOpts::with_eps_rel(eps)), samples, 21)?;
+            let (fid, _) = eval_fid(&net, &refstats, &out)?;
+            println!("  ours eps={eps:<5} NFE {:>6} FID* {}", fmt_f(out.mean_nfe, 0), fmt_f(fid, 2));
+            if fid.is_finite() {
+                ours.push((out.mean_nfe, fid));
+            }
+            table.row(vec![
+                mname.clone(),
+                "ours".into(),
+                format!("{eps}"),
+                fmt_f(out.mean_nfe, 0),
+                fmt_f(fid, 2),
+            ]);
+            let out_em = generate(&model, &Spec::Em(em_steps_for_nfe(out.mean_nfe)), samples, 21)?;
+            let (fid_em, _) = eval_fid(&net, &refstats, &out_em)?;
+            println!("  em   @same   NFE {:>6} FID* {}", fmt_f(out_em.mean_nfe, 0), fmt_f(fid_em, 2));
+            if fid_em.is_finite() {
+                em.push((out_em.mean_nfe, fid_em));
+            }
+            table.row(vec![
+                mname.clone(),
+                "euler-maruyama".into(),
+                format!("{eps}"),
+                fmt_f(out_em.mean_nfe, 0),
+                fmt_f(fid_em, 2),
+            ]);
+        }
+        ours.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        em.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        println!("\nFID* (y) vs NFE (x) — {mname}:");
+        println!("{}", ascii_plot(&[("ours", ours), ("euler-maruyama", em)], 64, 16));
+    }
+    print!("{}", table.render());
+    write_outputs("figure1", &table)
+}

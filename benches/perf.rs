@@ -1,0 +1,104 @@
+//! Microbenchmarks for the §Perf pass (EXPERIMENTS.md):
+//!   * per-call latency of every program by batch bucket;
+//!   * literal path (theta re-uploaded each call) vs buffer path
+//!     (device-resident theta) — the L3 execution-mode lever;
+//!   * fused adaptive_step vs composed (2x score + host math) — the L2
+//!     graph-granularity lever;
+//!   * host-side overhead of one engine iteration (noise gen + copies).
+//!
+//!   cargo bench --offline --bench perf -- [--iters 20] [--model vp]
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gofast::bench::{summarize, time_iters, Table};
+use gofast::rng::Rng;
+use gofast::runtime::Runtime;
+use gofast::solvers::{adaptive, Ctx, SolveOpts};
+use gofast::tensor::Tensor;
+use gofast::Result;
+
+fn main() -> Result<()> {
+    let args = bench_args();
+    let iters = args.usize_or("iters", 10)?;
+    let model_name = args.str_or("model", "vp");
+    let rt = Runtime::new(&artifacts())?;
+    let model = rt.model(&model_name)?;
+    let dim = model.meta.dim;
+    let mut table = Table::new(&["benchmark", "bucket", "p50", "mean", "per-sample"]);
+
+    // --- program call latency, literal vs buffer path -----------------------
+    for program in ["score", "em_step", "adaptive_step"] {
+        for &b in model.buckets(program) {
+            let x = Tensor::zeros(&[b, dim]);
+            let t = Tensor { shape: vec![b], data: vec![0.5; b] };
+            let h = Tensor { shape: vec![b], data: vec![0.01; b] };
+            let z = Tensor::zeros(&[b, dim]);
+            let ea = Tensor::scalar(0.0078);
+            let er = Tensor { shape: vec![b], data: vec![0.05; b] };
+            let inputs: Vec<&Tensor> = match program {
+                "score" => vec![&x, &t],
+                "em_step" => vec![&x, &t, &h, &z],
+                _ => vec![&x, &x, &t, &h, &z, &ea, &er],
+            };
+            for (mode, fused) in [("literal", false), ("buffer", true)] {
+                let times = time_iters(3, iters, || {
+                    model.exec(program, b, &inputs, fused).expect("exec");
+                });
+                let s = summarize(times);
+                table.row(vec![
+                    format!("{program} ({mode})"),
+                    format!("{b}"),
+                    gofast::bench::fmt_duration(s.p50),
+                    gofast::bench::fmt_duration(s.mean),
+                    gofast::bench::fmt_duration(s.p50 / b as f64),
+                ]);
+            }
+        }
+    }
+
+    // --- fused vs composed full solve ----------------------------------------
+    let bucket = *model.buckets("adaptive_step").last().unwrap();
+    let ctx = Ctx::new(&model, bucket, SolveOpts::default());
+    let opts = adaptive::AdaptiveOpts::with_eps_rel(0.05);
+    for (label, composed) in [("solve fused", false), ("solve composed", true)] {
+        let times = time_iters(1, 3, || {
+            let mut rng = Rng::new(5);
+            if composed {
+                adaptive::run_composed(&ctx, &mut rng, &opts).expect("solve");
+            } else {
+                adaptive::run_fused(&ctx, &mut rng, &opts).expect("solve");
+            }
+        });
+        let s = summarize(times);
+        table.row(vec![
+            label.into(),
+            format!("{bucket}"),
+            gofast::bench::fmt_duration(s.p50),
+            gofast::bench::fmt_duration(s.mean),
+            gofast::bench::fmt_duration(s.p50 / bucket as f64),
+        ]);
+    }
+
+    // --- host-side overhead: noise + copies for one engine iteration ---------
+    {
+        let mut rng = Rng::new(1);
+        let mut z = Tensor::zeros(&[bucket, dim]);
+        let times = time_iters(3, iters, || {
+            rng.fill_normal(&mut z.data);
+        });
+        let s = summarize(times);
+        table.row(vec![
+            "host: batch noise gen".into(),
+            format!("{bucket}"),
+            gofast::bench::fmt_duration(s.p50),
+            gofast::bench::fmt_duration(s.mean),
+            gofast::bench::fmt_duration(s.p50 / bucket as f64),
+        ]);
+    }
+
+    println!("\n=== perf microbenchmarks (model {model_name}) ===\n");
+    print!("{}", table.render());
+    write_outputs("perf", &table)
+}

@@ -1,0 +1,117 @@
+//! Serving benchmark (the L3 contribution; not a paper table):
+//! continuous batching vs request-exclusive ("static") batching under a
+//! Poisson trace with mixed request sizes and tolerances.
+//!
+//! Static baseline = each request is solved as its own batch run (the
+//! paper's §3.1.5 "wait for all images to converge" batch semantics);
+//! continuous = converged lanes backfilled from the queue.
+//!
+//!   cargo bench --offline --bench serving -- [--rate 2] [--duration 12]
+//!       [--bucket 16] [--model vp]
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gofast::bench::{summarize, Table};
+use gofast::coordinator::{Engine, EngineConfig};
+use gofast::rng::Rng;
+use gofast::workload::{poisson_trace, TraceConfig};
+use gofast::Result;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args = bench_args();
+    let model = args.str_or("model", "vp");
+    let rate = args.f64_or("rate", 2.0)?;
+    let duration = args.f64_or("duration", 8.0)?;
+    let bucket = args.usize_or("bucket", 16)?;
+    let _ = artifacts();
+
+    let mut table = Table::new(&[
+        "mode", "requests", "samples", "p50_s", "p95_s", "samples/s", "occupancy", "score_evals",
+    ]);
+
+    for mode in ["continuous", "static"] {
+        let mut cfg = EngineConfig::new("artifacts", &model);
+        cfg.bucket = bucket;
+        let engine = Engine::start(cfg)?;
+        let client = engine.client();
+
+        let mut rng = Rng::new(41);
+        let trace = poisson_trace(
+            &mut rng,
+            &TraceConfig {
+                duration_s: duration,
+                rate_rps: rate,
+                n_choices: vec![1, 2, 4, 8],
+                eps_choices: vec![0.02, 0.05, 0.1],
+            },
+        );
+        println!("== {mode} mode: {} requests over {duration}s ==", trace.len());
+        let lat = Arc::new(Mutex::new(Vec::<f64>::new()));
+        let done_samples = Arc::new(Mutex::new(0usize));
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        // In static mode, serialize requests through a mutex to emulate
+        // one-request-at-a-time exclusive batching on the same engine.
+        let static_gate = Arc::new(Mutex::new(()));
+        for item in trace {
+            let wait = item.at_s - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+            }
+            let client = client.clone();
+            let lat = lat.clone();
+            let done_samples = done_samples.clone();
+            let gate = static_gate.clone();
+            let is_static = mode == "static";
+            handles.push(std::thread::spawn(move || {
+                let t_req = Instant::now();
+                let r = if is_static {
+                    let _g = gate.lock().unwrap();
+                    client.generate(item.n, item.eps_rel, item.seed)
+                } else {
+                    client.generate(item.n, item.eps_rel, item.seed)
+                };
+                if r.is_ok() {
+                    lat.lock().unwrap().push(t_req.elapsed().as_secs_f64());
+                    *done_samples.lock().unwrap() += item.n;
+                }
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let stats = engine.client().stats()?;
+        let lat = lat.lock().unwrap().clone();
+        let n_samples = *done_samples.lock().unwrap();
+        if lat.is_empty() {
+            println!("  no requests completed!");
+            continue;
+        }
+        let s = summarize(lat);
+        println!(
+            "  p50 {:.2}s p95 {:.2}s throughput {:.2} samples/s occupancy {:.2}",
+            s.p50,
+            s.p95,
+            n_samples as f64 / elapsed,
+            stats.mean_occupancy
+        );
+        table.row(vec![
+            mode.into(),
+            format!("{}", s.n),
+            format!("{n_samples}"),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p95),
+            format!("{:.2}", n_samples as f64 / elapsed),
+            format!("{:.2}", stats.mean_occupancy),
+            format!("{}", stats.score_evals),
+        ]);
+    }
+    println!("\n=== serving: continuous vs static batching ===\n");
+    print!("{}", table.render());
+    write_outputs("serving", &table)
+}

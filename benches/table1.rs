@@ -1,0 +1,124 @@
+//! Table 1 — NFE / FID* on the CIFAR-10 stand-in (synth-cifar, 16x16)
+//! across VP, VP-deep, VE, VE-deep:
+//!
+//!   Reverse-Diffusion & Langevin | Euler-Maruyama | DDIM (VP)
+//!   Ours @ eps_rel in {0.01, 0.02, 0.05, 0.10, 0.50}
+//!   Euler-Maruyama / DDIM at the same NFE | Probability Flow (ODE)
+//!
+//! Scaled testbed defaults: --samples 128, --em-steps 500 (the paper
+//! used 50K samples and N=1000 on V100s; orderings are what transfer —
+//! see DESIGN.md §2). Raise with flags for slower, tighter runs.
+//!
+//!   cargo bench --offline --bench table1 -- [--samples N] [--em-steps N]
+//!       [--variants vp,ve] [--eps 0.01,...]
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gofast::bench::Table;
+use gofast::runtime::Runtime;
+use gofast::solvers::{adaptive::AdaptiveOpts, prob_flow::OdeOpts, Spec};
+use gofast::Result;
+
+fn main() -> Result<()> {
+    let args = bench_args();
+    let samples = args.usize_or("samples", 64)?;
+    let em_steps = args.usize_or("em-steps", 300)?;
+    let eps_list = args.f64_list_or("eps", &[0.01, 0.02, 0.05, 0.10, 0.50])?;
+    let variants = args.str_list_or("variants", &["vp", "vp_deep", "ve", "ve_deep"]);
+
+    let rt = Runtime::new(&artifacts())?;
+    let variants = variants_present(&rt, &variants.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut table = Table::new(&["method", "variant", "NFE", "FID*", "IS*", "wall_s"]);
+
+    for vname in &variants {
+        let model = rt.model(vname)?;
+        let (net, refstats) = ref_stats(&rt, &model)?;
+        let is_vp = model.meta.sde_kind == "vp";
+        println!("== variant {vname} ({samples} samples) ==");
+
+        let mut rows: Vec<(String, Spec)> = Vec::new();
+        // baselines (paper: RDL best for VE, EM best for VP)
+        rows.push(("reverse-diffusion+langevin".into(), Spec::Rdl(em_steps / 2)));
+        rows.push(("euler-maruyama".into(), Spec::Em(em_steps)));
+        if is_vp {
+            rows.push(("ddim".into(), Spec::Ddim(em_steps)));
+        }
+        // run the static rows
+        let mut our_nfes: Vec<(f64, f64)> = Vec::new();
+        for (label, spec) in rows {
+            let out = generate(&model, &spec, samples, 7)?;
+            let (fid, is) = eval_fid(&net, &refstats, &out)?;
+            println!("  {label:<34} NFE {:>7} FID* {}", fmt_f(out.mean_nfe, 0), fmt_f(fid, 2));
+            table.row(vec![
+                label,
+                vname.clone(),
+                fmt_f(out.mean_nfe, 0),
+                fmt_f(fid, 2),
+                fmt_f(is, 2),
+                format!("{:.1}", out.wall_s),
+            ]);
+        }
+        // ours at each tolerance + matched-budget baselines
+        for &eps in &eps_list {
+            let out =
+                generate(&model, &Spec::Adaptive(AdaptiveOpts::with_eps_rel(eps)), samples, 7)?;
+            let (fid, is) = eval_fid(&net, &refstats, &out)?;
+            println!(
+                "  ours(eps={eps:<5}) {:<19} NFE {:>7} FID* {}",
+                "",
+                fmt_f(out.mean_nfe, 0),
+                fmt_f(fid, 2)
+            );
+            table.row(vec![
+                format!("ours(eps_rel={eps})"),
+                vname.clone(),
+                fmt_f(out.mean_nfe, 0),
+                fmt_f(fid, 2),
+                fmt_f(is, 2),
+                format!("{:.1}", out.wall_s),
+            ]);
+            our_nfes.push((eps, out.mean_nfe));
+            // EM with the same NFE budget
+            let n_match = em_steps_for_nfe(out.mean_nfe);
+            let out_em = generate(&model, &Spec::Em(n_match), samples, 7)?;
+            let (fid_em, is_em) = eval_fid(&net, &refstats, &out_em)?;
+            table.row(vec![
+                format!("euler-maruyama(same NFE as eps={eps})"),
+                vname.clone(),
+                fmt_f(out_em.mean_nfe, 0),
+                fmt_f(fid_em, 2),
+                fmt_f(is_em, 2),
+                format!("{:.1}", out_em.wall_s),
+            ]);
+            if is_vp {
+                let out_dd = generate(&model, &Spec::Ddim(n_match), samples, 7)?;
+                let (fid_dd, is_dd) = eval_fid(&net, &refstats, &out_dd)?;
+                table.row(vec![
+                    format!("ddim(same NFE as eps={eps})"),
+                    vname.clone(),
+                    fmt_f(out_dd.mean_nfe, 0),
+                    fmt_f(fid_dd, 2),
+                    fmt_f(is_dd, 2),
+                    format!("{:.1}", out_dd.wall_s),
+                ]);
+            }
+        }
+        // probability flow ODE
+        let out = generate(&model, &Spec::Ode(OdeOpts::default()), samples, 7)?;
+        let (fid, is) = eval_fid(&net, &refstats, &out)?;
+        println!("  probability-flow (ODE)             NFE {:>7} FID* {}", fmt_f(out.mean_nfe, 0), fmt_f(fid, 2));
+        table.row(vec![
+            "probability-flow".into(),
+            vname.clone(),
+            fmt_f(out.mean_nfe, 0),
+            fmt_f(fid, 2),
+            fmt_f(is, 2),
+            format!("{:.1}", out.wall_s),
+        ]);
+    }
+    println!("\n=== Table 1 (scaled: {samples} samples, EM baseline {em_steps} steps) ===\n");
+    print!("{}", table.render());
+    write_outputs("table1", &table)
+}

@@ -1,0 +1,68 @@
+//! Table 2 — NFE / FID* at "high" resolution (synth-church / synth-ffhq,
+//! 32x32 = 3072-dim, the paper's 256^2 axis scaled to this testbed):
+//! RDL, EM, ours @ eps_rel, EM @ same NFE, probability flow.
+//!
+//! The paper's headline here: EM cannot converge on moderate budgets in
+//! high dimension while the adaptive solver can, and probability flow
+//! falls apart entirely.
+//!
+//!   cargo bench --offline --bench table2 -- [--samples N] [--em-steps N]
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gofast::bench::Table;
+use gofast::runtime::Runtime;
+use gofast::solvers::{adaptive::AdaptiveOpts, prob_flow::OdeOpts, Spec};
+use gofast::Result;
+
+fn main() -> Result<()> {
+    let args = bench_args();
+    let samples = args.usize_or("samples", 32)?;
+    let em_steps = args.usize_or("em-steps", 400)?;
+    let eps_list = args.f64_list_or("eps", &[0.01, 0.02, 0.05, 0.10])?;
+    let variants = args.str_list_or("variants", &["ve_church", "ve_ffhq"]);
+
+    let rt = Runtime::new(&artifacts())?;
+    let variants = variants_present(&rt, &variants.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut table = Table::new(&["method", "variant", "NFE", "FID*", "IS*", "wall_s"]);
+
+    for vname in &variants {
+        let model = rt.model(vname)?;
+        let (net, refstats) = ref_stats(&rt, &model)?;
+        println!("== variant {vname} ({samples} samples) ==");
+        let run = |label: String, spec: Spec, table: &mut Table| -> Result<f64> {
+            let out = generate(&model, &spec, samples, 11)?;
+            let (fid, is) = eval_fid(&net, &refstats, &out)?;
+            println!("  {label:<40} NFE {:>7} FID* {}", fmt_f(out.mean_nfe, 0), fmt_f(fid, 2));
+            table.row(vec![
+                label,
+                vname.clone(),
+                fmt_f(out.mean_nfe, 0),
+                fmt_f(fid, 2),
+                fmt_f(is, 2),
+                format!("{:.1}", out.wall_s),
+            ]);
+            Ok(out.mean_nfe)
+        };
+        run("reverse-diffusion+langevin".into(), Spec::Rdl(em_steps), &mut table)?;
+        run("euler-maruyama".into(), Spec::Em(em_steps), &mut table)?;
+        for &eps in &eps_list {
+            let nfe = run(
+                format!("ours(eps_rel={eps})"),
+                Spec::Adaptive(AdaptiveOpts::with_eps_rel(eps)),
+                &mut table,
+            )?;
+            run(
+                format!("euler-maruyama(same NFE as eps={eps})"),
+                Spec::Em(em_steps_for_nfe(nfe)),
+                &mut table,
+            )?;
+        }
+        run("probability-flow".into(), Spec::Ode(OdeOpts::default()), &mut table)?;
+    }
+    println!("\n=== Table 2 (scaled: {samples} samples, EM baseline {em_steps} steps) ===\n");
+    print!("{}", table.render());
+    write_outputs("table2", &table)
+}

@@ -1,0 +1,91 @@
+//! Table 3 (paper Appendix A) — off-the-shelf SDE solvers vs EM on the
+//! VP model: relative wall-clock speed at comparable quality, and
+//! convergence behaviour. Reproduces the qualitative finding that
+//! higher-order / generic adaptive schemes are slower than fixed-step EM
+//! on score-based SDEs, with Lamba-style low-order adaptivity the only
+//! competitive family.
+//!
+//!   cargo bench --offline --bench table3 -- [--samples N] [--em-steps N]
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gofast::bench::Table;
+use gofast::runtime::Runtime;
+use gofast::solvers::{lamba::LambaOpts, table3::Sra1Opts, Spec};
+use gofast::Result;
+
+fn main() -> Result<()> {
+    let args = bench_args();
+    let samples = args.usize_or("samples", 32)?;
+    let em_steps = args.usize_or("em-steps", 300)?;
+    let model_name = args.str_or("model", "vp");
+
+    let rt = Runtime::new(&artifacts())?;
+    let model = rt.model(&model_name)?;
+    let (net, refstats) = ref_stats(&rt, &model)?;
+
+    let rows: Vec<(&str, Spec)> = vec![
+        ("euler-maruyama (baseline)", Spec::Em(em_steps)),
+        ("euler-heun (strong 0.5, fixed)", Spec::EulerHeun(em_steps)),
+        ("sra1 (strong 1.5, adaptive)", Spec::Sra1(Sra1Opts::default())),
+        (
+            "sra1 (tight tol)",
+            Spec::Sra1(Sra1Opts { eps_rel: 0.01, ..Default::default() }),
+        ),
+        (
+            "lamba-em (atol default)",
+            Spec::Lamba(LambaOpts::default()),
+        ),
+        (
+            "lamba-em (rtol 1e-3-like)",
+            Spec::Lamba(LambaOpts { eps_rel: 0.001, ..Default::default() }),
+        ),
+        ("milstein (adaptive; == EM here)", Spec::Milstein(0.05)),
+        ("issem (implicit split-step)", Spec::Issem(em_steps)),
+    ];
+
+    let mut table = Table::new(&[
+        "method", "strong-order", "adaptive", "NFE", "FID*", "wall_s", "speed vs EM",
+    ]);
+    let meta: Vec<(&str, &str)> = vec![
+        ("0.5", "no"),
+        ("0.5", "no"),
+        ("1.5", "yes"),
+        ("1.5", "yes"),
+        ("0.5", "yes"),
+        ("0.5", "yes"),
+        ("1.0", "yes"),
+        ("0.5", "no"),
+    ];
+    let mut em_wall = None;
+    for ((label, spec), (order, adap)) in rows.iter().zip(meta) {
+        let out = generate(&model, spec, samples, 3)?;
+        let (fid, _) = eval_fid(&net, &refstats, &out)?;
+        if em_wall.is_none() {
+            em_wall = Some(out.wall_s);
+        }
+        let rel = em_wall.unwrap() / out.wall_s;
+        let speed = if !out.converged {
+            "did not converge".to_string()
+        } else if rel >= 1.0 {
+            format!("{rel:.2}x faster")
+        } else {
+            format!("{:.2}x slower", 1.0 / rel)
+        };
+        println!("{label:<34} NFE {:>7} FID* {:>8} {speed}", fmt_f(out.mean_nfe, 0), fmt_f(fid, 2));
+        table.row(vec![
+            label.to_string(),
+            order.into(),
+            adap.into(),
+            fmt_f(out.mean_nfe, 0),
+            fmt_f(fid, 2),
+            format!("{:.1}", out.wall_s),
+            speed,
+        ]);
+    }
+    println!("\n=== Table 3 (model {model_name}, {samples} samples) ===\n");
+    print!("{}", table.render());
+    write_outputs("table3", &table)
+}

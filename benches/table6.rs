@@ -1,0 +1,53 @@
+//! Table 6 (paper Appendix E) — Inception Score* on the CIFAR-10
+//! stand-in for every method and variant: RDL, EM, ours @ eps grid,
+//! probability flow.
+//!
+//!   cargo bench --offline --bench table6 -- [--samples N]
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gofast::bench::Table;
+use gofast::runtime::Runtime;
+use gofast::solvers::{adaptive::AdaptiveOpts, prob_flow::OdeOpts, Spec};
+use gofast::Result;
+
+fn main() -> Result<()> {
+    let args = bench_args();
+    let samples = args.usize_or("samples", 64)?;
+    let em_steps = args.usize_or("em-steps", 300)?;
+    let variants = args.str_list_or("variants", &["vp", "vp_deep", "ve", "ve_deep"]);
+
+    let rt = Runtime::new(&artifacts())?;
+    let variants = variants_present(&rt, &variants.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let methods: Vec<(String, fn(usize) -> Spec, f64)> = Vec::new();
+    drop(methods);
+
+    let mut table = Table::new(&["method", "variant", "IS*"]);
+    for vname in &variants {
+        let model = rt.model(vname)?;
+        let (net, refstats) = ref_stats(&rt, &model)?;
+        println!("== IS* on {vname} ==");
+        let mut specs: Vec<(String, Spec)> = vec![
+            ("reverse-diffusion+langevin".into(), Spec::Rdl(em_steps / 2)),
+            ("euler-maruyama".into(), Spec::Em(em_steps)),
+        ];
+        for eps in [0.01, 0.02, 0.05, 0.10, 0.50] {
+            specs.push((
+                format!("ours(eps_rel={eps})"),
+                Spec::Adaptive(AdaptiveOpts::with_eps_rel(eps)),
+            ));
+        }
+        specs.push(("probability-flow".into(), Spec::Ode(OdeOpts::default())));
+        for (label, spec) in specs {
+            let out = generate(&model, &spec, samples, 13)?;
+            let (_, is) = eval_fid(&net, &refstats, &out)?;
+            println!("  {label:<32} IS* {}", fmt_f(is, 2));
+            table.row(vec![label, vname.clone(), fmt_f(is, 2)]);
+        }
+    }
+    println!("\n=== Table 6 ({samples} samples) ===\n");
+    print!("{}", table.render());
+    write_outputs("table6", &table)
+}

@@ -1,0 +1,49 @@
+//! Quickstart: load a trained model, sample a batch with the paper's
+//! adaptive solver (Algorithm 1), report NFE, and write an image grid.
+//!
+//!   cargo run --release --offline --example quickstart -- [model] [eps_rel]
+
+use gofast::rng::Rng;
+use gofast::runtime::Runtime;
+use gofast::solvers::{adaptive, Ctx, SolveOpts};
+use gofast::tensor::save_image_grid;
+use gofast::Result;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model_name = args.get(1).map(String::as_str).unwrap_or("vp");
+    let eps_rel: f64 = args.get(2).map(|s| s.parse().unwrap()).unwrap_or(0.05);
+
+    // 1. runtime over the AOT artifacts (python never runs here)
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let model = rt.model(model_name)?;
+    println!(
+        "loaded {}: {} process, {}x{} images, {} params",
+        model.meta.name, model.meta.sde_kind, model.meta.h, model.meta.w, model.meta.n_params
+    );
+
+    // 2. solve 16 reverse diffusions with per-sample adaptive steps
+    let ctx = Ctx::new(&model, 16, SolveOpts::default());
+    let mut rng = Rng::new(42);
+    let opts = adaptive::AdaptiveOpts::with_eps_rel(eps_rel);
+    let t0 = std::time::Instant::now();
+    let res = adaptive::run_fused(&ctx, &mut rng, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "eps_rel={eps_rel}: mean NFE {:.1} (min {} / max {}), {} rejections, {:.2}s",
+        res.mean_nfe(),
+        res.nfe_per_sample.iter().min().unwrap(),
+        res.max_nfe(),
+        res.rejections,
+        wall,
+    );
+
+    // 3. write the grid
+    let mut images = res.x;
+    model.meta.process().to_unit_range(&mut images);
+    save_image_grid(Path::new("quickstart.ppm"), &images, model.meta.h, model.meta.w, 4)?;
+    println!("wrote quickstart.ppm");
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! End-to-end serving driver (the DESIGN.md §5 validation run):
+//! starts the continuous-batching engine + TCP server in-process, replays
+//! a Poisson request trace with mixed sizes and tolerances through real
+//! TCP client connections, and reports latency / throughput / NFE /
+//! batch-occupancy. Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//!   cargo run --release --offline --example serve_and_load -- \
+//!       [--model vp] [--rate 2.0] [--duration 15] [--bucket 16]
+
+use gofast::bench::{fmt_duration, summarize};
+use gofast::cli::Args;
+use gofast::coordinator::{Engine, EngineConfig};
+use gofast::rng::Rng;
+use gofast::server::{serve, Client, ServerConfig};
+use gofast::tensor::save_image_grid;
+use gofast::workload::{poisson_trace, TraceConfig};
+use gofast::{Context, Result};
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    let model = args.str_or("model", "vp");
+    let rate = args.f64_or("rate", 2.0)?;
+    let duration = args.f64_or("duration", 15.0)?;
+    let bucket = args.usize_or("bucket", 16)?;
+
+    // --- server side ---------------------------------------------------------
+    let mut ecfg = EngineConfig::new("artifacts", &model);
+    ecfg.bucket = bucket;
+    let engine = Engine::start(ecfg).context("starting engine (run `make artifacts`)")?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    {
+        let client = engine.client();
+        std::thread::spawn(move || {
+            let _ = serve(
+                listener,
+                client,
+                ServerConfig { port: addr.port(), img_h: 16, img_w: 16, default_eps_rel: 0.05 },
+            );
+        });
+    }
+    println!("engine + server up on {addr} (model={model}, bucket={bucket})");
+
+    // --- workload -------------------------------------------------------------
+    let mut rng = Rng::new(7);
+    let trace = poisson_trace(
+        &mut rng,
+        &TraceConfig {
+            duration_s: duration,
+            rate_rps: rate,
+            n_choices: vec![1, 2, 4, 8],
+            eps_choices: vec![0.02, 0.05, 0.1],
+        },
+    );
+    println!(
+        "replaying {} requests over {duration}s (Poisson, {rate} req/s, mixed eps_rel)",
+        trace.len()
+    );
+
+    let lat = Arc::new(Mutex::new(Vec::<f64>::new()));
+    let nfes = Arc::new(Mutex::new(Vec::<u64>::new()));
+    let samples = Arc::new(Mutex::new(0usize));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for item in trace {
+        // open-loop replay: wait until the arrival time, then fire
+        let wait = item.at_s - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        let (lat, nfes, samples) = (lat.clone(), nfes.clone(), samples.clone());
+        let addr_s = addr.to_string();
+        handles.push(std::thread::spawn(move || {
+            let t_req = Instant::now();
+            let mut c = match Client::connect(&addr_s) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("connect failed: {e:#}");
+                    return;
+                }
+            };
+            match c.generate(item.n, item.eps_rel, item.seed, false) {
+                Ok(r) => {
+                    lat.lock().unwrap().push(t_req.elapsed().as_secs_f64());
+                    nfes.lock().unwrap().extend(r.nfe);
+                    *samples.lock().unwrap() += item.n;
+                }
+                Err(e) => eprintln!("request failed: {e:#}"),
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    // --- report ----------------------------------------------------------------
+    let lat = lat.lock().unwrap().clone();
+    let nfes = nfes.lock().unwrap().clone();
+    let n_samples = *samples.lock().unwrap();
+    let stats = summarize(lat);
+    let mean_nfe = nfes.iter().sum::<u64>() as f64 / nfes.len().max(1) as f64;
+    let srv = engine.client().stats()?;
+    println!("\n=== serve_and_load results ===");
+    println!("requests completed : {}", stats.n);
+    println!("samples generated  : {n_samples} ({:.2} samples/s)", n_samples as f64 / elapsed);
+    println!(
+        "request latency    : p50 {} p95 {} max {}",
+        fmt_duration(stats.p50),
+        fmt_duration(stats.p95),
+        fmt_duration(stats.max)
+    );
+    println!("mean NFE/sample    : {mean_nfe:.1}");
+    println!("engine steps       : {} ({} rejections)", srv.steps, srv.rejections);
+    println!("mean occupancy     : {:.2}/{bucket} slots", srv.mean_occupancy);
+    println!("score evals        : {}", srv.score_evals);
+
+    // grab one last batch of images for the record
+    let mut c = Client::connect(&addr.to_string())?;
+    let r = c.generate(16, 0.05, 12345, true)?;
+    save_image_grid(Path::new("serve_and_load.ppm"), &r.images, 16, 16, 4)?;
+    println!("wrote serve_and_load.ppm");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Tolerance sweep (the paper's one free knob, §5 Limitations): show the
+//! speed/quality trade-off by sweeping eps_rel and reporting NFE and, if
+//! the FID nets are built, FID*/IS* per setting — a miniature Figure 1.
+//!
+//!   cargo run --release --offline --example tolerance_sweep -- \
+//!       [--model vp] [--samples 128] [--eps 0.01,0.02,0.05,0.1,0.5]
+
+use gofast::bench::Table;
+use gofast::cli::Args;
+use gofast::metrics;
+use gofast::rng::Rng;
+use gofast::runtime::Runtime;
+use gofast::solvers::{adaptive, Ctx, SolveOpts};
+use gofast::tensor::{read_f32_file, Tensor};
+use gofast::{json, Result};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    let model_name = args.str_or("model", "vp");
+    let samples = args.usize_or("samples", 128)?;
+    let eps_list = args.f64_list_or("eps", &[0.01, 0.02, 0.05, 0.1, 0.5])?;
+
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let model = rt.model(&model_name)?;
+    let bucket = *model.buckets("adaptive_step").last().unwrap();
+    let ctx = Ctx::new(&model, bucket, SolveOpts::default());
+
+    // FID reference (optional — NFE-only sweep if nets are not built yet)
+    let fid_name = if model.meta.dim == 768 { "fid16" } else { "fid32" };
+    let fid_setup = rt.fid_net(fid_name).ok().and_then(|net| {
+        let meta = json::parse_file(Path::new(&format!(
+            "artifacts/data/{}.meta.json",
+            model.meta.dataset
+        )))
+        .ok()?;
+        let n = meta.get("n")?.as_usize().ok()?.min(2048);
+        let all = read_f32_file(
+            Path::new(&format!("artifacts/data/{}.bin", model.meta.dataset)),
+            &[meta.get("n")?.as_usize().ok()?, model.meta.dim],
+        )
+        .ok()?;
+        let refs =
+            Tensor::from_vec(&[n, model.meta.dim], all.data[..n * model.meta.dim].to_vec()).ok()?;
+        let (f, _) = metrics::extract_features(&net, &refs).ok()?;
+        Some((net, metrics::feature_stats(&f)))
+    });
+
+    let mut table = Table::new(&["eps_rel", "mean NFE", "reject%", "FID*", "IS*", "wall_s"]);
+    for &eps in &eps_list {
+        let mut rng = Rng::new(99);
+        let mut images = Tensor::zeros(&[samples, model.meta.dim]);
+        let mut nfe_sum = 0u64;
+        let mut rej = 0u64;
+        let mut attempts = 0u64;
+        let t0 = std::time::Instant::now();
+        let mut done = 0;
+        while done < samples {
+            let take = (samples - done).min(bucket);
+            let res =
+                adaptive::run_fused(&ctx, &mut rng, &adaptive::AdaptiveOpts::with_eps_rel(eps))?;
+            for i in 0..take {
+                images.row_mut(done + i).copy_from_slice(res.x.row(i));
+            }
+            nfe_sum += res.nfe_per_sample[..take].iter().sum::<u64>();
+            rej += res.rejections;
+            attempts += res.steps * bucket as u64;
+            done += take;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        model.meta.process().to_unit_range(&mut images);
+        let (fid_s, is_s) = match &fid_setup {
+            Some((net, refstats)) => {
+                let (fid, is) = metrics::evaluate(net, &images, refstats)?;
+                (format!("{fid:.2}"), format!("{is:.2}"))
+            }
+            None => ("-".into(), "-".into()),
+        };
+        table.row(vec![
+            format!("{eps}"),
+            format!("{:.1}", nfe_sum as f64 / samples as f64),
+            format!("{:.1}", 100.0 * rej as f64 / attempts.max(1) as f64),
+            fid_s,
+            is_s,
+            format!("{wall:.1}"),
+        ]);
+    }
+    println!("\nmodel={model_name} samples={samples}\n");
+    print!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,245 @@
+"""AOT compilation: lower every solver program to HLO *text* artifacts.
+
+One artifact per (model variant, program, batch bucket):
+
+  score          (theta, x[B,D], t[B])                          -> s[B,D]
+  adaptive_step  (theta, x, xprev, t[B], h[B], z[B,D],
+                  eps_abs[1], eps_rel[B])                       -> (x'', x', E2[B])
+  em_step        (theta, x, t[B], h[B], z[B,D])                 -> x_next
+  pc_step        (theta, x, t[B], h[B], z1, z2, snr[1])         -> x_next
+  ddim_step      (theta, x, t[B], tn[B])        [VP only]       -> x_next
+  ode_drift      (theta, x, t[B])                               -> dx/dt
+  denoise        (theta, x, t[B])                               -> x0_hat
+  fid_features   (theta_c, x[B,D])                              -> (feat, logits)
+
+Interchange is HLO TEXT, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published `xla` 0.1.6 crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+`adaptive_step` is the paper's Algorithm 1 step: both score evaluations,
+both integrators (EM proposal x' and stochastic-improved-Euler
+extrapolation x''), and the mixed-tolerance scaled-l2 error E2, fused in
+one executable — accept/reject and the step-size controller stay in the
+Rust coordinator. Per-sample t and h vectors implement §3.1.5.
+
+Run: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import fid_net, model
+from compile.kernels import em_update, err_norm
+
+SCORE_BUCKETS = (1, 16, 64)
+STEP_BUCKETS = (1, 16, 64)
+AUX_BUCKETS = (16, 64)
+FID_BUCKETS = (64,)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# --- program builders (closed over cfg/sde) -----------------------------------
+
+def make_programs(cfg: model.ModelCfg):
+    sde = cfg.sde
+
+    def score(flat, x, t):
+        return model.score(flat, x, t, cfg)
+
+    def rdp_drift(flat, x, t):
+        """Reverse-process deterministic term f(x,t) - g(t)^2 s(x,t)."""
+        g2 = sde.diffusion(t) ** 2
+        return sde.drift(x, t) - g2[:, None] * score(flat, x, t)
+
+    def em_step(flat, x, t, h, z):
+        # x_next = x - h*(f - g^2 s) + sqrt(h) g z       (reverse time)
+        return em_update(x, rdp_drift(flat, x, t), z, -h, jnp.sqrt(h) * sde.diffusion(t))
+
+    def adaptive_step(flat, x, xprev, t, h, z, ea, er):
+        d1 = rdp_drift(flat, x, t)
+        xp = em_update(x, d1, z, -h, jnp.sqrt(h) * sde.diffusion(t))
+        t2 = t - h
+        d2 = rdp_drift(flat, xp, t2)
+        xt = em_update(x, d2, z, -h, jnp.sqrt(h) * sde.diffusion(t2))
+        xpp = 0.5 * (xp + xt)  # stochastic improved Euler (Roberts 2012)
+        e2 = err_norm(xp, xpp, xprev, ea, er)
+        return xpp, xp, e2
+
+    def pc_step(flat, x, t, h, z1, z2, snr):
+        # predictor: reverse-diffusion (EM form); corrector: Langevin
+        x1 = em_step(flat, x, t, h, z1)
+        t2 = t - h
+        s = score(flat, x1, t2)
+        zn = jnp.sqrt(jnp.sum(z2 * z2, axis=1))
+        sn = jnp.sqrt(jnp.sum(s * s, axis=1)) + 1e-20
+        alpha = 2.0 * (snr[0] * zn / sn) ** 2
+        return em_update(x1, s, z2, alpha, jnp.sqrt(2.0 * alpha))
+
+    def ddim_step(flat, x, t, tn):
+        a_t, a_n = sde.alpha(t), sde.alpha(tn)
+        std_t, std_n = sde.marginal_std(t), sde.marginal_std(tn)
+        eps = model.apply_eps(flat, x, t, cfg)
+        x0 = (x - std_t[:, None] * eps) / a_t[:, None]
+        return a_n[:, None] * x0 + std_n[:, None] * eps
+
+    def ode_drift(flat, x, t):
+        g2 = sde.diffusion(t) ** 2
+        return sde.drift(x, t) - 0.5 * g2[:, None] * score(flat, x, t)
+
+    def denoise(flat, x, t):
+        # Tweedie (paper App. D, corrected): x0 = (x + Var[x(t)|x0] s) / mean_coef
+        var = sde.tweedie_var(t)
+        x0 = x + var[:, None] * score(flat, x, t)
+        return x0 / sde.mean_coef(t)[:, None]
+
+    return {
+        "score": score,
+        "adaptive_step": adaptive_step,
+        "em_step": em_step,
+        "pc_step": pc_step,
+        "ddim_step": ddim_step,
+        "ode_drift": ode_drift,
+        "denoise": denoise,
+    }
+
+
+def program_specs(cfg: model.ModelCfg, n_theta: int):
+    """(program -> (buckets, arg-spec builder)). Shapes are the runtime ABI."""
+    d = cfg.dim
+
+    def f32(*shape):
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    def args(b, program):
+        theta = f32(n_theta)
+        if program == "score" or program == "ode_drift" or program == "denoise":
+            return (theta, f32(b, d), f32(b))
+        if program == "adaptive_step":
+            return (theta, f32(b, d), f32(b, d), f32(b), f32(b), f32(b, d),
+                    f32(1), f32(b))
+        if program == "em_step":
+            return (theta, f32(b, d), f32(b), f32(b), f32(b, d))
+        if program == "pc_step":
+            return (theta, f32(b, d), f32(b), f32(b), f32(b, d), f32(b, d), f32(1))
+        if program == "ddim_step":
+            return (theta, f32(b, d), f32(b), f32(b))
+        raise KeyError(program)
+
+    buckets = {
+        "score": SCORE_BUCKETS,
+        "adaptive_step": STEP_BUCKETS,
+        "em_step": STEP_BUCKETS,
+        "pc_step": AUX_BUCKETS,
+        "ddim_step": AUX_BUCKETS,
+        "ode_drift": AUX_BUCKETS,
+        # denoise runs at whatever bucket the solver/engine uses
+        "denoise": STEP_BUCKETS,
+    }
+    return buckets, args
+
+
+def lower_variant(name: str, art_dir: str, manifest: dict):
+    with open(os.path.join(art_dir, "params", f"{name}.meta.json")) as f:
+        meta = json.load(f)
+    cfg = model.ModelCfg(
+        dim=meta["dim"], hidden=meta["hidden"], blocks=meta["blocks"],
+        sde_kind=meta["sde_kind"], sigma_max=meta["sigma_max"],
+    )
+    n_theta = model.n_params(cfg)
+    assert n_theta == meta["n_params"], (name, n_theta, meta["n_params"])
+    programs = make_programs(cfg)
+    buckets, args = program_specs(cfg, n_theta)
+    vdir = os.path.join(art_dir, name)
+    os.makedirs(vdir, exist_ok=True)
+    entries = []
+    for program, fn in programs.items():
+        if program == "ddim_step" and cfg.sde_kind != "vp":
+            continue
+        for b in buckets[program]:
+            spec = args(b, program)
+            text = to_hlo_text(jax.jit(fn).lower(*spec))
+            fname = f"{program}_b{b}.hlo.txt"
+            with open(os.path.join(vdir, fname), "w") as f:
+                f.write(text)
+            entries.append({
+                "program": program,
+                "bucket": b,
+                "file": f"{name}/{fname}",
+                "inputs": [list(s.shape) for s in spec],
+                "n_outputs": 3 if program == "adaptive_step" else 1,
+            })
+            print(f"[aot] {name}/{fname} ({len(text)//1024} KiB)", flush=True)
+    manifest["variants"][name] = {"meta": meta, "programs": entries}
+
+
+def lower_fidnet(name: str, art_dir: str, manifest: dict):
+    with open(os.path.join(art_dir, "params", f"{name}.meta.json")) as f:
+        meta = json.load(f)
+    cfg = fid_net.FidCfg(dim=meta["dim"], n_classes=meta["n_classes"])
+    n_theta = fid_net.n_params(cfg)
+
+    def features(flat, x):
+        return fid_net.features_logits(flat, x, cfg)
+
+    vdir = os.path.join(art_dir, name)
+    os.makedirs(vdir, exist_ok=True)
+    entries = []
+    for b in FID_BUCKETS:
+        spec = (
+            jax.ShapeDtypeStruct((n_theta,), jnp.float32),
+            jax.ShapeDtypeStruct((b, cfg.dim), jnp.float32),
+        )
+        text = to_hlo_text(jax.jit(features).lower(*spec))
+        fname = f"fid_features_b{b}.hlo.txt"
+        with open(os.path.join(vdir, fname), "w") as f:
+            f.write(text)
+        entries.append({
+            "program": "fid_features", "bucket": b, "file": f"{name}/{fname}",
+            "inputs": [list(s.shape) for s in spec], "n_outputs": 2,
+        })
+        print(f"[aot] {name}/{fname} ({len(text)//1024} KiB)", flush=True)
+    manifest["fidnets"][name] = {"meta": meta, "programs": entries}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variant", default=None, help="limit to one variant")
+    args = ap.parse_args()
+    art = args.out
+    manifest = {"variants": {}, "fidnets": {}}
+    mpath = os.path.join(art, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+    variants = [args.variant] if args.variant else list(model.VARIANTS)
+    fidnets = [] if args.variant else list(fid_net.FIDNETS)
+    if args.variant in fid_net.FIDNETS:
+        variants, fidnets = [], [args.variant]
+    for v in variants:
+        lower_variant(v, art, manifest)
+    for f_ in fidnets:
+        lower_fidnet(f_, art, manifest)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Procedural labelled image datasets (DESIGN.md §2 substitutions).
+
+Stand-ins for the paper's evaluation corpora, deterministic given a seed:
+
+  synth-cifar  — 16x16x3, 6 shape/texture classes (CIFAR-10 stand-in)
+  synth-church — 32x32x3, tower/roof-line scenes, 4 classes (LSUN-Church)
+  synth-ffhq   — 32x32x3, radial face-like compositions, 4 classes (FFHQ)
+
+Images are float32 in [0, 1], returned flattened [N, H*W*3] (HWC order).
+Labels feed the synthception classifier used for FID*/IS*.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    h: int
+    w: int
+    c: int = 3
+    n_classes: int = 6
+    seed: int = 0
+
+    @property
+    def dim(self) -> int:
+        return self.h * self.w * self.c
+
+
+SPECS = {
+    "synth-cifar": DatasetSpec("synth-cifar", 16, 16, n_classes=6, seed=1234),
+    "synth-church": DatasetSpec("synth-church", 32, 32, n_classes=4, seed=2345),
+    "synth-ffhq": DatasetSpec("synth-ffhq", 32, 32, n_classes=4, seed=3456),
+}
+
+
+def _grid(h, w):
+    yy, xx = np.meshgrid(np.linspace(0, 1, h), np.linspace(0, 1, w), indexing="ij")
+    return yy, xx
+
+
+def _bg(rng, h, w):
+    """Smooth two-colour gradient background."""
+    yy, xx = _grid(h, w)
+    c0 = rng.uniform(0.05, 0.95, size=3)
+    c1 = rng.uniform(0.05, 0.95, size=3)
+    ang = rng.uniform(0, 2 * np.pi)
+    ramp = (np.cos(ang) * xx + np.sin(ang) * yy + 1) / 2
+    return c0[None, None] * ramp[..., None] + c1[None, None] * (1 - ramp[..., None])
+
+
+def _cifar_img(rng, spec, label):
+    h, w = spec.h, spec.w
+    img = _bg(rng, h, w)
+    yy, xx = _grid(h, w)
+    cy, cx = rng.uniform(0.3, 0.7, size=2)
+    r = rng.uniform(0.15, 0.35)
+    col = rng.uniform(0.0, 1.0, size=3)
+    if label == 0:  # circle
+        mask = (yy - cy) ** 2 + (xx - cx) ** 2 < r**2
+    elif label == 1:  # square
+        mask = (np.abs(yy - cy) < r) & (np.abs(xx - cx) < r)
+    elif label == 2:  # cross
+        t = r * 0.45
+        mask = ((np.abs(yy - cy) < t) & (np.abs(xx - cx) < r)) | (
+            (np.abs(xx - cx) < t) & (np.abs(yy - cy) < r)
+        )
+    elif label == 3:  # horizontal stripes
+        f = rng.integers(2, 5)
+        mask = (np.sin(yy * np.pi * 2 * f + rng.uniform(0, np.pi)) > 0.2)
+    elif label == 4:  # vertical stripes
+        f = rng.integers(2, 5)
+        mask = (np.sin(xx * np.pi * 2 * f + rng.uniform(0, np.pi)) > 0.2)
+    else:  # checker
+        f = rng.integers(2, 4)
+        mask = (np.sin(yy * np.pi * 2 * f) * np.sin(xx * np.pi * 2 * f)) > 0
+    img = np.where(mask[..., None], col[None, None], img)
+    return img
+
+
+def _church_img(rng, spec, label):
+    """label = number of towers - 1 (1..4 towers)."""
+    h, w = spec.h, spec.w
+    img = _bg(rng, h, w)  # sky
+    yy, xx = _grid(h, w)
+    ground = rng.uniform(0.55, 0.8)
+    gcol = rng.uniform(0.1, 0.4, size=3)
+    img = np.where((yy > ground)[..., None], gcol[None, None], img)
+    n_towers = label + 1
+    for k in range(n_towers):
+        cx = (k + 0.5 + rng.uniform(-0.15, 0.15)) / n_towers
+        tw = rng.uniform(0.05, 0.12)
+        top = rng.uniform(0.15, 0.45)
+        tcol = rng.uniform(0.2, 0.9, size=3)
+        body = (np.abs(xx - cx) < tw) & (yy > top) & (yy <= ground + 0.1)
+        img = np.where(body[..., None], tcol[None, None], img)
+        # spire: triangle above the body
+        spire = (np.abs(xx - cx) < tw * (1 - (top - yy) / 0.12)) & (yy <= top) & (
+            yy > top - 0.12
+        )
+        img = np.where(spire[..., None], (tcol * 0.7)[None, None], img)
+    return img
+
+
+def _ffhq_img(rng, spec, label):
+    """Face-like compositions; label = skin/hair combo class."""
+    h, w = spec.h, spec.w
+    img = _bg(rng, h, w)
+    yy, xx = _grid(h, w)
+    skin = np.array(
+        [[0.95, 0.8, 0.7], [0.8, 0.6, 0.45], [0.6, 0.45, 0.35], [0.45, 0.3, 0.25]]
+    )[label] * rng.uniform(0.9, 1.1)
+    cy, cx = 0.5 + rng.uniform(-0.06, 0.06, size=2)
+    ry, rx = rng.uniform(0.28, 0.38), rng.uniform(0.22, 0.3)
+    face = ((yy - cy) / ry) ** 2 + ((xx - cx) / rx) ** 2 < 1
+    img = np.where(face[..., None], skin[None, None], img)
+    # hair cap
+    hcol = rng.uniform(0.05, 0.6, size=3)
+    hair = (((yy - cy) / ry) ** 2 + ((xx - cx) / rx) ** 2 < 1.25) & (yy < cy - 0.12)
+    img = np.where(hair[..., None], hcol[None, None], img)
+    # eyes
+    for sx in (-1, 1):
+        ex, ey = cx + sx * rx * 0.45, cy - ry * 0.15
+        eye = (yy - ey) ** 2 + (xx - ex) ** 2 < rng.uniform(0.015, 0.03) ** 2 * 4
+        img = np.where(eye[..., None], np.array([0.05, 0.05, 0.1])[None, None], img)
+    # mouth
+    mouth = (np.abs(yy - (cy + ry * 0.45)) < 0.025) & (np.abs(xx - cx) < rx * 0.4)
+    img = np.where(mouth[..., None], np.array([0.6, 0.15, 0.15])[None, None], img)
+    return img
+
+
+_MAKERS = {
+    "synth-cifar": _cifar_img,
+    "synth-church": _church_img,
+    "synth-ffhq": _ffhq_img,
+}
+
+
+def _blur(img):
+    """Two passes of a separable [1,2,1]/4 kernel (reflect padding).
+    Low-pass filtering keeps the shapes recognisable while concentrating
+    the distribution on a smooth manifold the small score nets can learn
+    within the build-time training budget (DESIGN.md §2)."""
+    k = np.array([0.25, 0.5, 0.25])
+    for _ in range(2):
+        p = np.pad(img, ((1, 1), (0, 0), (0, 0)), mode="edge")
+        img = k[0] * p[:-2] + k[1] * p[1:-1] + k[2] * p[2:]
+        p = np.pad(img, ((0, 0), (1, 1), (0, 0)), mode="edge")
+        img = k[0] * p[:, :-2] + k[1] * p[:, 1:-1] + k[2] * p[:, 2:]
+    return img
+
+
+def generate(name: str, n: int, seed_offset: int = 0):
+    """Return (images [n, dim] float32 in [0,1], labels [n] int32)."""
+    spec = SPECS[name]
+    rng = np.random.default_rng(spec.seed + seed_offset)
+    labels = rng.integers(0, spec.n_classes, size=n)
+    maker = _MAKERS[name]
+    out = np.empty((n, spec.dim), dtype=np.float32)
+    for i in range(n):
+        img = _blur(maker(rng, spec, int(labels[i])))
+        # mild photometric noise so the data manifold has volume
+        img = np.clip(img + rng.normal(0, 0.01, size=img.shape), 0.0, 1.0)
+        out[i] = img.astype(np.float32).reshape(-1)
+    return out, labels.astype(np.int32)
+
+
+def max_pairwise_distance(x: np.ndarray, subsample: int = 512) -> float:
+    """sigma_max heuristic (paper §2.2): max Euclidean distance between
+    dataset samples, estimated on a subsample."""
+    n = min(subsample, x.shape[0])
+    xs = x[:n]
+    sq = np.sum(xs**2, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2 * xs @ xs.T
+    return float(np.sqrt(max(d2.max(), 0.0)))

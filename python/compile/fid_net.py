@@ -1,0 +1,85 @@
+"""The "synthception" network: a small classifier whose penultimate
+features define FID* and whose class posterior defines IS* (DESIGN.md §2).
+
+  feat   = gelu(gelu(gelu(x W1+b1) W2+b2) W3+b3)   [B, FEAT_DIM]
+  logits = feat W4 + b4                            [B, n_classes]
+
+Trained with cross-entropy on the labelled procedural dataset, with
+Gaussian input jitter so features stay informative on slightly-off
+generated samples (same reason Inception-v3 works for FID: it was trained
+on augmented data). Flat-vector params like the score net.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FEAT_DIM = 64
+HID = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class FidCfg:
+    dim: int
+    n_classes: int
+
+
+def param_shapes(cfg: FidCfg):
+    return [
+        ("w1", (cfg.dim, HID)),
+        ("b1", (HID,)),
+        ("w2", (HID, HID)),
+        ("b2", (HID,)),
+        ("w3", (HID, FEAT_DIM)),
+        ("b3", (FEAT_DIM,)),
+        ("w4", (FEAT_DIM, cfg.n_classes)),
+        ("b4", (cfg.n_classes,)),
+    ]
+
+
+def n_params(cfg: FidCfg) -> int:
+    return sum(int(np.prod(s)) for _, s in param_shapes(cfg))
+
+
+def unflatten(flat, cfg: FidCfg):
+    out, off = {}, 0
+    for name, shape in param_shapes(cfg):
+        size = int(np.prod(shape))
+        out[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def init_params(seed: int, cfg: FidCfg) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_shapes(cfg):
+        if name.startswith("b"):
+            chunks.append(np.zeros(shape, np.float32))
+        else:
+            chunks.append(
+                rng.normal(0, 1 / math.sqrt(shape[0]), size=shape).astype(np.float32)
+            )
+    return np.concatenate([c.reshape(-1) for c in chunks])
+
+
+def features_logits(flat, x, cfg: FidCfg):
+    """x in [0,1] (VP outputs are mapped by the caller). -> (feat, logits)."""
+    p = unflatten(flat, cfg)
+    h = jax.nn.gelu(x @ p["w1"] + p["b1"])
+    h = jax.nn.gelu(h @ p["w2"] + p["b2"])
+    feat = jax.nn.gelu(h @ p["w3"] + p["b3"])
+    logits = feat @ p["w4"] + p["b4"]
+    return feat, logits
+
+
+FIDNETS = {
+    # name -> (datasets it must discriminate, input dim)
+    "fid16": (["synth-cifar"], 16 * 16 * 3),
+    "fid32": (["synth-church", "synth-ffhq"], 32 * 32 * 3),
+}

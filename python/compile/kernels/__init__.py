@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels (always lowered with interpret=True on this
+CPU-PJRT testbed; see DESIGN.md §8 for the TPU tiling they encode)."""
+
+from compile.kernels.fused_block import fused_block
+from compile.kernels.em_update import em_update
+from compile.kernels.err_norm import err_norm
+
+__all__ = ["fused_block", "em_update", "err_norm"]

@@ -1,0 +1,49 @@
+"""Fused mixed-tolerance scaled-l2 error norm (Algorithm 1's delta & E2).
+
+  delta = max(eps_abs, eps_rel * max(|x'|, |x'_prev|))        (paper Eq. 5)
+  E2    = sqrt(mean_i ((x' - x'')_i / delta_i)^2)             (scaled l2)
+
+One pass over three [B, D] operands producing a [B] result — the paper's
+per-sample error (each image keeps its own step size, §3.1.5). eps_abs is
+a runtime scalar ([1] array); eps_rel is a **per-sample vector** ([B]) so
+the serving coordinator can continuously batch requests with different
+tolerances into one step executable.
+
+TPU mapping: row-tiled VPU reduction, (bm, D) blocks, lane-sum then
+sqrt on the scalar unit. Lowered interpret=True on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xp_ref, xpp_ref, xprev_ref, ea_ref, er_ref, o_ref):
+    xp = xp_ref[...]
+    er = er_ref[...][:, None]
+    delta = jnp.maximum(
+        ea_ref[0], er * jnp.maximum(jnp.abs(xp), jnp.abs(xprev_ref[...]))
+    )
+    r = (xp - xpp_ref[...]) / delta
+    o_ref[...] = jnp.sqrt(jnp.mean(r * r, axis=1))
+
+
+def err_norm(xp, xpp, xprev, eps_abs, eps_rel, *, block_m: int | None = None):
+    """xp, xpp, xprev: [B,D]; eps_abs: [1]; eps_rel: [B]. Returns E2 [B]."""
+    bsz, d = xp.shape
+    bm = block_m or min(bsz, 64)
+    assert bsz % bm == 0
+    grid = (bsz // bm,)
+    row = pl.BlockSpec((bm, d), lambda i: (i, 0))
+    one = pl.BlockSpec((1,), lambda i: (0,))
+    vec = pl.BlockSpec((bm,), lambda i: (i,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[row, row, row, one, vec],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bsz,), jnp.float32),
+        interpret=True,
+    )(xp, xpp, xprev, eps_abs, eps_rel)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels — the L1 correctness signal.
+
+``python/tests/test_kernels.py`` asserts allclose between each kernel and
+its oracle across a hypothesis sweep of shapes/values; the AOT artifacts
+are lowered from the kernels, so this pins the served numerics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_block_ref(x, w, b, m):
+    return jax.nn.gelu(x @ w + b[None, :] + m)
+
+
+def em_update_ref(x, u, z, a, c):
+    return x + a[:, None] * u + c[:, None] * z
+
+
+def err_norm_ref(xp, xpp, xprev, eps_abs, eps_rel):
+    delta = jnp.maximum(
+        eps_abs[0], eps_rel[:, None] * jnp.maximum(jnp.abs(xp), jnp.abs(xprev))
+    )
+    r = (xp - xpp) / delta
+    return jnp.sqrt(jnp.mean(r * r, axis=1))

@@ -1,0 +1,222 @@
+"""Layer-2: the score network, written in JAX over the L1 Pallas kernels.
+
+Architecture (time-conditioned residual MLP, a CPU-scale restatement of
+NCSN++/DDPM++ from Song et al. 2020a):
+
+  temb = gelu(fourier(t) @ Wt + bt)                        [B, H]
+  h    = x @ Win + bin                                     [B, H]
+  for each block l:
+      inner = fused_block(h, W1_l, b1_l, temb @ U_l)       (Pallas, L1)
+      h     = h + inner @ W2_l + b2_l                      (residual)
+  eps  = eps_gauss(x, t) + h @ Wout + bout                 [B, D]
+  score(x, t) = -eps / marginal_std(t)
+
+where eps_gauss is the closed-form posterior noise under a Gaussian data
+prior N(mu0, diag(v0)) fitted to the training set:
+
+  eps_gauss(x, t) = std(t) (x - alpha(t) mu0) / (alpha(t)^2 v0 + std(t)^2)
+
+This baseline is *exact* at t -> 1 (where the marginal is the prior) and
+removes the rank bottleneck of predicting D-dim noise through an H < D
+hidden layer — the network only learns the non-Gaussian correction.
+Without it the reverse VP drift under-cancels and trajectories blow up
+by exp(0.5 int beta) ~ 150x (measured; see DESIGN.md §Model).
+
+Parameters live in ONE flat f32 vector. The Rust runtime uploads that
+vector once per model as a PJRT buffer and feeds it as the first argument
+of every artifact — weights are never baked into HLO (keeps artifact text
+small and lets one compiled program serve retrained weights).
+
+Variants (paper Table 1): base = 4 blocks, deep = 8 blocks; hidden width
+256 for 16x16 data, 384 for 32x32 (all multiples of the 128 MXU lane).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import fused_block
+from compile import sde as sde_mod
+
+
+TEMB_DIM = 128  # fourier feature count (half sin, half cos)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    dim: int            # flattened data dim (H*W*3)
+    hidden: int
+    blocks: int
+    sde_kind: str       # "ve" | "vp"
+    sigma_max: float = 50.0  # VE only; dataset max pairwise distance
+
+    @property
+    def sde(self):
+        return sde_mod.make_sde(self.sde_kind, self.sigma_max)
+
+
+def param_shapes(cfg: ModelCfg):
+    """Ordered (name, shape) list — the single source of truth for the
+    flat layout. Mirrored nowhere: Rust only ever sees the flat vector."""
+    h, d = cfg.hidden, cfg.dim
+    shapes = [
+        ("temb_w", (TEMB_DIM, h)),
+        ("temb_b", (h,)),
+        ("in_w", (d, h)),
+        ("in_b", (h,)),
+    ]
+    for l in range(cfg.blocks):
+        shapes += [
+            (f"blk{l}_w1", (h, h)),
+            (f"blk{l}_b1", (h,)),
+            (f"blk{l}_u", (h, h)),
+            (f"blk{l}_w2", (h, h)),
+            (f"blk{l}_b2", (h,)),
+        ]
+    shapes += [("out_w", (h, d)), ("out_b", (d,))]
+    # Gaussian-prior baseline stats (frozen via stop_gradient in apply)
+    shapes += [("mu0", (d,)), ("v0", (d,))]
+    return shapes
+
+
+def n_params(cfg: ModelCfg) -> int:
+    return sum(int(np.prod(s)) for _, s in param_shapes(cfg))
+
+
+def unflatten(flat, cfg: ModelCfg):
+    out, off = {}, 0
+    for name, shape in param_shapes(cfg):
+        size = int(np.prod(shape))
+        out[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def init_params(
+    seed: int, cfg: ModelCfg, mu0: np.ndarray | None = None, v0: np.ndarray | None = None
+) -> np.ndarray:
+    """LeCun-normal weights, zero biases, zeroed residual-out projections
+    (standard trick so the net starts as identity + input proj). mu0/v0
+    are the dataset mean/variance in the process data range; defaults
+    (0, 1) make the baseline the VP prior."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_shapes(cfg):
+        if name == "mu0":
+            chunks.append(
+                (mu0 if mu0 is not None else np.zeros(shape)).astype(np.float32)
+            )
+        elif name == "v0":
+            chunks.append(
+                (v0 if v0 is not None else np.ones(shape)).astype(np.float32)
+            )
+        elif "_b" in name:  # temb_b, in_b, out_b, blk*_b1, blk*_b2
+            chunks.append(np.zeros(shape, np.float32))
+        elif "_w2" in name or name == "out_w":
+            # residual branches + output head start dead: the model begins
+            # as the exact Gaussian-prior score and only learns corrections
+            chunks.append(np.zeros(shape, np.float32))
+        else:
+            fan_in = shape[0]
+            chunks.append(
+                rng.normal(0.0, 1.0 / math.sqrt(fan_in), size=shape).astype(np.float32)
+            )
+    return np.concatenate([c.reshape(-1) for c in chunks])
+
+
+def eps_gauss(x, t, cfg: ModelCfg, mu0, v0):
+    """Closed-form E[eps | x_t] under a Gaussian data prior N(mu0, v0)."""
+    s = cfg.sde
+    alpha = s.mean_coef(t)[:, None]
+    std = s.marginal_std(t)[:, None]
+    mu0 = jax.lax.stop_gradient(mu0)
+    v0 = jax.lax.stop_gradient(v0)
+    return std * (x - alpha * mu0[None, :]) / (alpha**2 * v0[None, :] + std**2)
+
+
+def residual_scale(t, cfg: ModelCfg, v0):
+    """Bayes residual-std fraction sqrt(a^2 v / (a^2 v + s^2)) — the most
+    any correction on top of eps_gauss can explain. Scaling the network
+    output by it pins eps to the (exact) baseline at t -> 1 and gives the
+    correction a well-conditioned O(1) target at structure-forming t.
+    Without it the randomly-initialised output head injects large-t score
+    error that visibly corrupts early reverse steps (DESIGN.md §10)."""
+    s = cfg.sde
+    a = s.mean_coef(t)[:, None]
+    std = s.marginal_std(t)[:, None]
+    vbar = jax.lax.stop_gradient(jnp.mean(v0))
+    return jnp.sqrt(a * a * vbar / (a * a * vbar + std * std))
+
+
+def fourier_features(t):
+    """[B] -> [B, TEMB_DIM]; log-spaced frequencies covering t in [0,1]."""
+    half = TEMB_DIM // 2
+    freqs = jnp.exp(jnp.linspace(math.log(0.5), math.log(256.0), half))
+    ang = 2.0 * math.pi * t[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def apply_eps(flat, x, t, cfg: ModelCfg):
+    """Noise prediction eps_theta(x, t): [B,D],[B] -> [B,D]."""
+    p = unflatten(flat, cfg)
+    temb = jax.nn.gelu(fourier_features(t) @ p["temb_w"] + p["temb_b"])
+    h = x @ p["in_w"] + p["in_b"]
+    for l in range(cfg.blocks):
+        mod = temb @ p[f"blk{l}_u"]
+        inner = fused_block(h, p[f"blk{l}_w1"], p[f"blk{l}_b1"], mod)
+        h = h + inner @ p[f"blk{l}_w2"] + p[f"blk{l}_b2"]
+    w = residual_scale(t, cfg, p["v0"])
+    return eps_gauss(x, t, cfg, p["mu0"], p["v0"]) + w * (h @ p["out_w"] + p["out_b"])
+
+
+def apply_eps_ref(flat, x, t, cfg: ModelCfg):
+    """Pure-jnp twin of apply_eps (kernel replaced by its oracle) — used by
+    training (fast jit) and as the L2 correctness reference in tests."""
+    from compile.kernels.ref import fused_block_ref
+
+    p = unflatten(flat, cfg)
+    temb = jax.nn.gelu(fourier_features(t) @ p["temb_w"] + p["temb_b"])
+    h = x @ p["in_w"] + p["in_b"]
+    for l in range(cfg.blocks):
+        mod = temb @ p[f"blk{l}_u"]
+        inner = fused_block_ref(h, p[f"blk{l}_w1"], p[f"blk{l}_b1"], mod)
+        h = h + inner @ p[f"blk{l}_w2"] + p[f"blk{l}_b2"]
+    w = residual_scale(t, cfg, p["v0"])
+    return eps_gauss(x, t, cfg, p["mu0"], p["v0"]) + w * (h @ p["out_w"] + p["out_b"])
+
+
+def score(flat, x, t, cfg: ModelCfg, *, use_kernel: bool = True):
+    """s_theta(x,t) = -eps / std(t) — the quantity every solver consumes."""
+    fn = apply_eps if use_kernel else apply_eps_ref
+    eps = fn(flat, x, t, cfg)
+    std = cfg.sde.marginal_std(t)
+    return -eps / std[:, None]
+
+
+# --- variant registry --------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    name: str
+    dataset: str
+    sde_kind: str
+    blocks: int
+    hidden: int
+    train_steps: int
+    batch: int = 128
+    lr: float = 2e-3
+
+
+VARIANTS = {
+    "vp": Variant("vp", "synth-cifar", "vp", 4, 256, 800),
+    "vp_deep": Variant("vp_deep", "synth-cifar", "vp", 8, 256, 250),
+    "ve": Variant("ve", "synth-cifar", "ve", 4, 256, 350),
+    "ve_deep": Variant("ve_deep", "synth-cifar", "ve", 8, 256, 250),
+    "ve_church": Variant("ve_church", "synth-church", "ve", 6, 384, 250),
+    "ve_ffhq": Variant("ve_ffhq", "synth-ffhq", "ve", 6, 384, 250),
+}

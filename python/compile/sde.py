@@ -1,0 +1,120 @@
+"""Forward diffusion processes (paper §2.2-2.3).
+
+Variance Exploding (VE) and Variance Preserving (VP) SDEs with the exact
+parameterisations of Song et al. 2020a used by the paper:
+
+  VE:  dx = sqrt(d[sigma^2(t)]/dt) dw,   sigma(t) = s_min (s_max/s_min)^t
+  VP:  dx = -1/2 beta(t) x dt + sqrt(beta(t)) dw,
+       beta(t) = b_min + t (b_max - b_min),  b_min = 0.1, b_max = 20
+
+Both are affine-drift, so the transition kernel p(x(t)|x(0)) is Gaussian
+and sampled in closed form (used by the DSM training objective, Eq. 3).
+
+This module is mirrored on the Rust side in ``rust/src/sde/`` for
+host-side solver math; ``python/tests/test_sde.py`` and
+``rust/tests`` pin the same numeric fixtures on both sides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class VESDE:
+    """Variance-exploding process. Data range [0, 1]."""
+
+    sigma_min: float = 0.01
+    sigma_max: float = 50.0
+
+    kind: str = "ve"
+    y_min: float = 0.0
+    y_max: float = 1.0
+    t_eps: float = 1e-5  # integration lower limit (paper App. D)
+
+    def sigma(self, t):
+        return self.sigma_min * (self.sigma_max / self.sigma_min) ** t
+
+    def drift(self, x, t):
+        return jnp.zeros_like(x)
+
+    def diffusion(self, t):
+        # g(t) = sigma(t) * sqrt(2 log(s_max/s_min))  (d[sigma^2]/dt = 2 sigma sigma')
+        return self.sigma(t) * jnp.sqrt(
+            2.0 * math.log(self.sigma_max / self.sigma_min)
+        )
+
+    # -- transition kernel x(t)|x(0) ~ N(mean, std^2 I) ----------------------
+    def mean_coef(self, t):
+        return jnp.ones_like(jnp.asarray(t))
+
+    def marginal_std(self, t):
+        return self.sigma(t)
+
+    def prior_std(self) -> float:
+        return self.sigma_max
+
+    def tweedie_var(self, t):
+        """Var[x(t)|x(0)] for the final denoising step (paper App. D)."""
+        return self.sigma(t) ** 2
+
+
+@dataclasses.dataclass(frozen=True)
+class VPSDE:
+    """Variance-preserving process. Data range [-1, 1]."""
+
+    beta_min: float = 0.1
+    beta_max: float = 20.0
+
+    kind: str = "vp"
+    y_min: float = -1.0
+    y_max: float = 1.0
+    t_eps: float = 1e-3
+
+    def beta(self, t):
+        return self.beta_min + t * (self.beta_max - self.beta_min)
+
+    def int_beta(self, t):
+        """integral of beta from 0 to t."""
+        return self.beta_min * t + 0.5 * t**2 * (self.beta_max - self.beta_min)
+
+    def drift(self, x, t):
+        b = jnp.asarray(self.beta(t))
+        return -0.5 * b[..., None] * x if b.ndim == 1 else -0.5 * b * x
+
+    def diffusion(self, t):
+        return jnp.sqrt(self.beta(t))
+
+    def alpha(self, t):
+        """mean coefficient exp(-1/2 int beta)."""
+        return jnp.exp(-0.5 * self.int_beta(t))
+
+    def mean_coef(self, t):
+        return self.alpha(t)
+
+    def marginal_std(self, t):
+        return jnp.sqrt(jnp.maximum(1.0 - jnp.exp(-self.int_beta(t)), 1e-12))
+
+    def prior_std(self) -> float:
+        return 1.0
+
+    def tweedie_var(self, t):
+        return 1.0 - jnp.exp(-self.int_beta(t))
+
+
+def make_sde(kind: str, sigma_max: float = 50.0):
+    """Factory used by model/train/aot. ``sigma_max`` is dataset-dependent
+    for VE (max pairwise distance, paper §2.2); ignored for VP."""
+    if kind == "ve":
+        return VESDE(sigma_max=sigma_max)
+    if kind == "vp":
+        return VPSDE()
+    raise ValueError(f"unknown sde kind: {kind}")
+
+
+def eps_abs_for(sde) -> float:
+    """Paper §3.1.2: one 8-bit colour increment."""
+    return (sde.y_max - sde.y_min) / 256.0

@@ -1,0 +1,256 @@
+"""Build-time training (denoising score matching, paper Eq. 3).
+
+Trains the score networks and the synthception FID classifiers on the
+procedural datasets, with a from-scratch Adam (no optax offline) and
+parameter EMA (standard for score models). Emits:
+
+  artifacts/params/<variant>.bin        flat f32 LE parameter vector (EMA)
+  artifacts/params/<variant>.meta.json  config + dataset stats
+  artifacts/data/<dataset>.bin|.labels.bin|.meta.json   eval split for FID*
+
+Run: cd python && python -m compile.train --variant vp --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import dataset as ds
+from compile import fid_net, model
+from compile import sde as sde_mod
+
+EVAL_N = 4096  # eval-split size exported for reference FID* stats
+TRAIN_N = 8192
+
+
+# --- from-scratch Adam over a single flat vector -----------------------------
+
+def adam_init(n):
+    return jnp.zeros(n), jnp.zeros(n)
+
+
+def adam_update(g, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1**step)
+    vhat = v / (1 - b2**step)
+    return lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def lr_at(step, base, warmup=100):
+    return base * jnp.minimum(1.0, step / warmup)
+
+
+# --- score-model training -----------------------------------------------------
+
+def dsm_loss(flat, x0, t, z, cfg):
+    """||eps_theta(x_t, t) - z||^2 with x_t from the closed-form kernel.
+    Equivalent to Eq. 3 with lambda(t) = marginal_std(t)^2."""
+    s = cfg.sde
+    mean = s.mean_coef(t)[:, None] * x0
+    xt = mean + s.marginal_std(t)[:, None] * z
+    eps = model.apply_eps_ref(flat, xt, t, cfg)
+    return jnp.mean(jnp.sum((eps - z) ** 2, axis=1)) / x0.shape[1]
+
+
+def train_score(variant: model.Variant, out_dir: str, steps_override=None):
+    spec = ds.SPECS[variant.dataset]
+    x_train, _ = ds.generate(variant.dataset, TRAIN_N)
+    sigma_max = ds.max_pairwise_distance(x_train)
+    cfg = model.ModelCfg(
+        dim=spec.dim,
+        hidden=variant.hidden,
+        blocks=variant.blocks,
+        sde_kind=variant.sde_kind,
+        sigma_max=sigma_max,
+    )
+    sde = cfg.sde
+    # map to process data range: VE keeps [0,1], VP uses [-1,1]
+    if sde.kind == "vp":
+        x_train = 2.0 * x_train - 1.0
+
+    flat = jnp.asarray(
+        model.init_params(
+            seed=7,
+            cfg=cfg,
+            mu0=x_train.mean(axis=0),
+            v0=np.maximum(x_train.var(axis=0), 1e-4),
+        )
+    )
+    m, v = adam_init(flat.shape[0])
+    ema = flat
+    steps = steps_override or variant.train_steps
+    key = jax.random.PRNGKey(42)
+    xt_all = jnp.asarray(x_train)
+
+    @jax.jit
+    def update(flat, m, v, ema, step, key):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        idx = jax.random.randint(k1, (variant.batch,), 0, xt_all.shape[0])
+        x0 = xt_all[idx]
+        t = jax.random.uniform(
+            k2, (variant.batch,), minval=sde.t_eps, maxval=1.0
+        )
+        z = jax.random.normal(k3, x0.shape)
+        loss, g = jax.value_and_grad(dsm_loss)(flat, x0, t, z, cfg)
+        upd, m, v = adam_update(g, m, v, step, lr_at(step, variant.lr))
+        flat = flat - upd
+        ema = 0.999 * ema + 0.001 * flat
+        return flat, m, v, ema, key, loss
+
+    t0 = time.time()
+    last = None
+    for step in range(1, steps + 1):
+        flat, m, v, ema, key, loss = update(flat, m, v, ema, jnp.float32(step), key)
+        if step % 500 == 0 or step == 1:
+            last = float(loss)
+            print(f"[{variant.name}] step {step}/{steps} loss {last:.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+
+    meta = {
+        "name": variant.name,
+        "kind": "score",
+        "dataset": variant.dataset,
+        "sde_kind": variant.sde_kind,
+        "blocks": variant.blocks,
+        "hidden": variant.hidden,
+        "dim": spec.dim,
+        "h": spec.h,
+        "w": spec.w,
+        "c": spec.c,
+        "sigma_min": 0.01,
+        "sigma_max": sigma_max,
+        "beta_min": 0.1,
+        "beta_max": 20.0,
+        "y_min": sde.y_min,
+        "y_max": sde.y_max,
+        "t_eps": sde.t_eps,
+        "n_params": int(flat.shape[0]),
+        "train_steps": steps,
+        "final_loss": last,
+    }
+    _save(out_dir, variant.name, np.asarray(ema, np.float32), meta)
+    _export_dataset(variant.dataset, out_dir)
+
+
+# --- FID classifier training ---------------------------------------------------
+
+def train_fid(name: str, out_dir: str, steps_override=None):
+    datasets, dim = fid_net.FIDNETS[name]
+    xs, ys, off = [], [], 0
+    for d in datasets:
+        x, y = ds.generate(d, TRAIN_N // len(datasets))
+        xs.append(x)
+        ys.append(y + off)
+        off += ds.SPECS[d].n_classes
+    x_train = jnp.asarray(np.concatenate(xs))
+    y_train = jnp.asarray(np.concatenate(ys))
+    cfg = fid_net.FidCfg(dim=dim, n_classes=off)
+    flat = jnp.asarray(fid_net.init_params(seed=11, cfg=cfg))
+    m, v = adam_init(flat.shape[0])
+    steps = steps_override or 500
+    key = jax.random.PRNGKey(5)
+
+    def loss_fn(flat, x, y, key):
+        x = x + 0.05 * jax.random.normal(key, x.shape)  # feature robustness
+        _, logits = fid_net.features_logits(flat, x, cfg)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+    @jax.jit
+    def update(flat, m, v, step, key):
+        key, k1, k2 = jax.random.split(key, 3)
+        idx = jax.random.randint(k1, (256,), 0, x_train.shape[0])
+        loss, g = jax.value_and_grad(loss_fn)(flat, x_train[idx], y_train[idx], k2)
+        upd, m, v = adam_update(g, m, v, step, lr_at(step, 2e-3))
+        return flat - upd, m, v, key, loss
+
+    t0 = time.time()
+    last = None
+    for step in range(1, steps + 1):
+        flat, m, v, key, loss = update(flat, m, v, jnp.float32(step), key)
+        if step % 500 == 0 or step == 1:
+            last = float(loss)
+            print(f"[{name}] step {step}/{steps} loss {last:.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+
+    # held-out accuracy as a sanity signal for FID* feature quality
+    xe, ye, off = [], [], 0
+    for d in datasets:
+        x, y = ds.generate(d, 512, seed_offset=99991)
+        xe.append(x)
+        ye.append(y + off)
+        off += ds.SPECS[d].n_classes
+    _, logits = fid_net.features_logits(
+        np.asarray(flat), jnp.asarray(np.concatenate(xe)), cfg
+    )
+    acc = float(jnp.mean(jnp.argmax(logits, 1) == jnp.asarray(np.concatenate(ye))))
+    print(f"[{name}] held-out accuracy {acc:.3f}")
+
+    meta = {
+        "name": name,
+        "kind": "fid",
+        "datasets": datasets,
+        "dim": dim,
+        "n_classes": off,
+        "feat_dim": fid_net.FEAT_DIM,
+        "n_params": int(flat.shape[0]),
+        "train_steps": steps,
+        "final_loss": last,
+        "holdout_acc": acc,
+    }
+    _save(out_dir, name, np.asarray(flat, np.float32), meta)
+
+
+# --- I/O -----------------------------------------------------------------------
+
+def _save(out_dir, name, flat: np.ndarray, meta: dict):
+    pdir = os.path.join(out_dir, "params")
+    os.makedirs(pdir, exist_ok=True)
+    flat.astype("<f4").tofile(os.path.join(pdir, f"{name}.bin"))
+    with open(os.path.join(pdir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[{name}] saved {flat.shape[0]} params -> {pdir}/{name}.bin")
+
+
+def _export_dataset(name: str, out_dir: str):
+    """Eval split for Rust-side reference FID* stats (idempotent)."""
+    ddir = os.path.join(out_dir, "data")
+    os.makedirs(ddir, exist_ok=True)
+    path = os.path.join(ddir, f"{name}.bin")
+    if os.path.exists(path):
+        return
+    spec = ds.SPECS[name]
+    x, y = ds.generate(name, EVAL_N, seed_offset=77777)  # disjoint from train
+    x.astype("<f4").tofile(path)
+    y.astype("<i4").tofile(os.path.join(ddir, f"{name}.labels.bin"))
+    with open(os.path.join(ddir, f"{name}.meta.json"), "w") as f:
+        json.dump(
+            {"name": name, "n": EVAL_N, "dim": spec.dim, "h": spec.h,
+             "w": spec.w, "c": spec.c, "n_classes": spec.n_classes}, f, indent=1,
+        )
+    print(f"[data] exported {name} eval split ({EVAL_N} x {spec.dim})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", required=True,
+                    choices=list(model.VARIANTS) + list(fid_net.FIDNETS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+    if args.variant in model.VARIANTS:
+        train_score(model.VARIANTS[args.variant], args.out, args.steps)
+    else:
+        train_fid(args.variant, args.out, args.steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""AOT layer: HLO-text emission and the artifact ABI recorded in the
+manifest. Uses a tiny throwaway config so it runs without `make artifacts`;
+also cross-checks the real manifest when artifacts exist."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.aot import make_programs, program_specs, to_hlo_text
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return model.ModelCfg(dim=128, hidden=128, blocks=1, sde_kind="ve", sigma_max=10.0)
+
+
+def test_hlo_text_emission(tiny_cfg):
+    programs = make_programs(tiny_cfg)
+    n = model.n_params(tiny_cfg)
+    spec = (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((4, 128), jnp.float32),
+        jax.ShapeDtypeStruct((4,), jnp.float32),
+    )
+    text = to_hlo_text(jax.jit(programs["score"]).lower(*spec))
+    assert text.startswith("HloModule")
+    assert "f32[4,128]" in text
+
+
+def test_program_specs_cover_all_programs(tiny_cfg):
+    buckets, args = program_specs(tiny_cfg, model.n_params(tiny_cfg))
+    for program in ["score", "adaptive_step", "em_step", "pc_step",
+                    "ddim_step", "ode_drift", "denoise"]:
+        assert program in buckets
+        spec = args(16, program)
+        assert spec[0].shape == (model.n_params(tiny_cfg),)
+
+
+def test_adaptive_step_abi(tiny_cfg):
+    """The exact input ordering Rust's runtime::Program::adaptive relies on:
+    (theta, x, xprev, t, h, z, eps_abs, eps_rel)."""
+    _, args = program_specs(tiny_cfg, model.n_params(tiny_cfg))
+    spec = args(8, "adaptive_step")
+    shapes = [s.shape for s in spec]
+    assert shapes == [
+        (model.n_params(tiny_cfg),), (8, 128), (8, 128), (8,), (8,), (8, 128),
+        (1,), (8,),
+    ]
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_manifest_consistency():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for vname, v in man["variants"].items():
+        meta = v["meta"]
+        cfg = model.ModelCfg(
+            dim=meta["dim"], hidden=meta["hidden"], blocks=meta["blocks"],
+            sde_kind=meta["sde_kind"], sigma_max=meta["sigma_max"],
+        )
+        assert model.n_params(cfg) == meta["n_params"]
+        for prog in v["programs"]:
+            path = os.path.join(ART, prog["file"])
+            assert os.path.exists(path), path
+            assert prog["inputs"][0] == [meta["n_params"]]
+
+
+@needs_artifacts
+def test_params_bin_size_matches_meta():
+    pdir = os.path.join(ART, "params")
+    for fn in os.listdir(pdir):
+        if not fn.endswith(".meta.json"):
+            continue
+        with open(os.path.join(pdir, fn)) as f:
+            meta = json.load(f)
+        binpath = os.path.join(pdir, fn.replace(".meta.json", ".bin"))
+        assert os.path.getsize(binpath) == meta["n_params"] * 4

@@ -1,0 +1,66 @@
+"""Dataset generator: determinism, ranges, class balance, and the
+sigma_max heuristic the VE models depend on."""
+
+import numpy as np
+import pytest
+
+from compile import dataset as ds
+
+
+@pytest.mark.parametrize("name", list(ds.SPECS))
+def test_deterministic(name):
+    a, la = ds.generate(name, 16)
+    b, lb = ds.generate(name, 16)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+
+
+@pytest.mark.parametrize("name", list(ds.SPECS))
+def test_range_and_shape(name):
+    spec = ds.SPECS[name]
+    x, y = ds.generate(name, 32)
+    assert x.shape == (32, spec.dim)
+    assert x.dtype == np.float32
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert y.min() >= 0 and y.max() < spec.n_classes
+
+
+def test_seed_offset_gives_disjoint_split():
+    a, _ = ds.generate("synth-cifar", 64)
+    b, _ = ds.generate("synth-cifar", 64, seed_offset=77777)
+    assert not np.allclose(a, b)
+
+
+def test_classes_all_present():
+    _, y = ds.generate("synth-cifar", 600)
+    assert set(np.unique(y)) == set(range(ds.SPECS["synth-cifar"].n_classes))
+
+
+def test_class_conditional_structure():
+    """Class-conditional mean images must be distinguishable — otherwise
+    the synthception classifier cannot learn and FID* is meaningless.
+    (Raw pairwise distances are dominated by random palettes, so compare
+    class means, which average the colour noise out.)"""
+    x, y = ds.generate("synth-cifar", 1200)
+    means = [x[y == c].mean(axis=0) for c in range(ds.SPECS["synth-cifar"].n_classes)]
+    seps = [
+        np.linalg.norm(means[a] - means[b])
+        for a in range(len(means))
+        for b in range(a + 1, len(means))
+    ]
+    # every pair of class means separated by a clear margin
+    assert min(seps) > 0.15, f"min class-mean separation {min(seps):.3f}"
+
+
+def test_max_pairwise_distance_bounds():
+    x, _ = ds.generate("synth-cifar", 256)
+    m = ds.max_pairwise_distance(x)
+    d = x.shape[1]
+    assert 0.0 < m <= np.sqrt(d)  # values in [0,1] bound the distance
+    # must exceed typical pair distance
+    assert m > np.linalg.norm(x[0] - x[1])
+
+
+def test_max_pairwise_distance_exact_on_small():
+    x = np.array([[0.0, 0.0], [3.0, 4.0], [1.0, 1.0]], np.float32)
+    assert ds.max_pairwise_distance(x) == pytest.approx(5.0)

@@ -1,0 +1,178 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+The AOT artifacts are lowered from these kernels, so this is the
+correctness signal for everything the Rust runtime serves. Hypothesis
+sweeps shapes and value ranges; fixed cases pin the exact production
+shapes used by the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import em_update, err_norm, fused_block
+from compile.kernels import ref
+
+ATOL = 2e-5
+
+
+def _key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+# --- fused_block --------------------------------------------------------------
+
+PROD_SHAPES = [
+    (1, 768, 256), (16, 256, 256), (64, 256, 256),
+    (16, 3072, 384), (64, 384, 384), (4, 128, 256),
+]
+
+
+@pytest.mark.parametrize("b,k,n", PROD_SHAPES)
+def test_fused_block_production_shapes(b, k, n):
+    kk = _key(b * 7 + k + n)
+    x = jax.random.normal(kk, (b, k))
+    w = jax.random.normal(kk, (k, n)) * 0.05
+    bias = jax.random.normal(kk, (n,))
+    m = jax.random.normal(kk, (b, n))
+    np.testing.assert_allclose(
+        fused_block(x, w, bias, m), ref.fused_block_ref(x, w, bias, m), atol=ATOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8, 16]),
+    k=st.sampled_from([128, 256, 384]),
+    n=st.sampled_from([128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.01, 3.0),
+)
+def test_fused_block_hypothesis(b, k, n, seed, scale):
+    kk = _key(seed)
+    x = jax.random.normal(kk, (b, k)) * scale
+    w = jax.random.normal(jax.random.fold_in(kk, 1), (k, n)) * 0.05
+    bias = jax.random.normal(jax.random.fold_in(kk, 2), (n,))
+    m = jax.random.normal(jax.random.fold_in(kk, 3), (b, n))
+    np.testing.assert_allclose(
+        fused_block(x, w, bias, m), ref.fused_block_ref(x, w, bias, m),
+        atol=ATOL * max(1.0, scale),
+    )
+
+
+def test_fused_block_block_size_invariance():
+    """Different tilings must give identical results (schedule != math)."""
+    kk = _key(3)
+    x = jax.random.normal(kk, (16, 256))
+    w = jax.random.normal(kk, (256, 256)) * 0.05
+    bias = jnp.zeros(256)
+    m = jnp.zeros((16, 256))
+    a = fused_block(x, w, bias, m, block_m=16, block_n=256)
+    b = fused_block(x, w, bias, m, block_m=4, block_n=128)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_fused_block_rejects_misaligned():
+    with pytest.raises(AssertionError):
+        fused_block(
+            jnp.zeros((3, 256)), jnp.zeros((256, 256)), jnp.zeros(256),
+            jnp.zeros((3, 256)), block_m=2,
+        )
+
+
+# --- em_update ------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 4, 16, 64]),
+    d=st.sampled_from([32, 768, 3072]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_em_update_hypothesis(b, d, seed):
+    kk = _key(seed)
+    x = jax.random.normal(kk, (b, d))
+    u = jax.random.normal(jax.random.fold_in(kk, 1), (b, d))
+    z = jax.random.normal(jax.random.fold_in(kk, 2), (b, d))
+    a = jax.random.uniform(jax.random.fold_in(kk, 3), (b,), minval=-1.0)
+    c = jax.random.uniform(jax.random.fold_in(kk, 4), (b,))
+    np.testing.assert_allclose(
+        em_update(x, u, z, a, c), ref.em_update_ref(x, u, z, a, c), atol=ATOL
+    )
+
+
+def test_em_update_zero_step_is_identity():
+    """h=0 slots (inactive batch lanes in the coordinator) must not move."""
+    kk = _key(0)
+    x = jax.random.normal(kk, (8, 96))
+    u = jax.random.normal(jax.random.fold_in(kk, 1), (8, 96))
+    z = jax.random.normal(jax.random.fold_in(kk, 2), (8, 96))
+    zero = jnp.zeros(8)
+    np.testing.assert_allclose(em_update(x, u, z, zero, zero), x, atol=0)
+
+
+def test_em_update_per_sample_independence():
+    """Row i of the output depends only on row i of the inputs (§3.1.5)."""
+    kk = _key(9)
+    x = jax.random.normal(kk, (4, 64))
+    u = jax.random.normal(jax.random.fold_in(kk, 1), (4, 64))
+    z = jax.random.normal(jax.random.fold_in(kk, 2), (4, 64))
+    a = jnp.array([0.1, 0.2, 0.3, 0.4])
+    c = jnp.array([1.0, 2.0, 3.0, 4.0])
+    full = em_update(x, u, z, a, c)
+    for i in range(4):
+        row = em_update(x[i : i + 1], u[i : i + 1], z[i : i + 1], a[i : i + 1], c[i : i + 1])
+        np.testing.assert_allclose(full[i], row[0], atol=1e-6)
+
+
+# --- err_norm -------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 4, 16]),
+    d=st.sampled_from([64, 768]),
+    seed=st.integers(0, 2**31 - 1),
+    ea=st.floats(1e-4, 0.1),
+    er=st.floats(1e-3, 0.5),
+)
+def test_err_norm_hypothesis(b, d, seed, ea, er):
+    kk = _key(seed)
+    xp = jax.random.normal(kk, (b, d))
+    xpp = xp + 0.01 * jax.random.normal(jax.random.fold_in(kk, 1), (b, d))
+    xprev = jax.random.normal(jax.random.fold_in(kk, 2), (b, d))
+    eav = jnp.array([ea], jnp.float32)
+    erv = jnp.full((b,), er, jnp.float32)
+    np.testing.assert_allclose(
+        err_norm(xp, xpp, xprev, eav, erv),
+        ref.err_norm_ref(xp, xpp, xprev, eav, erv),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_err_norm_identical_proposals_zero():
+    x = jnp.ones((4, 32))
+    e = err_norm(x, x, x, jnp.array([0.01]), jnp.full((4,), 0.1))
+    np.testing.assert_allclose(e, jnp.zeros(4), atol=0)
+
+
+def test_err_norm_scale_invariance_of_accept():
+    """E2 <= 1 acceptance is what matters: doubling the tolerance halves E2."""
+    kk = _key(5)
+    xp = jax.random.normal(kk, (4, 128))
+    xpp = xp + 0.05
+    xprev = xp
+    # large eps_abs dominates => delta == eps_abs => exact halving
+    e1 = err_norm(xp, xpp, xprev, jnp.array([10.0]), jnp.full((4,), 0.01))
+    e2 = err_norm(xp, xpp, xprev, jnp.array([20.0]), jnp.full((4,), 0.01))
+    np.testing.assert_allclose(e1, 2 * e2, rtol=1e-6)
+
+
+def test_err_norm_single_pixel_l2_vs_linf():
+    """Paper §3.1.3: one bad pixel must not dominate the l2 norm — E2 grows
+    like sqrt(1/n), not like the pixel error itself."""
+    d = 1024
+    xp = jnp.zeros((1, d))
+    xpp = xp.at[0, 0].set(1.0)  # one huge local error
+    e = err_norm(xp, xpp, xp, jnp.array([1.0]), jnp.zeros((1,)))
+    assert float(e[0]) == pytest.approx(1.0 / np.sqrt(d), rel=1e-5)

@@ -1,0 +1,167 @@
+"""L2 model: shapes, kernel-vs-ref equivalence through the full network,
+param layout stability (the flat-vector ABI the Rust runtime depends on),
+and the solver-step program semantics lowered by aot.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.aot import make_programs
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return model.ModelCfg(dim=768, hidden=256, blocks=2, sde_kind="vp")
+
+
+@pytest.fixture(scope="module")
+def small_flat(small_cfg):
+    return jnp.asarray(model.init_params(3, small_cfg))
+
+
+def test_param_count_formula(small_cfg):
+    expected = sum(int(np.prod(s)) for _, s in model.param_shapes(small_cfg))
+    assert model.n_params(small_cfg) == expected
+    assert model.init_params(0, small_cfg).shape == (expected,)
+
+
+def test_param_layout_roundtrip(small_cfg):
+    flat = np.arange(model.n_params(small_cfg), dtype=np.float32)
+    p = model.unflatten(jnp.asarray(flat), small_cfg)
+    # first entry is temb_w, stored row-major from offset 0
+    assert float(p["temb_w"].reshape(-1)[0]) == 0.0
+    assert float(p["temb_w"].reshape(-1)[-1]) == model.TEMB_DIM * small_cfg.hidden - 1
+    # total coverage, no overlap
+    total = sum(int(np.prod(v.shape)) for v in p.values())
+    assert total == model.n_params(small_cfg)
+
+
+def test_score_shapes(small_cfg, small_flat):
+    x = jnp.zeros((4, 768))
+    t = jnp.full((4,), 0.5)
+    s = model.score(small_flat, x, t, small_cfg)
+    assert s.shape == (4, 768)
+    assert bool(jnp.all(jnp.isfinite(s)))
+
+
+def test_kernel_path_equals_ref_path(small_cfg, small_flat):
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (8, 768))
+    t = jnp.linspace(0.05, 0.95, 8)
+    a = model.score(small_flat, x, t, small_cfg, use_kernel=True)
+    b = model.score(small_flat, x, t, small_cfg, use_kernel=False)
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_fourier_features_range():
+    t = jnp.linspace(0, 1, 32)
+    ff = model.fourier_features(t)
+    assert ff.shape == (32, model.TEMB_DIM)
+    assert float(jnp.abs(ff).max()) <= 1.0 + 1e-6
+
+
+def test_init_residual_blocks_start_dead(small_cfg):
+    """w2 zero-init => at init the net is input-proj + output-proj only;
+    eps prediction must be identical with 2 and 0 effective blocks."""
+    flat = jnp.asarray(model.init_params(3, small_cfg))
+    cfg0 = model.ModelCfg(dim=768, hidden=256, blocks=0, sde_kind="vp")
+    # build a 0-block flat vector reusing the shared prefix + suffix
+    p = model.unflatten(flat, small_cfg)
+    chunks = [p["temb_w"], p["temb_b"], p["in_w"], p["in_b"], p["out_w"], p["out_b"],
+              p["mu0"], p["v0"]]
+    flat0 = jnp.concatenate([c.reshape(-1) for c in chunks])
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 768))
+    t = jnp.full((4,), 0.3)
+    np.testing.assert_allclose(
+        model.apply_eps_ref(flat, x, t, small_cfg),
+        model.apply_eps_ref(flat0, x, t, cfg0),
+        atol=1e-5,
+    )
+
+
+# --- solver-step program semantics (what aot.py lowers) ------------------------
+
+@pytest.fixture(scope="module")
+def programs(small_cfg):
+    return make_programs(small_cfg)
+
+
+def test_adaptive_step_zero_h_keeps_state(programs, small_flat):
+    """h=0 lanes: x' == x'' == x and E2 == 0 (inactive coordinator slots)."""
+    k = jax.random.PRNGKey(2)
+    x = jax.random.normal(k, (4, 768))
+    t = jnp.full((4,), 0.5)
+    h = jnp.zeros(4)
+    z = jax.random.normal(k, (4, 768))
+    ea, er = jnp.array([0.0078]), jnp.full((4,), 0.01)
+    xpp, xp, e2 = programs["adaptive_step"](small_flat, x, x, t, h, z, ea, er)
+    np.testing.assert_allclose(xp, x, atol=1e-6)
+    np.testing.assert_allclose(xpp, x, atol=1e-6)
+    np.testing.assert_allclose(e2, jnp.zeros(4), atol=1e-6)
+
+
+def test_adaptive_step_proposal_is_em(programs, small_flat):
+    """The x' output of adaptive_step must equal the em_step output for the
+    same (x, t, h, z) — the pair shares its first score evaluation."""
+    k = jax.random.PRNGKey(4)
+    x = jax.random.normal(k, (4, 768))
+    t = jnp.full((4,), 0.7)
+    h = jnp.full((4,), 0.01)
+    z = jax.random.normal(jax.random.fold_in(k, 1), (4, 768))
+    _, xp, _ = programs["adaptive_step"](
+        small_flat, x, x, t, h, z, jnp.array([0.0078]), jnp.full((4,), 0.01)
+    )
+    em = programs["em_step"](small_flat, x, t, h, z)
+    np.testing.assert_allclose(xp, em, atol=1e-5)
+
+
+def test_em_step_noise_scales_with_sqrt_h(programs, small_flat):
+    """With score ~ finite, the stochastic term dominates as z doubles."""
+    k = jax.random.PRNGKey(5)
+    x = jax.random.normal(k, (2, 768))
+    t = jnp.full((2,), 0.9)
+    h = jnp.full((2,), 0.0004)
+    z = jax.random.normal(jax.random.fold_in(k, 2), (2, 768))
+    a = programs["em_step"](small_flat, x, t, h, z)
+    b = programs["em_step"](small_flat, x, t, h, 2 * z)
+    diff = b - a  # = sqrt(h) g z
+    sde = model.ModelCfg(dim=768, hidden=256, blocks=2, sde_kind="vp").sde
+    expect = jnp.sqrt(h)[:, None] * sde.diffusion(t)[:, None] * z
+    np.testing.assert_allclose(diff, expect, rtol=2e-3, atol=2e-5)
+
+
+def test_ddim_step_at_same_time_is_identity(programs, small_flat):
+    k = jax.random.PRNGKey(6)
+    x = jax.random.normal(k, (2, 768))
+    t = jnp.full((2,), 0.5)
+    out = programs["ddim_step"](small_flat, x, t, t)
+    np.testing.assert_allclose(out, x, atol=1e-4)
+
+
+def test_denoise_vp_rescales_by_alpha(programs, small_flat, small_cfg):
+    """Tweedie: x0 = (x + var * s) / alpha (paper App. D corrected form)."""
+    sde = small_cfg.sde
+    k = jax.random.PRNGKey(7)
+    x = jax.random.normal(k, (2, 768))
+    t = jnp.full((2,), sde.t_eps)
+    s = model.score(small_flat, x, t, small_cfg)
+    expect = (x + sde.tweedie_var(t)[:, None] * s) / sde.mean_coef(t)[:, None]
+    np.testing.assert_allclose(
+        programs["denoise"](small_flat, x, t), expect, atol=1e-5
+    )
+
+
+def test_ode_drift_is_half_noise_term(programs, small_flat, small_cfg):
+    """prob-flow drift = f - 1/2 g^2 s; reverse-SDE drift = f - g^2 s.
+    So (em_drift - ode_drift) == ode_drift - f."""
+    sde = small_cfg.sde
+    k = jax.random.PRNGKey(8)
+    x = jax.random.normal(k, (2, 768))
+    t = jnp.full((2,), 0.6)
+    s = model.score(small_flat, x, t, small_cfg)
+    g2 = sde.diffusion(t) ** 2
+    f = sde.drift(x, t)
+    expect = f - 0.5 * g2[:, None] * s
+    np.testing.assert_allclose(programs["ode_drift"](small_flat, x, t), expect, atol=1e-5)

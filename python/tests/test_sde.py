@@ -1,0 +1,106 @@
+"""L2 process math: VE/VP schedules, transition kernels, and the numeric
+fixtures shared with the Rust mirror (rust/src/sde) — both sides must
+agree on these exact values (see rust/src/sde/mod.rs tests)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.sde import VESDE, VPSDE, eps_abs_for, make_sde
+
+
+def test_ve_sigma_endpoints():
+    s = VESDE(sigma_max=50.0)
+    assert float(s.sigma(0.0)) == pytest.approx(0.01)
+    assert float(s.sigma(1.0)) == pytest.approx(50.0)
+
+
+def test_ve_diffusion_matches_dsigma2_dt():
+    """g(t)^2 == d[sigma^2]/dt (the defining property of the VE SDE)."""
+    s = VESDE(sigma_max=50.0)
+    for t in [0.1, 0.5, 0.9]:
+        dt = 1e-5
+        num = (float(s.sigma(t + dt)) ** 2 - float(s.sigma(t - dt)) ** 2) / (2 * dt)
+        assert float(s.diffusion(t)) ** 2 == pytest.approx(num, rel=1e-3)
+
+
+def test_vp_int_beta_closed_form():
+    s = VPSDE()
+    for t in [0.0, 0.25, 1.0]:
+        # trapezoid integration of beta
+        ts = np.linspace(0, t, 10001)
+        num = np.trapezoid(s.beta_min + ts * (s.beta_max - s.beta_min), ts)
+        assert float(s.int_beta(t)) == pytest.approx(float(num), abs=1e-5)
+
+
+def test_vp_alpha_std_consistency():
+    """mean_coef^2 + marginal_std^2 == 1 (variance preserving)."""
+    s = VPSDE()
+    for t in [0.05, 0.3, 0.7, 1.0]:
+        a = float(s.alpha(t))
+        std = float(s.marginal_std(t))
+        assert a * a + std * std == pytest.approx(1.0, abs=1e-6)
+
+
+def test_vp_prior_is_standard_normal():
+    s = VPSDE()
+    assert float(s.marginal_std(1.0)) == pytest.approx(1.0, abs=1e-4)
+    # int beta over [0,1] = 0.1 + 0.5*19.9 = 10.05
+    assert float(s.alpha(1.0)) == pytest.approx(math.exp(-0.5 * 10.05), rel=1e-5)
+
+
+def test_eps_abs_one_colour_increment():
+    assert eps_abs_for(VPSDE()) == pytest.approx(2.0 / 256)   # 0.0078 (paper)
+    assert eps_abs_for(VESDE()) == pytest.approx(1.0 / 256)   # 0.0039 (paper)
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.floats(1e-4, 1.0))
+def test_ve_marginal_std_monotone(t):
+    s = VESDE(sigma_max=30.0)
+    assert float(s.marginal_std(t)) <= float(s.marginal_std(min(1.0, t + 0.01))) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.floats(1e-4, 1.0), kind=st.sampled_from(["ve", "vp"]))
+def test_tweedie_var_is_marginal_var(t, kind):
+    s = make_sde(kind, sigma_max=30.0)
+    assert float(s.tweedie_var(t)) == pytest.approx(
+        float(s.marginal_std(t)) ** 2, rel=1e-4
+    )
+
+
+# --- shared fixtures with rust/src/sde (keep in sync!) -------------------------
+
+RUST_FIXTURES_VE = [  # (t, sigma, g)  for sigma_max=50
+    (0.0, 0.01, 0.04127273),
+    (0.25, 0.08408964, 0.347061),
+    (0.5, 0.7071068, 2.918423),
+    (0.75, 5.946036, 24.54091),
+    (1.0, 50.0, 206.3637),
+]
+
+RUST_FIXTURES_VP = [  # (t, beta, alpha, std)
+    (0.25, 5.075, 0.7236571, 0.6901596),
+    (0.5, 10.05, 0.2811829, 0.9596542),
+    (0.75, 15.025, 0.0586635, 0.9982778),
+    (1.0, 20.0, 0.006571586, 0.9999784),
+]
+
+
+def test_rust_fixture_values_ve():
+    s = VESDE(sigma_max=50.0)
+    for t, sig, g in RUST_FIXTURES_VE:
+        assert float(s.sigma(t)) == pytest.approx(sig, rel=1e-5)
+        assert float(s.diffusion(t)) == pytest.approx(g, rel=1e-4)
+
+
+def test_rust_fixture_values_vp():
+    s = VPSDE()
+    for t, beta, alpha, std in RUST_FIXTURES_VP:
+        assert float(s.beta(t)) == pytest.approx(beta, rel=1e-6)
+        assert float(s.alpha(t)) == pytest.approx(alpha, rel=1e-3)
+        assert float(s.marginal_std(t)) == pytest.approx(std, abs=1e-5)

@@ -1,0 +1,211 @@
+//! Bench harness substrate (no criterion reachable offline): wall-clock
+//! timing with warmup, robust summary stats, aligned table printing (the
+//! paper-table renderers in `benches/` build on this), and CSV/JSON dumps
+//! for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(mut xs: Vec<f64>) -> Stats {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| xs[((xs.len() as f64 - 1.0) * p).round() as usize];
+    Stats {
+        n: xs.len(),
+        mean: xs.iter().sum::<f64>() / xs.len() as f64,
+        p50: q(0.50),
+        p95: q(0.95),
+        p99: q(0.99),
+        min: xs[0],
+        max: *xs.last().unwrap(),
+    }
+}
+
+/// Time `f` `iters` times (after `warmup` unrecorded runs); seconds each.
+pub fn time_iters<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.1}us", secs * 1e6)
+    }
+}
+
+/// Fixed-width table printer used by every paper-table bench.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// ASCII scatter/line plot for Figure-1 style outputs.
+pub fn ascii_plot(series: &[(&str, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+    let pts: Vec<(f64, f64)> = series.iter().flat_map(|(_, v)| v.iter().copied()).collect();
+    if pts.is_empty() {
+        return String::new();
+    }
+    let (xmin, xmax) = pts.iter().fold((f64::MAX, f64::MIN), |(a, b), p| (a.min(p.0), b.max(p.0)));
+    let (ymin, ymax) = pts.iter().fold((f64::MAX, f64::MIN), |(a, b), p| (a.min(p.1), b.max(p.1)));
+    let (xr, yr) = ((xmax - xmin).max(1e-12), (ymax - ymin).max(1e-12));
+    let mut canvas = vec![vec![b' '; width]; height];
+    let marks = [b'o', b'x', b'+', b'*', b'#'];
+    for (si, (_, v)) in series.iter().enumerate() {
+        for &(x, y) in v {
+            let cx = (((x - xmin) / xr) * (width - 1) as f64).round() as usize;
+            let cy = height - 1 - (((y - ymin) / yr) * (height - 1) as f64).round() as usize;
+            canvas[cy][cx] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in canvas.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:>9.2} |")
+        } else if i == height - 1 {
+            format!("{ymin:>9.2} |")
+        } else {
+            format!("{:>9} |", "")
+        };
+        out.push_str(&label);
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>10} {:<10.1}{:>w$.1}\n",
+        "",
+        xmin,
+        xmax,
+        w = width.saturating_sub(10)
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()] as char, name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_known_data() {
+        let s = summarize((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert_eq!(s.p50, 51.0); // index (99*0.5).round() = 50 -> value 51
+        assert_eq!(s.p95, 95.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "NFE", "FID"]);
+        t.row(vec!["euler-maruyama".into(), "1000".into(), "2.55".into()]);
+        t.row(vec!["ours".into(), "179".into(), "2.59".into()]);
+        let r = t.render();
+        assert!(r.contains("euler-maruyama  1000  2.55"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("method,NFE,FID\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn plot_contains_markers() {
+        let p = ascii_plot(
+            &[("a", vec![(0.0, 0.0), (1.0, 1.0)]), ("b", vec![(0.5, 0.5)])],
+            20,
+            5,
+        );
+        assert!(p.contains('o') && p.contains('x'));
+    }
+
+    #[test]
+    fn fmt_durations() {
+        assert_eq!(fmt_duration(2.5), "2.50s");
+        assert_eq!(fmt_duration(0.0025), "2.50ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.5us");
+    }
+}

@@ -1,0 +1,162 @@
+//! CLI argument substrate (no clap reachable offline). Subcommand +
+//! `--flag value` / `--flag=value` / boolean `--flag` parsing with typed
+//! getters and a usage-error path the binary surfaces to the user.
+
+use crate::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(stripped) = item.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        // value iff next token exists and is not itself a flag
+                        match it.peek() {
+                            Some(nxt) if !nxt.starts_with("--") => it.next().unwrap(),
+                            _ => String::new(), // boolean flag
+                        }
+                    }
+                };
+                out.flags.entry(key).or_default().push(val);
+            } else {
+                out.positional.push(item);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences (for repeatable flags like --variant).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags.get(key).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None | Some("") => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{key}: expected integer, got '{s}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None | Some("") => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{key}: expected number, got '{s}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None | Some("") => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{key}: expected integer, got '{s}'")),
+        }
+    }
+
+    /// Comma-separated list flag: `--eps 0.01,0.05` -> vec![0.01, 0.05].
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None | Some("") => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|_| anyhow!("--{key}: bad number '{p}'")))
+                .collect(),
+        }
+    }
+
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None | Some("") => default.iter().map(|s| s.to_string()).collect(),
+            Some(s) => s.split(',').map(|p| p.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["generate", "--model", "vp", "--n=64", "--fused"]);
+        assert_eq!(a.positional, vec!["generate"]);
+        assert_eq!(a.get("model"), Some("vp"));
+        assert_eq!(a.usize_or("n", 1).unwrap(), 64);
+        assert!(a.has("fused"));
+        assert_eq!(a.get("fused"), Some(""));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["--fused", "--model", "ve"]);
+        assert!(a.has("fused"));
+        assert_eq!(a.get("model"), Some("ve"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["--offset=-1.5"]);
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -1.5);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--eps", "0.01, 0.05,0.1", "--names", "a,b"]);
+        assert_eq!(a.f64_list_or("eps", &[]).unwrap(), vec![0.01, 0.05, 0.1]);
+        assert_eq!(a.str_list_or("names", &[]), vec!["a", "b"]);
+        assert_eq!(a.f64_list_or("missing", &[1.0]).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn repeated_flags_last_wins_for_get() {
+        let a = parse(&["--model", "vp", "--model", "ve"]);
+        assert_eq!(a.get("model"), Some("ve"));
+        assert_eq!(a.get_all("model"), vec!["vp", "ve"]);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.usize_or("n", 1).is_err());
+        assert!(a.req("missing").is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Config system: a TOML-subset parser (sections, strings, numbers,
+//! bools, flat arrays, comments) feeding typed config structs, with CLI
+//! override support (`--set section.key=value`). This is the launcher's
+//! configuration layer; see `configs/server.toml` for the shipped default.
+
+use crate::{anyhow, bail, cli::Args, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Item {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<Item>),
+}
+
+impl Item {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Item::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Item::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+}
+
+/// `section.key -> Item`; keys in the root section have no prefix.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    items: BTreeMap<String, Item>,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config> {
+        let mut items = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            items.insert(full, parse_item(val.trim(), lineno + 1)?);
+        }
+        Ok(Config { items })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Apply `--set section.key=value` CLI overrides (repeatable).
+    pub fn apply_overrides(&mut self, args: &Args) -> Result<()> {
+        for ov in args.get_all("set") {
+            let (key, val) = ov
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--set expects section.key=value, got '{ov}'"))?;
+            self.items.insert(key.trim().to_string(), parse_item(val.trim(), 0)?);
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Item> {
+        self.items.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.items.get(key).map(|i| i.as_f64()).transpose().map(|v| v.unwrap_or(default))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.f64_or(key, default as f64)? as usize)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.items.get(key) {
+            Some(i) => Ok(i.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.items.get(key) {
+            Some(Item::Bool(b)) => Ok(*b),
+            Some(other) => bail!("{key}: expected bool, got {other:?}"),
+            None => Ok(default),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.items.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_item(s: &str, lineno: usize) -> Result<Item> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Item::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Item::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Item::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let parts: Result<Vec<Item>> = inner
+            .split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(|p| parse_item(p.trim(), lineno))
+            .collect();
+        return Ok(Item::List(parts?));
+    }
+    s.parse::<f64>()
+        .map(Item::Num)
+        .map_err(|_| anyhow!("line {lineno}: cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# server defaults
+artifacts = "artifacts"
+
+[server]
+port = 7878            # TCP port
+max_batch = 64
+buckets = [16, 64]
+fused = true
+
+[solver]
+eps_rel = 0.05
+kind = "adaptive"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("artifacts", "").unwrap(), "artifacts");
+        assert_eq!(c.usize_or("server.port", 0).unwrap(), 7878);
+        assert!(c.bool_or("server.fused", false).unwrap());
+        assert_eq!(c.f64_or("solver.eps_rel", 0.0).unwrap(), 0.05);
+        match c.get("server.buckets").unwrap() {
+            Item::List(v) => assert_eq!(v.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("server.port", 1234).unwrap(), 1234);
+        assert_eq!(c.str_or("solver.kind", "adaptive").unwrap(), "adaptive");
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        let args =
+            Args::parse(["--set".to_string(), "server.port=9999".to_string()]).unwrap();
+        c.apply_overrides(&args).unwrap();
+        assert_eq!(c.usize_or("server.port", 0).unwrap(), 9999);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Config::parse("name = \"a#b\"").unwrap();
+        assert_eq!(c.str_or("name", "").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = what").is_err());
+    }
+}

@@ -1,0 +1,467 @@
+//! Engine thread: owns the PJRT runtime and runs the continuous-batching
+//! step loop. See module docs in `coordinator/mod.rs`.
+
+use super::{Msg, Pending, SampleRequest, Slot};
+use crate::metrics::hist::Histogram;
+use crate::rng::Rng;
+use crate::runtime::{Model, Runtime};
+use crate::tensor::Tensor;
+use crate::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub artifacts: PathBuf,
+    pub model: String,
+    /// Slot-pool width; must be one of the model's adaptive_step buckets.
+    pub bucket: usize,
+    pub fused_buffers: bool,
+    /// Admission control: maximum queued samples before rejecting.
+    pub max_queue_samples: usize,
+    /// Algorithm-1 controller parameters (paper defaults).
+    pub h_init: f64,
+    pub r: f64,
+    pub safety: f64,
+}
+
+impl EngineConfig {
+    pub fn new(artifacts: impl Into<PathBuf>, model: &str) -> EngineConfig {
+        EngineConfig {
+            artifacts: artifacts.into(),
+            model: model.to_string(),
+            bucket: 16,
+            fused_buffers: true,
+            max_queue_samples: 4096,
+            h_init: 0.01,
+            r: 0.9,
+            safety: 0.9,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    /// Unit-range images, [n, dim].
+    pub images: Tensor,
+    pub nfe: Vec<u64>,
+    pub wall_s: f64,
+    pub queued_s: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub requests_done: u64,
+    pub samples_done: u64,
+    pub queued_samples: usize,
+    pub active_slots: usize,
+    pub steps: u64,
+    pub rejections: u64,
+    pub score_evals: u64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_mean_s: f64,
+    /// Mean occupied slots per step since start (batching efficiency).
+    pub mean_occupancy: f64,
+}
+
+/// Handle owning the engine thread.
+pub struct Engine {
+    tx: mpsc::Sender<Msg>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable, Send client for server/bench threads.
+#[derive(Clone)]
+pub struct EngineClient {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl Engine {
+    /// Spawn the engine thread; fails fast if the runtime cannot load.
+    pub fn start(cfg: EngineConfig) -> Result<Engine> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("gofast-engine".into())
+            .spawn(move || engine_main(cfg, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))?
+            .map_err(|e| anyhow!("engine startup failed: {e}"))?;
+        Ok(Engine { tx, join: Some(join) })
+    }
+
+    pub fn client(&self) -> EngineClient {
+        EngineClient { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl EngineClient {
+    pub fn generate(&self, n: usize, eps_rel: f64, seed: u64) -> Result<GenResult> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Generate(SampleRequest { n, eps_rel, seed }, rtx))
+            .map_err(|_| anyhow!("engine is down"))?;
+        rrx.recv().map_err(|_| anyhow!("engine dropped the request"))?.map_err(|e| anyhow!(e))
+    }
+
+    pub fn stats(&self) -> Result<EngineStats> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Stats(rtx)).map_err(|_| anyhow!("engine is down"))?;
+        rrx.recv().map_err(|_| anyhow!("engine dropped the stats request"))
+    }
+}
+
+// --- engine internals ---------------------------------------------------------
+
+struct EngineState<'m, 'rt> {
+    model: &'m Model<'rt>,
+    cfg: EngineConfig,
+    process: crate::sde::Process,
+    slots: Vec<Slot>,
+    x: Tensor,
+    xprev: Tensor,
+    pending: HashMap<u64, Pending>,
+    fifo: Vec<u64>, // request ids in arrival order
+    next_req_id: u64,
+    queued_samples: usize,
+    // metrics
+    requests_done: u64,
+    samples_done: u64,
+    steps: u64,
+    rejections: u64,
+    latency: Histogram,
+    occupancy_sum: u64,
+}
+
+fn engine_main(
+    cfg: EngineConfig,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    let rt = match Runtime::new(&cfg.artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let model = match rt.model(&cfg.model) {
+        Ok(m) => m,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    if !model.buckets("adaptive_step").contains(&cfg.bucket) {
+        let _ = ready.send(Err(format!(
+            "bucket {} not available for adaptive_step (have {:?})",
+            cfg.bucket,
+            model.buckets("adaptive_step")
+        )));
+        return;
+    }
+    let dim = model.meta.dim;
+    let bucket = cfg.bucket;
+    let mut st = EngineState {
+        process: model.meta.process(),
+        model: &model,
+        slots: vec![Slot::Free; bucket],
+        x: Tensor::zeros(&[bucket, dim]),
+        xprev: Tensor::zeros(&[bucket, dim]),
+        pending: HashMap::new(),
+        fifo: Vec::new(),
+        next_req_id: 1,
+        queued_samples: 0,
+        requests_done: 0,
+        samples_done: 0,
+        steps: 0,
+        rejections: 0,
+        latency: Histogram::new(),
+        occupancy_sum: 0,
+        cfg,
+    };
+    let _ = ready.send(Ok(()));
+
+    loop {
+        // 1. drain the mailbox (block only when fully idle)
+        let idle = st.slots.iter().all(|s| s.is_free()) && st.fifo.is_empty();
+        if idle {
+            match rx.recv() {
+                Ok(msg) => {
+                    if st.handle_msg(msg) {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => {
+                    if st.handle_msg(msg) {
+                        return;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => return,
+            }
+        }
+        // 2. admit queued samples into free slots
+        st.admit();
+        // 3. advance the continuous batch one Algorithm-1 iteration
+        if st.slots.iter().any(|s| !s.is_free()) {
+            if let Err(e) = st.step() {
+                st.fail_all(&format!("engine step failed: {e:#}"));
+            }
+        }
+    }
+}
+
+impl<'m, 'rt> EngineState<'m, 'rt> {
+    /// Returns true on shutdown.
+    fn handle_msg(&mut self, msg: Msg) -> bool {
+        match msg {
+            Msg::Shutdown => true,
+            Msg::Stats(reply) => {
+                let _ = reply.send(self.stats());
+                false
+            }
+            Msg::Generate(req, reply) => {
+                if req.n == 0 {
+                    let _ = reply.send(Err("n must be > 0".into()));
+                    return false;
+                }
+                if self.queued_samples + req.n > self.cfg.max_queue_samples {
+                    let _ = reply.send(Err(format!(
+                        "queue full ({} samples queued, max {})",
+                        self.queued_samples, self.cfg.max_queue_samples
+                    )));
+                    return false;
+                }
+                let id = self.next_req_id;
+                self.next_req_id += 1;
+                self.queued_samples += req.n;
+                let dim = self.model.meta.dim;
+                self.pending.insert(
+                    id,
+                    Pending {
+                        images: Tensor::zeros(&[req.n, dim]),
+                        nfe: vec![0; req.n],
+                        next_sample: 0,
+                        done: 0,
+                        reply,
+                        enqueued: Instant::now(),
+                        started: None,
+                        req,
+                    },
+                );
+                self.fifo.push(id);
+                false
+            }
+        }
+    }
+
+    /// FIFO admission of queued samples into free slots.
+    fn admit(&mut self) {
+        let mut fi = 0;
+        for si in 0..self.slots.len() {
+            if !self.slots[si].is_free() {
+                continue;
+            }
+            // find next request with samples left to admit (completed
+            // requests may still sit in fifo until the retain below)
+            while fi < self.fifo.len() {
+                let id = self.fifo[fi];
+                match self.pending.get(&id) {
+                    Some(p) if p.next_sample < p.req.n => break,
+                    _ => fi += 1,
+                }
+            }
+            if fi >= self.fifo.len() {
+                break;
+            }
+            let id = self.fifo[fi];
+            let p = self.pending.get_mut(&id).unwrap();
+            let sample_idx = p.next_sample;
+            p.next_sample += 1;
+            if p.started.is_none() {
+                p.started = Some(Instant::now());
+            }
+            self.queued_samples -= 1;
+            // init the lane: prior draw, fresh forked rng per sample
+            let mut rng = Rng::new(p.req.seed).fork(sample_idx as u64);
+            {
+                let row = self.x.row_mut(si);
+                let std = self.process.prior_std() as f32;
+                for v in row.iter_mut() {
+                    *v = rng.normal() as f32 * std;
+                }
+                let prev = row.to_vec();
+                self.xprev.row_mut(si).copy_from_slice(&prev);
+            }
+            self.slots[si] = Slot::Running {
+                req_id: id,
+                sample_idx,
+                t: 1.0,
+                h: self.cfg.h_init,
+                eps_rel: p.req.eps_rel,
+                nfe: 0,
+                rng,
+            };
+        }
+        // drop fully-admitted-and-finished request ids from fifo head
+        self.fifo.retain(|id| self.pending.contains_key(id));
+    }
+
+    /// One fused adaptive_step over the slot pool.
+    fn step(&mut self) -> Result<()> {
+        let b = self.cfg.bucket;
+        let dim = self.model.meta.dim;
+        let t_eps = self.process.t_eps();
+        let eps_abs = self.process.eps_abs();
+        let mut t_in = vec![1.0f32; b];
+        let mut h_in = vec![0.0f32; b];
+        let mut er_in = vec![0.01f32; b];
+        let mut z = Tensor::zeros(&[b, dim]);
+        let mut occupied = 0u64;
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Slot::Running { t, h, eps_rel, rng, .. } = slot {
+                occupied += 1;
+                *h = h.min(*t - t_eps).max(0.0);
+                t_in[i] = *t as f32;
+                h_in[i] = *h as f32;
+                er_in[i] = *eps_rel as f32;
+                rng.fill_normal(z.row_mut(i));
+            }
+        }
+        self.occupancy_sum += occupied;
+        let t_t = Tensor { shape: vec![b], data: t_in };
+        let h_t = Tensor { shape: vec![b], data: h_in };
+        let er_t = Tensor { shape: vec![b], data: er_in };
+        let ea_t = Tensor::scalar(eps_abs as f32);
+        let out = self.model.exec(
+            "adaptive_step",
+            b,
+            &[&self.x, &self.xprev, &t_t, &h_t, &z, &ea_t, &er_t],
+            self.cfg.fused_buffers,
+        )?;
+        let (xpp, xp, e2) = (&out[0], &out[1], &out[2]);
+        self.steps += 1;
+
+        let mut converged: Vec<usize> = Vec::new();
+        for i in 0..b {
+            let Slot::Running { t, h, nfe, .. } = &mut self.slots[i] else {
+                continue;
+            };
+            *nfe += 2;
+            let e = e2.data[i] as f64;
+            if e <= 1.0 {
+                self.x.row_mut(i).copy_from_slice(xpp.row(i));
+                self.xprev.row_mut(i).copy_from_slice(xp.row(i));
+                *t -= *h;
+                if *t <= t_eps + 1e-12 {
+                    converged.push(i);
+                }
+            } else {
+                self.rejections += 1;
+            }
+            let grow = self.cfg.safety * e.max(1e-12).powf(-self.cfg.r);
+            *h = (*h * grow).min((*t - t_eps).max(0.0));
+        }
+        if !converged.is_empty() {
+            self.finish_slots(&converged)?;
+        }
+        Ok(())
+    }
+
+    /// Denoise converged lanes (one batched Tweedie call) and hand their
+    /// images back to their requests; free the lanes.
+    fn finish_slots(&mut self, lanes: &[usize]) -> Result<()> {
+        let b = self.cfg.bucket;
+        let t_end = super::super::solvers::t_vec(b, self.process.t_eps());
+        let mut out =
+            self.model.exec("denoise", b, &[&self.x, &t_end], self.cfg.fused_buffers)?;
+        let x0 = out.pop().unwrap();
+        for &i in lanes {
+            let Slot::Running { req_id, sample_idx, nfe, .. } = self.slots[i] else {
+                continue;
+            };
+            let nfe_total = nfe + 1; // the denoise eval
+            let p = self.pending.get_mut(&req_id).expect("pending req exists");
+            // unit-range conversion into the request buffer
+            let (lo, hi) = self.process.data_range();
+            let (lo, hi) = (lo as f32, hi as f32);
+            let dst = p.images.row_mut(sample_idx);
+            for (d, &s) in dst.iter_mut().zip(x0.row(i)) {
+                *d = ((s - lo) / (hi - lo)).clamp(0.0, 1.0);
+            }
+            p.nfe[sample_idx] = nfe_total;
+            p.done += 1;
+            self.samples_done += 1;
+            if p.done == p.req.n {
+                let p = self.pending.remove(&req_id).unwrap();
+                let now = Instant::now();
+                let wall =
+                    now.duration_since(p.started.unwrap_or(p.enqueued)).as_secs_f64();
+                let queued = p
+                    .started
+                    .map(|s| s.duration_since(p.enqueued).as_secs_f64())
+                    .unwrap_or(0.0);
+                self.latency.record(now.duration_since(p.enqueued).as_secs_f64());
+                self.requests_done += 1;
+                let _ = p.reply.send(Ok(GenResult {
+                    images: p.images,
+                    nfe: p.nfe,
+                    wall_s: wall,
+                    queued_s: queued,
+                }));
+            }
+            self.slots[i] = Slot::Free;
+        }
+        Ok(())
+    }
+
+    fn fail_all(&mut self, msg: &str) {
+        for (_, p) in self.pending.drain() {
+            let _ = p.reply.send(Err(msg.to_string()));
+        }
+        self.fifo.clear();
+        self.queued_samples = 0;
+        for s in self.slots.iter_mut() {
+            *s = Slot::Free;
+        }
+    }
+
+    fn stats(&self) -> EngineStats {
+        EngineStats {
+            requests_done: self.requests_done,
+            samples_done: self.samples_done,
+            queued_samples: self.queued_samples,
+            active_slots: self.slots.iter().filter(|s| !s.is_free()).count(),
+            steps: self.steps,
+            rejections: self.rejections,
+            score_evals: self.model.runtime().stats().score_evals,
+            latency_p50_s: self.latency.quantile(0.5),
+            latency_p95_s: self.latency.quantile(0.95),
+            latency_mean_s: self.latency.mean(),
+            mean_occupancy: if self.steps == 0 {
+                0.0
+            } else {
+                self.occupancy_sum as f64 / self.steps as f64
+            },
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! The serving coordinator: continuous batching for adaptive-SDE
+//! sampling (DESIGN.md §3, L3).
+//!
+//! The paper's §3.1.5 observation — every sample's reverse diffusion is
+//! independent, so each keeps its own step size — is exactly what makes
+//! diffusion sampling *continuously batchable*: a fixed-shape
+//! `adaptive_step` executable advances a slot pool where every lane has
+//! its own `(x, t, h, eps_rel)`; lanes that converge are denoised,
+//! returned to their request, and immediately backfilled from the
+//! admission queue. No request ever waits for another request's slowest
+//! sample (the lockstep penalty the paper's batch solver pays).
+//!
+//! Ownership: PJRT handles are not Send, so the engine thread creates and
+//! owns the `Runtime`; everything else talks to it via channels.
+
+pub mod engine;
+
+pub use engine::{Engine, EngineClient, EngineConfig, EngineStats, GenResult};
+
+use crate::tensor::Tensor;
+use std::sync::mpsc;
+
+/// A sampling request as admitted by the engine.
+#[derive(Clone, Debug)]
+pub struct SampleRequest {
+    pub n: usize,
+    pub eps_rel: f64,
+    pub seed: u64,
+}
+
+/// Engine mailbox messages.
+pub(crate) enum Msg {
+    Generate(SampleRequest, mpsc::Sender<Result<GenResult, String>>),
+    Stats(mpsc::Sender<EngineStats>),
+    Shutdown,
+}
+
+/// Per-request accumulation state while its samples move through slots.
+pub(crate) struct Pending {
+    pub req: SampleRequest,
+    pub next_sample: usize,
+    pub done: usize,
+    pub images: Tensor, // [n, dim] unit-range, filled as samples finish
+    pub nfe: Vec<u64>,
+    pub reply: mpsc::Sender<Result<GenResult, String>>,
+    pub enqueued: std::time::Instant,
+    pub started: Option<std::time::Instant>,
+}
+
+/// One lane of the continuous batch.
+#[derive(Clone, Debug, Default)]
+pub(crate) enum Slot {
+    #[default]
+    Free,
+    Running {
+        /// index into the engine's pending list (by request id)
+        req_id: u64,
+        sample_idx: usize,
+        t: f64,
+        h: f64,
+        eps_rel: f64,
+        nfe: u64,
+        rng: crate::rng::Rng,
+    },
+}
+
+impl Slot {
+    pub fn is_free(&self) -> bool {
+        matches!(self, Slot::Free)
+    }
+}

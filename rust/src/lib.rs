@@ -1,0 +1,34 @@
+//! # gofast
+//!
+//! A serving engine for score-based (diffusion) generative models built
+//! around the adaptive SDE solver of *"Gotta Go Fast When Generating Data
+//! with Score-Based Models"* (Jolicoeur-Martineau et al., 2021).
+//!
+//! Three-layer architecture (DESIGN.md):
+//! * **L1** — Pallas kernels (authored in `python/compile/kernels/`),
+//! * **L2** — JAX score network + solver-step graphs, AOT-lowered to HLO
+//!   text artifacts (`python/compile/aot.py`),
+//! * **L3** — this crate: the PJRT runtime that loads those artifacts and
+//!   the coordinator that serves sampling requests with per-sample
+//!   adaptive step sizes (continuous batching).
+//!
+//! Python never runs on the request path; after `make artifacts` the
+//! `gofast` binary is self-contained.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod json;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod sde;
+pub mod server;
+pub mod solvers;
+pub mod tensor;
+pub mod testkit;
+pub mod workload;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,255 @@
+//! Small dense linear-algebra substrate for the FID* metric: feature
+//! mean/covariance, a cyclic-Jacobi symmetric eigensolver, and the PSD
+//! matrix square root. Matrices here are tiny (FEAT_DIM = 64), so clarity
+//! beats blocking; everything is row-major `Vec<f64>`.
+
+/// C = A (m x k) * B (k x n), row-major.
+pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+pub fn transpose(a: &[f64], m: usize, n: usize) -> Vec<f64> {
+    let mut t = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            t[j * m + i] = a[i * n + j];
+        }
+    }
+    t
+}
+
+pub fn trace(a: &[f64], n: usize) -> f64 {
+    (0..n).map(|i| a[i * n + i]).sum()
+}
+
+/// Mean vector and (biased) covariance of rows of `x` ([rows x d], f32).
+pub fn mean_cov(x: &[f32], rows: usize, d: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(rows > 1, "need >= 2 rows for covariance");
+    let mut mu = vec![0.0f64; d];
+    for r in 0..rows {
+        for j in 0..d {
+            mu[j] += x[r * d + j] as f64;
+        }
+    }
+    mu.iter_mut().for_each(|v| *v /= rows as f64);
+    let mut cov = vec![0.0f64; d * d];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        for i in 0..d {
+            let di = row[i] as f64 - mu[i];
+            for j in i..d {
+                cov[i * d + j] += di * (row[j] as f64 - mu[j]);
+            }
+        }
+    }
+    let norm = 1.0 / (rows as f64 - 1.0);
+    for i in 0..d {
+        for j in i..d {
+            let v = cov[i * d + j] * norm;
+            cov[i * d + j] = v;
+            cov[j * d + i] = v;
+        }
+    }
+    (mu, cov)
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors as columns of V: A = V diag(l) V^T).
+pub fn sym_eigh(a_in: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut a = a_in.to_vec();
+    let mut v = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[i * n + j] * a[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-12 * (trace(&a, n).abs().max(1.0)) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of A
+                for k in 0..n {
+                    let akp = a[k * n + p];
+                    let akq = a[k * n + q];
+                    a[k * n + p] = c * akp - s * akq;
+                    a[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p * n + k];
+                    let aqk = a[q * n + k];
+                    a[p * n + k] = c * apk - s * aqk;
+                    a[q * n + k] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let eig = (0..n).map(|i| a[i * n + i]).collect();
+    (eig, v)
+}
+
+/// PSD matrix square root via eigendecomposition (negative eigenvalues from
+/// numerical noise are clamped to 0).
+pub fn sqrtm_psd(a: &[f64], n: usize) -> Vec<f64> {
+    let (eig, v) = sym_eigh(a, n);
+    // V diag(sqrt(max(l,0))) V^T
+    let mut vs = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            vs[i * n + j] = v[i * n + j] * eig[j].max(0.0).sqrt();
+        }
+    }
+    matmul(&vs, &transpose(&v, n, n), n, n, n)
+}
+
+/// tr(sqrtm(C1 C2)) computed via the symmetric form
+/// tr sqrtm(S C2 S) with S = sqrtm(C1) — both factors PSD.
+pub fn trace_sqrt_product(c1: &[f64], c2: &[f64], n: usize) -> f64 {
+    let s = sqrtm_psd(c1, n);
+    let m = matmul(&matmul(&s, c2, n, n, n), &s, n, n, n);
+    let (eig, _) = sym_eigh(&m, n);
+    eig.iter().map(|&l| l.max(0.0).sqrt()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_psd(n: usize, seed: u64) -> Vec<f64> {
+        let mut r = Rng::new(seed);
+        let b: Vec<f64> = (0..n * n).map(|_| r.normal()).collect();
+        // B B^T + eps I
+        let mut a = matmul(&b, &transpose(&b, n, n), n, n, n);
+        for i in 0..n {
+            a[i * n + i] += 0.1;
+        }
+        a
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let id = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &id, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let c = matmul(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        let n = 16;
+        let a = random_psd(n, 1);
+        let (eig, v) = sym_eigh(&a, n);
+        // V diag(l) V^T == A
+        let mut vd = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                vd[i * n + j] = v[i * n + j] * eig[j];
+            }
+        }
+        let rec = matmul(&vd, &transpose(&v, n, n), n, n, n);
+        for (x, y) in rec.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn eigh_orthonormal_vectors() {
+        let n = 12;
+        let a = random_psd(n, 2);
+        let (_, v) = sym_eigh(&a, n);
+        let vtv = matmul(&transpose(&v, n, n), &v, n, n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv[i * n + j] - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let n = 8;
+        let a = random_psd(n, 3);
+        let s = sqrtm_psd(&a, n);
+        let ss = matmul(&s, &s, n, n, n);
+        for (x, y) in ss.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn trace_sqrt_product_of_identical_is_trace() {
+        // tr sqrtm(C C) = tr C for PSD C
+        let n = 6;
+        let c = random_psd(n, 4);
+        let t = trace_sqrt_product(&c, &c, n);
+        assert!((t - trace(&c, n)).abs() < 1e-8, "{t}");
+    }
+
+    #[test]
+    fn mean_cov_known_values() {
+        // two points (0,0) and (2,2): mean (1,1), cov = [[2,2],[2,2]] (n-1 norm)
+        let x = [0.0f32, 0.0, 2.0, 2.0];
+        let (mu, cov) = mean_cov(&x, 2, 2);
+        assert_eq!(mu, vec![1.0, 1.0]);
+        assert_eq!(cov, vec![2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn mean_cov_diagonal_for_independent() {
+        let mut r = Rng::new(5);
+        let rows = 20_000;
+        let x: Vec<f32> = (0..rows * 2).map(|_| r.normal() as f32).collect();
+        let (mu, cov) = mean_cov(&x, rows, 2);
+        assert!(mu[0].abs() < 0.05 && mu[1].abs() < 0.05);
+        assert!((cov[0] - 1.0).abs() < 0.05);
+        assert!(cov[1].abs() < 0.05);
+    }
+}

@@ -1,0 +1,320 @@
+//! `gofast` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   generate  sample a batch offline with any solver, write a PPM grid
+//!   serve     start the continuous-batching TCP server
+//!   client    issue generate/stats requests against a running server
+//!   inspect   list artifact variants, programs and buckets
+//!   evaluate  FID*/IS* of a model+solver against the reference split
+//!
+//! Paper-table regeneration lives in `benches/` (cargo bench).
+
+use gofast::cli::Args;
+use gofast::config::Config;
+use gofast::coordinator::{Engine, EngineConfig};
+use gofast::metrics;
+use gofast::rng::Rng;
+use gofast::runtime::Runtime;
+use gofast::solvers::{self, adaptive, ddim, em, lamba, prob_flow, rdl, Ctx, SolveOpts};
+use gofast::tensor::{read_f32_file, save_image_grid, Tensor};
+use gofast::{bail, json, Context, Result};
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args = match Args::parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let r = match cmd {
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "inspect" => cmd_inspect(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "help" | "--help" => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+gofast — adaptive-SDE diffusion sampling engine
+
+USAGE: gofast <command> [flags]
+
+  generate  --model vp [--solver adaptive|em|rdl|ddim|ode|lamba]
+            [--n 16] [--eps-rel 0.05] [--steps 256] [--seed 0]
+            [--bucket 16] [--composed] [--no-denoise] [--out grid.ppm]
+            [--artifacts artifacts]
+  serve     [--config configs/server.toml] [--set k=v ...]
+  client    [--addr 127.0.0.1:7878] [--n 4] [--eps-rel 0.05] [--seed 0]
+            [--stats] [--out grid.ppm]
+  evaluate  --model vp [--solver ...] [--samples 256] [...generate flags]
+  inspect   [--artifacts artifacts]
+";
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn run_solver(
+    ctx: &Ctx,
+    rng: &mut Rng,
+    solver: &str,
+    args: &Args,
+) -> Result<solvers::SolveResult> {
+    let steps = args.usize_or("steps", 256)?;
+    let eps_rel = args.f64_or("eps-rel", 0.05)?;
+    match solver {
+        "adaptive" => {
+            let opts = adaptive::AdaptiveOpts {
+                eps_rel,
+                r: args.f64_or("r", 0.9)?,
+                safety: args.f64_or("safety", 0.9)?,
+                ..Default::default()
+            };
+            if args.has("composed") {
+                adaptive::run_composed(ctx, rng, &opts)
+            } else {
+                adaptive::run_fused(ctx, rng, &opts)
+            }
+        }
+        "em" => {
+            if args.has("composed") {
+                em::run_composed(ctx, rng, steps)
+            } else {
+                em::run(ctx, rng, steps)
+            }
+        }
+        "rdl" => rdl::run(ctx, rng, steps, None),
+        "ddim" => ddim::run(ctx, rng, steps),
+        "ode" => prob_flow::run(
+            ctx,
+            rng,
+            &prob_flow::OdeOpts {
+                rtol: args.f64_or("rtol", 1e-4)?,
+                atol: args.f64_or("atol", 1e-4)?,
+                ..Default::default()
+            },
+        ),
+        "lamba" => lamba::run(
+            ctx,
+            rng,
+            &lamba::LambaOpts { eps_rel, ..Default::default() },
+        ),
+        other => bail!("unknown solver '{other}'"),
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(args))?;
+    let model_name = args.str_or("model", "vp");
+    let model = rt.model(&model_name)?;
+    let bucket = args.usize_or("bucket", 16)?;
+    let opts = SolveOpts {
+        fused_buffers: !args.has("literals"),
+        denoise: !args.has("no-denoise"),
+    };
+    let ctx = Ctx::new(&model, bucket, opts);
+    let solver = args.str_or("solver", "adaptive");
+    let n = args.usize_or("n", bucket)?;
+    let mut rng = Rng::new(args.u64_or("seed", 0)?);
+    let mut images = Tensor::zeros(&[n, model.meta.dim]);
+    let mut nfe_all = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut done = 0;
+    while done < n {
+        let take = (n - done).min(bucket);
+        let res = run_solver(&ctx, &mut rng, &solver, args)?;
+        for i in 0..take {
+            images.row_mut(done + i).copy_from_slice(res.x.row(i));
+        }
+        nfe_all.extend_from_slice(&res.nfe_per_sample[..take]);
+        done += take;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let process = model.meta.process();
+    process.to_unit_range(&mut images);
+    let mean_nfe = nfe_all.iter().sum::<u64>() as f64 / nfe_all.len() as f64;
+    println!(
+        "model={model_name} solver={solver} n={n} mean_nfe={mean_nfe:.1} wall={wall:.2}s ({:.2} samples/s)",
+        n as f64 / wall
+    );
+    let out = args.str_or("out", "grid.ppm");
+    let cols = (n as f64).sqrt().ceil() as usize;
+    save_image_grid(Path::new(&out), &images, model.meta.h, model.meta.w, cols.max(1))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(Path::new(path))?,
+        None => {
+            let default = Path::new("configs/server.toml");
+            if default.exists() {
+                Config::load(default)?
+            } else {
+                Config::parse("")?
+            }
+        }
+    };
+    cfg.apply_overrides(args)?;
+    let artifacts = PathBuf::from(cfg.str_or("artifacts", "artifacts")?);
+    let model = cfg.str_or("server.model", "vp")?;
+    let port = cfg.usize_or("server.port", 7878)? as u16;
+    let bucket = cfg.usize_or("server.bucket", 16)?;
+    let mut ecfg = EngineConfig::new(&artifacts, &model);
+    ecfg.bucket = bucket;
+    ecfg.fused_buffers = cfg.bool_or("server.fused_buffers", true)?;
+    ecfg.max_queue_samples = cfg.usize_or("server.max_queue_samples", 4096)?;
+
+    // image geometry for the wire protocol
+    let rt = Runtime::new(&artifacts)?;
+    let meta = rt.model(&model)?.meta.clone();
+    drop(rt);
+
+    let engine = Engine::start(ecfg)?;
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port))
+        .with_context(|| format!("binding port {port}"))?;
+    println!(
+        "gofast serving model={model} on 127.0.0.1:{port} (bucket={bucket}, dim={})",
+        meta.dim
+    );
+    gofast::server::serve(
+        listener,
+        engine.client(),
+        gofast::server::ServerConfig {
+            port,
+            img_h: meta.h,
+            img_w: meta.w,
+            default_eps_rel: cfg.f64_or("solver.eps_rel", 0.05)?,
+        },
+    )
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let mut client = gofast::server::Client::connect(&addr)?;
+    if args.has("stats") {
+        println!("{}", client.stats()?);
+        return Ok(());
+    }
+    let n = args.usize_or("n", 4)?;
+    let r = client.generate(
+        n,
+        args.f64_or("eps-rel", 0.05)?,
+        args.u64_or("seed", 0)?,
+        true,
+    )?;
+    let mean_nfe = r.nfe.iter().sum::<u64>() as f64 / r.nfe.len() as f64;
+    println!(
+        "n={n} wall={:.2}s queued={:.3}s mean_nfe={mean_nfe:.1}",
+        r.wall_s, r.queued_s
+    );
+    if let Some(out) = args.get("out") {
+        let d = r.images.shape[1] / 3;
+        let side = (d as f64).sqrt() as usize;
+        let cols = (n as f64).sqrt().ceil() as usize;
+        save_image_grid(Path::new(out), &r.images, side, side, cols.max(1))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let man = json::parse_file(&dir.join("manifest.json"))?;
+    for (name, v) in man.req("variants")?.members() {
+        let meta = v.req("meta")?;
+        println!(
+            "variant {name}: {} {}x{}x{} params={} dataset={}",
+            meta.req("sde_kind")?.as_str()?,
+            meta.req("h")?.as_usize()?,
+            meta.req("w")?.as_usize()?,
+            meta.req("c")?.as_usize()?,
+            meta.req("n_params")?.as_usize()?,
+            meta.req("dataset")?.as_str()?,
+        );
+        for p in v.req("programs")?.as_arr()? {
+            println!(
+                "  {}_b{} -> {}",
+                p.req("program")?.as_str()?,
+                p.req("bucket")?.as_usize()?,
+                p.req("file")?.as_str()?
+            );
+        }
+    }
+    for (name, v) in man.req("fidnets")?.members() {
+        let meta = v.req("meta")?;
+        println!(
+            "fidnet {name}: dim={} classes={} feat={}",
+            meta.req("dim")?.as_usize()?,
+            meta.req("n_classes")?.as_usize()?,
+            meta.req("feat_dim")?.as_usize()?,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::new(&dir)?;
+    let model_name = args.str_or("model", "vp");
+    let model = rt.model(&model_name)?;
+    let fid_name = if model.meta.dim == 768 { "fid16" } else { "fid32" };
+    let net = rt.fid_net(fid_name)?;
+    let samples = args.usize_or("samples", 256)?;
+    let bucket = args.usize_or("bucket", 64)?;
+    let ctx = Ctx::new(&model, bucket, SolveOpts::default());
+    let solver = args.str_or("solver", "adaptive");
+    let mut rng = Rng::new(args.u64_or("seed", 0)?);
+
+    // reference stats from the exported eval split
+    let data_meta =
+        json::parse_file(&dir.join("data").join(format!("{}.meta.json", model.meta.dataset)))?;
+    let n_ref = data_meta.req("n")?.as_usize()?.min(2048);
+    let reference = read_f32_file(
+        &dir.join("data").join(format!("{}.bin", model.meta.dataset)),
+        &[data_meta.req("n")?.as_usize()?, model.meta.dim],
+    )?;
+    let ref_slice = Tensor::from_vec(
+        &[n_ref, model.meta.dim],
+        reference.data[..n_ref * model.meta.dim].to_vec(),
+    )?;
+    let (rf, _) = metrics::extract_features(&net, &ref_slice)?;
+    let ref_stats = metrics::feature_stats(&rf);
+
+    let mut images = Tensor::zeros(&[samples, model.meta.dim]);
+    let mut nfe_sum = 0u64;
+    let mut done = 0;
+    while done < samples {
+        let take = (samples - done).min(bucket);
+        let res = run_solver(&ctx, &mut rng, &solver, args)?;
+        for i in 0..take {
+            images.row_mut(done + i).copy_from_slice(res.x.row(i));
+        }
+        nfe_sum += res.nfe_per_sample[..take].iter().sum::<u64>();
+        done += take;
+    }
+    model.meta.process().to_unit_range(&mut images);
+    let (fid, is) = metrics::evaluate(&net, &images, &ref_stats)?;
+    println!(
+        "model={model_name} solver={solver} samples={samples} NFE={:.0} FID*={fid:.2} IS*={is:.2}",
+        nfe_sum as f64 / samples as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Log-bucketed latency histogram + throughput window for the serving
+//! metrics endpoint (quantiles without storing every observation).
+
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bucket i covers [base * ratio^i, base * ratio^(i+1))
+    counts: Vec<u64>,
+    base: f64,
+    ratio: f64,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Covers ~[10us, 1000s] with 5% resolution by default.
+    pub fn new() -> Histogram {
+        Histogram::with_range(1e-5, 1.05, 400)
+    }
+
+    pub fn with_range(base: f64, ratio: f64, buckets: usize) -> Histogram {
+        Histogram { counts: vec![0; buckets], base, ratio, total: 0, sum: 0.0, max: 0.0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = if v <= self.base {
+            0
+        } else {
+            ((v / self.base).ln() / self.ratio.ln()) as usize
+        };
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile via bucket upper bound (<= 5% relative error by design).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base * self.ratio.powi(i as i32 + 1);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_are_close() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0); // 1ms..1s uniform
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.08, "p50 {p50}");
+        assert!((p99 - 0.99).abs() / 0.99 < 0.08, "p99 {p99}");
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 0.5005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(0.1);
+        b.record(0.2);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_is_sane() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Evaluation metrics: FID* and IS* over the synthception feature network
+//! (DESIGN.md §2 — starred to flag the Inception-v3 substitution), plus
+//! serving-side latency histograms and throughput counters.
+
+pub mod hist;
+
+use crate::linalg::{mean_cov, trace, trace_sqrt_product};
+use crate::runtime::FidNet;
+use crate::tensor::Tensor;
+use crate::{bail, Result};
+
+/// First/second moments of feature activations over a sample set.
+#[derive(Clone, Debug)]
+pub struct FeatureStats {
+    pub mu: Vec<f64>,
+    pub cov: Vec<f64>,
+    pub d: usize,
+    pub n: usize,
+}
+
+/// Run images (unit range [0,1], [N, dim]) through the feature net in
+/// bucket-sized chunks (padding the tail) and also return logits.
+pub fn extract_features(net: &FidNet, images: &Tensor) -> Result<(Tensor, Tensor)> {
+    let n = images.shape[0];
+    let dim = images.shape[1];
+    if dim != net.meta.dim {
+        bail!("image dim {dim} != fid net dim {}", net.meta.dim);
+    }
+    let bucket = *net.meta.buckets.last().expect("fid net has no buckets");
+    let fd = net.meta.feat_dim;
+    let nc = net.meta.n_classes;
+    let mut feats = Tensor::zeros(&[n, fd]);
+    let mut logits = Tensor::zeros(&[n, nc]);
+    let mut chunk = Tensor::zeros(&[bucket, dim]);
+    let mut start = 0;
+    while start < n {
+        let take = (n - start).min(bucket);
+        for i in 0..take {
+            chunk.row_mut(i).copy_from_slice(images.row(start + i));
+        }
+        // tail padding rows repeat the last row; outputs are discarded
+        for i in take..bucket {
+            let src = images.row(start + take - 1).to_vec();
+            chunk.row_mut(i).copy_from_slice(&src);
+        }
+        let (f, l) = net.features(&chunk)?;
+        for i in 0..take {
+            feats.row_mut(start + i).copy_from_slice(f.row(i));
+            logits.row_mut(start + i).copy_from_slice(l.row(i));
+        }
+        start += take;
+    }
+    Ok((feats, logits))
+}
+
+pub fn feature_stats(feats: &Tensor) -> FeatureStats {
+    let (n, d) = (feats.shape[0], feats.shape[1]);
+    let (mu, cov) = mean_cov(&feats.data, n, d);
+    FeatureStats { mu, cov, d, n }
+}
+
+/// Fréchet distance between two Gaussians fitted to feature sets:
+/// |mu1-mu2|^2 + tr(C1 + C2 - 2 sqrtm(C1 C2)).
+pub fn fid(a: &FeatureStats, b: &FeatureStats) -> f64 {
+    assert_eq!(a.d, b.d);
+    let d = a.d;
+    let mean_term: f64 = a.mu.iter().zip(&b.mu).map(|(x, y)| (x - y) * (x - y)).sum();
+    let tr_term = trace(&a.cov, d) + trace(&b.cov, d) - 2.0 * trace_sqrt_product(&a.cov, &b.cov, d);
+    (mean_term + tr_term).max(0.0)
+}
+
+/// Inception Score*: exp(E_x KL(p(y|x) || p(y))) from raw logits [N, C].
+pub fn inception_score(logits: &Tensor) -> f64 {
+    let (n, c) = (logits.shape[0], logits.shape[1]);
+    let mut probs = vec![0f64; n * c];
+    for i in 0..n {
+        let row = logits.row(i);
+        let m = row.iter().cloned().fold(f32::MIN, f32::max) as f64;
+        let mut z = 0f64;
+        for j in 0..c {
+            let e = ((row[j] as f64) - m).exp();
+            probs[i * c + j] = e;
+            z += e;
+        }
+        for j in 0..c {
+            probs[i * c + j] /= z;
+        }
+    }
+    let mut marginal = vec![0f64; c];
+    for i in 0..n {
+        for j in 0..c {
+            marginal[j] += probs[i * c + j] / n as f64;
+        }
+    }
+    let mut kl_sum = 0f64;
+    for i in 0..n {
+        for j in 0..c {
+            let p = probs[i * c + j];
+            if p > 1e-12 {
+                kl_sum += p * (p.ln() - marginal[j].ln());
+            }
+        }
+    }
+    (kl_sum / n as f64).exp()
+}
+
+/// End-to-end helper: FID* of generated unit-range images against
+/// reference stats, plus IS*.
+pub fn evaluate(
+    net: &FidNet,
+    generated_unit: &Tensor,
+    reference: &FeatureStats,
+) -> Result<(f64, f64)> {
+    let (feats, logits) = extract_features(net, generated_unit)?;
+    let stats = feature_stats(&feats);
+    Ok((fid(&stats, reference), inception_score(&logits)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn gaussian_feats(n: usize, d: usize, mean: f32, seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let data = (0..n * d).map(|_| r.normal() as f32 + mean).collect();
+        Tensor { shape: vec![n, d], data }
+    }
+
+    #[test]
+    fn fid_zero_for_same_distribution() {
+        let a = feature_stats(&gaussian_feats(4000, 8, 0.0, 1));
+        let b = feature_stats(&gaussian_feats(4000, 8, 0.0, 2));
+        let v = fid(&a, &b);
+        assert!(v < 0.05, "fid {v}");
+    }
+
+    #[test]
+    fn fid_grows_with_mean_shift() {
+        let a = feature_stats(&gaussian_feats(2000, 8, 0.0, 1));
+        let b = feature_stats(&gaussian_feats(2000, 8, 0.5, 2));
+        let c = feature_stats(&gaussian_feats(2000, 8, 2.0, 3));
+        let f_ab = fid(&a, &b);
+        let f_ac = fid(&a, &c);
+        // mean term alone: d * shift^2 = 8*0.25 = 2 and 8*4 = 32
+        assert!(f_ab > 1.0 && f_ab < 4.0, "{f_ab}");
+        assert!(f_ac > 25.0 && f_ac < 40.0, "{f_ac}");
+        assert!(f_ac > f_ab);
+    }
+
+    #[test]
+    fn fid_detects_covariance_mismatch() {
+        let a = feature_stats(&gaussian_feats(4000, 4, 0.0, 1));
+        let mut wide = gaussian_feats(4000, 4, 0.0, 2);
+        wide.scale(2.0);
+        let b = feature_stats(&wide);
+        // analytic: tr(I + 4I - 2*2I) = d*(1+4-4) = 4 (per-dim (s1-s2)^2)
+        let v = fid(&a, &b);
+        assert!((v - 4.0).abs() < 0.5, "fid {v}");
+    }
+
+    #[test]
+    fn is_one_for_uniform_and_c_for_onehot() {
+        let n = 256;
+        let c = 4;
+        // uniform logits -> IS = 1
+        let uniform = Tensor::zeros(&[n, c]);
+        assert!((inception_score(&uniform) - 1.0).abs() < 1e-9);
+        // perfectly confident, balanced classes -> IS = C
+        let mut onehot = Tensor::zeros(&[n, c]);
+        for i in 0..n {
+            onehot.row_mut(i)[i % c] = 50.0;
+        }
+        let v = inception_score(&onehot);
+        assert!((v - c as f64).abs() < 1e-6, "{v}");
+    }
+
+    #[test]
+    fn is_between_one_and_c() {
+        let mut r = Rng::new(5);
+        let n = 128;
+        let c = 6;
+        let data: Vec<f32> = (0..n * c).map(|_| (r.normal() * 2.0) as f32).collect();
+        let v = inception_score(&Tensor { shape: vec![n, c], data });
+        assert!(v >= 1.0 - 1e-9 && v <= c as f64 + 1e-9, "{v}");
+    }
+}

@@ -1,0 +1,29 @@
+//! Host Tensor <-> xla::Literal conversion helpers.
+
+use crate::tensor::Tensor;
+use crate::{bail, Result};
+use xla::{ElementType, Literal};
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, &t.shape, bytes)?)
+}
+
+pub fn literal_to_tensor(lit: &Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    if data.len() != dims.iter().product::<usize>() {
+        bail!("literal shape {:?} vs {} elements", dims, data.len());
+    }
+    Ok(Tensor { shape: dims, data })
+}
+
+pub fn clone_literal(lit: &Literal) -> Result<Literal> {
+    // round-trip through host bytes; only used for the (small) theta vector
+    // and per-step inputs on the baseline literal path.
+    let t = literal_to_tensor(lit)?;
+    tensor_to_literal(&t)
+}

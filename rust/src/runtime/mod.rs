@@ -1,0 +1,384 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the CPU PJRT client, and
+//! executes them from the serving hot path.
+//!
+//! Two execution paths per program (EXPERIMENTS.md §Perf measures both):
+//! * **literal path** (baseline) — every argument including the full
+//!   parameter vector is re-uploaded per call;
+//! * **buffer path** (optimised) — `theta` is uploaded once per model and
+//!   kept device-resident; per-step tensors are staged as `PjRtBuffer`s.
+//!
+//! PJRT handles are not `Send`; the `Runtime` is owned by a single engine
+//! thread (see `coordinator::engine`), everything else talks to it over
+//! channels — the same ownership discipline vLLM applies to its worker.
+
+mod literal_util;
+
+pub use literal_util::{literal_to_tensor, tensor_to_literal};
+
+use crate::json::{self, Value};
+use crate::tensor::{read_f32_file, Tensor};
+use crate::{anyhow, bail, Context, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Number of score-network evaluations a single call of each program
+/// performs — the paper's cost metric (NFE).
+pub fn score_evals_per_call(program: &str) -> u64 {
+    match program {
+        "adaptive_step" | "pc_step" => 2,
+        "score" | "em_step" | "ddim_step" | "ode_drift" | "denoise" => 1,
+        _ => 0,
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub dataset: String,
+    pub sde_kind: String,
+    pub dim: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub sigma_max: f64,
+    pub t_eps: f64,
+    pub n_params: usize,
+    /// program -> available batch buckets (ascending)
+    pub buckets: HashMap<String, Vec<usize>>,
+}
+
+impl ModelMeta {
+    pub fn process(&self) -> crate::sde::Process {
+        match self.sde_kind.as_str() {
+            "ve" => crate::sde::Process::ve(self.sigma_max),
+            "vp" => crate::sde::Process::vp(),
+            other => panic!("unknown sde kind {other}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FidMeta {
+    pub name: String,
+    pub dim: usize,
+    pub n_classes: usize,
+    pub feat_dim: usize,
+    pub n_params: usize,
+    pub buckets: Vec<usize>,
+}
+
+/// Execution statistics the coordinator exports.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub calls: Vec<(String, u64)>,
+    pub score_evals: u64,
+}
+
+pub struct Runtime {
+    client: PjRtClient,
+    root: PathBuf,
+    manifest: Value,
+    exes: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    calls: RefCell<HashMap<String, u64>>,
+    score_evals: Cell<u64>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = json::parse_file(&artifacts_dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {artifacts_dir:?} (run `make artifacts`)"))?;
+        Ok(Runtime {
+            client: PjRtClient::cpu()?,
+            root: artifacts_dir.to_path_buf(),
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            calls: RefCell::new(HashMap::new()),
+            score_evals: Cell::new(0),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn variant_names(&self) -> Vec<String> {
+        self.manifest
+            .get("variants")
+            .map(|v| v.members().iter().map(|(k, _)| k.clone()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Compile (with caching) the artifact for `<variant>/<program>_b<bucket>`.
+    fn executable(&self, key: &str, rel_path: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(key) {
+            return Ok(exe.clone());
+        }
+        let path = self.root.join(rel_path);
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).with_context(|| format!("compiling {key}"))?);
+        self.exes.borrow_mut().insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn note_call(&self, program: &str) {
+        *self.calls.borrow_mut().entry(program.to_string()).or_insert(0) += 1;
+        self.score_evals.set(self.score_evals.get() + score_evals_per_call(program));
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        let mut calls: Vec<(String, u64)> =
+            self.calls.borrow().iter().map(|(k, v)| (k.clone(), *v)).collect();
+        calls.sort();
+        RuntimeStats { calls, score_evals: self.score_evals.get() }
+    }
+
+    pub fn reset_stats(&self) {
+        self.calls.borrow_mut().clear();
+        self.score_evals.set(0);
+    }
+
+    /// Load a score-model variant: metadata, flat params, artifact set.
+    pub fn model(&self, name: &str) -> Result<Model<'_>> {
+        let v = self
+            .manifest
+            .req("variants")?
+            .get(name)
+            .ok_or_else(|| anyhow!("variant '{name}' not in manifest (have: {:?})", self.variant_names()))?;
+        let meta_v = v.req("meta")?;
+        let mut buckets: HashMap<String, Vec<usize>> = HashMap::new();
+        let mut files: HashMap<(String, usize), String> = HashMap::new();
+        for p in v.req("programs")?.as_arr()? {
+            let program = p.req("program")?.as_str()?.to_string();
+            let bucket = p.req("bucket")?.as_usize()?;
+            buckets.entry(program.clone()).or_default().push(bucket);
+            files.insert((program, bucket), p.req("file")?.as_str()?.to_string());
+        }
+        for b in buckets.values_mut() {
+            b.sort();
+        }
+        let meta = ModelMeta {
+            name: name.to_string(),
+            dataset: meta_v.req("dataset")?.as_str()?.to_string(),
+            sde_kind: meta_v.req("sde_kind")?.as_str()?.to_string(),
+            dim: meta_v.req("dim")?.as_usize()?,
+            h: meta_v.req("h")?.as_usize()?,
+            w: meta_v.req("w")?.as_usize()?,
+            c: meta_v.req("c")?.as_usize()?,
+            sigma_max: meta_v.req("sigma_max")?.as_f64()?,
+            t_eps: meta_v.req("t_eps")?.as_f64()?,
+            n_params: meta_v.req("n_params")?.as_usize()?,
+            buckets,
+        };
+        let theta = read_f32_file(
+            &self.root.join("params").join(format!("{name}.bin")),
+            &[meta.n_params],
+        )?;
+        Ok(Model {
+            rt: self,
+            theta_lit: tensor_to_literal(&theta)?,
+            theta_host: theta,
+            theta_buf: RefCell::new(None),
+            files,
+            meta,
+        })
+    }
+
+    /// Load a synthception FID/IS feature network.
+    pub fn fid_net(&self, name: &str) -> Result<FidNet<'_>> {
+        let v = self
+            .manifest
+            .req("fidnets")?
+            .get(name)
+            .ok_or_else(|| anyhow!("fid net '{name}' not in manifest"))?;
+        let meta_v = v.req("meta")?;
+        let mut buckets = Vec::new();
+        let mut files = HashMap::new();
+        for p in v.req("programs")?.as_arr()? {
+            let bucket = p.req("bucket")?.as_usize()?;
+            buckets.push(bucket);
+            files.insert(bucket, p.req("file")?.as_str()?.to_string());
+        }
+        buckets.sort();
+        let meta = FidMeta {
+            name: name.to_string(),
+            dim: meta_v.req("dim")?.as_usize()?,
+            n_classes: meta_v.req("n_classes")?.as_usize()?,
+            feat_dim: meta_v.req("feat_dim")?.as_usize()?,
+            n_params: meta_v.req("n_params")?.as_usize()?,
+            buckets,
+        };
+        let theta = read_f32_file(
+            &self.root.join("params").join(format!("{name}.bin")),
+            &[meta.n_params],
+        )?;
+        Ok(FidNet { rt: self, theta_lit: tensor_to_literal(&theta)?, files, meta })
+    }
+}
+
+/// A loaded score-model variant: metadata + device-ready parameters +
+/// executable cache keyed by (program, bucket).
+pub struct Model<'rt> {
+    rt: &'rt Runtime,
+    pub meta: ModelMeta,
+    theta_host: Tensor,
+    theta_lit: Literal,
+    theta_buf: RefCell<Option<Rc<PjRtBuffer>>>,
+    files: HashMap<(String, usize), String>,
+}
+
+impl<'rt> Model<'rt> {
+    pub fn runtime(&self) -> &'rt Runtime {
+        self.rt
+    }
+
+    /// Smallest available bucket >= n (or the largest bucket).
+    pub fn bucket_for(&self, program: &str, n: usize) -> Result<usize> {
+        let buckets = self
+            .meta
+            .buckets
+            .get(program)
+            .ok_or_else(|| anyhow!("{}: no program '{program}'", self.meta.name))?;
+        Ok(*buckets.iter().find(|&&b| b >= n).unwrap_or(
+            buckets.last().ok_or_else(|| anyhow!("{program}: empty bucket list"))?,
+        ))
+    }
+
+    pub fn buckets(&self, program: &str) -> &[usize] {
+        self.meta.buckets.get(program).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    fn exe(&self, program: &str, bucket: usize) -> Result<Rc<PjRtLoadedExecutable>> {
+        let rel = self
+            .files
+            .get(&(program.to_string(), bucket))
+            .ok_or_else(|| anyhow!("{}: no artifact {program}_b{bucket}", self.meta.name))?;
+        self.rt.executable(&format!("{}/{program}_b{bucket}", self.meta.name), rel)
+    }
+
+    /// Baseline path: all args as literals (theta re-uploaded every call).
+    pub fn exec_literals(
+        &self,
+        program: &str,
+        bucket: usize,
+        inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let exe = self.exe(program, bucket)?;
+        let mut args: Vec<Literal> = Vec::with_capacity(inputs.len() + 1);
+        args.push(self.theta_lit.clone_literal()?);
+        for t in inputs {
+            args.push(tensor_to_literal(t)?);
+        }
+        self.rt.note_call(program);
+        run(&exe, ExecArgs::Literals(&args))
+    }
+
+    /// Optimised path: theta resident on device, inputs staged as buffers.
+    pub fn exec_buffers(
+        &self,
+        program: &str,
+        bucket: usize,
+        inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let theta = {
+            let mut slot = self.theta_buf.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(Rc::new(self.rt.client.buffer_from_host_buffer(
+                    &self.theta_host.data,
+                    &self.theta_host.shape,
+                    None,
+                )?));
+            }
+            slot.as_ref().unwrap().clone()
+        };
+        let exe = self.exe(program, bucket)?;
+        let mut bufs: Vec<PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            bufs.push(self.rt.client.buffer_from_host_buffer(&t.data, &t.shape, None)?);
+        }
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(inputs.len() + 1);
+        args.push(theta.as_ref());
+        args.extend(bufs.iter());
+        self.rt.note_call(program);
+        run(&exe, ExecArgs::Buffers(&args))
+    }
+
+    /// Dispatch on the configured execution mode.
+    pub fn exec(
+        &self,
+        program: &str,
+        bucket: usize,
+        inputs: &[&Tensor],
+        fused_buffers: bool,
+    ) -> Result<Vec<Tensor>> {
+        if fused_buffers {
+            self.exec_buffers(program, bucket, inputs)
+        } else {
+            self.exec_literals(program, bucket, inputs)
+        }
+    }
+}
+
+pub struct FidNet<'rt> {
+    rt: &'rt Runtime,
+    pub meta: FidMeta,
+    theta_lit: Literal,
+    files: HashMap<usize, String>,
+}
+
+impl<'rt> FidNet<'rt> {
+    /// x must be in [0,1], shape [bucket, dim]. Returns (features, logits).
+    pub fn features(&self, x: &Tensor) -> Result<(Tensor, Tensor)> {
+        let bucket = x.shape[0];
+        let rel = self
+            .files
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("fid net has no bucket {bucket} (have {:?})", self.meta.buckets))?;
+        let exe = self.rt.executable(&format!("{}/fid_b{bucket}", self.meta.name), rel)?;
+        let args = vec![self.theta_lit.clone_literal()?, tensor_to_literal(x)?];
+        let mut out = run(&exe, ExecArgs::Literals(&args))?;
+        if out.len() != 2 {
+            bail!("fid_features returned {} outputs", out.len());
+        }
+        let logits = out.pop().unwrap();
+        let feat = out.pop().unwrap();
+        Ok((feat, logits))
+    }
+}
+
+enum ExecArgs<'a> {
+    Literals(&'a [Literal]),
+    Buffers(&'a [&'a PjRtBuffer]),
+}
+
+/// Execute and pull every tuple element back to host tensors.
+fn run(exe: &PjRtLoadedExecutable, args: ExecArgs<'_>) -> Result<Vec<Tensor>> {
+    let result = match args {
+        ExecArgs::Literals(lits) => exe.execute::<Literal>(lits)?,
+        ExecArgs::Buffers(bufs) => exe.execute_b(bufs)?,
+    };
+    let lit = result
+        .first()
+        .and_then(|r| r.first())
+        .ok_or_else(|| anyhow!("executable returned no outputs"))?
+        .to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: output is always a tuple
+    let parts = lit.to_tuple()?;
+    parts.iter().map(literal_to_tensor).collect()
+}
+
+/// Extension trait: the xla crate's Literal lacks Clone.
+trait CloneLiteral {
+    fn clone_literal(&self) -> Result<Literal>;
+}
+
+impl CloneLiteral for Literal {
+    fn clone_literal(&self) -> Result<Literal> {
+        literal_util::clone_literal(self)
+    }
+}

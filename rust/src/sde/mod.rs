@@ -1,0 +1,231 @@
+//! VE/VP process math mirrored from `python/compile/sde.py` (paper
+//! §2.2–2.3). The fused step artifacts embed this math in their graphs;
+//! the host-side mirror powers the composed solver path (Table 3 suite,
+//! ablations), the step-size controller, and the prior sampler.
+//!
+//! The fixture tests at the bottom pin the exact values also asserted in
+//! `python/tests/test_sde.py::test_rust_fixture_values_*` — the two
+//! implementations cannot drift silently.
+
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Process {
+    /// Variance exploding: data range [0,1], sigma(t) geometric.
+    Ve { sigma_min: f64, sigma_max: f64 },
+    /// Variance preserving: data range [-1,1], beta(t) linear.
+    Vp { beta_min: f64, beta_max: f64 },
+}
+
+impl Process {
+    pub fn ve(sigma_max: f64) -> Process {
+        Process::Ve { sigma_min: 0.01, sigma_max }
+    }
+
+    pub fn vp() -> Process {
+        Process::Vp { beta_min: 0.1, beta_max: 20.0 }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Process::Ve { .. } => "ve",
+            Process::Vp { .. } => "vp",
+        }
+    }
+
+    /// Integration lower limit (paper App. D).
+    pub fn t_eps(&self) -> f64 {
+        match self {
+            Process::Ve { .. } => 1e-5,
+            Process::Vp { .. } => 1e-3,
+        }
+    }
+
+    pub fn data_range(&self) -> (f64, f64) {
+        match self {
+            Process::Ve { .. } => (0.0, 1.0),
+            Process::Vp { .. } => (-1.0, 1.0),
+        }
+    }
+
+    /// Paper §3.1.2: one 8-bit colour increment.
+    pub fn eps_abs(&self) -> f64 {
+        let (lo, hi) = self.data_range();
+        (hi - lo) / 256.0
+    }
+
+    pub fn sigma(&self, t: f64) -> f64 {
+        match *self {
+            Process::Ve { sigma_min, sigma_max } => {
+                sigma_min * (sigma_max / sigma_min).powf(t)
+            }
+            Process::Vp { .. } => unreachable!("sigma(t) is a VE quantity"),
+        }
+    }
+
+    pub fn beta(&self, t: f64) -> f64 {
+        match *self {
+            Process::Vp { beta_min, beta_max } => beta_min + t * (beta_max - beta_min),
+            Process::Ve { .. } => unreachable!("beta(t) is a VP quantity"),
+        }
+    }
+
+    fn int_beta(&self, t: f64) -> f64 {
+        match *self {
+            Process::Vp { beta_min, beta_max } => {
+                beta_min * t + 0.5 * t * t * (beta_max - beta_min)
+            }
+            Process::Ve { .. } => unreachable!(),
+        }
+    }
+
+    /// Diffusion coefficient g(t).
+    pub fn diffusion(&self, t: f64) -> f64 {
+        match *self {
+            Process::Ve { sigma_min, sigma_max } => {
+                self.sigma(t) * (2.0 * (sigma_max / sigma_min).ln()).sqrt()
+            }
+            Process::Vp { .. } => self.beta(t).sqrt(),
+        }
+    }
+
+    /// Scalar drift coefficient: f(x,t) = drift_coef(t) * x.
+    pub fn drift_coef(&self, t: f64) -> f64 {
+        match self {
+            Process::Ve { .. } => 0.0,
+            Process::Vp { .. } => -0.5 * self.beta(t),
+        }
+    }
+
+    /// Transition-kernel mean coefficient: E[x(t)|x0] = mean_coef(t) x0.
+    pub fn mean_coef(&self, t: f64) -> f64 {
+        match self {
+            Process::Ve { .. } => 1.0,
+            Process::Vp { .. } => (-0.5 * self.int_beta(t)).exp(),
+        }
+    }
+
+    /// Transition-kernel std.
+    pub fn marginal_std(&self, t: f64) -> f64 {
+        match self {
+            Process::Ve { .. } => self.sigma(t),
+            Process::Vp { .. } => (1.0 - (-self.int_beta(t)).exp()).max(1e-12).sqrt(),
+        }
+    }
+
+    pub fn prior_std(&self) -> f64 {
+        match *self {
+            Process::Ve { sigma_max, .. } => sigma_max,
+            Process::Vp { .. } => 1.0,
+        }
+    }
+
+    /// Var[x(t)|x0] for Tweedie denoising.
+    pub fn tweedie_var(&self, t: f64) -> f64 {
+        match self {
+            Process::Ve { .. } => self.sigma(t) * self.sigma(t),
+            Process::Vp { .. } => 1.0 - (-self.int_beta(t)).exp(),
+        }
+    }
+
+    /// Draw x(1) ~ prior into `out` ([B, D]).
+    pub fn sample_prior(&self, rng: &mut Rng, out: &mut Tensor) {
+        let std = self.prior_std() as f32;
+        for v in out.data.iter_mut() {
+            *v = rng.normal() as f32 * std;
+        }
+    }
+
+    /// Map model output range to [0,1] for image export / FID features.
+    pub fn to_unit_range(&self, x: &mut Tensor) {
+        let (lo, hi) = self.data_range();
+        let (lo, hi) = (lo as f32, hi as f32);
+        for v in x.data.iter_mut() {
+            *v = ((*v - lo) / (hi - lo)).clamp(0.0, 1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Fixtures shared with python/tests/test_sde.py — keep in sync!
+    const VE_FIX: [(f64, f64, f64); 5] = [
+        (0.0, 0.01, 0.04127273),
+        (0.25, 0.08408964, 0.347061),
+        (0.5, 0.7071068, 2.918423),
+        (0.75, 5.946036, 24.54091),
+        (1.0, 50.0, 206.3637),
+    ];
+
+    const VP_FIX: [(f64, f64, f64, f64); 4] = [
+        (0.25, 5.075, 0.7236571, 0.6901596),
+        (0.5, 10.05, 0.2811829, 0.9596542),
+        (0.75, 15.025, 0.0586635, 0.9982778),
+        (1.0, 20.0, 0.006571586, 0.9999784),
+    ];
+
+    #[test]
+    fn ve_matches_python_fixtures() {
+        let p = Process::ve(50.0);
+        for (t, sigma, g) in VE_FIX {
+            assert!((p.sigma(t) - sigma).abs() / sigma < 1e-5, "sigma({t})");
+            assert!((p.diffusion(t) - g).abs() / g < 1e-5, "g({t})");
+        }
+    }
+
+    #[test]
+    fn vp_matches_python_fixtures() {
+        let p = Process::vp();
+        for (t, beta, alpha, std) in VP_FIX {
+            assert!((p.beta(t) - beta).abs() < 1e-9, "beta({t})");
+            assert!((p.mean_coef(t) - alpha).abs() / alpha < 1e-5, "alpha({t})");
+            assert!((p.marginal_std(t) - std).abs() < 1e-6, "std({t})");
+        }
+    }
+
+    #[test]
+    fn vp_variance_preserving_identity() {
+        let p = Process::vp();
+        for t in [0.1, 0.4, 0.8, 1.0] {
+            let a = p.mean_coef(t);
+            let s = p.marginal_std(t);
+            assert!((a * a + s * s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn eps_abs_paper_values() {
+        assert!((Process::vp().eps_abs() - 0.0078125).abs() < 1e-9);
+        assert!((Process::ve(50.0).eps_abs() - 0.00390625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prior_sample_moments() {
+        let p = Process::ve(30.0);
+        let mut rng = Rng::new(0);
+        let mut x = Tensor::zeros(&[64, 256]);
+        p.sample_prior(&mut rng, &mut x);
+        let n = x.len() as f64;
+        let mean: f64 = x.data.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 = x.data.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.5, "{mean}");
+        assert!((var.sqrt() - 30.0).abs() < 0.5, "{}", var.sqrt());
+    }
+
+    #[test]
+    fn unit_range_mapping() {
+        let p = Process::vp();
+        let mut x = Tensor::from_vec(&[1, 3], vec![-1.0, 0.0, 2.0]).unwrap();
+        p.to_unit_range(&mut x);
+        assert_eq!(x.data, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn drift_coef_signs() {
+        assert_eq!(Process::ve(50.0).drift_coef(0.5), 0.0);
+        assert!(Process::vp().drift_coef(0.5) < 0.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Minimal base64 (standard alphabet, padded) for the wire protocol.
+
+use crate::{bail, Result};
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let v = ((b[0] as u32) << 16) | ((b[1] as u32) << 8) | b[2] as u32;
+        out.push(ALPHABET[(v >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(v >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { ALPHABET[(v >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { ALPHABET[v as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+fn val(c: u8) -> Result<u32> {
+    Ok(match c {
+        b'A'..=b'Z' => (c - b'A') as u32,
+        b'a'..=b'z' => (c - b'a' + 26) as u32,
+        b'0'..=b'9' => (c - b'0' + 52) as u32,
+        b'+' => 62,
+        b'/' => 63,
+        _ => bail!("invalid base64 byte {c}"),
+    })
+}
+
+pub fn decode(s: &str) -> Result<Vec<u8>> {
+    let s = s.trim_end_matches('=').as_bytes();
+    let mut out = Vec::with_capacity(s.len() * 3 / 4);
+    for chunk in s.chunks(4) {
+        if chunk.len() == 1 {
+            bail!("truncated base64");
+        }
+        let mut v = 0u32;
+        for (i, &c) in chunk.iter().enumerate() {
+            v |= val(c)? << (18 - 6 * i);
+        }
+        out.push((v >> 16) as u8);
+        if chunk.len() > 2 {
+            out.push((v >> 8) as u8);
+        }
+        if chunk.len() > 3 {
+            out.push(v as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc_vectors() {
+        assert_eq!(encode(b""), "");
+        assert_eq!(encode(b"f"), "Zg==");
+        assert_eq!(encode(b"fo"), "Zm8=");
+        assert_eq!(encode(b"foo"), "Zm9v");
+        assert_eq!(encode(b"foob"), "Zm9vYg==");
+        assert_eq!(encode(b"fooba"), "Zm9vYmE=");
+        assert_eq!(encode(b"foobar"), "Zm9vYmFy");
+    }
+
+    #[test]
+    fn roundtrip_binary() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let vals = [1.5f32, -0.25, 1e-30, f32::MAX];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let back = decode(&encode(&bytes)).unwrap();
+        assert_eq!(back, bytes);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode("a!!!").is_err());
+        assert!(decode("a").is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! JSON-lines TCP serving front-end + client library.
+//!
+//! Protocol (one JSON object per line, both directions):
+//!   -> {"op":"generate","n":16,"eps_rel":0.05,"seed":7}
+//!   <- {"ok":true,"n":16,"h":16,"w":16,"nfe":[...],"wall_s":...,
+//!       "queued_s":...,"images_b64":"<f32-le raw, base64>"}
+//!   -> {"op":"stats"}
+//!   <- {"ok":true,"requests_done":...,...}
+//!   -> {"op":"ping"} / <- {"ok":true}
+//!
+//! One OS thread per connection (requests within a connection pipeline
+//! through the shared engine, which does the real batching).
+
+pub mod b64;
+
+use crate::coordinator::{EngineClient, EngineStats};
+use crate::json::{self, Value};
+use crate::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+pub struct ServerConfig {
+    pub port: u16,
+    pub img_h: usize,
+    pub img_w: usize,
+    pub default_eps_rel: f64,
+}
+
+/// Serve forever (each connection on its own thread).
+pub fn serve(listener: TcpListener, engine: EngineClient, cfg: ServerConfig) -> Result<()> {
+    let cfg = std::sync::Arc::new(cfg);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let engine = engine.clone();
+        let cfg = cfg.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, engine, &cfg) {
+                eprintln!("[server] connection error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+pub fn handle_conn(
+    stream: TcpStream,
+    engine: EngineClient,
+    cfg: &ServerConfig,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match handle_request(&line, &engine, cfg) {
+            Ok(v) => v,
+            Err(e) => Value::obj(vec![
+                ("ok", Value::Bool(false)),
+                ("error", Value::str(format!("{e:#}"))),
+            ]),
+        };
+        writeln!(writer, "{resp}")?;
+    }
+}
+
+fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Result<Value> {
+    let req = json::parse(line).context("parsing request json")?;
+    match req.req("op")?.as_str()? {
+        "ping" => Ok(Value::obj(vec![("ok", Value::Bool(true))])),
+        "stats" => {
+            let s = engine.stats()?;
+            Ok(stats_to_json(&s))
+        }
+        "generate" => {
+            let n = req.get("n").map(|v| v.as_usize()).transpose()?.unwrap_or(1);
+            let eps_rel = req
+                .get("eps_rel")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(cfg.default_eps_rel);
+            let seed = req.get("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64;
+            let want_images =
+                req.get("images").map(|v| v.as_bool()).transpose()?.unwrap_or(true);
+            let r = engine.generate(n, eps_rel, seed)?;
+            let mut pairs = vec![
+                ("ok", Value::Bool(true)),
+                ("n", Value::num(n as f64)),
+                ("h", Value::num(cfg.img_h as f64)),
+                ("w", Value::num(cfg.img_w as f64)),
+                ("wall_s", Value::num(r.wall_s)),
+                ("queued_s", Value::num(r.queued_s)),
+                (
+                    "nfe",
+                    Value::Arr(r.nfe.iter().map(|&v| Value::num(v as f64)).collect()),
+                ),
+            ];
+            if want_images {
+                let bytes: Vec<u8> =
+                    r.images.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                pairs.push(("images_b64", Value::str(b64::encode(&bytes))));
+            }
+            Ok(Value::obj(pairs))
+        }
+        other => Err(anyhow!("unknown op '{other}'")),
+    }
+}
+
+fn stats_to_json(s: &EngineStats) -> Value {
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("requests_done", Value::num(s.requests_done as f64)),
+        ("samples_done", Value::num(s.samples_done as f64)),
+        ("queued_samples", Value::num(s.queued_samples as f64)),
+        ("active_slots", Value::num(s.active_slots as f64)),
+        ("steps", Value::num(s.steps as f64)),
+        ("rejections", Value::num(s.rejections as f64)),
+        ("score_evals", Value::num(s.score_evals as f64)),
+        ("latency_p50_s", Value::num(s.latency_p50_s)),
+        ("latency_p95_s", Value::num(s.latency_p95_s)),
+        ("latency_mean_s", Value::num(s.latency_mean_s)),
+        ("mean_occupancy", Value::num(s.mean_occupancy)),
+    ])
+}
+
+// --- client ---------------------------------------------------------------------
+
+/// Blocking JSON-lines client for the serving protocol.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClientGenResult {
+    pub images: crate::tensor::Tensor,
+    pub nfe: Vec<u64>,
+    pub wall_s: f64,
+    pub queued_s: f64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    fn call(&mut self, req: &Value) -> Result<Value> {
+        writeln!(self.writer, "{req}")?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("server closed connection"));
+        }
+        let v = json::parse(&line)?;
+        if !v.req("ok")?.as_bool()? {
+            return Err(anyhow!(
+                "server error: {}",
+                v.get("error").and_then(|e| e.as_str().ok()).unwrap_or("unknown")
+            ));
+        }
+        Ok(v)
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        self.call(&Value::obj(vec![("op", Value::str("ping"))]))?;
+        Ok(())
+    }
+
+    pub fn stats(&mut self) -> Result<Value> {
+        self.call(&Value::obj(vec![("op", Value::str("stats"))]))
+    }
+
+    pub fn generate(
+        &mut self,
+        n: usize,
+        eps_rel: f64,
+        seed: u64,
+        want_images: bool,
+    ) -> Result<ClientGenResult> {
+        let req = Value::obj(vec![
+            ("op", Value::str("generate")),
+            ("n", Value::num(n as f64)),
+            ("eps_rel", Value::num(eps_rel)),
+            ("seed", Value::num(seed as f64)),
+            ("images", Value::Bool(want_images)),
+        ]);
+        let v = self.call(&req)?;
+        let nfe = v
+            .req("nfe")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_f64()? as u64))
+            .collect::<Result<Vec<_>>>()?;
+        let (h, w) = (v.req("h")?.as_usize()?, v.req("w")?.as_usize()?);
+        let images = if want_images {
+            let bytes = b64::decode(v.req("images_b64")?.as_str()?)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            crate::tensor::Tensor::from_vec(&[n, h * w * 3], data)?
+        } else {
+            crate::tensor::Tensor::zeros(&[0])
+        };
+        Ok(ClientGenResult {
+            images,
+            nfe,
+            wall_s: v.req("wall_s")?.as_f64()?,
+            queued_s: v.req("queued_s")?.as_f64()?,
+        })
+    }
+}

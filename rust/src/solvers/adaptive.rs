@@ -1,0 +1,296 @@
+//! Algorithm 1 — the paper's contribution: dynamic-step-size
+//! extrapolating solver for reverse diffusion processes.
+//!
+//! Integrator pair: Euler–Maruyama proposal `x'` + stochastic improved
+//! Euler `x''` (Roberts 2012) sharing the first score evaluation; the
+//! *extrapolated* `x''` is what's accepted (§3.1.1). Mixed tolerance
+//! `delta = max(eps_abs, eps_rel * max(|x'|, |x'_prev|))` (Eq. 5), scaled
+//! l2 error (§3.1.3), controller `h <- min(h_max, theta h E2^-r)` with
+//! per-sample step sizes (§3.1.5).
+//!
+//! `run_fused` drives the `adaptive_step` artifact (2 NFE/call, all math
+//! in-graph); `run_composed` reproduces the same trajectory from `score`
+//! calls + host math and exposes every ablation knob of Tables 4–5.
+
+use super::{fill_noise, t_vec, Ctx, SolveResult};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Error-norm choice (§3.1.3 ablation).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ErrNorm {
+    /// Paper default: scaled l2, sqrt(mean(r^2)).
+    L2,
+    /// Ablation: l-infinity, max |r| (Table 4/5 `q = inf` rows).
+    LInf,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveOpts {
+    pub eps_rel: f64,
+    /// None => paper default (y_max - y_min)/256 from the process range.
+    pub eps_abs: Option<f64>,
+    /// Controller exponent r (paper default 0.9).
+    pub r: f64,
+    /// Safety factor theta (paper default 0.9).
+    pub safety: f64,
+    pub h_init: f64,
+    /// Accept x'' (extrapolation, paper default) or x' (plain EM pair).
+    pub extrapolate: bool,
+    /// delta uses max(|x'|, |x'_prev|) (Eq. 5, default) vs only |x'| (Eq. 4).
+    pub prev_in_delta: bool,
+    pub norm: ErrNorm,
+    /// Hard cap on solver iterations (divergence guard).
+    pub max_iters: u64,
+}
+
+impl Default for AdaptiveOpts {
+    fn default() -> Self {
+        AdaptiveOpts {
+            eps_rel: 0.05,
+            eps_abs: None,
+            r: 0.9,
+            safety: 0.9,
+            h_init: 0.01,
+            extrapolate: true,
+            prev_in_delta: true,
+            norm: ErrNorm::L2,
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl AdaptiveOpts {
+    pub fn with_eps_rel(eps_rel: f64) -> Self {
+        AdaptiveOpts { eps_rel, ..Default::default() }
+    }
+
+    fn resolve_eps_abs(&self, process: &crate::sde::Process) -> f64 {
+        self.eps_abs.unwrap_or_else(|| process.eps_abs())
+    }
+}
+
+/// Per-batch adaptive state (also used by the serving coordinator, which
+/// backfills converged slots instead of waiting).
+pub struct AdaptiveState {
+    pub x: Tensor,
+    pub xprev: Tensor,
+    pub t: Vec<f64>,
+    pub h: Vec<f64>,
+    pub active: Vec<bool>,
+    pub nfe: Vec<u64>,
+    pub rejections: u64,
+    pub steps: u64,
+}
+
+impl AdaptiveState {
+    pub fn new(x: Tensor, h_init: f64, t_start: f64) -> AdaptiveState {
+        let b = x.shape[0];
+        AdaptiveState {
+            xprev: x.clone(),
+            x,
+            t: vec![t_start; b],
+            h: vec![h_init; b],
+            active: vec![true; b],
+            nfe: vec![0; b],
+            rejections: 0,
+            steps: 0,
+        }
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.active.iter().all(|a| !a)
+    }
+}
+
+/// One fused Algorithm-1 iteration over the whole batch. Inactive slots
+/// ride along with h = 0 (the kernels make h=0 an exact no-op).
+pub fn fused_iteration(
+    ctx: &Ctx,
+    st: &mut AdaptiveState,
+    rng: &mut Rng,
+    opts: &AdaptiveOpts,
+) -> Result<()> {
+    let b = ctx.bucket;
+    let t_eps = ctx.process.t_eps();
+    let eps_abs = opts.resolve_eps_abs(&ctx.process);
+    // clamp h to remaining time; zero for inactive slots
+    let mut h_eff = vec![0f32; b];
+    for i in 0..b {
+        if st.active[i] {
+            st.h[i] = st.h[i].min(st.t[i] - t_eps).max(0.0);
+            h_eff[i] = st.h[i] as f32;
+        }
+    }
+    let mut z = Tensor::zeros(&[b, ctx.dim()]);
+    fill_noise(rng, &mut z);
+    let t_in = Tensor { shape: vec![b], data: st.t.iter().map(|&v| v as f32).collect() };
+    let h_in = Tensor { shape: vec![b], data: h_eff };
+    let ea = Tensor::scalar(eps_abs as f32);
+    let er = Tensor { shape: vec![b], data: vec![opts.eps_rel as f32; b] };
+    let out = ctx.model.exec(
+        "adaptive_step",
+        ctx.bucket,
+        &[&st.x, &st.xprev, &t_in, &h_in, &z, &ea, &er],
+        ctx.opts.fused_buffers,
+    )?;
+    let (xpp, xp, e2) = (&out[0], &out[1], &out[2]);
+    st.steps += 1;
+    for i in 0..b {
+        if !st.active[i] {
+            continue;
+        }
+        st.nfe[i] += 2;
+        let e = e2.data[i] as f64;
+        if e <= 1.0 {
+            // accept: extrapolated proposal, advance time, roll x'_prev
+            st.x.row_mut(i).copy_from_slice(xpp.row(i));
+            st.xprev.row_mut(i).copy_from_slice(xp.row(i));
+            st.t[i] -= st.h[i];
+            if st.t[i] <= t_eps + 1e-12 {
+                st.active[i] = false;
+                continue;
+            }
+        } else {
+            st.rejections += 1;
+        }
+        // controller update either way (paper §3.1.4)
+        let grow = opts.safety * e.max(1e-12).powf(-opts.r);
+        st.h[i] = (st.h[i] * grow).min(st.t[i] - t_eps);
+    }
+    Ok(())
+}
+
+/// Full Algorithm 1 via the fused step artifact.
+pub fn run_fused(ctx: &Ctx, rng: &mut Rng, opts: &AdaptiveOpts) -> Result<SolveResult> {
+    let x0 = ctx.sample_prior(rng);
+    let mut st = AdaptiveState::new(x0, opts.h_init, 1.0);
+    while !st.all_done() {
+        if st.steps >= opts.max_iters {
+            crate::bail!("adaptive solver exceeded {} iterations", opts.max_iters);
+        }
+        fused_iteration(ctx, &mut st, rng, opts)?;
+    }
+    finishup(ctx, st)
+}
+
+/// Algorithm 1 with host-side integrators over raw `score` calls.
+/// Exposes the Table 4/5 ablation knobs the fused graph bakes in.
+pub fn run_composed(ctx: &Ctx, rng: &mut Rng, opts: &AdaptiveOpts) -> Result<SolveResult> {
+    let b = ctx.bucket;
+    let d = ctx.dim();
+    let t_eps = ctx.process.t_eps();
+    let eps_abs = opts.resolve_eps_abs(&ctx.process) as f32;
+    let x0 = ctx.sample_prior(rng);
+    let mut st = AdaptiveState::new(x0, opts.h_init, 1.0);
+    let mut z = Tensor::zeros(&[b, d]);
+    let mut xp = Tensor::zeros(&[b, d]);
+    let mut xt = Tensor::zeros(&[b, d]);
+
+    while !st.all_done() {
+        if st.steps >= opts.max_iters {
+            crate::bail!("adaptive solver exceeded {} iterations", opts.max_iters);
+        }
+        st.steps += 1;
+        for i in 0..b {
+            if st.active[i] {
+                st.h[i] = st.h[i].min(st.t[i] - t_eps).max(0.0);
+            }
+        }
+        fill_noise(rng, &mut z);
+        let t_in = Tensor { shape: vec![b], data: st.t.iter().map(|&v| v as f32).collect() };
+        // stage 1: EM proposal x' = x - h*drift(x,t) + sqrt(h) g(t) z
+        let d1 = ctx.rdp_drift(&st.x, &t_in)?;
+        for i in 0..b {
+            let h = if st.active[i] { st.h[i] } else { 0.0 };
+            let g = ctx.process.diffusion(st.t[i]) as f32;
+            let (sh, sg) = ((-h) as f32, (h.sqrt()) as f32 * g);
+            let (xr, dr, zr, or) = (st.x.row(i), d1.row(i), z.row(i), xp.row_mut(i));
+            for j in 0..d {
+                or[j] = xr[j] + sh * dr[j] + sg * zr[j];
+            }
+        }
+        // stage 2: improved-Euler companion at t - h with the same z
+        let t2 = Tensor {
+            shape: vec![b],
+            data: (0..b)
+                .map(|i| (st.t[i] - if st.active[i] { st.h[i] } else { 0.0 }) as f32)
+                .collect(),
+        };
+        let d2 = ctx.rdp_drift(&xp, &t2)?;
+        for i in 0..b {
+            let h = if st.active[i] { st.h[i] } else { 0.0 };
+            let g2 = ctx.process.diffusion(t2.data[i] as f64) as f32;
+            let (sh, sg) = ((-h) as f32, (h.sqrt()) as f32 * g2);
+            let (xr, dr, zr, or) = (st.x.row(i), d2.row(i), z.row(i), xt.row_mut(i));
+            for j in 0..d {
+                or[j] = xr[j] + sh * dr[j] + sg * zr[j];
+            }
+        }
+        // accept/reject per sample
+        for i in 0..b {
+            if !st.active[i] {
+                continue;
+            }
+            st.nfe[i] += 2;
+            let (xpr, xtr, xr0, xprevr) =
+                (xp.row(i), xt.row(i), st.x.row(i), st.xprev.row(i));
+            // error between x' and x'' where x'' = (x' + x~)/2 => x' - x'' = (x' - x~)/2
+            let mut acc = 0f64;
+            let mut maxv = 0f64;
+            for j in 0..d {
+                let xpp_j = 0.5 * (xpr[j] + xtr[j]);
+                let base = if opts.prev_in_delta {
+                    xpr[j].abs().max(xprevr[j].abs())
+                } else {
+                    xpr[j].abs()
+                };
+                let delta = eps_abs.max(opts.eps_rel as f32 * base);
+                let rj = ((xpr[j] - xpp_j) / delta) as f64;
+                acc += rj * rj;
+                maxv = maxv.max(rj.abs());
+            }
+            let e = match opts.norm {
+                ErrNorm::L2 => (acc / d as f64).sqrt(),
+                ErrNorm::LInf => maxv,
+            };
+            let _ = xr0;
+            if e <= 1.0 {
+                let chosen_is_xpp = opts.extrapolate;
+                let (xrow, xprow) = (st.x.row_mut(i), st.xprev.row_mut(i));
+                for j in 0..d {
+                    let xpp_j = 0.5 * (xp.row(i)[j] + xt.row(i)[j]);
+                    xrow[j] = if chosen_is_xpp { xpp_j } else { xp.row(i)[j] };
+                    xprow[j] = xp.row(i)[j];
+                }
+                st.t[i] -= st.h[i];
+                if st.t[i] <= t_eps + 1e-12 {
+                    st.active[i] = false;
+                    continue;
+                }
+            } else {
+                st.rejections += 1;
+            }
+            let grow = opts.safety * e.max(1e-12).powf(-opts.r);
+            st.h[i] = (st.h[i] * grow).min(st.t[i] - t_eps);
+        }
+    }
+    finishup(ctx, st)
+}
+
+fn finishup(ctx: &Ctx, mut st: AdaptiveState) -> Result<SolveResult> {
+    if ctx.opts.denoise {
+        let t_end = t_vec(ctx.bucket, ctx.process.t_eps());
+        st.x = ctx.denoise(&st.x, &t_end)?;
+        for n in st.nfe.iter_mut() {
+            *n += 1;
+        }
+    }
+    Ok(SolveResult {
+        x: st.x,
+        nfe_per_sample: st.nfe,
+        steps: st.steps,
+        rejections: st.rejections,
+    })
+}

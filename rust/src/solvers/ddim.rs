@@ -1,0 +1,32 @@
+//! DDIM (Song et al. 2020b), deterministic eta = 0 variant — defined for
+//! VP processes only (paper §4). One score evaluation per step.
+
+use super::{t_vec, time_grid, Ctx, SolveResult};
+use crate::rng::Rng;
+use crate::{bail, Result};
+
+pub fn run(ctx: &Ctx, rng: &mut Rng, n_steps: usize) -> Result<SolveResult> {
+    if ctx.process.kind() != "vp" {
+        bail!("DDIM is only defined for VP models (paper §4)");
+    }
+    let b = ctx.bucket;
+    let grid = time_grid(&ctx.process, n_steps);
+    let mut x = ctx.sample_prior(rng);
+    for w in grid.windows(2) {
+        let t_in = t_vec(b, w[0]);
+        let tn_in = t_vec(b, w[1]);
+        let mut out = ctx.model.exec(
+            "ddim_step",
+            ctx.bucket,
+            &[&x, &t_in, &tn_in],
+            ctx.opts.fused_buffers,
+        )?;
+        x = out.pop().unwrap();
+    }
+    let mut nfe = vec![n_steps as u64; b];
+    if ctx.opts.denoise {
+        x = ctx.denoise(&x, &t_vec(b, ctx.process.t_eps()))?;
+        nfe.iter_mut().for_each(|n| *n += 1);
+    }
+    Ok(SolveResult { x, nfe_per_sample: nfe, steps: n_steps as u64, rejections: 0 })
+}

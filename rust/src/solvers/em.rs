@@ -1,0 +1,67 @@
+//! Euler–Maruyama baseline (paper §2.4): fixed uniform step size, one
+//! score evaluation per step, fresh noise each step.
+
+use super::{fill_noise, t_vec, time_grid, Ctx, SolveResult};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Solve the RDP with `n_steps` uniform EM steps via the fused em_step
+/// artifact. NFE per sample = n_steps (+1 if denoising).
+pub fn run(ctx: &Ctx, rng: &mut Rng, n_steps: usize) -> Result<SolveResult> {
+    let b = ctx.bucket;
+    let grid = time_grid(&ctx.process, n_steps);
+    let mut x = ctx.sample_prior(rng);
+    let mut z = Tensor::zeros(&[b, ctx.dim()]);
+    for w in grid.windows(2) {
+        let (t, t_next) = (w[0], w[1]);
+        let h = t - t_next;
+        fill_noise(rng, &mut z);
+        let t_in = t_vec(b, t);
+        let h_in = t_vec(b, h);
+        let mut out = ctx.model.exec(
+            "em_step",
+            ctx.bucket,
+            &[&x, &t_in, &h_in, &z],
+            ctx.opts.fused_buffers,
+        )?;
+        x = out.pop().unwrap();
+    }
+    let mut nfe = vec![n_steps as u64; b];
+    if ctx.opts.denoise {
+        x = ctx.denoise(&x, &t_vec(b, ctx.process.t_eps()))?;
+        nfe.iter_mut().for_each(|n| *n += 1);
+    }
+    Ok(SolveResult { x, nfe_per_sample: nfe, steps: n_steps as u64, rejections: 0 })
+}
+
+/// Composed EM (host update over raw score calls) — baseline for the
+/// fused-vs-composed perf comparison and cross-check tests.
+pub fn run_composed(ctx: &Ctx, rng: &mut Rng, n_steps: usize) -> Result<SolveResult> {
+    let b = ctx.bucket;
+    let d = ctx.dim();
+    let grid = time_grid(&ctx.process, n_steps);
+    let mut x = ctx.sample_prior(rng);
+    let mut z = Tensor::zeros(&[b, d]);
+    for w in grid.windows(2) {
+        let (t, t_next) = (w[0], w[1]);
+        let h = t - t_next;
+        fill_noise(rng, &mut z);
+        let t_in = t_vec(b, t);
+        let drift = ctx.rdp_drift(&x, &t_in)?;
+        let g = ctx.process.diffusion(t) as f32;
+        let (a, c) = (-(h as f32), (h.sqrt() as f32) * g);
+        for i in 0..b {
+            let (xr, dr, zr) = (x.row_mut(i), drift.row(i), z.row(i));
+            for j in 0..d {
+                xr[j] += a * dr[j] + c * zr[j];
+            }
+        }
+    }
+    let mut nfe = vec![n_steps as u64; b];
+    if ctx.opts.denoise {
+        x = ctx.denoise(&x, &t_vec(b, ctx.process.t_eps()))?;
+        nfe.iter_mut().for_each(|n| *n += 1);
+    }
+    Ok(SolveResult { x, nfe_per_sample: nfe, steps: n_steps as u64, rejections: 0 })
+}

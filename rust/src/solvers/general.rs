@@ -1,0 +1,273 @@
+//! Algorithm 2 (paper Appendix C): dynamic-step-size extrapolation for
+//! *arbitrary forward-time* diffusion processes dx = f(x,t)dt + g(x,t)dw,
+//! with closure-provided drift/diffusion (no score network involved).
+//!
+//! Differences from Algorithm 1 (per the paper):
+//! * forward time over a given [t_begin, t_end];
+//! * state-dependent diffusion handled via the Itō correction draw
+//!   s = ±1 (Roberts 2012); s = 0 for Stratonovich or g(x,t) = g(t);
+//! * the full trajectory is retained;
+//! * **noise is retained after a rejection** so rejections are unbiased.
+//!
+//! This module is pure host math — it is the reference implementation
+//! used by the App. F stability tests and the `forward_sde` example.
+
+use crate::rng::Rng;
+use crate::Result;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NoiseKind {
+    /// g depends on x under the Itō convention: draw s = ±1.
+    ItoStateDependent,
+    /// g(x,t) = g(t) or Stratonovich convention: s = 0.
+    Additive,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct GeneralOpts {
+    pub eps_rel: f64,
+    pub eps_abs: f64,
+    pub r: f64,
+    pub safety: f64,
+    pub h_init: f64,
+    pub noise: NoiseKind,
+    pub max_iters: u64,
+}
+
+impl Default for GeneralOpts {
+    fn default() -> Self {
+        GeneralOpts {
+            eps_rel: 0.01,
+            eps_abs: 1e-3,
+            r: 0.9,
+            safety: 0.9,
+            h_init: 0.01,
+            noise: NoiseKind::Additive,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    /// (t, state) at every accepted step, including the initial state.
+    pub points: Vec<(f64, Vec<f64>)>,
+    pub steps: u64,
+    pub rejections: u64,
+}
+
+impl Trajectory {
+    pub fn final_state(&self) -> &[f64] {
+        &self.points.last().unwrap().1
+    }
+}
+
+/// Solve dx = f(x,t)dt + g(x,t)dw from (t_begin, x0) to t_end.
+pub fn solve<F, G>(
+    f: F,
+    g: G,
+    x0: &[f64],
+    t_begin: f64,
+    t_end: f64,
+    rng: &mut Rng,
+    opts: &GeneralOpts,
+) -> Result<Trajectory>
+where
+    F: Fn(&[f64], f64, &mut [f64]),
+    G: Fn(&[f64], f64, &mut [f64]),
+{
+    let d = x0.len();
+    let mut x = x0.to_vec();
+    let mut xprev = x0.to_vec();
+    let mut t = t_begin;
+    let mut h = opts.h_init.min(t_end - t_begin);
+    let mut traj = Trajectory { points: vec![(t, x.clone())], steps: 0, rejections: 0 };
+    // scratch
+    let (mut fx, mut gx) = (vec![0.0; d], vec![0.0; d]);
+    let (mut f2, mut g2) = (vec![0.0; d], vec![0.0; d]);
+    let (mut xp, mut xt) = (vec![0.0; d], vec![0.0; d]);
+    let mut z: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut s_draw = draw_s(rng, opts.noise);
+
+    while t < t_end - 1e-14 {
+        if traj.steps >= opts.max_iters {
+            crate::bail!("general solver exceeded {} iterations", opts.max_iters);
+        }
+        traj.steps += 1;
+        h = h.min(t_end - t);
+        let sq = h.sqrt();
+        // x' = x + h f(x,t) + sqrt(h) g(x,t) (z - s)
+        f(&x, t, &mut fx);
+        g(&x, t, &mut gx);
+        for j in 0..d {
+            xp[j] = x[j] + h * fx[j] + sq * gx[j] * (z[j] - s_draw);
+        }
+        // x~ = x + h f(x', t+h) + sqrt(h) g(x', t+h) (z + s)
+        f(&xp, t + h, &mut f2);
+        g(&xp, t + h, &mut g2);
+        for j in 0..d {
+            xt[j] = x[j] + h * f2[j] + sq * g2[j] * (z[j] + s_draw);
+        }
+        // E2 over x'' = (x' + x~)/2
+        let mut acc = 0.0;
+        for j in 0..d {
+            let xpp = 0.5 * (xp[j] + xt[j]);
+            let delta = opts.eps_abs.max(opts.eps_rel * xp[j].abs().max(xprev[j].abs()));
+            let r = (xp[j] - xpp) / delta;
+            acc += r * r;
+        }
+        let e2 = (acc / d as f64).sqrt();
+        if e2 <= 1.0 {
+            t += h;
+            for j in 0..d {
+                let xpp = 0.5 * (xp[j] + xt[j]);
+                xprev[j] = xp[j];
+                x[j] = xpp;
+            }
+            traj.points.push((t, x.clone()));
+            // fresh noise only after acceptance (App. C: retain on rejection)
+            for zj in z.iter_mut() {
+                *zj = rng.normal();
+            }
+            s_draw = draw_s(rng, opts.noise);
+        } else {
+            traj.rejections += 1;
+        }
+        h = (h * opts.safety * e2.max(1e-12).powf(-opts.r)).min(t_end - t);
+        if h <= 0.0 {
+            h = 1e-12;
+        }
+    }
+    Ok(traj)
+}
+
+fn draw_s(rng: &mut Rng, kind: NoiseKind) -> f64 {
+    match kind {
+        NoiseKind::Additive => 0.0,
+        NoiseKind::ItoStateDependent => rng.sign(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ornstein–Uhlenbeck: dx = -a x dt + s dw has stationary var s^2/(2a)
+    /// — the paper's App. F linear test SDE, checking the scheme is
+    /// asymptotically unbiased in mean and mean-square.
+    #[test]
+    fn ou_process_stationary_moments() {
+        let (a, s) = (1.0, 0.5);
+        let mut rng = Rng::new(123);
+        let mut finals = Vec::new();
+        for k in 0..200 {
+            let mut r = rng.fork(k);
+            let traj = solve(
+                |x, _t, out| out.iter_mut().zip(x).for_each(|(o, &xi)| *o = -a * xi),
+                |_x, _t, out| out.iter_mut().for_each(|o| *o = s),
+                &[2.0, -2.0],
+                0.0,
+                8.0,
+                &mut r,
+                &GeneralOpts { eps_rel: 0.05, eps_abs: 1e-3, ..Default::default() },
+            )
+            .unwrap();
+            finals.extend_from_slice(traj.final_state());
+        }
+        let n = finals.len() as f64;
+        let mean = finals.iter().sum::<f64>() / n;
+        let var = finals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+        let want_var = s * s / (2.0 * a); // 0.125
+        assert!(mean.abs() < 0.06, "mean {mean}");
+        assert!((var - want_var).abs() < 0.04, "var {var} want {want_var}");
+    }
+
+    /// Geometric Brownian motion (state-dependent g, Itō): E[x(T)] = x0 e^{mu T}.
+    #[test]
+    fn gbm_mean_matches_analytic() {
+        let (mu, sigma, x0, t_end) = (0.3, 0.4, 1.0, 1.0);
+        let mut rng = Rng::new(7);
+        let mut sum = 0.0;
+        let n = 2000;
+        for k in 0..n {
+            let mut r = rng.fork(k);
+            let traj = solve(
+                |x, _t, out| out[0] = mu * x[0],
+                |x, _t, out| out[0] = sigma * x[0],
+                &[x0],
+                0.0,
+                t_end,
+                &mut r,
+                &GeneralOpts {
+                    eps_rel: 0.02,
+                    eps_abs: 1e-4,
+                    noise: NoiseKind::ItoStateDependent,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            sum += traj.final_state()[0];
+        }
+        let mean = sum / n as f64;
+        let want = x0 * (mu * t_end).exp(); // 1.3499
+        assert!((mean - want).abs() < 0.05, "mean {mean} want {want}");
+    }
+
+    #[test]
+    fn deterministic_ode_high_accuracy() {
+        // g = 0: dx = x dt => x(1) = e
+        let mut rng = Rng::new(1);
+        let traj = solve(
+            |x, _t, out| out[0] = x[0],
+            |_x, _t, out| out[0] = 0.0,
+            &[1.0],
+            0.0,
+            1.0,
+            &mut rng,
+            &GeneralOpts { eps_rel: 1e-4, eps_abs: 1e-7, ..Default::default() },
+        )
+        .unwrap();
+        let err = (traj.final_state()[0] - std::f64::consts::E).abs();
+        assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn trajectory_is_monotone_in_time() {
+        let mut rng = Rng::new(3);
+        let traj = solve(
+            |_x, _t, out| out[0] = 1.0,
+            |_x, _t, out| out[0] = 0.1,
+            &[0.0],
+            0.5,
+            2.0,
+            &mut rng,
+            &GeneralOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(traj.points.first().unwrap().0, 0.5);
+        assert!((traj.points.last().unwrap().0 - 2.0).abs() < 1e-12);
+        for w in traj.points.windows(2) {
+            assert!(w[1].0 > w[0].0);
+        }
+    }
+
+    /// Rejections keep the noise draw (App. C) — with a tolerance so tight
+    /// everything rejects initially, the solver must still converge and
+    /// remain unbiased (mean of OU at short horizon).
+    #[test]
+    fn tight_tolerance_still_converges() {
+        let mut rng = Rng::new(9);
+        let traj = solve(
+            |x, _t, out| out[0] = -x[0],
+            |_x, _t, out| out[0] = 1.0,
+            &[1.0],
+            0.0,
+            0.5,
+            &mut rng,
+            &GeneralOpts { eps_rel: 1e-3, eps_abs: 1e-5, h_init: 0.5, ..Default::default() },
+        )
+        .unwrap();
+        assert!(traj.rejections > 0, "expected at least one rejection");
+        assert!(traj.final_state()[0].is_finite());
+    }
+}

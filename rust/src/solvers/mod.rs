@@ -1,0 +1,164 @@
+//! Reverse-diffusion solvers (paper §2.4, §3, Appendix A).
+//!
+//! Two execution styles:
+//! * **fused** — one AOT step-artifact call per iteration (both score
+//!   evaluations + integrators + error norm in-graph); the serving path.
+//! * **composed** — `score` artifact calls + host math; powers the
+//!   ablation knobs (Tables 4–5), the off-the-shelf suite (Table 3) and
+//!   the probability-flow ODE, where the paper's variations live outside
+//!   what the fused graphs bake in.
+//!
+//! Every solver reports per-sample NFE (the paper's cost metric) plus
+//! batch-level call counts.
+
+pub mod adaptive;
+pub mod ddim;
+pub mod em;
+pub mod general;
+pub mod lamba;
+pub mod prob_flow;
+pub mod rdl;
+pub mod spec;
+pub mod table3;
+
+pub use spec::Spec;
+
+use crate::rng::Rng;
+use crate::runtime::Model;
+use crate::sde::Process;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Options shared by all solvers.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveOpts {
+    /// Use the device-resident-buffer execution path.
+    pub fused_buffers: bool,
+    /// Apply final Tweedie denoising at t_eps (paper App. D, approach 2).
+    pub denoise: bool,
+}
+
+impl Default for SolveOpts {
+    fn default() -> Self {
+        SolveOpts { fused_buffers: true, denoise: true }
+    }
+}
+
+/// Outcome of solving one batch of reverse diffusions.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    /// Final samples in the process data range, [B, D].
+    pub x: Tensor,
+    /// Score-network evaluations per sample (incl. the denoise call).
+    pub nfe_per_sample: Vec<u64>,
+    /// Iterations of the solver loop (batch-level).
+    pub steps: u64,
+    /// Rejected proposals across the batch (adaptive solvers only).
+    pub rejections: u64,
+}
+
+impl SolveResult {
+    pub fn mean_nfe(&self) -> f64 {
+        self.nfe_per_sample.iter().sum::<u64>() as f64 / self.nfe_per_sample.len() as f64
+    }
+
+    pub fn max_nfe(&self) -> u64 {
+        self.nfe_per_sample.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Batched access to the score network and its surrounding step programs.
+/// Thin convenience over `runtime::Model` fixing (bucket, exec-mode).
+pub struct Ctx<'m, 'rt> {
+    pub model: &'m Model<'rt>,
+    pub process: Process,
+    pub bucket: usize,
+    pub opts: SolveOpts,
+}
+
+impl<'m, 'rt> Ctx<'m, 'rt> {
+    pub fn new(model: &'m Model<'rt>, bucket: usize, opts: SolveOpts) -> Ctx<'m, 'rt> {
+        Ctx { model, process: model.meta.process(), bucket, opts }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.model.meta.dim
+    }
+
+    /// s_theta(x, t): one score evaluation per sample.
+    pub fn score(&self, x: &Tensor, t: &Tensor) -> Result<Tensor> {
+        let mut out =
+            self.model.exec("score", self.bucket, &[x, t], self.opts.fused_buffers)?;
+        Ok(out.pop().unwrap())
+    }
+
+    /// Reverse-SDE deterministic term  f(x,t) - g(t)^2 s(x,t), host-composed.
+    pub fn rdp_drift(&self, x: &Tensor, t: &Tensor) -> Result<Tensor> {
+        let mut s = self.score(x, t)?;
+        for i in 0..self.bucket {
+            let ti = t.data[i] as f64;
+            let g2 = self.process.diffusion(ti).powi(2) as f32;
+            let fc = self.process.drift_coef(ti) as f32;
+            let (xr, sr) = (x.row(i), s.row_mut(i));
+            for j in 0..xr.len() {
+                sr[j] = fc * xr[j] - g2 * sr[j];
+            }
+        }
+        Ok(s)
+    }
+
+    /// Tweedie denoising at per-sample times `t` (1 NFE per sample).
+    pub fn denoise(&self, x: &Tensor, t: &Tensor) -> Result<Tensor> {
+        let mut out =
+            self.model.exec("denoise", self.bucket, &[x, t], self.opts.fused_buffers)?;
+        Ok(out.pop().unwrap())
+    }
+
+    /// Draw the prior x(1).
+    pub fn sample_prior(&self, rng: &mut Rng) -> Tensor {
+        let mut x = Tensor::zeros(&[self.bucket, self.dim()]);
+        self.process.sample_prior(rng, &mut x);
+        x
+    }
+}
+
+/// Uniform reverse-time grid from 1 down to t_eps with n steps
+/// (paper App. D time sequence).
+pub fn time_grid(process: &Process, n: usize) -> Vec<f64> {
+    let t_eps = process.t_eps();
+    (0..=n).map(|i| 1.0 - (1.0 - t_eps) * i as f64 / n as f64).collect()
+}
+
+/// Tensor of one repeated time value.
+pub fn t_vec(bucket: usize, t: f64) -> Tensor {
+    Tensor { shape: vec![bucket], data: vec![t as f32; bucket] }
+}
+
+/// Fill `z` with standard normals.
+pub fn fill_noise(rng: &mut Rng, z: &mut Tensor) {
+    rng.fill_normal(&mut z.data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_grid_endpoints_and_monotone() {
+        let p = Process::vp();
+        let g = time_grid(&p, 100);
+        assert_eq!(g.len(), 101);
+        assert_eq!(g[0], 1.0);
+        assert!((g[100] - p.t_eps()).abs() < 1e-12);
+        for w in g.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn t_vec_shape() {
+        let t = t_vec(4, 0.5);
+        assert_eq!(t.shape, vec![4]);
+        assert!(t.data.iter().all(|&v| v == 0.5));
+    }
+}

@@ -1,0 +1,143 @@
+//! Probability-flow ODE solved with adaptive Dormand–Prince RK45
+//! (paper §4.2's "Probability Flow" comparator; Song et al. used
+//! scipy.integrate.RK45 on the flattened batch — we match that lockstep
+//! batch-wide step size).
+//!
+//! dx/dt = f(x,t) - 1/2 g(t)^2 s(x,t), integrated from t=1 to t_eps.
+//! 6 fresh drift evaluations per attempted step (FSAL reuses the 7th).
+
+use super::{t_vec, Ctx, SolveResult};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::Result;
+
+// Dormand–Prince 5(4) tableau.
+const A: [[f64; 6]; 6] = [
+    [1.0 / 5.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+    [3.0 / 40.0, 9.0 / 40.0, 0.0, 0.0, 0.0, 0.0],
+    [44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0, 0.0, 0.0, 0.0],
+    [19372.0 / 6561.0, -25360.0 / 2187.0, 64448.0 / 6561.0, -212.0 / 729.0, 0.0, 0.0],
+    [9017.0 / 3168.0, -355.0 / 33.0, 46732.0 / 5247.0, 49.0 / 176.0, -5103.0 / 18656.0, 0.0],
+    [35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0, 11.0 / 84.0],
+];
+const C: [f64; 6] = [1.0 / 5.0, 3.0 / 10.0, 4.0 / 5.0, 8.0 / 9.0, 1.0, 1.0];
+// 5th-order weights == A[5]; 4th-order embedded weights:
+const B4: [f64; 7] = [
+    5179.0 / 57600.0,
+    0.0,
+    7571.0 / 16695.0,
+    393.0 / 640.0,
+    -92097.0 / 339200.0,
+    187.0 / 2100.0,
+    1.0 / 40.0,
+];
+
+#[derive(Clone, Copy, Debug)]
+pub struct OdeOpts {
+    pub rtol: f64,
+    pub atol: f64,
+    pub max_iters: u64,
+}
+
+impl Default for OdeOpts {
+    fn default() -> Self {
+        OdeOpts { rtol: 1e-4, atol: 1e-4, max_iters: 20_000 }
+    }
+}
+
+fn ode_drift(ctx: &Ctx, x: &Tensor, t: f64) -> Result<Tensor> {
+    let t_in = t_vec(ctx.bucket, t);
+    let mut out =
+        ctx.model.exec("ode_drift", ctx.bucket, &[x, &t_in], ctx.opts.fused_buffers)?;
+    Ok(out.pop().unwrap())
+}
+
+pub fn run(ctx: &Ctx, rng: &mut Rng, opts: &OdeOpts) -> Result<SolveResult> {
+    let b = ctx.bucket;
+    let d = ctx.dim();
+    let n = (b * d) as f64;
+    let t_eps = ctx.process.t_eps();
+    let mut x = ctx.sample_prior(rng);
+    let mut t = 1.0f64;
+    // integrate backwards: dt < 0
+    let mut h = -0.01f64;
+    let mut nfe_count = 0u64;
+    let mut steps = 0u64;
+    let mut rejections = 0u64;
+    let mut k: Vec<Tensor> = Vec::with_capacity(7);
+    k.push(ode_drift(ctx, &x, t)?); // FSAL slot k0
+    nfe_count += 1;
+
+    while t > t_eps + 1e-12 {
+        if steps >= opts.max_iters {
+            crate::bail!("RK45 exceeded {} iterations", opts.max_iters);
+        }
+        steps += 1;
+        if t + h < t_eps {
+            h = t_eps - t;
+        }
+        // stages 1..6
+        k.truncate(1);
+        for s in 0..6 {
+            let mut xs = x.clone();
+            for (j, kj) in k.iter().enumerate() {
+                let a = A[s][j];
+                if a != 0.0 {
+                    xs.axpy((a * h) as f32, kj);
+                }
+            }
+            k.push(ode_drift(ctx, &xs, t + C[s] * h)?);
+            nfe_count += 1;
+        }
+        // 5th-order solution y5 = x + h * sum(A[5][j] k_j) ... A[5] has 6 weights + k6 weight 0
+        let mut y5 = x.clone();
+        for (j, kj) in k.iter().take(6).enumerate() {
+            let w = A[5][j];
+            if w != 0.0 {
+                y5.axpy((w * h) as f32, kj);
+            }
+        }
+        // error = y5 - y4 = h * sum((b5 - b4)_j k_j)
+        let mut err_sq = 0f64;
+        {
+            let b5: [f64; 7] = [A[5][0], A[5][1], A[5][2], A[5][3], A[5][4], A[5][5], 0.0];
+            // scaled rms error
+            let mut err_vec = vec![0f64; 1]; // accumulate on the fly instead
+            let _ = &mut err_vec;
+            for idx in 0..(b * d) {
+                let mut e = 0f64;
+                for (j, kj) in k.iter().enumerate() {
+                    e += (b5[j] - B4[j]) * kj.data[idx] as f64;
+                }
+                e *= h;
+                let sc = opts.atol
+                    + opts.rtol * (x.data[idx].abs().max(y5.data[idx].abs()) as f64);
+                let r = e / sc;
+                err_sq += r * r;
+            }
+        }
+        let err = (err_sq / n).sqrt();
+        if err <= 1.0 {
+            t += h;
+            x = y5;
+            let k_last = k.pop().unwrap();
+            k.clear();
+            k.push(k_last); // FSAL
+        } else {
+            rejections += 1;
+            k.truncate(1);
+        }
+        // standard PI-free controller
+        let factor = (0.9 * err.max(1e-12).powf(-0.2)).clamp(0.2, 5.0);
+        h *= factor;
+        if h.abs() < 1e-9 {
+            h = -1e-9_f64.max(t_eps - t);
+        }
+    }
+    let mut nfe = vec![nfe_count; b];
+    if ctx.opts.denoise {
+        x = ctx.denoise(&x, &t_vec(b, t_eps))?;
+        nfe.iter_mut().for_each(|v| *v += 1);
+    }
+    Ok(SolveResult { x, nfe_per_sample: nfe, steps, rejections })
+}

@@ -1,0 +1,49 @@
+//! Reverse-Diffusion + Langevin corrector (Song et al. 2020a's
+//! Predictor–Corrector sampler, the paper's "baseline" for VE models).
+//! 2 NFE per step: one predictor score eval + one corrector score eval,
+//! with the corrector step size set from the target signal-to-noise
+//! ratio (0.16 for VE, 0.01 for VP, following Song et al.).
+
+use super::{fill_noise, t_vec, time_grid, Ctx, SolveResult};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::Result;
+
+pub fn default_snr(process: &crate::sde::Process) -> f64 {
+    match process {
+        crate::sde::Process::Ve { .. } => 0.16,
+        crate::sde::Process::Vp { .. } => 0.01,
+    }
+}
+
+/// `n_steps` predictor+corrector iterations => NFE = 2*n_steps (+1 denoise).
+pub fn run(ctx: &Ctx, rng: &mut Rng, n_steps: usize, snr: Option<f64>) -> Result<SolveResult> {
+    let b = ctx.bucket;
+    let snr = snr.unwrap_or_else(|| default_snr(&ctx.process));
+    let grid = time_grid(&ctx.process, n_steps);
+    let mut x = ctx.sample_prior(rng);
+    let mut z1 = Tensor::zeros(&[b, ctx.dim()]);
+    let mut z2 = Tensor::zeros(&[b, ctx.dim()]);
+    let snr_t = Tensor::scalar(snr as f32);
+    for w in grid.windows(2) {
+        let (t, t_next) = (w[0], w[1]);
+        let h = t - t_next;
+        fill_noise(rng, &mut z1);
+        fill_noise(rng, &mut z2);
+        let t_in = t_vec(b, t);
+        let h_in = t_vec(b, h);
+        let mut out = ctx.model.exec(
+            "pc_step",
+            ctx.bucket,
+            &[&x, &t_in, &h_in, &z1, &z2, &snr_t],
+            ctx.opts.fused_buffers,
+        )?;
+        x = out.pop().unwrap();
+    }
+    let mut nfe = vec![2 * n_steps as u64; b];
+    if ctx.opts.denoise {
+        x = ctx.denoise(&x, &t_vec(b, ctx.process.t_eps()))?;
+        nfe.iter_mut().for_each(|n| *n += 1);
+    }
+    Ok(SolveResult { x, nfe_per_sample: nfe, steps: n_steps as u64, rejections: 0 })
+}

@@ -1,0 +1,70 @@
+//! Unified solver specification: a single enum naming every solver the
+//! benches/tables exercise, with one dispatch point. Keeps paper-table
+//! code declarative ("run this list of rows").
+
+use super::{adaptive, ddim, em, lamba, prob_flow, rdl, table3, Ctx, SolveResult};
+use crate::rng::Rng;
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub enum Spec {
+    /// Algorithm 1, fused artifact path.
+    Adaptive(adaptive::AdaptiveOpts),
+    /// Algorithm 1, composed (host-math) path with ablation knobs.
+    AdaptiveComposed(adaptive::AdaptiveOpts),
+    /// Euler–Maruyama with n uniform steps.
+    Em(usize),
+    EmComposed(usize),
+    /// Reverse-Diffusion + Langevin (PC), n predictor steps.
+    Rdl(usize),
+    /// DDIM with n steps (VP only).
+    Ddim(usize),
+    /// Probability-flow ODE, RK45.
+    Ode(prob_flow::OdeOpts),
+    /// Lamba (2003) adaptive EM.
+    Lamba(lamba::LambaOpts),
+    /// Fixed-step Stratonovich Heun.
+    EulerHeun(usize),
+    /// Order-1.5 additive-noise SRK (SRA1 structure), adaptive.
+    Sra1(table3::Sra1Opts),
+    /// Adaptive Milstein (== adaptive EM for additive noise).
+    Milstein(f64),
+    /// Drift-implicit split-step EM, n steps.
+    Issem(usize),
+}
+
+impl Spec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Spec::Adaptive(_) => "ours",
+            Spec::AdaptiveComposed(_) => "ours-composed",
+            Spec::Em(_) => "euler-maruyama",
+            Spec::EmComposed(_) => "euler-maruyama-composed",
+            Spec::Rdl(_) => "reverse-diffusion+langevin",
+            Spec::Ddim(_) => "ddim",
+            Spec::Ode(_) => "probability-flow",
+            Spec::Lamba(_) => "lamba-em",
+            Spec::EulerHeun(_) => "euler-heun",
+            Spec::Sra1(_) => "sra1",
+            Spec::Milstein(_) => "milstein",
+            Spec::Issem(_) => "issem",
+        }
+    }
+
+    pub fn run(&self, ctx: &Ctx, rng: &mut Rng) -> Result<SolveResult> {
+        match self {
+            Spec::Adaptive(o) => adaptive::run_fused(ctx, rng, o),
+            Spec::AdaptiveComposed(o) => adaptive::run_composed(ctx, rng, o),
+            Spec::Em(n) => em::run(ctx, rng, *n),
+            Spec::EmComposed(n) => em::run_composed(ctx, rng, *n),
+            Spec::Rdl(n) => rdl::run(ctx, rng, *n, None),
+            Spec::Ddim(n) => ddim::run(ctx, rng, *n),
+            Spec::Ode(o) => prob_flow::run(ctx, rng, o),
+            Spec::Lamba(o) => lamba::run(ctx, rng, o),
+            Spec::EulerHeun(n) => table3::euler_heun(ctx, rng, *n),
+            Spec::Sra1(o) => table3::sra1(ctx, rng, o),
+            Spec::Milstein(e) => table3::milstein(ctx, rng, *e),
+            Spec::Issem(n) => table3::issem(ctx, rng, *n),
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Host tensor substrate: a dense f32 array with shape, plus the image
+//! utilities the examples/benches need (PPM grids). Device tensors live
+//! in `runtime`; this type is what solvers and metrics manipulate on the
+//! host side of the hot loop, so the mutating ops are allocation-free.
+
+use crate::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("shape {:?} does not match len {}", shape, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows of a [B, D] tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let d = *self.shape.last().unwrap();
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let d = *self.shape.last().unwrap();
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    // --- elementwise (allocation-free, used on solver host paths) ----------
+
+    pub fn axpy(&mut self, a: f32, x: &Tensor) {
+        debug_assert_eq!(self.shape, x.shape);
+        for (s, xv) in self.data.iter_mut().zip(&x.data) {
+            *s += a * xv;
+        }
+    }
+
+    pub fn scale(&mut self, a: f32) {
+        self.data.iter_mut().for_each(|x| *x *= a);
+    }
+
+    pub fn copy_from(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data.copy_from_slice(&other.data);
+    }
+
+    pub fn clamp(&mut self, lo: f32, hi: f32) {
+        self.data.iter_mut().for_each(|x| *x = x.clamp(lo, hi));
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Save a batch of flattened HWC images ([n, h*w*3], values in [0,1]) as a
+/// binary PPM grid — viewable anywhere, zero dependencies.
+pub fn save_image_grid(
+    path: &std::path::Path,
+    images: &Tensor,
+    h: usize,
+    w: usize,
+    cols: usize,
+) -> Result<()> {
+    let n = images.shape[0];
+    let rows = n.div_ceil(cols);
+    let (gh, gw) = (rows * h + (rows - 1), cols * w + (cols - 1));
+    let mut canvas = vec![32u8; gh * gw * 3]; // dark separator lines
+    for i in 0..n {
+        let (r, c) = (i / cols, i % cols);
+        let (oy, ox) = (r * (h + 1), c * (w + 1));
+        let img = images.row(i);
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..3 {
+                    let v = (img[(y * w + x) * 3 + ch].clamp(0.0, 1.0) * 255.0) as u8;
+                    canvas[((oy + y) * gw + ox + x) * 3 + ch] = v;
+                }
+            }
+        }
+    }
+    let mut out = format!("P6\n{gw} {gh}\n255\n").into_bytes();
+    out.extend_from_slice(&canvas);
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Read a raw little-endian f32 file into a tensor of the given shape.
+pub fn read_f32_file(path: &std::path::Path, shape: &[usize]) -> Result<Tensor> {
+    let bytes = std::fs::read(path)?;
+    let want: usize = shape.iter().product();
+    if bytes.len() != want * 4 {
+        bail!("{path:?}: expected {} f32s, file has {} bytes", want, bytes.len());
+    }
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor { shape: shape.to_vec(), data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates_shape() {
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rows_are_views() {
+        let mut t = Tensor::zeros(&[3, 4]);
+        t.row_mut(1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.row(1), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.row(0), &[0.0; 4]);
+    }
+
+    #[test]
+    fn axpy_matches_manual() {
+        let mut a = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::from_vec(&[4], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        a.axpy(0.5, &b);
+        assert_eq!(a.data, vec![1.5, 2.5, 3.5, 4.5]);
+    }
+
+    #[test]
+    fn image_grid_roundtrip() {
+        let dir = std::env::temp_dir().join("gofast_test_grid.ppm");
+        let imgs = Tensor::from_vec(&[2, 2 * 2 * 3], vec![0.5; 24]).unwrap();
+        save_image_grid(&dir, &imgs, 2, 2, 2).unwrap();
+        let bytes = std::fs::read(&dir).unwrap();
+        assert!(bytes.starts_with(b"P6\n5 2\n255\n"));
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let path = std::env::temp_dir().join("gofast_test_f32.bin");
+        let vals: Vec<f32> = (0..12).map(|i| i as f32 * 0.25).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = read_f32_file(&path, &[3, 4]).unwrap();
+        assert_eq!(t.data, vals);
+        assert!(read_f32_file(&path, &[5, 4]).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,103 @@
+//! Seeded property-testing substrate (no proptest reachable offline).
+//!
+//! `check(name, cases, |g| ...)` runs a closure over `cases` deterministic
+//! generators; a failing case reports its seed so
+//! `GOFAST_PROP_SEED=<seed> cargo test <name>` reproduces it exactly.
+//! No shrinking — generators are written to produce small cases often
+//! (sizes are sampled log-uniformly starting at the minimum).
+
+use crate::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Size sampled log-uniformly in [lo, hi] — biases toward small cases.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo >= 1 && hi >= lo);
+        let lol = (lo as f64).ln();
+        let hil = (hi as f64 + 1.0).ln();
+        (self.rng.uniform_range(lol, hil).exp() as usize).clamp(lo, hi)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 0
+    }
+
+    pub fn pick<'a, T>(&mut self, opts: &'a [T]) -> &'a T {
+        &opts[self.rng.below(opts.len())]
+    }
+
+    pub fn vec_normal(&mut self, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (self.rng.normal() * scale) as f32).collect()
+    }
+}
+
+/// Run `f` for `cases` generated cases; panics with the failing seed.
+pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(name: &str, cases: u64, mut f: F) {
+    // explicit reproduction path
+    if let Ok(seed_s) = std::env::var("GOFAST_PROP_SEED") {
+        let seed: u64 = seed_s.parse().expect("GOFAST_PROP_SEED must be u64");
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        if let Err(msg) = f(&mut g) {
+            panic!("[{name}] seed {seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "[{name}] case {case} failed (reproduce with GOFAST_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_respect_bounds() {
+        check("sizes", 200, |g| {
+            let s = g.size(1, 64);
+            prop_assert!((1..=64).contains(&s), "size {s} out of bounds");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sizes_bias_small() {
+        let mut g = Gen { rng: Rng::new(1), seed: 1 };
+        let small = (0..1000).filter(|_| g.size(1, 1000) <= 100).count();
+        assert!(small > 500, "log-uniform should favour small sizes, got {small}");
+    }
+
+    #[test]
+    #[should_panic(expected = "GOFAST_PROP_SEED=")]
+    fn failure_reports_seed() {
+        check("always_fails", 5, |_| Err("nope".to_string()));
+    }
+}

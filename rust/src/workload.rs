@@ -1,0 +1,114 @@
+//! Serving workload generation: request traces with Poisson or bursty
+//! arrivals over mixed request sizes/tolerances, used by the serving
+//! bench and the end-to-end example.
+
+use crate::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TraceItem {
+    /// Arrival offset from trace start, seconds.
+    pub at_s: f64,
+    pub n: usize,
+    pub eps_rel: f64,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub duration_s: f64,
+    /// Mean request arrival rate (requests/second).
+    pub rate_rps: f64,
+    /// Request sizes drawn uniformly from this set.
+    pub n_choices: Vec<usize>,
+    /// Tolerances drawn uniformly from this set (mixed-tolerance batching).
+    pub eps_choices: Vec<f64>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            duration_s: 10.0,
+            rate_rps: 2.0,
+            n_choices: vec![1, 2, 4, 8],
+            eps_choices: vec![0.02, 0.05, 0.1],
+        }
+    }
+}
+
+/// Poisson arrivals (exponential gaps).
+pub fn poisson_trace(rng: &mut Rng, cfg: &TraceConfig) -> Vec<TraceItem> {
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    let mut k = 0u64;
+    loop {
+        t += rng.exponential(cfg.rate_rps);
+        if t >= cfg.duration_s {
+            return out;
+        }
+        out.push(TraceItem {
+            at_s: t,
+            n: cfg.n_choices[rng.below(cfg.n_choices.len())],
+            eps_rel: cfg.eps_choices[rng.below(cfg.eps_choices.len())],
+            seed: 1000 + k,
+        });
+        k += 1;
+    }
+}
+
+/// Bursty arrivals: `bursts` clumps of `burst_size` back-to-back requests.
+pub fn burst_trace(rng: &mut Rng, cfg: &TraceConfig, bursts: usize, burst_size: usize) -> Vec<TraceItem> {
+    let mut out = Vec::new();
+    let mut k = 0u64;
+    for b in 0..bursts {
+        let at = cfg.duration_s * b as f64 / bursts as f64;
+        for _ in 0..burst_size {
+            out.push(TraceItem {
+                at_s: at,
+                n: cfg.n_choices[rng.below(cfg.n_choices.len())],
+                eps_rel: cfg.eps_choices[rng.below(cfg.eps_choices.len())],
+                seed: 5000 + k,
+            });
+            k += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let mut rng = Rng::new(1);
+        let cfg = TraceConfig { duration_s: 200.0, rate_rps: 3.0, ..Default::default() };
+        let trace = poisson_trace(&mut rng, &cfg);
+        let rate = trace.len() as f64 / cfg.duration_s;
+        assert!((rate - 3.0).abs() < 0.4, "rate {rate}");
+        // arrivals sorted, inside the window
+        for w in trace.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+        assert!(trace.iter().all(|i| i.at_s < cfg.duration_s));
+    }
+
+    #[test]
+    fn trace_draws_from_choice_sets() {
+        let mut rng = Rng::new(2);
+        let cfg = TraceConfig::default();
+        for item in poisson_trace(&mut rng, &cfg) {
+            assert!(cfg.n_choices.contains(&item.n));
+            assert!(cfg.eps_choices.contains(&item.eps_rel));
+        }
+    }
+
+    #[test]
+    fn burst_trace_shape() {
+        let mut rng = Rng::new(3);
+        let cfg = TraceConfig::default();
+        let t = burst_trace(&mut rng, &cfg, 4, 8);
+        assert_eq!(t.len(), 32);
+        let unique_seeds: std::collections::HashSet<u64> = t.iter().map(|i| i.seed).collect();
+        assert_eq!(unique_seeds.len(), 32);
+    }
+}

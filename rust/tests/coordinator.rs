@@ -1,0 +1,105 @@
+//! Integration: the continuous-batching engine — request lifecycle,
+//! mixed tolerances in one batch, admission control, determinism.
+
+mod common;
+
+use gofast::coordinator::{Engine, EngineConfig};
+
+fn engine() -> Option<Engine> {
+    let dir = common::artifacts()?;
+    let mut cfg = EngineConfig::new(dir, "vp");
+    cfg.bucket = 16;
+    Some(Engine::start(cfg).expect("engine start"))
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let Some(engine) = engine() else { return };
+    let c = engine.client();
+    let r = c.generate(4, 0.05, 42).unwrap();
+    assert_eq!(r.images.shape, vec![4, 768]);
+    assert!(r.images.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    assert_eq!(r.nfe.len(), 4);
+    assert!(r.nfe.iter().all(|&n| n >= 3));
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.requests_done, 1);
+    assert_eq!(stats.samples_done, 4);
+}
+
+#[test]
+fn oversized_request_streams_through_slots() {
+    let Some(engine) = engine() else { return };
+    let c = engine.client();
+    // 40 samples > 16 slots: lanes must recycle
+    let r = c.generate(40, 0.1, 1).unwrap();
+    assert_eq!(r.images.shape[0], 40);
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.samples_done, 40);
+    assert_eq!(stats.active_slots, 0);
+}
+
+#[test]
+fn concurrent_mixed_tolerance_requests() {
+    let Some(engine) = engine() else { return };
+    let mut handles = Vec::new();
+    for (i, eps) in [(0u64, 0.02), (1, 0.05), (2, 0.1), (3, 0.5)] {
+        let c = engine.client();
+        handles.push(std::thread::spawn(move || {
+            let r = c.generate(4, eps, 100 + i).expect("generate");
+            (eps, r.nfe.iter().sum::<u64>() as f64 / 4.0)
+        }));
+    }
+    let mut results: Vec<(f64, f64)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    results.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // requests with tighter tolerance must spend more NFE even when
+    // co-batched with looser ones (per-lane eps_rel)
+    assert!(
+        results.first().unwrap().1 > results.last().unwrap().1,
+        "NFE not ordered by tolerance: {results:?}"
+    );
+    let stats = engine.client().stats().unwrap();
+    assert_eq!(stats.requests_done, 4);
+}
+
+#[test]
+fn same_seed_same_images_regardless_of_batching() {
+    let Some(engine) = engine() else { return };
+    let c = engine.client();
+    let a = c.generate(3, 0.05, 777).unwrap();
+    // second run shares the engine with another concurrent request
+    let c2 = engine.client();
+    let bg = std::thread::spawn(move || c2.generate(8, 0.1, 555).unwrap());
+    let b = c.generate(3, 0.05, 777).unwrap();
+    bg.join().unwrap();
+    assert_eq!(a.images, b.images, "per-sample RNG must make results batching-independent");
+    assert_eq!(a.nfe, b.nfe);
+}
+
+#[test]
+fn zero_sample_request_is_rejected() {
+    let Some(engine) = engine() else { return };
+    let err = engine.client().generate(0, 0.05, 0).unwrap_err().to_string();
+    assert!(err.contains("n must be > 0"), "{err}");
+}
+
+#[test]
+fn admission_control_rejects_overflow() {
+    let Some(dir) = common::artifacts() else { return };
+    let mut cfg = EngineConfig::new(dir, "vp");
+    cfg.bucket = 16;
+    cfg.max_queue_samples = 8;
+    let engine = Engine::start(cfg).unwrap();
+    let err = engine.client().generate(100, 0.5, 0).unwrap_err().to_string();
+    assert!(err.contains("queue full"), "{err}");
+}
+
+#[test]
+fn occupancy_reported_under_load() {
+    let Some(engine) = engine() else { return };
+    let c = engine.client();
+    c.generate(32, 0.1, 9).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.mean_occupancy > 1.0, "occupancy {}", stats.mean_occupancy);
+    assert!(stats.steps > 0);
+}

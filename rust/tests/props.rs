@@ -1,0 +1,185 @@
+//! Property tests (testkit substrate) over the artifact-independent
+//! invariants: step-size controller, process math, JSON/base64/config
+//! round-trips, histogram quantile bounds, workload traces.
+
+use gofast::prop_assert;
+use gofast::sde::Process;
+use gofast::solvers::time_grid;
+use gofast::testkit::check;
+
+#[test]
+fn prop_controller_shrinks_on_large_error() {
+    // h' = theta * h * E^-r must be < h whenever E > theta^(1/r) >= accept
+    check("controller", 500, |g| {
+        let h = g.f64(1e-6, 1.0);
+        let r = g.f64(0.5, 1.0);
+        let theta = 0.9;
+        let e = g.f64(1.0, 100.0); // rejected proposals have E > 1
+        let h2 = theta * h * e.powf(-r);
+        prop_assert!(h2 < h, "h grew on rejection: {h} -> {h2} (E={e}, r={r})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_controller_grows_on_small_error() {
+    check("controller-grow", 500, |g| {
+        let h = g.f64(1e-6, 1.0);
+        let r = g.f64(0.5, 1.0);
+        let e = g.f64(1e-4, 0.8); // well-accepted proposals
+        let h2 = 0.9 * h * e.powf(-r);
+        prop_assert!(h2 > h, "h shrank on good step: {h} -> {h2} (E={e})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_time_grid_covers_interval() {
+    check("time-grid", 200, |g| {
+        let p = if g.bool() { Process::vp() } else { Process::ve(g.f64(5.0, 100.0)) };
+        let n = g.size(1, 2000);
+        let grid = time_grid(&p, n);
+        prop_assert!(grid.len() == n + 1, "len {}", grid.len());
+        prop_assert!(grid[0] == 1.0, "start {}", grid[0]);
+        prop_assert!((grid[n] - p.t_eps()).abs() < 1e-12, "end {}", grid[n]);
+        let uniform = (1.0 - p.t_eps()) / n as f64;
+        for w in grid.windows(2) {
+            prop_assert!((w[0] - w[1] - uniform).abs() < 1e-9, "non-uniform step");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_process_std_monotone_and_positive() {
+    check("process-std", 300, |g| {
+        let p = if g.bool() { Process::vp() } else { Process::ve(g.f64(2.0, 500.0)) };
+        let t1 = g.f64(1e-5, 0.999);
+        let t2 = t1 + g.f64(1e-6, 1.0 - t1);
+        let (s1, s2) = (p.marginal_std(t1), p.marginal_std(t2));
+        prop_assert!(s1 > 0.0 && s2 > 0.0, "non-positive std");
+        prop_assert!(s2 >= s1 - 1e-12, "std not monotone: {s1} > {s2}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use gofast::json::Value;
+    check("json-roundtrip", 300, |g| {
+        // build a random value tree
+        fn build(g: &mut gofast::testkit::Gen, depth: usize) -> Value {
+            match if depth == 0 { g.usize(0, 3) } else { g.usize(0, 5) } {
+                0 => Value::Num((g.f64(-1e6, 1e6) * 1000.0).round() / 1000.0),
+                1 => Value::Bool(g.bool()),
+                2 => Value::Null,
+                3 => Value::Str(
+                    (0..g.usize(0, 12))
+                        .map(|_| *g.pick(&['a', 'Z', '"', '\\', '\n', 'x', '0']))
+                        .collect(),
+                ),
+                4 => Value::Arr((0..g.usize(0, 4)).map(|_| build(g, depth - 1)).collect()),
+                _ => Value::Obj(
+                    (0..g.usize(0, 4))
+                        .map(|i| (format!("k{i}"), build(g, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = build(g, 3);
+        let text = v.to_string();
+        let back = gofast::json::parse(&text).map_err(|e| format!("parse failed: {e} on {text}"))?;
+        prop_assert!(back == v, "roundtrip mismatch: {text}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_b64_roundtrip() {
+    use gofast::server::b64;
+    check("b64-roundtrip", 300, |g| {
+        let n = g.usize(0, 200);
+        let data: Vec<u8> = (0..n).map(|_| (g.rng.next_u64() & 0xFF) as u8).collect();
+        let enc = b64::encode(&data);
+        prop_assert!(enc.len() == data.len().div_ceil(3) * 4, "bad length");
+        let dec = b64::decode(&enc).map_err(|e| e.to_string())?;
+        prop_assert!(dec == data, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_bounded() {
+    use gofast::metrics::hist::Histogram;
+    check("hist-quantile", 100, |g| {
+        let mut h = Histogram::new();
+        let n = g.size(1, 500);
+        let mut max = 0f64;
+        for _ in 0..n {
+            let v = g.f64(1e-5, 100.0);
+            max = max.max(v);
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        prop_assert!(p50 <= p99 + 1e-12, "quantiles not monotone");
+        prop_assert!(p99 <= max * 1.06, "p99 {p99} above max {max}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_roundtrip_numbers() {
+    use gofast::config::Config;
+    check("config", 200, |g| {
+        let port = g.usize(1, 65535);
+        let eps = (g.f64(0.001, 0.999) * 1000.0).round() / 1000.0;
+        let text = format!("[s]\nport = {port}\neps = {eps}\nname = \"m{port}\"\n");
+        let c = Config::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert!(c.usize_or("s.port", 0).unwrap() == port, "port");
+        prop_assert!((c.f64_or("s.eps", 0.0).unwrap() - eps).abs() < 1e-12, "eps");
+        prop_assert!(c.str_or("s.name", "").unwrap() == format!("m{port}"), "name");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_poisson_trace_sorted_within_duration() {
+    use gofast::rng::Rng;
+    use gofast::workload::{poisson_trace, TraceConfig};
+    check("trace", 100, |g| {
+        let cfg = TraceConfig {
+            duration_s: g.f64(1.0, 50.0),
+            rate_rps: g.f64(0.5, 20.0),
+            ..Default::default()
+        };
+        let trace = poisson_trace(&mut Rng::new(g.seed), &cfg);
+        for w in trace.windows(2) {
+            prop_assert!(w[1].at_s >= w[0].at_s, "unsorted arrivals");
+        }
+        prop_assert!(
+            trace.iter().all(|i| i.at_s < cfg.duration_s),
+            "arrival beyond duration"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_linalg_sqrtm_squares_back() {
+    use gofast::linalg::{matmul, sqrtm_psd, transpose};
+    check("sqrtm", 50, |g| {
+        let n = g.size(2, 24);
+        let b: Vec<f64> = (0..n * n).map(|_| g.rng.normal()).collect();
+        let mut a = matmul(&b, &transpose(&b, n, n), n, n, n);
+        for i in 0..n {
+            a[i * n + i] += 0.05;
+        }
+        let s = sqrtm_psd(&a, n);
+        let ss = matmul(&s, &s, n, n, n);
+        for (x, y) in ss.iter().zip(&a) {
+            prop_assert!((x - y).abs() < 1e-7, "sqrtm^2 != A ({x} vs {y}, n={n})");
+        }
+        Ok(())
+    });
+}

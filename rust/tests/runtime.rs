@@ -1,0 +1,144 @@
+//! Integration: PJRT runtime over real artifacts — loading, ABI, literal
+//! vs buffer execution paths, NFE accounting.
+
+mod common;
+
+use gofast::runtime::{score_evals_per_call, Runtime};
+use gofast::tensor::Tensor;
+
+#[test]
+fn manifest_loads_and_lists_variants() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let names = rt.variant_names();
+    assert!(names.iter().any(|n| n == "vp"), "variants: {names:?}");
+}
+
+#[test]
+fn model_meta_is_consistent() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    assert_eq!(m.meta.dim, m.meta.h * m.meta.w * m.meta.c);
+    assert_eq!(m.meta.sde_kind, "vp");
+    assert!(!m.buckets("score").is_empty());
+    assert!(!m.buckets("adaptive_step").is_empty());
+}
+
+#[test]
+fn unknown_variant_is_a_clean_error() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let err = match rt.model("nope") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected error for unknown variant"),
+    };
+    assert!(err.contains("nope"), "{err}");
+}
+
+#[test]
+fn score_executes_and_is_finite() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("score")[0];
+    let x = Tensor::zeros(&[b, m.meta.dim]);
+    let t = Tensor { shape: vec![b], data: vec![0.5; b] };
+    let out = m.exec_literals("score", b, &[&x, &t]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![b, m.meta.dim]);
+    assert!(out[0].data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn literal_and_buffer_paths_agree() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("score")[0];
+    let mut x = Tensor::zeros(&[b, m.meta.dim]);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = ((i % 17) as f32 - 8.0) * 0.1;
+    }
+    let t = Tensor { shape: vec![b], data: vec![0.7; b] };
+    let a = m.exec_literals("score", b, &[&x, &t]).unwrap();
+    let c = m.exec_buffers("score", b, &[&x, &t]).unwrap();
+    assert_eq!(a[0].shape, c[0].shape);
+    let diff = a[0].max_abs_diff(&c[0]);
+    assert!(diff == 0.0, "paths diverge by {diff}");
+}
+
+#[test]
+fn adaptive_step_returns_three_outputs() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("adaptive_step")[0];
+    let d = m.meta.dim;
+    let x = Tensor::zeros(&[b, d]);
+    let t = Tensor { shape: vec![b], data: vec![0.5; b] };
+    let h = Tensor { shape: vec![b], data: vec![0.01; b] };
+    let z = Tensor::zeros(&[b, d]);
+    let ea = Tensor::scalar(0.0078);
+    let er = Tensor { shape: vec![b], data: vec![0.05; b] };
+    let out = m.exec_literals("adaptive_step", b, &[&x, &x, &t, &h, &z, &ea, &er]).unwrap();
+    assert_eq!(out.len(), 3, "x'', x', E2");
+    assert_eq!(out[0].shape, vec![b, d]);
+    assert_eq!(out[1].shape, vec![b, d]);
+    assert_eq!(out[2].shape, vec![b]);
+}
+
+#[test]
+fn adaptive_step_zero_h_is_identity_with_zero_error() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("adaptive_step")[0];
+    let d = m.meta.dim;
+    let mut x = Tensor::zeros(&[b, d]);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = (i % 7) as f32 * 0.2 - 0.6;
+    }
+    let t = Tensor { shape: vec![b], data: vec![0.5; b] };
+    let h = Tensor { shape: vec![b], data: vec![0.0; b] };
+    let mut z = Tensor::zeros(&[b, d]);
+    z.fill(1.3);
+    let ea = Tensor::scalar(0.0078);
+    let er = Tensor { shape: vec![b], data: vec![0.05; b] };
+    let out = m.exec_literals("adaptive_step", b, &[&x, &x, &t, &h, &z, &ea, &er]).unwrap();
+    assert!(out[0].max_abs_diff(&x) < 1e-6, "x'' must equal x at h=0");
+    assert!(out[2].data.iter().all(|&e| e.abs() < 1e-6), "E2 must be 0 at h=0");
+}
+
+#[test]
+fn nfe_accounting_matches_program_semantics() {
+    assert_eq!(score_evals_per_call("score"), 1);
+    assert_eq!(score_evals_per_call("adaptive_step"), 2);
+    assert_eq!(score_evals_per_call("pc_step"), 2);
+    assert_eq!(score_evals_per_call("em_step"), 1);
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    rt.reset_stats();
+    let b = m.buckets("score")[0];
+    let x = Tensor::zeros(&[b, m.meta.dim]);
+    let t = Tensor { shape: vec![b], data: vec![0.5; b] };
+    m.exec_literals("score", b, &[&x, &t]).unwrap();
+    m.exec_literals("score", b, &[&x, &t]).unwrap();
+    let stats = rt.stats();
+    assert_eq!(stats.score_evals, 2);
+    assert_eq!(stats.calls, vec![("score".to_string(), 2)]);
+}
+
+#[test]
+fn bucket_for_picks_smallest_fitting() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let buckets = m.buckets("score").to_vec();
+    assert_eq!(m.bucket_for("score", 1).unwrap(), buckets[0]);
+    let largest = *buckets.last().unwrap();
+    assert_eq!(m.bucket_for("score", largest).unwrap(), largest);
+    // oversubscribed requests clamp to the largest bucket
+    assert_eq!(m.bucket_for("score", largest + 1).unwrap(), largest);
+}

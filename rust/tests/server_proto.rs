@@ -1,0 +1,96 @@
+//! Integration: TCP JSON-lines protocol end to end — ping/stats/generate,
+//! image payload integrity, malformed-request handling.
+
+mod common;
+
+use gofast::coordinator::{Engine, EngineConfig};
+use gofast::server::{serve, Client, ServerConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+fn spawn_server() -> Option<(Engine, std::net::SocketAddr)> {
+    let dir = common::artifacts()?;
+    let mut cfg = EngineConfig::new(dir, "vp");
+    cfg.bucket = 16;
+    let engine = Engine::start(cfg).expect("engine");
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let client = engine.client();
+    std::thread::spawn(move || {
+        let _ = serve(
+            listener,
+            client,
+            ServerConfig { port: addr.port(), img_h: 16, img_w: 16, default_eps_rel: 0.05 },
+        );
+    });
+    Some((engine, addr))
+}
+
+#[test]
+fn ping_stats_generate_roundtrip() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.ping().unwrap();
+    let r = c.generate(2, 0.1, 3, true).unwrap();
+    assert_eq!(r.images.shape, vec![2, 768]);
+    assert!(r.images.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    assert_eq!(r.nfe.len(), 2);
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("samples_done").unwrap().as_f64().unwrap(), 2.0);
+}
+
+#[test]
+fn images_can_be_omitted() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let r = c.generate(1, 0.5, 0, false).unwrap();
+    assert_eq!(r.images.len(), 0);
+    assert_eq!(r.nfe.len(), 1);
+}
+
+#[test]
+fn malformed_json_gets_error_response_and_connection_survives() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "this is not json").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
+    // connection still usable
+    writeln!(writer, "{{\"op\":\"ping\"}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+}
+
+#[test]
+fn unknown_op_is_rejected() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{{\"op\":\"destroy\"}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("unknown op"), "{line}");
+}
+
+#[test]
+fn parallel_connections_share_the_engine() {
+    let Some((engine, addr)) = spawn_server() else { return };
+    let mut handles = Vec::new();
+    for i in 0..4u64 {
+        let addr_s = addr.to_string();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr_s).unwrap();
+            c.generate(2, 0.1, i, false).unwrap().nfe.len()
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 8);
+    let stats = engine.client().stats().unwrap();
+    assert_eq!(stats.samples_done, 8);
+    assert_eq!(stats.requests_done, 4);
+}

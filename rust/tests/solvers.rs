@@ -1,0 +1,168 @@
+//! Integration: solver semantics over real artifacts — fused/composed
+//! equivalence, NFE accounting, determinism, tolerance monotonicity.
+
+mod common;
+
+use gofast::rng::Rng;
+use gofast::runtime::Runtime;
+use gofast::solvers::{adaptive, em, Ctx, SolveOpts};
+
+fn ctx_opts() -> SolveOpts {
+    SolveOpts { fused_buffers: true, denoise: true }
+}
+
+#[test]
+fn em_fused_matches_composed() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("em_step")[0];
+    let ctx = Ctx::new(&m, b, ctx_opts());
+    let res_f = em::run(&ctx, &mut Rng::new(3), 16).unwrap();
+    let res_c = em::run_composed(&ctx, &mut Rng::new(3), 16).unwrap();
+    let diff = res_f.x.max_abs_diff(&res_c.x);
+    assert!(diff < 2e-3, "fused vs composed EM diverged: {diff}");
+    assert_eq!(res_f.nfe_per_sample, res_c.nfe_per_sample);
+}
+
+#[test]
+fn adaptive_fused_matches_composed_trajectory() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("adaptive_step")[0];
+    let ctx = Ctx::new(&m, b, ctx_opts());
+    let opts = adaptive::AdaptiveOpts::with_eps_rel(0.05);
+    let res_f = adaptive::run_fused(&ctx, &mut Rng::new(11), &opts).unwrap();
+    let res_c = adaptive::run_composed(&ctx, &mut Rng::new(11), &opts).unwrap();
+    // identical accept/reject sequence => identical NFE; small numeric drift
+    assert_eq!(res_f.nfe_per_sample, res_c.nfe_per_sample, "accept/reject paths diverged");
+    let diff = res_f.x.max_abs_diff(&res_c.x);
+    assert!(diff < 5e-2, "endpoints diverged: {diff}");
+}
+
+#[test]
+fn adaptive_is_deterministic_for_seed() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("adaptive_step")[0];
+    let ctx = Ctx::new(&m, b, ctx_opts());
+    let opts = adaptive::AdaptiveOpts::with_eps_rel(0.05);
+    let a = adaptive::run_fused(&ctx, &mut Rng::new(7), &opts).unwrap();
+    let c = adaptive::run_fused(&ctx, &mut Rng::new(7), &opts).unwrap();
+    assert_eq!(a.x, c.x);
+    assert_eq!(a.nfe_per_sample, c.nfe_per_sample);
+}
+
+#[test]
+fn tighter_tolerance_needs_more_nfe() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("adaptive_step")[0];
+    let ctx = Ctx::new(&m, b, ctx_opts());
+    let loose = adaptive::run_fused(
+        &ctx,
+        &mut Rng::new(5),
+        &adaptive::AdaptiveOpts::with_eps_rel(0.5),
+    )
+    .unwrap();
+    let tight = adaptive::run_fused(
+        &ctx,
+        &mut Rng::new(5),
+        &adaptive::AdaptiveOpts::with_eps_rel(0.01),
+    )
+    .unwrap();
+    assert!(
+        tight.mean_nfe() > loose.mean_nfe(),
+        "tight {} <= loose {}",
+        tight.mean_nfe(),
+        loose.mean_nfe()
+    );
+}
+
+#[test]
+fn adaptive_nfe_is_two_per_attempt_plus_denoise() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("adaptive_step")[0];
+    let ctx = Ctx::new(&m, b, ctx_opts());
+    let res = adaptive::run_fused(
+        &ctx,
+        &mut Rng::new(2),
+        &adaptive::AdaptiveOpts::with_eps_rel(0.05),
+    )
+    .unwrap();
+    for &n in &res.nfe_per_sample {
+        assert!(n >= 3, "at least one step + denoise");
+        assert_eq!((n - 1) % 2, 0, "NFE {n}: 2 per attempt + 1 denoise");
+    }
+}
+
+#[test]
+fn samples_end_in_data_range_neighborhood() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("adaptive_step")[0];
+    let ctx = Ctx::new(&m, b, ctx_opts());
+    // Aggregate over several seeds: individual trajectories of a
+    // relative-tolerance solver on an imperfect score net can run away
+    // (delta ~ eps_rel|x| self-accepts large states), but the bulk of
+    // samples must land near the VP data range [-1, 1].
+    let mut total = 0usize;
+    let mut out_of_range = 0usize;
+    for seed in [1, 2, 3, 4] {
+        let res = adaptive::run_fused(
+            &ctx,
+            &mut Rng::new(seed),
+            &adaptive::AdaptiveOpts::with_eps_rel(0.05),
+        )
+        .unwrap();
+        total += res.x.len();
+        out_of_range += res.x.data.iter().filter(|v| v.abs() > 3.0).count();
+    }
+    let frac = out_of_range as f64 / total as f64;
+    assert!(frac < 0.3, "{:.1}% of components unconverged", frac * 100.0);
+}
+
+#[test]
+fn no_denoise_option_skips_final_eval() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("adaptive_step")[0];
+    let ctx = Ctx::new(&m, b, SolveOpts { fused_buffers: true, denoise: false });
+    let res = adaptive::run_fused(
+        &ctx,
+        &mut Rng::new(2),
+        &adaptive::AdaptiveOpts::with_eps_rel(0.1),
+    )
+    .unwrap();
+    for &n in &res.nfe_per_sample {
+        assert_eq!(n % 2, 0, "without denoise NFE must be even, got {n}");
+    }
+}
+
+#[test]
+fn ve_model_solves_too() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let Ok(m) = rt.model("ve") else {
+        eprintln!("skipping: ve variant not built yet");
+        return;
+    };
+    let b = m.buckets("adaptive_step")[0];
+    let ctx = Ctx::new(&m, b, ctx_opts());
+    let res = adaptive::run_fused(
+        &ctx,
+        &mut Rng::new(4),
+        &adaptive::AdaptiveOpts::with_eps_rel(0.05),
+    )
+    .unwrap();
+    assert!(res.x.data.iter().all(|v| v.is_finite()));
+    // VE needs more steps than VP at equal tolerance (paper §4.1)
+    assert!(res.mean_nfe() > 10.0);
+}

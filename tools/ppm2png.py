@@ -1,0 +1,45 @@
+#!/usr/bin/env python3
+"""Convert the binary PPM grids the Rust side writes into PNGs (stdlib
+only — zlib + struct). Usage: python tools/ppm2png.py grid.ppm [out.png]"""
+
+import struct
+import sys
+import zlib
+
+
+def read_ppm(path):
+    data = open(path, "rb").read()
+    # header: P6\n<w> <h>\n255\n
+    parts = data.split(b"\n", 3)
+    assert parts[0] == b"P6", "not a binary PPM"
+    w, h = map(int, parts[1].split())
+    assert parts[2] == b"255"
+    raw = parts[3]
+    assert len(raw) >= w * h * 3
+    return w, h, raw[: w * h * 3]
+
+
+def write_png(path, w, h, rgb):
+    def chunk(tag, payload):
+        out = struct.pack(">I", len(payload)) + tag + payload
+        return out + struct.pack(">I", zlib.crc32(tag + payload) & 0xFFFFFFFF)
+
+    ihdr = struct.pack(">IIBBBBB", w, h, 8, 2, 0, 0, 0)
+    scanlines = b"".join(
+        b"\x00" + rgb[y * w * 3 : (y + 1) * w * 3] for y in range(h)
+    )
+    png = (
+        b"\x89PNG\r\n\x1a\n"
+        + chunk(b"IHDR", ihdr)
+        + chunk(b"IDAT", zlib.compress(scanlines, 9))
+        + chunk(b"IEND", b"")
+    )
+    open(path, "wb").write(png)
+
+
+if __name__ == "__main__":
+    src = sys.argv[1]
+    dst = sys.argv[2] if len(sys.argv) > 2 else src.rsplit(".", 1)[0] + ".png"
+    w, h, rgb = read_ppm(src)
+    write_png(dst, w, h, rgb)
+    print(f"wrote {dst} ({w}x{h})")
