@@ -1,10 +1,14 @@
-//! Serving benchmark (the L3 contribution; not a paper table):
-//! continuous batching vs request-exclusive ("static") batching under a
-//! Poisson trace with mixed request sizes and tolerances.
+//! Serving benchmark (the L3 contribution; not a paper table), two parts:
 //!
-//! Static baseline = each request is solved as its own batch run (the
-//! paper's §3.1.5 "wait for all images to converge" batch semantics);
-//! continuous = converged lanes backfilled from the queue.
+//! 1. continuous batching vs request-exclusive ("static") batching under
+//!    a Poisson trace with mixed request sizes and tolerances. Static
+//!    baseline = each request is solved as its own batch run (the
+//!    paper's §3.1.5 "wait for all images to converge" batch semantics);
+//!    continuous = converged lanes backfilled from the queue.
+//! 2. low-occupancy: a trickle of small sequential requests through a
+//!    fixed-width pool vs the occupancy-aware bucket-migrating
+//!    scheduler, reporting per-bucket step counts and wasted lane-steps
+//!    (free lanes advanced as h = 0 no-ops).
 //!
 //!   cargo bench --offline --bench serving -- [--rate 2] [--duration 12]
 //!       [--bucket 16] [--model vp]
@@ -36,6 +40,7 @@ fn main() -> Result<()> {
     for mode in ["continuous", "static"] {
         let mut cfg = EngineConfig::new("artifacts", &model);
         cfg.bucket = bucket;
+        cfg.migrate = false; // part 1 isolates the batching comparison
         let engine = Engine::start(cfg)?;
         let client = engine.client();
 
@@ -113,5 +118,65 @@ fn main() -> Result<()> {
     }
     println!("\n=== serving: continuous vs static batching ===\n");
     print!("{}", table.render());
-    write_outputs("serving", &table)
+    write_outputs("serving", &table)?;
+
+    // --- part 2: low-occupancy, fixed width vs bucket migration -----------
+    // Small sequential requests (active lanes <= 4 throughout) against a
+    // pool of max width `bucket`. The fixed pool advances its free lanes
+    // as h = 0 no-ops every step; the migrating pool shrinks to the
+    // smallest compiled bucket that fits and should cut those wasted
+    // lane-steps by >= 2x.
+    let low_ns: &[usize] = &[1, 2, 4, 1, 2, 4, 1, 1];
+    let mut lo_table = Table::new(&[
+        "mode", "samples", "steps", "wasted_ls", "occupied_ls", "migrations", "bucket_steps",
+    ]);
+    let mut wasted_by_mode: Vec<u64> = Vec::new();
+    println!("\n== low-occupancy: {} sequential requests, n in {{1,2,4}} ==", low_ns.len());
+    for (mode, migrate) in [("fixed", false), ("migrating", true)] {
+        let mut cfg = EngineConfig::new("artifacts", &model);
+        cfg.bucket = bucket;
+        cfg.migrate = migrate;
+        let engine = Engine::start(cfg)?;
+        let client = engine.client();
+        let mut samples = 0usize;
+        for (i, &n) in low_ns.iter().enumerate() {
+            client.generate(n, 0.1, 9000 + i as u64)?;
+            samples += n;
+        }
+        let stats = client.stats()?;
+        let bucket_steps = stats
+            .steps_per_bucket
+            .iter()
+            .filter(|(_, n)| *n > 0)
+            .map(|(b, n)| format!("{b}:{n}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!(
+            "  {mode}: steps {} wasted {} occupied {} migrations {}v/{}^ [{bucket_steps}]",
+            stats.steps,
+            stats.wasted_lane_steps,
+            stats.occupied_lane_steps,
+            stats.migrations_down,
+            stats.migrations_up,
+        );
+        lo_table.row(vec![
+            mode.into(),
+            format!("{samples}"),
+            format!("{}", stats.steps),
+            format!("{}", stats.wasted_lane_steps),
+            format!("{}", stats.occupied_lane_steps),
+            format!("{}", stats.migrations_down + stats.migrations_up),
+            bucket_steps,
+        ]);
+        wasted_by_mode.push(stats.wasted_lane_steps);
+    }
+    println!("\n=== serving: low-occupancy bucket migration ===\n");
+    print!("{}", lo_table.render());
+    if let [fixed, migrating] = wasted_by_mode[..] {
+        let ratio = fixed as f64 / migrating.max(1) as f64;
+        println!(
+            "\nwasted lane-steps: fixed {fixed} vs migrating {migrating} ({ratio:.1}x reduction)"
+        );
+    }
+    write_outputs("serving_low_occupancy", &lo_table)
 }

@@ -1,8 +1,8 @@
-//! End-to-end serving driver (the DESIGN.md §5 validation run):
+//! End-to-end serving driver (docs/ARCHITECTURE.md §Server validation):
 //! starts the continuous-batching engine + TCP server in-process, replays
 //! a Poisson request trace with mixed sizes and tolerances through real
 //! TCP client connections, and reports latency / throughput / NFE /
-//! batch-occupancy. Results are recorded in EXPERIMENTS.md §End-to-end.
+//! batch-occupancy / per-bucket scheduling.
 //!
 //!   cargo run --release --offline --example serve_and_load -- \
 //!       [--model vp] [--rate 2.0] [--duration 15] [--bucket 16]
@@ -39,7 +39,7 @@ fn main() -> Result<()> {
             let _ = serve(
                 listener,
                 client,
-                ServerConfig { port: addr.port(), img_h: 16, img_w: 16, default_eps_rel: 0.05 },
+                ServerConfig { port: addr.port(), default_eps_rel: 0.05 },
             );
         });
     }
@@ -118,6 +118,17 @@ fn main() -> Result<()> {
     println!("engine steps       : {} ({} rejections)", srv.steps, srv.rejections);
     println!("mean occupancy     : {:.2}/{bucket} slots", srv.mean_occupancy);
     println!("score evals        : {}", srv.score_evals);
+    let per_bucket = srv
+        .steps_per_bucket
+        .iter()
+        .filter(|(_, n)| *n > 0)
+        .map(|(b, n)| format!("{b}:{n}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    println!(
+        "bucket scheduling  : steps [{per_bucket}] migrations {}v/{}^ wasted lane-steps {}",
+        srv.migrations_down, srv.migrations_up, srv.wasted_lane_steps
+    );
 
     // grab one last batch of images for the record
     let mut c = Client::connect(&addr.to_string())?;

@@ -41,7 +41,12 @@ from compile import fid_net, model
 from compile.kernels import em_update, err_norm
 
 SCORE_BUCKETS = (1, 16, 64)
-STEP_BUCKETS = (1, 16, 64)
+# Power-of-two ladder up to 16: the serving engine's occupancy-aware
+# scheduler migrates lanes to the smallest compiled bucket that fits the
+# live batch, so low-occupancy traffic stops paying full-width steps.
+# denoise shares the ladder because converged lanes are denoised at
+# whatever width the pool currently runs.
+STEP_BUCKETS = (1, 2, 4, 8, 16, 64)
 AUX_BUCKETS = (16, 64)
 FID_BUCKETS = (64,)
 

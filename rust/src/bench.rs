@@ -1,7 +1,7 @@
 //! Bench harness substrate (no criterion reachable offline): wall-clock
 //! timing with warmup, robust summary stats, aligned table printing (the
-//! paper-table renderers in `benches/` build on this), and CSV/JSON dumps
-//! for EXPERIMENTS.md.
+//! paper-table renderers in `benches/` build on this), and CSV dumps
+//! under `bench_out/` (see docs/ARCHITECTURE.md §Benches).
 
 use std::time::Instant;
 

@@ -81,6 +81,17 @@ impl Args {
         }
     }
 
+    /// Boolean flag: missing -> default, bare `--key` -> true, otherwise
+    /// an explicit `--key=true/false` (or 1/0).
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("") | Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(s) => Err(anyhow!("--{key}: expected true/false, got '{s}'")),
+        }
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None | Some("") => Ok(default),
@@ -151,6 +162,18 @@ mod tests {
         let a = parse(&["--model", "vp", "--model", "ve"]);
         assert_eq!(a.get("model"), Some("ve"));
         assert_eq!(a.get_all("model"), vec!["vp", "ve"]);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse(&["--migrate", "--fused=false", "--strict=1"]);
+        assert!(a.bool_or("migrate", false).unwrap());
+        assert!(!a.bool_or("fused", true).unwrap());
+        assert!(a.bool_or("strict", false).unwrap());
+        assert!(a.bool_or("missing", true).unwrap());
+        assert!(!a.bool_or("missing", false).unwrap());
+        let bad = parse(&["--migrate=maybe"]);
+        assert!(bad.bool_or("migrate", false).is_err());
     }
 
     #[test]

@@ -1,10 +1,18 @@
 //! Engine thread: owns the PJRT runtime and runs the continuous-batching
-//! step loop. See module docs in `coordinator/mod.rs`.
+//! step loop over every registered model's pool. See module docs in
+//! `coordinator/mod.rs` and docs/ARCHITECTURE.md §Coordinator.
+//!
+//! Loop shape per iteration: drain the mailbox, pick the next pool with
+//! work (round-robin over models), re-bucket it to the cheapest compiled
+//! width that fits its demand, admit queued samples into free lanes, and
+//! advance it one fused Algorithm-1 step.
 
+use super::registry::{ModelEntry, Registry};
+use super::scheduler::migrate_lanes;
 use super::{Msg, Pending, SampleRequest, Slot};
 use crate::metrics::hist::Histogram;
 use crate::rng::Rng;
-use crate::runtime::{Model, Runtime};
+use crate::runtime::{ExecArg, Runtime};
 use crate::tensor::Tensor;
 use crate::{anyhow, Result};
 use std::collections::HashMap;
@@ -15,9 +23,15 @@ use std::time::Instant;
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub artifacts: PathBuf,
-    pub model: String,
-    /// Slot-pool width; must be one of the model's adaptive_step buckets.
+    /// Models served from the shared engine thread; the first is the
+    /// default for requests that don't name one.
+    pub models: Vec<String>,
+    /// Widest slot-pool bucket; must be a compiled adaptive_step bucket
+    /// of every served model.
     pub bucket: usize,
+    /// Occupancy-aware bucket migration. Off = every pool is pinned at
+    /// `bucket` (the pre-scheduler fixed-width behaviour).
+    pub migrate: bool,
     pub fused_buffers: bool,
     /// Admission control: maximum queued samples before rejecting.
     pub max_queue_samples: usize,
@@ -31,8 +45,9 @@ impl EngineConfig {
     pub fn new(artifacts: impl Into<PathBuf>, model: &str) -> EngineConfig {
         EngineConfig {
             artifacts: artifacts.into(),
-            model: model.to_string(),
+            models: vec![model.to_string()],
             bucket: 16,
+            migrate: true,
             fused_buffers: true,
             max_queue_samples: 4096,
             h_init: 0.01,
@@ -47,6 +62,10 @@ pub struct GenResult {
     /// Unit-range images, [n, dim].
     pub images: Tensor,
     pub nfe: Vec<u64>,
+    /// Name and image geometry of the model that served the request.
+    pub model: String,
+    pub h: usize,
+    pub w: usize,
     pub wall_s: f64,
     pub queued_s: f64,
 }
@@ -65,6 +84,18 @@ pub struct EngineStats {
     pub latency_mean_s: f64,
     /// Mean occupied slots per step since start (batching efficiency).
     pub mean_occupancy: f64,
+    /// Models served, default first.
+    pub models: Vec<String>,
+    /// adaptive_step executions per bucket width, summed over models.
+    pub steps_per_bucket: Vec<(usize, u64)>,
+    /// Pool-width switches, summed over models.
+    pub migrations_up: u64,
+    pub migrations_down: u64,
+    /// Free lanes advanced through steps as h = 0 no-ops — the cost the
+    /// bucket scheduler exists to shrink.
+    pub wasted_lane_steps: u64,
+    /// Occupied lanes advanced through steps.
+    pub occupied_lane_steps: u64,
 }
 
 /// Handle owning the engine thread.
@@ -109,10 +140,19 @@ impl Drop for Engine {
 }
 
 impl EngineClient {
+    /// Generate on the engine's default model.
     pub fn generate(&self, n: usize, eps_rel: f64, seed: u64) -> Result<GenResult> {
+        self.generate_on("", n, eps_rel, seed)
+    }
+
+    /// Generate on a named model ("" = the default model).
+    pub fn generate_on(&self, model: &str, n: usize, eps_rel: f64, seed: u64) -> Result<GenResult> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Msg::Generate(SampleRequest { n, eps_rel, seed }, rtx))
+            .send(Msg::Generate(
+                SampleRequest { model: model.to_string(), n, eps_rel, seed },
+                rtx,
+            ))
             .map_err(|_| anyhow!("engine is down"))?;
         rrx.recv().map_err(|_| anyhow!("engine dropped the request"))?.map_err(|e| anyhow!(e))
     }
@@ -126,24 +166,33 @@ impl EngineClient {
 
 // --- engine internals ---------------------------------------------------------
 
-struct EngineState<'m, 'rt> {
-    model: &'m Model<'rt>,
-    cfg: EngineConfig,
-    process: crate::sde::Process,
-    slots: Vec<Slot>,
-    x: Tensor,
-    xprev: Tensor,
-    pending: HashMap<u64, Pending>,
-    fifo: Vec<u64>, // request ids in arrival order
-    next_req_id: u64,
-    queued_samples: usize,
-    // metrics
+struct Metrics {
     requests_done: u64,
     samples_done: u64,
     steps: u64,
     rejections: u64,
     latency: Histogram,
-    occupancy_sum: u64,
+}
+
+impl Metrics {
+    fn new() -> Metrics {
+        Metrics {
+            requests_done: 0,
+            samples_done: 0,
+            steps: 0,
+            rejections: 0,
+            latency: Histogram::new(),
+        }
+    }
+}
+
+struct EngineState<'rt> {
+    registry: Registry<'rt>,
+    cfg: EngineConfig,
+    pending: HashMap<u64, Pending>,
+    next_req_id: u64,
+    queued_samples: usize,
+    metrics: Metrics,
 }
 
 fn engine_main(
@@ -158,47 +207,26 @@ fn engine_main(
             return;
         }
     };
-    let model = match rt.model(&cfg.model) {
-        Ok(m) => m,
+    let registry = match Registry::load(&rt, &cfg.models, cfg.bucket, cfg.migrate) {
+        Ok(r) => r,
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
             return;
         }
     };
-    if !model.buckets("adaptive_step").contains(&cfg.bucket) {
-        let _ = ready.send(Err(format!(
-            "bucket {} not available for adaptive_step (have {:?})",
-            cfg.bucket,
-            model.buckets("adaptive_step")
-        )));
-        return;
-    }
-    let dim = model.meta.dim;
-    let bucket = cfg.bucket;
     let mut st = EngineState {
-        process: model.meta.process(),
-        model: &model,
-        slots: vec![Slot::Free; bucket],
-        x: Tensor::zeros(&[bucket, dim]),
-        xprev: Tensor::zeros(&[bucket, dim]),
+        registry,
+        cfg,
         pending: HashMap::new(),
-        fifo: Vec::new(),
         next_req_id: 1,
         queued_samples: 0,
-        requests_done: 0,
-        samples_done: 0,
-        steps: 0,
-        rejections: 0,
-        latency: Histogram::new(),
-        occupancy_sum: 0,
-        cfg,
+        metrics: Metrics::new(),
     };
     let _ = ready.send(Ok(()));
 
     loop {
-        // 1. drain the mailbox (block only when fully idle)
-        let idle = st.slots.iter().all(|s| s.is_free()) && st.fifo.is_empty();
-        if idle {
+        // 1. drain the mailbox (block only when every pool is idle)
+        if st.registry.all_idle() {
             match rx.recv() {
                 Ok(msg) => {
                     if st.handle_msg(msg) {
@@ -219,18 +247,22 @@ fn engine_main(
                 Err(mpsc::TryRecvError::Disconnected) => return,
             }
         }
-        // 2. admit queued samples into free slots
-        st.admit();
-        // 3. advance the continuous batch one Algorithm-1 iteration
-        if st.slots.iter().any(|s| !s.is_free()) {
-            if let Err(e) = st.step() {
-                st.fail_all(&format!("engine step failed: {e:#}"));
+        // 2. service the next pool with work: re-bucket to the cheapest
+        //    fitting width, admit queued samples, advance one iteration
+        if let Some(mi) = st.registry.next_runnable() {
+            st.rebucket(mi);
+            st.admit(mi);
+            if st.registry.entries()[mi].pool.active() > 0 {
+                if let Err(e) = st.step(mi) {
+                    // fault isolation: only this model's requests fail
+                    st.fail_pool(mi, &format!("engine step failed: {e:#}"));
+                }
             }
         }
     }
 }
 
-impl<'m, 'rt> EngineState<'m, 'rt> {
+impl<'rt> EngineState<'rt> {
     /// Returns true on shutdown.
     fn handle_msg(&mut self, msg: Msg) -> bool {
         match msg {
@@ -240,6 +272,13 @@ impl<'m, 'rt> EngineState<'m, 'rt> {
                 false
             }
             Msg::Generate(req, reply) => {
+                let mi = match self.registry.resolve(&req.model) {
+                    Ok(i) => i,
+                    Err(e) => {
+                        let _ = reply.send(Err(format!("{e:#}")));
+                        return false;
+                    }
+                };
                 if req.n == 0 {
                     let _ = reply.send(Err("n must be > 0".into()));
                     return false;
@@ -254,7 +293,7 @@ impl<'m, 'rt> EngineState<'m, 'rt> {
                 let id = self.next_req_id;
                 self.next_req_id += 1;
                 self.queued_samples += req.n;
-                let dim = self.model.meta.dim;
+                let dim = self.registry.entries()[mi].model.meta.dim;
                 self.pending.insert(
                     id,
                     Pending {
@@ -268,76 +307,106 @@ impl<'m, 'rt> EngineState<'m, 'rt> {
                         req,
                     },
                 );
-                self.fifo.push(id);
+                self.registry.entry_mut(mi).pool.fifo.push(id);
                 false
             }
         }
     }
 
-    /// FIFO admission of queued samples into free slots.
-    fn admit(&mut self) {
+    /// Live lanes plus samples still queued for pool `mi`.
+    fn pool_demand(&self, mi: usize) -> usize {
+        let pool = &self.registry.entries()[mi].pool;
+        let queued: usize = pool
+            .fifo
+            .iter()
+            .filter_map(|id| self.pending.get(id))
+            .map(|p| p.req.n - p.next_sample)
+            .sum();
+        pool.active() + queued
+    }
+
+    /// Switch pool `mi` to the scheduler's target width, migrating live
+    /// lanes. A no-op unless the target differs from the current width.
+    fn rebucket(&mut self, mi: usize) {
+        let demand = self.pool_demand(mi);
+        let e = self.registry.entry_mut(mi);
+        let active = e.pool.active();
+        let target = e.pool.sched.target_width(active, demand);
+        if target != e.pool.sched.width() {
+            migrate_lanes(&mut e.pool.slots, &mut e.pool.x, &mut e.pool.xprev, target);
+            e.pool.sched.set_width(target);
+        }
+    }
+
+    /// FIFO admission of queued samples into pool `mi`'s free slots.
+    fn admit(&mut self, mi: usize) {
+        let EngineState { registry, pending, queued_samples, cfg, .. } = self;
+        let e = registry.entry_mut(mi);
+        let prior_std = e.process.prior_std() as f32;
+        let pool = &mut e.pool;
         let mut fi = 0;
-        for si in 0..self.slots.len() {
-            if !self.slots[si].is_free() {
+        for si in 0..pool.slots.len() {
+            if !pool.slots[si].is_free() {
                 continue;
             }
             // find next request with samples left to admit (completed
             // requests may still sit in fifo until the retain below)
-            while fi < self.fifo.len() {
-                let id = self.fifo[fi];
-                match self.pending.get(&id) {
+            while fi < pool.fifo.len() {
+                let id = pool.fifo[fi];
+                match pending.get(&id) {
                     Some(p) if p.next_sample < p.req.n => break,
                     _ => fi += 1,
                 }
             }
-            if fi >= self.fifo.len() {
+            if fi >= pool.fifo.len() {
                 break;
             }
-            let id = self.fifo[fi];
-            let p = self.pending.get_mut(&id).unwrap();
+            let id = pool.fifo[fi];
+            let p = pending.get_mut(&id).unwrap();
             let sample_idx = p.next_sample;
             p.next_sample += 1;
             if p.started.is_none() {
                 p.started = Some(Instant::now());
             }
-            self.queued_samples -= 1;
+            *queued_samples -= 1;
             // init the lane: prior draw, fresh forked rng per sample
             let mut rng = Rng::new(p.req.seed).fork(sample_idx as u64);
             {
-                let row = self.x.row_mut(si);
-                let std = self.process.prior_std() as f32;
+                let row = pool.x.row_mut(si);
                 for v in row.iter_mut() {
-                    *v = rng.normal() as f32 * std;
+                    *v = rng.normal() as f32 * prior_std;
                 }
                 let prev = row.to_vec();
-                self.xprev.row_mut(si).copy_from_slice(&prev);
+                pool.xprev.row_mut(si).copy_from_slice(&prev);
             }
-            self.slots[si] = Slot::Running {
+            pool.slots[si] = Slot::Running {
                 req_id: id,
                 sample_idx,
                 t: 1.0,
-                h: self.cfg.h_init,
+                h: cfg.h_init,
                 eps_rel: p.req.eps_rel,
                 nfe: 0,
                 rng,
             };
         }
         // drop fully-admitted-and-finished request ids from fifo head
-        self.fifo.retain(|id| self.pending.contains_key(id));
+        pool.fifo.retain(|id| pending.contains_key(id));
     }
 
-    /// One fused adaptive_step over the slot pool.
-    fn step(&mut self) -> Result<()> {
-        let b = self.cfg.bucket;
-        let dim = self.model.meta.dim;
-        let t_eps = self.process.t_eps();
-        let eps_abs = self.process.eps_abs();
+    /// One fused adaptive_step over pool `mi` at its current width.
+    fn step(&mut self, mi: usize) -> Result<()> {
+        let EngineState { registry, pending, cfg, metrics, .. } = self;
+        let e = registry.entry_mut(mi);
+        let b = e.pool.sched.width();
+        let dim = e.model.meta.dim;
+        let t_eps = e.process.t_eps();
+        let eps_abs = e.process.eps_abs();
         let mut t_in = vec![1.0f32; b];
         let mut h_in = vec![0.0f32; b];
         let mut er_in = vec![0.01f32; b];
         let mut z = Tensor::zeros(&[b, dim]);
-        let mut occupied = 0u64;
-        for (i, slot) in self.slots.iter_mut().enumerate() {
+        let mut occupied = 0usize;
+        for (i, slot) in e.pool.slots.iter_mut().enumerate() {
             if let Slot::Running { t, h, eps_rel, rng, .. } = slot {
                 occupied += 1;
                 *h = h.min(*t - t_eps).max(0.0);
@@ -347,121 +416,181 @@ impl<'m, 'rt> EngineState<'m, 'rt> {
                 rng.fill_normal(z.row_mut(i));
             }
         }
-        self.occupancy_sum += occupied;
         let t_t = Tensor { shape: vec![b], data: t_in };
         let h_t = Tensor { shape: vec![b], data: h_in };
         let er_t = Tensor { shape: vec![b], data: er_in };
         let ea_t = Tensor::scalar(eps_abs as f32);
-        let out = self.model.exec(
+        let out = e.model.exec_args(
             "adaptive_step",
             b,
-            &[&self.x, &self.xprev, &t_t, &h_t, &z, &ea_t, &er_t],
-            self.cfg.fused_buffers,
+            &[
+                ExecArg::Host(&e.pool.x),
+                ExecArg::Host(&e.pool.xprev),
+                ExecArg::Host(&t_t),
+                ExecArg::Host(&h_t),
+                ExecArg::Host(&z),
+                ExecArg::Const("eps_abs", &ea_t),
+                ExecArg::Host(&er_t),
+            ],
+            cfg.fused_buffers,
         )?;
         let (xpp, xp, e2) = (&out[0], &out[1], &out[2]);
-        self.steps += 1;
+        metrics.steps += 1;
+        e.pool.sched.note_step(occupied);
 
         let mut converged: Vec<usize> = Vec::new();
         for i in 0..b {
-            let Slot::Running { t, h, nfe, .. } = &mut self.slots[i] else {
+            let Slot::Running { t, h, nfe, .. } = &mut e.pool.slots[i] else {
                 continue;
             };
             *nfe += 2;
-            let e = e2.data[i] as f64;
-            if e <= 1.0 {
-                self.x.row_mut(i).copy_from_slice(xpp.row(i));
-                self.xprev.row_mut(i).copy_from_slice(xp.row(i));
+            let err = e2.data[i] as f64;
+            if err <= 1.0 {
+                e.pool.x.row_mut(i).copy_from_slice(xpp.row(i));
+                e.pool.xprev.row_mut(i).copy_from_slice(xp.row(i));
                 *t -= *h;
                 if *t <= t_eps + 1e-12 {
                     converged.push(i);
                 }
             } else {
-                self.rejections += 1;
+                metrics.rejections += 1;
             }
-            let grow = self.cfg.safety * e.max(1e-12).powf(-self.cfg.r);
+            let grow = cfg.safety * err.max(1e-12).powf(-cfg.r);
             *h = (*h * grow).min((*t - t_eps).max(0.0));
         }
         if !converged.is_empty() {
-            self.finish_slots(&converged)?;
+            finish_lanes(e, pending, metrics, cfg.fused_buffers, &converged)?;
         }
         Ok(())
     }
 
-    /// Denoise converged lanes (one batched Tweedie call) and hand their
-    /// images back to their requests; free the lanes.
-    fn finish_slots(&mut self, lanes: &[usize]) -> Result<()> {
-        let b = self.cfg.bucket;
-        let t_end = super::super::solvers::t_vec(b, self.process.t_eps());
-        let mut out =
-            self.model.exec("denoise", b, &[&self.x, &t_end], self.cfg.fused_buffers)?;
-        let x0 = out.pop().unwrap();
-        for &i in lanes {
-            let Slot::Running { req_id, sample_idx, nfe, .. } = self.slots[i] else {
-                continue;
-            };
-            let nfe_total = nfe + 1; // the denoise eval
-            let p = self.pending.get_mut(&req_id).expect("pending req exists");
-            // unit-range conversion into the request buffer
-            let (lo, hi) = self.process.data_range();
-            let (lo, hi) = (lo as f32, hi as f32);
-            let dst = p.images.row_mut(sample_idx);
-            for (d, &s) in dst.iter_mut().zip(x0.row(i)) {
-                *d = ((s - lo) / (hi - lo)).clamp(0.0, 1.0);
+    /// Fail every request owned by pool `mi` (incomplete requests stay
+    /// in the pool's fifo until done, so the fifo names them all) and
+    /// reset its lanes. Other models' pools are untouched.
+    fn fail_pool(&mut self, mi: usize, msg: &str) {
+        let e = self.registry.entry_mut(mi);
+        let mut ids: Vec<u64> = e.pool.fifo.drain(..).collect();
+        for s in e.pool.slots.iter_mut() {
+            if let Slot::Running { req_id, .. } = *s {
+                ids.push(req_id);
             }
-            p.nfe[sample_idx] = nfe_total;
-            p.done += 1;
-            self.samples_done += 1;
-            if p.done == p.req.n {
-                let p = self.pending.remove(&req_id).unwrap();
-                let now = Instant::now();
-                let wall =
-                    now.duration_since(p.started.unwrap_or(p.enqueued)).as_secs_f64();
-                let queued = p
-                    .started
-                    .map(|s| s.duration_since(p.enqueued).as_secs_f64())
-                    .unwrap_or(0.0);
-                self.latency.record(now.duration_since(p.enqueued).as_secs_f64());
-                self.requests_done += 1;
-                let _ = p.reply.send(Ok(GenResult {
-                    images: p.images,
-                    nfe: p.nfe,
-                    wall_s: wall,
-                    queued_s: queued,
-                }));
-            }
-            self.slots[i] = Slot::Free;
-        }
-        Ok(())
-    }
-
-    fn fail_all(&mut self, msg: &str) {
-        for (_, p) in self.pending.drain() {
-            let _ = p.reply.send(Err(msg.to_string()));
-        }
-        self.fifo.clear();
-        self.queued_samples = 0;
-        for s in self.slots.iter_mut() {
             *s = Slot::Free;
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        for id in ids {
+            if let Some(p) = self.pending.remove(&id) {
+                self.queued_samples -= p.req.n - p.next_sample;
+                let _ = p.reply.send(Err(msg.to_string()));
+            }
         }
     }
 
     fn stats(&self) -> EngineStats {
+        let mut steps_per_bucket: Vec<(usize, u64)> = Vec::new();
+        let (mut mig_up, mut mig_down) = (0u64, 0u64);
+        let (mut wasted, mut occupied) = (0u64, 0u64);
+        let mut active_slots = 0usize;
+        let mut models = Vec::new();
+        for e in self.registry.entries() {
+            models.push(e.model.meta.name.clone());
+            active_slots += e.pool.active();
+            let s = &e.pool.sched;
+            mig_up += s.migrations_up;
+            mig_down += s.migrations_down;
+            wasted += s.wasted_lane_steps;
+            occupied += s.occupied_lane_steps;
+            for (bucket, n) in s.steps_per_bucket() {
+                match steps_per_bucket.iter_mut().find(|(b, _)| *b == bucket) {
+                    Some((_, acc)) => *acc += n,
+                    None => steps_per_bucket.push((bucket, n)),
+                }
+            }
+        }
+        steps_per_bucket.sort();
         EngineStats {
-            requests_done: self.requests_done,
-            samples_done: self.samples_done,
+            requests_done: self.metrics.requests_done,
+            samples_done: self.metrics.samples_done,
             queued_samples: self.queued_samples,
-            active_slots: self.slots.iter().filter(|s| !s.is_free()).count(),
-            steps: self.steps,
-            rejections: self.rejections,
-            score_evals: self.model.runtime().stats().score_evals,
-            latency_p50_s: self.latency.quantile(0.5),
-            latency_p95_s: self.latency.quantile(0.95),
-            latency_mean_s: self.latency.mean(),
-            mean_occupancy: if self.steps == 0 {
+            active_slots,
+            steps: self.metrics.steps,
+            rejections: self.metrics.rejections,
+            score_evals: self.registry.entries()[0].model.runtime().stats().score_evals,
+            latency_p50_s: self.metrics.latency.quantile(0.5),
+            latency_p95_s: self.metrics.latency.quantile(0.95),
+            latency_mean_s: self.metrics.latency.mean(),
+            mean_occupancy: if self.metrics.steps == 0 {
                 0.0
             } else {
-                self.occupancy_sum as f64 / self.steps as f64
+                occupied as f64 / self.metrics.steps as f64
             },
+            models,
+            steps_per_bucket,
+            migrations_up: mig_up,
+            migrations_down: mig_down,
+            wasted_lane_steps: wasted,
+            occupied_lane_steps: occupied,
         }
     }
+}
+
+/// Denoise converged lanes (one batched Tweedie call at the pool's
+/// current width) and hand their images back to their requests; free the
+/// lanes.
+fn finish_lanes(
+    e: &mut ModelEntry<'_>,
+    pending: &mut HashMap<u64, Pending>,
+    metrics: &mut Metrics,
+    fused_buffers: bool,
+    lanes: &[usize],
+) -> Result<()> {
+    let b = e.pool.sched.width();
+    let t_end = crate::solvers::t_vec(b, e.process.t_eps());
+    let mut out = e.model.exec_args(
+        "denoise",
+        b,
+        &[ExecArg::Host(&e.pool.x), ExecArg::Const("t_end", &t_end)],
+        fused_buffers,
+    )?;
+    let x0 = out.pop().unwrap();
+    let (img_h, img_w) = (e.model.meta.h, e.model.meta.w);
+    let (lo, hi) = e.process.data_range();
+    let (lo, hi) = (lo as f32, hi as f32);
+    for &i in lanes {
+        let Slot::Running { req_id, sample_idx, nfe, .. } = e.pool.slots[i] else {
+            continue;
+        };
+        let nfe_total = nfe + 1; // the denoise eval
+        let p = pending.get_mut(&req_id).expect("pending req exists");
+        // unit-range conversion into the request buffer
+        let dst = p.images.row_mut(sample_idx);
+        for (d, &s) in dst.iter_mut().zip(x0.row(i)) {
+            *d = ((s - lo) / (hi - lo)).clamp(0.0, 1.0);
+        }
+        p.nfe[sample_idx] = nfe_total;
+        p.done += 1;
+        metrics.samples_done += 1;
+        if p.done == p.req.n {
+            let p = pending.remove(&req_id).unwrap();
+            let now = Instant::now();
+            let wall = now.duration_since(p.started.unwrap_or(p.enqueued)).as_secs_f64();
+            let queued = p
+                .started
+                .map(|s| s.duration_since(p.enqueued).as_secs_f64())
+                .unwrap_or(0.0);
+            metrics.latency.record(now.duration_since(p.enqueued).as_secs_f64());
+            metrics.requests_done += 1;
+            let _ = p.reply.send(Ok(GenResult {
+                images: p.images,
+                nfe: p.nfe,
+                model: e.model.meta.name.clone(),
+                h: img_h,
+                w: img_w,
+                wall_s: wall,
+                queued_s: queued,
+            }));
+        }
+        e.pool.slots[i] = Slot::Free;
+    }
+    Ok(())
 }

@@ -1,5 +1,5 @@
 //! The serving coordinator: continuous batching for adaptive-SDE
-//! sampling (DESIGN.md §3, L3).
+//! sampling (docs/ARCHITECTURE.md §Coordinator).
 //!
 //! The paper's §3.1.5 observation — every sample's reverse diffusion is
 //! independent, so each keeps its own step size — is exactly what makes
@@ -10,12 +10,25 @@
 //! admission queue. No request ever waits for another request's slowest
 //! sample (the lockstep penalty the paper's batch solver pays).
 //!
+//! Three sub-layers (bottom up):
+//! * `scheduler` — occupancy-aware bucket selection: each iteration the
+//!   pool runs at the smallest compiled width that fits its live +
+//!   queued lanes, migrating lane state between widths so low-occupancy
+//!   traffic stops paying full-width steps;
+//! * `registry` — N models loaded from one artifacts dir, each with its
+//!   own pool, serviced round-robin and routed by request model name;
+//! * `engine` — the thread that owns the PJRT runtime and runs the
+//!   admit / rebucket / step loop over every pool.
+//!
 //! Ownership: PJRT handles are not Send, so the engine thread creates and
 //! owns the `Runtime`; everything else talks to it via channels.
 
 pub mod engine;
+pub(crate) mod registry;
+pub mod scheduler;
 
 pub use engine::{Engine, EngineClient, EngineConfig, EngineStats, GenResult};
+pub use scheduler::BucketScheduler;
 
 use crate::tensor::Tensor;
 use std::sync::mpsc;
@@ -23,6 +36,8 @@ use std::sync::mpsc;
 /// A sampling request as admitted by the engine.
 #[derive(Clone, Debug)]
 pub struct SampleRequest {
+    /// Model variant to sample from ("" = the engine's default model).
+    pub model: String,
     pub n: usize,
     pub eps_rel: f64,
     pub seed: u64,

@@ -1,0 +1,157 @@
+//! Model registry + per-model slot pools (docs/ARCHITECTURE.md §Registry).
+//!
+//! Loads N score-model variants from one artifacts dir, gives each its
+//! own continuous-batching lane pool, and routes requests by model name
+//! (the first listed model is the default). PJRT handles are not `Send`,
+//! so every pool shares the single engine thread; the engine services
+//! them round-robin, one fused step per turn, so a hot model cannot
+//! starve the others for more than one step.
+
+use super::scheduler::BucketScheduler;
+use super::Slot;
+use crate::runtime::{Model, Runtime};
+use crate::sde::Process;
+use crate::tensor::Tensor;
+use crate::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// One model's continuous-batching lane pool.
+pub(crate) struct Pool {
+    pub slots: Vec<Slot>,
+    pub x: Tensor,
+    pub xprev: Tensor,
+    /// Request ids (into the engine's pending map) in arrival order.
+    pub fifo: Vec<u64>,
+    pub sched: BucketScheduler,
+}
+
+impl Pool {
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| !s.is_free()).count()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.fifo.is_empty() && self.slots.iter().all(|s| s.is_free())
+    }
+}
+
+pub(crate) struct ModelEntry<'rt> {
+    pub model: Model<'rt>,
+    pub process: Process,
+    pub pool: Pool,
+}
+
+pub(crate) struct Registry<'rt> {
+    entries: Vec<ModelEntry<'rt>>,
+    by_name: HashMap<String, usize>,
+    /// Round-robin position for fair pool servicing.
+    cursor: usize,
+}
+
+impl<'rt> Registry<'rt> {
+    /// Load every named variant. Each pool starts at width `max_bucket`;
+    /// with `migrate` on it may move across every compiled
+    /// `adaptive_step` bucket <= `max_bucket`, otherwise it is pinned.
+    pub fn load(
+        rt: &'rt Runtime,
+        names: &[String],
+        max_bucket: usize,
+        migrate: bool,
+    ) -> Result<Registry<'rt>> {
+        if names.is_empty() {
+            bail!("registry needs at least one model");
+        }
+        let mut entries = Vec::new();
+        let mut by_name = HashMap::new();
+        for name in names {
+            if by_name.contains_key(name.as_str()) {
+                bail!("model '{name}' listed twice");
+            }
+            let model = rt.model(name)?;
+            let buckets = model.buckets("adaptive_step");
+            if !buckets.contains(&max_bucket) {
+                bail!(
+                    "bucket {max_bucket} not available for {name}/adaptive_step (have {buckets:?})"
+                );
+            }
+            // fail fast on missing artifacts — a lazy compile error
+            // mid-serving would otherwise be the first sign (converged
+            // lanes denoise at pool width, so a rung needs both
+            // programs). The mandatory max rung errors; optional smaller
+            // rungs just drop off the ladder.
+            for prog in ["adaptive_step", "denoise"] {
+                if !model.has_artifact(prog, max_bucket) {
+                    bail!("{name}: {prog}_b{max_bucket} artifact missing on disk");
+                }
+            }
+            let ladder: Vec<usize> = if migrate {
+                buckets
+                    .iter()
+                    .copied()
+                    .filter(|&b| {
+                        b == max_bucket
+                            || (b < max_bucket
+                                && model.has_artifact("adaptive_step", b)
+                                && model.has_artifact("denoise", b))
+                    })
+                    .collect()
+            } else {
+                vec![max_bucket]
+            };
+            let dim = model.meta.dim;
+            let sched = BucketScheduler::new(ladder);
+            let width = sched.width();
+            by_name.insert(name.clone(), entries.len());
+            entries.push(ModelEntry {
+                process: model.meta.process(),
+                pool: Pool {
+                    slots: vec![Slot::Free; width],
+                    x: Tensor::zeros(&[width, dim]),
+                    xprev: Tensor::zeros(&[width, dim]),
+                    fifo: Vec::new(),
+                    sched,
+                },
+                model,
+            });
+        }
+        Ok(Registry { entries, by_name, cursor: 0 })
+    }
+
+    /// Pool index for a request's model name ("" = the default model).
+    pub fn resolve(&self, name: &str) -> Result<usize> {
+        if name.is_empty() {
+            return Ok(0);
+        }
+        self.by_name.get(name).copied().ok_or_else(|| {
+            let mut have: Vec<&str> = self.by_name.keys().map(|s| s.as_str()).collect();
+            have.sort();
+            anyhow!("unknown model '{name}' (serving: {have:?})")
+        })
+    }
+
+    pub fn entries(&self) -> &[ModelEntry<'rt>] {
+        &self.entries
+    }
+
+    pub fn entry_mut(&mut self, i: usize) -> &mut ModelEntry<'rt> {
+        &mut self.entries[i]
+    }
+
+    /// Next pool with runnable or admissible work, scanning round-robin
+    /// from the cursor; advances the cursor so pools take turns.
+    pub fn next_runnable(&mut self) -> Option<usize> {
+        let n = self.entries.len();
+        for k in 0..n {
+            let i = (self.cursor + k) % n;
+            if !self.entries[i].pool.idle() {
+                self.cursor = (i + 1) % n;
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    pub fn all_idle(&self) -> bool {
+        self.entries.iter().all(|e| e.pool.idle())
+    }
+}

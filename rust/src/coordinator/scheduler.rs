@@ -1,0 +1,275 @@
+//! Occupancy-aware bucket scheduling (docs/ARCHITECTURE.md §Scheduler).
+//!
+//! The AOT pipeline compiles `adaptive_step` at several batch widths
+//! ("buckets"), but the seed engine pinned one width at startup — a pool
+//! serving two live lanes still paid a full-width step, with the idle
+//! lanes advanced as `h = 0` no-ops. The scheduler owns the ladder of
+//! compiled widths, picks the cheapest one that fits the live + queued
+//! demand each iteration, and accounts per-bucket work so the waste is
+//! observable.
+//!
+//! Migration moves every per-lane quantity — the slot bookkeeping
+//! `(t, h, eps_rel, nfe, rng)` and the `x`/`xprev` rows — so a sample's
+//! trajectory is bit-identical whether or not it ever changed buckets.
+//! The per-sample step-size independence of paper §3.1.5 is exactly what
+//! makes this legal: no lane's update reads another lane's state.
+
+use super::Slot;
+use crate::tensor::Tensor;
+
+/// Bucket ladder + hysteresis policy + per-bucket accounting for one
+/// model's slot pool.
+#[derive(Clone, Debug)]
+pub struct BucketScheduler {
+    /// Ascending compiled widths the pool may run at.
+    ladder: Vec<usize>,
+    /// Current pool width (always a ladder entry).
+    width: usize,
+    /// Steps executed at each ladder width (parallel to `ladder`).
+    steps: Vec<u64>,
+    pub migrations_up: u64,
+    pub migrations_down: u64,
+    /// Free lanes carried through steps, summed — the waste metric the
+    /// scheduler exists to shrink.
+    pub wasted_lane_steps: u64,
+    /// Occupied lanes carried through steps, summed (occupancy numerator).
+    pub occupied_lane_steps: u64,
+}
+
+impl BucketScheduler {
+    /// `ladder` must be non-empty, sorted ascending, duplicate-free. The
+    /// pool starts at the widest bucket (the fixed-width behaviour until
+    /// the first downshift).
+    pub fn new(ladder: Vec<usize>) -> BucketScheduler {
+        assert!(!ladder.is_empty(), "bucket ladder must not be empty");
+        assert!(ladder.windows(2).all(|w| w[0] < w[1]), "bucket ladder must ascend: {ladder:?}");
+        BucketScheduler {
+            width: *ladder.last().unwrap(),
+            steps: vec![0; ladder.len()],
+            ladder,
+            migrations_up: 0,
+            migrations_down: 0,
+            wasted_lane_steps: 0,
+            occupied_lane_steps: 0,
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn ladder(&self) -> &[usize] {
+        &self.ladder
+    }
+
+    /// Width the pool should run at given `active` live lanes and
+    /// `demand` admissible lanes (active + queued, saturating at the
+    /// widest bucket). Growth is immediate — compiled executables are
+    /// cached, so a wider bucket only costs its first compile. Shrinking
+    /// is hysteretic: only when the live lanes fill at most half the
+    /// current width, so the pool does not thrash around a bucket edge.
+    pub fn target_width(&self, active: usize, demand: usize) -> usize {
+        let fit = demand.max(active);
+        let desired = crate::runtime::pick_bucket(&self.ladder, fit).expect("non-empty ladder");
+        if desired > self.width {
+            desired
+        } else if desired < self.width && active * 2 <= self.width {
+            desired
+        } else {
+            self.width
+        }
+    }
+
+    /// Record a switch to `new_width` (the caller has already migrated
+    /// the lanes).
+    pub fn set_width(&mut self, new_width: usize) {
+        debug_assert!(self.ladder.contains(&new_width), "{new_width} not in {:?}", self.ladder);
+        if new_width > self.width {
+            self.migrations_up += 1;
+        } else if new_width < self.width {
+            self.migrations_down += 1;
+        }
+        self.width = new_width;
+    }
+
+    /// Account one executed step at the current width with `occupied`
+    /// live lanes.
+    pub fn note_step(&mut self, occupied: usize) {
+        let i = self.ladder.iter().position(|&b| b == self.width).expect("width on ladder");
+        self.steps[i] += 1;
+        self.occupied_lane_steps += occupied as u64;
+        self.wasted_lane_steps += (self.width - occupied) as u64;
+    }
+
+    /// `(bucket, steps run at it)` ascending, zero entries included.
+    pub fn steps_per_bucket(&self) -> Vec<(usize, u64)> {
+        self.ladder.iter().copied().zip(self.steps.iter().copied()).collect()
+    }
+}
+
+/// Move live lanes (slot state + `x`/`xprev` rows) into a pool of
+/// `new_width`, compacting them to the front in stable lane order.
+/// Returns how many live lanes moved. Panics if they do not fit — the
+/// scheduler policy never shrinks below the active-lane count.
+pub(crate) fn migrate_lanes(
+    slots: &mut Vec<Slot>,
+    x: &mut Tensor,
+    xprev: &mut Tensor,
+    new_width: usize,
+) -> usize {
+    let dim = x.shape[1];
+    let live = slots.iter().filter(|s| !s.is_free()).count();
+    assert!(live <= new_width, "cannot migrate {live} live lanes into width {new_width}");
+    let mut nslots = vec![Slot::Free; new_width];
+    let mut nx = Tensor::zeros(&[new_width, dim]);
+    let mut nxp = Tensor::zeros(&[new_width, dim]);
+    let mut j = 0;
+    for i in 0..slots.len() {
+        if slots[i].is_free() {
+            continue;
+        }
+        nslots[j] = std::mem::take(&mut slots[i]);
+        nx.row_mut(j).copy_from_slice(x.row(i));
+        nxp.row_mut(j).copy_from_slice(xprev.row(i));
+        j += 1;
+    }
+    *slots = nslots;
+    *x = nx;
+    *xprev = nxp;
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sched() -> BucketScheduler {
+        BucketScheduler::new(vec![1, 2, 4, 8, 16])
+    }
+
+    #[test]
+    fn starts_at_widest() {
+        assert_eq!(sched().width(), 16);
+    }
+
+    #[test]
+    fn grows_immediately_on_demand() {
+        let mut s = sched();
+        s.set_width(2);
+        assert_eq!(s.target_width(2, 7), 8);
+        assert_eq!(s.target_width(2, 100), 16, "demand clamps to the widest bucket");
+    }
+
+    #[test]
+    fn shrinks_only_at_half_occupancy() {
+        let s = sched();
+        // 9 live lanes of 16: more than half, hold width
+        assert_eq!(s.target_width(9, 9), 16);
+        // exactly half: shrink to the smallest fitting bucket
+        assert_eq!(s.target_width(8, 8), 8);
+        assert_eq!(s.target_width(3, 3), 4);
+        assert_eq!(s.target_width(1, 1), 1);
+        assert_eq!(s.target_width(0, 0), 1);
+    }
+
+    #[test]
+    fn queued_demand_blocks_a_shrink() {
+        let s = sched();
+        // only 2 live lanes, but 10 more queued: stay wide for admission
+        assert_eq!(s.target_width(2, 12), 16);
+    }
+
+    #[test]
+    fn single_rung_ladder_is_fixed_width() {
+        let s = BucketScheduler::new(vec![16]);
+        assert_eq!(s.target_width(1, 1), 16);
+        assert_eq!(s.target_width(0, 40), 16);
+    }
+
+    #[test]
+    fn step_accounting_splits_waste_and_work() {
+        let mut s = sched();
+        s.note_step(10); // width 16
+        s.set_width(4);
+        s.note_step(3);
+        s.note_step(3);
+        assert_eq!(s.occupied_lane_steps, 16);
+        assert_eq!(s.wasted_lane_steps, 6 + 1 + 1);
+        assert_eq!(s.migrations_down, 1);
+        assert_eq!(s.migrations_up, 0);
+        let per = s.steps_per_bucket();
+        assert_eq!(per, vec![(1, 0), (2, 0), (4, 2), (8, 0), (16, 1)]);
+    }
+
+    fn lane(req_id: u64, seed: u64) -> Slot {
+        Slot::Running {
+            req_id,
+            sample_idx: req_id as usize,
+            t: 0.5 + req_id as f64 * 0.01,
+            h: 0.003 + req_id as f64 * 1e-4,
+            eps_rel: 0.05,
+            nfe: 10 + req_id,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// A lane's full state — controller variables, rng stream, and both
+    /// tensor rows — must be bit-identical across a 16 -> 4 -> 16
+    /// round-trip (the determinism contract bucket switches rely on).
+    #[test]
+    fn migration_preserves_lane_state_bit_identically() {
+        let dim = 6;
+        let mut slots = vec![Slot::Free; 16];
+        let mut x = Tensor::zeros(&[16, dim]);
+        let mut xprev = Tensor::zeros(&[16, dim]);
+        // three live lanes scattered through the pool
+        for (k, i) in [3usize, 7, 12].iter().enumerate() {
+            slots[*i] = lane(k as u64, 100 + k as u64);
+            for (j, v) in x.row_mut(*i).iter_mut().enumerate() {
+                *v = (k * 10 + j) as f32 * 0.25;
+            }
+            for (j, v) in xprev.row_mut(*i).iter_mut().enumerate() {
+                *v = -((k * 10 + j) as f32) * 0.5;
+            }
+        }
+        let snapshot_x: Vec<Vec<f32>> = [3usize, 7, 12].iter().map(|&i| x.row(i).to_vec()).collect();
+        let snapshot_xp: Vec<Vec<f32>> =
+            [3usize, 7, 12].iter().map(|&i| xprev.row(i).to_vec()).collect();
+
+        assert_eq!(migrate_lanes(&mut slots, &mut x, &mut xprev, 4), 3);
+        assert_eq!(slots.len(), 4);
+        assert_eq!(x.shape, vec![4, dim]);
+        assert_eq!(migrate_lanes(&mut slots, &mut x, &mut xprev, 16), 3);
+        assert_eq!(slots.len(), 16);
+
+        for (k, exp_x) in snapshot_x.iter().enumerate() {
+            let Slot::Running { req_id, sample_idx, t, h, eps_rel, nfe, rng } = &mut slots[k]
+            else {
+                panic!("lane {k} lost in migration");
+            };
+            assert_eq!(*req_id, k as u64);
+            assert_eq!(*sample_idx, k);
+            assert_eq!(t.to_bits(), (0.5 + k as f64 * 0.01).to_bits());
+            assert_eq!(h.to_bits(), (0.003 + k as f64 * 1e-4).to_bits());
+            assert_eq!(eps_rel.to_bits(), 0.05f64.to_bits());
+            assert_eq!(*nfe, 10 + k as u64);
+            // rng stream unchanged: same next draw as a fresh twin
+            assert_eq!(rng.next_u64(), Rng::new(100 + k as u64).next_u64());
+            assert_eq!(x.row(k), &exp_x[..]);
+            assert_eq!(xprev.row(k), &snapshot_xp[k][..]);
+        }
+        for s in &slots[3..] {
+            assert!(s.is_free(), "tail lanes must be free");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot migrate")]
+    fn migration_refuses_overfull_target() {
+        let mut slots = vec![lane(0, 1), lane(1, 2), lane(2, 3)];
+        let mut x = Tensor::zeros(&[3, 2]);
+        let mut xprev = Tensor::zeros(&[3, 2]);
+        migrate_lanes(&mut slots, &mut x, &mut xprev, 2);
+    }
+}

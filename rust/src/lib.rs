@@ -4,13 +4,14 @@
 //! around the adaptive SDE solver of *"Gotta Go Fast When Generating Data
 //! with Score-Based Models"* (Jolicoeur-Martineau et al., 2021).
 //!
-//! Three-layer architecture (DESIGN.md):
+//! Three-layer architecture (docs/ARCHITECTURE.md):
 //! * **L1** — Pallas kernels (authored in `python/compile/kernels/`),
 //! * **L2** — JAX score network + solver-step graphs, AOT-lowered to HLO
 //!   text artifacts (`python/compile/aot.py`),
 //! * **L3** — this crate: the PJRT runtime that loads those artifacts and
 //!   the coordinator that serves sampling requests with per-sample
-//!   adaptive step sizes (continuous batching).
+//!   adaptive step sizes (continuous batching across models and
+//!   occupancy-matched batch buckets).
 //!
 //! Python never runs on the request path; after `make artifacts` the
 //! `gofast` binary is self-contained.

@@ -59,9 +59,10 @@ USAGE: gofast <command> [flags]
             [--n 16] [--eps-rel 0.05] [--steps 256] [--seed 0]
             [--bucket 16] [--composed] [--no-denoise] [--out grid.ppm]
             [--artifacts artifacts]
-  serve     [--config configs/server.toml] [--set k=v ...]
-  client    [--addr 127.0.0.1:7878] [--n 4] [--eps-rel 0.05] [--seed 0]
-            [--stats] [--out grid.ppm]
+  serve     [--config configs/server.toml] [--models vp,ve]
+            [--max-bucket 16] [--no-migrate] [--set k=v ...]
+  client    [--addr 127.0.0.1:7878] [--model vp] [--n 4] [--eps-rel 0.05]
+            [--seed 0] [--stats] [--out grid.ppm]
   evaluate  --model vp [--solver ...] [--samples 256] [...generate flags]
   inspect   [--artifacts artifacts]
 ";
@@ -174,33 +175,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     cfg.apply_overrides(args)?;
     let artifacts = PathBuf::from(cfg.str_or("artifacts", "artifacts")?);
-    let model = cfg.str_or("server.model", "vp")?;
+    // models: --models a,b > [server] models = ["a","b"] > server.model
+    let models: Vec<String> = if args.has("models") {
+        args.str_list_or("models", &[])
+    } else if let Some(gofast::config::Item::List(items)) = cfg.get("server.models") {
+        items
+            .iter()
+            .map(|i| Ok(i.as_str()?.to_string()))
+            .collect::<gofast::Result<Vec<String>>>()?
+    } else {
+        vec![cfg.str_or("server.model", "vp")?]
+    };
+    if models.is_empty() {
+        bail!("--models needs at least one model name");
+    }
     let port = cfg.usize_or("server.port", 7878)? as u16;
-    let bucket = cfg.usize_or("server.bucket", 16)?;
-    let mut ecfg = EngineConfig::new(&artifacts, &model);
+    let default_bucket = cfg.usize_or("server.bucket", 16)?;
+    let bucket =
+        args.usize_or("max-bucket", cfg.usize_or("server.max_bucket", default_bucket)?)?;
+    let migrate = if args.has("no-migrate") {
+        false
+    } else {
+        args.bool_or("migrate", cfg.bool_or("server.migrate", true)?)?
+    };
+    let mut ecfg = EngineConfig::new(&artifacts, &models[0]);
+    ecfg.models = models.clone();
     ecfg.bucket = bucket;
+    ecfg.migrate = migrate;
     ecfg.fused_buffers = cfg.bool_or("server.fused_buffers", true)?;
     ecfg.max_queue_samples = cfg.usize_or("server.max_queue_samples", 4096)?;
-
-    // image geometry for the wire protocol
-    let rt = Runtime::new(&artifacts)?;
-    let meta = rt.model(&model)?.meta.clone();
-    drop(rt);
 
     let engine = Engine::start(ecfg)?;
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))
         .with_context(|| format!("binding port {port}"))?;
     println!(
-        "gofast serving model={model} on 127.0.0.1:{port} (bucket={bucket}, dim={})",
-        meta.dim
+        "gofast serving models={models:?} on 127.0.0.1:{port} (max-bucket={bucket}, migrate={migrate})"
     );
     gofast::server::serve(
         listener,
         engine.client(),
         gofast::server::ServerConfig {
             port,
-            img_h: meta.h,
-            img_w: meta.w,
             default_eps_rel: cfg.f64_or("solver.eps_rel", 0.05)?,
         },
     )
@@ -214,7 +229,9 @@ fn cmd_client(args: &Args) -> Result<()> {
         return Ok(());
     }
     let n = args.usize_or("n", 4)?;
-    let r = client.generate(
+    let model = args.str_or("model", "");
+    let r = client.generate_on(
+        &model,
         n,
         args.f64_or("eps-rel", 0.05)?,
         args.u64_or("seed", 0)?,
@@ -222,8 +239,10 @@ fn cmd_client(args: &Args) -> Result<()> {
     )?;
     let mean_nfe = r.nfe.iter().sum::<u64>() as f64 / r.nfe.len() as f64;
     println!(
-        "n={n} wall={:.2}s queued={:.3}s mean_nfe={mean_nfe:.1}",
-        r.wall_s, r.queued_s
+        "model={} n={n} wall={:.2}s queued={:.3}s mean_nfe={mean_nfe:.1}",
+        if model.is_empty() { "<default>" } else { &model },
+        r.wall_s,
+        r.queued_s
     );
     if let Some(out) = args.get("out") {
         let d = r.images.shape[1] / 3;

@@ -2,11 +2,15 @@
 //! `python/compile/aot.py`, compiles them on the CPU PJRT client, and
 //! executes them from the serving hot path.
 //!
-//! Two execution paths per program (EXPERIMENTS.md §Perf measures both):
+//! Two execution paths per program (docs/ARCHITECTURE.md §Runtime
+//! describes both and the perf methodology):
 //! * **literal path** (baseline) — every argument including the full
 //!   parameter vector is re-uploaded per call;
 //! * **buffer path** (optimised) — `theta` is uploaded once per model and
-//!   kept device-resident; per-step tensors are staged as `PjRtBuffer`s.
+//!   kept device-resident for every `(program, bucket)` — a bucket
+//!   switch never re-uploads parameters; per-step tensors are staged as
+//!   `PjRtBuffer`s, and step constants (`ExecArg::Const`) are staged
+//!   once per `(model, tag, bucket)` and reused across steps.
 //!
 //! PJRT handles are not `Send`; the `Runtime` is owned by a single engine
 //! thread (see `coordinator::engine`), everything else talks to it over
@@ -24,6 +28,13 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Smallest bucket >= n, else the largest available (None if `buckets`
+/// is empty). The bucket-ladder primitive shared by `Model::bucket_for`
+/// and the coordinator's occupancy scheduler.
+pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n).or_else(|| buckets.last().copied())
+}
 
 /// Number of score-network evaluations a single call of each program
 /// performs — the paper's cost metric (NFE).
@@ -184,6 +195,7 @@ impl Runtime {
             theta_lit: tensor_to_literal(&theta)?,
             theta_host: theta,
             theta_buf: RefCell::new(None),
+            const_bufs: RefCell::new(HashMap::new()),
             files,
             meta,
         })
@@ -221,6 +233,16 @@ impl Runtime {
     }
 }
 
+/// An input to `Model::exec_args`.
+pub enum ExecArg<'a> {
+    /// Per-call tensor, uploaded fresh on the buffer path.
+    Host(&'a Tensor),
+    /// Constant tensor staged device-resident once per (model, tag,
+    /// bucket) and reused across calls; the value fills the cache on
+    /// first use (and is sent directly on the literal path).
+    Const(&'a str, &'a Tensor),
+}
+
 /// A loaded score-model variant: metadata + device-ready parameters +
 /// executable cache keyed by (program, bucket).
 pub struct Model<'rt> {
@@ -229,6 +251,8 @@ pub struct Model<'rt> {
     theta_host: Tensor,
     theta_lit: Literal,
     theta_buf: RefCell<Option<Rc<PjRtBuffer>>>,
+    /// Device-resident step constants keyed by (tag, bucket).
+    const_bufs: RefCell<HashMap<(String, usize), Rc<PjRtBuffer>>>,
     files: HashMap<(String, usize), String>,
 }
 
@@ -244,13 +268,21 @@ impl<'rt> Model<'rt> {
             .buckets
             .get(program)
             .ok_or_else(|| anyhow!("{}: no program '{program}'", self.meta.name))?;
-        Ok(*buckets.iter().find(|&&b| b >= n).unwrap_or(
-            buckets.last().ok_or_else(|| anyhow!("{program}: empty bucket list"))?,
-        ))
+        pick_bucket(buckets, n).ok_or_else(|| anyhow!("{program}: empty bucket list"))
     }
 
     pub fn buckets(&self, program: &str) -> &[usize] {
         self.meta.buckets.get(program).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Whether the artifact for (program, bucket) is both listed in the
+    /// manifest and present on disk — lets callers validate a bucket
+    /// ladder up front instead of hitting a lazy-compile error
+    /// mid-serving.
+    pub fn has_artifact(&self, program: &str, bucket: usize) -> bool {
+        self.files
+            .get(&(program.to_string(), bucket))
+            .is_some_and(|rel| self.rt.root.join(rel).exists())
     }
 
     fn exe(&self, program: &str, bucket: usize) -> Result<Rc<PjRtLoadedExecutable>> {
@@ -278,6 +310,33 @@ impl<'rt> Model<'rt> {
         run(&exe, ExecArgs::Literals(&args))
     }
 
+    /// theta staged once per model, device-resident for the model's
+    /// lifetime — shared by every (program, bucket), so a pool's bucket
+    /// switch never re-uploads parameters.
+    fn theta_buffer(&self) -> Result<Rc<PjRtBuffer>> {
+        let mut slot = self.theta_buf.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(Rc::new(self.rt.client.buffer_from_host_buffer(
+                &self.theta_host.data,
+                &self.theta_host.shape,
+                None,
+            )?));
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    }
+
+    /// Device-resident constant keyed by (tag, bucket); `value` uploads
+    /// only on the first use of the key.
+    fn const_buffer(&self, tag: &str, bucket: usize, value: &Tensor) -> Result<Rc<PjRtBuffer>> {
+        if let Some(b) = self.const_bufs.borrow().get(&(tag.to_string(), bucket)) {
+            return Ok(b.clone());
+        }
+        let buf =
+            Rc::new(self.rt.client.buffer_from_host_buffer(&value.data, &value.shape, None)?);
+        self.const_bufs.borrow_mut().insert((tag.to_string(), bucket), buf.clone());
+        Ok(buf)
+    }
+
     /// Optimised path: theta resident on device, inputs staged as buffers.
     pub fn exec_buffers(
         &self,
@@ -285,27 +344,8 @@ impl<'rt> Model<'rt> {
         bucket: usize,
         inputs: &[&Tensor],
     ) -> Result<Vec<Tensor>> {
-        let theta = {
-            let mut slot = self.theta_buf.borrow_mut();
-            if slot.is_none() {
-                *slot = Some(Rc::new(self.rt.client.buffer_from_host_buffer(
-                    &self.theta_host.data,
-                    &self.theta_host.shape,
-                    None,
-                )?));
-            }
-            slot.as_ref().unwrap().clone()
-        };
-        let exe = self.exe(program, bucket)?;
-        let mut bufs: Vec<PjRtBuffer> = Vec::with_capacity(inputs.len());
-        for t in inputs {
-            bufs.push(self.rt.client.buffer_from_host_buffer(&t.data, &t.shape, None)?);
-        }
-        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(inputs.len() + 1);
-        args.push(theta.as_ref());
-        args.extend(bufs.iter());
-        self.rt.note_call(program);
-        run(&exe, ExecArgs::Buffers(&args))
+        let args: Vec<ExecArg<'_>> = inputs.iter().copied().map(ExecArg::Host).collect();
+        self.exec_args(program, bucket, &args, true)
     }
 
     /// Dispatch on the configured execution mode.
@@ -321,6 +361,60 @@ impl<'rt> Model<'rt> {
         } else {
             self.exec_literals(program, bucket, inputs)
         }
+    }
+
+    /// Like `exec`, but `Const` inputs are staged device-resident once
+    /// per (tag, bucket) and reused — the serving hot path uses this so
+    /// step constants (eps_abs, the denoise time vector) upload once per
+    /// bucket instead of once per step.
+    pub fn exec_args(
+        &self,
+        program: &str,
+        bucket: usize,
+        inputs: &[ExecArg<'_>],
+        fused_buffers: bool,
+    ) -> Result<Vec<Tensor>> {
+        if !fused_buffers {
+            let tensors: Vec<&Tensor> = inputs
+                .iter()
+                .map(|a| match a {
+                    ExecArg::Host(t) | ExecArg::Const(_, t) => *t,
+                })
+                .collect();
+            return self.exec_literals(program, bucket, &tensors);
+        }
+        let theta = self.theta_buffer()?;
+        let exe = self.exe(program, bucket)?;
+        // fresh per-call buffers and staged constants, in input order
+        enum Staged {
+            Fresh(usize),
+            Cached(usize),
+        }
+        let mut fresh: Vec<PjRtBuffer> = Vec::new();
+        let mut cached: Vec<Rc<PjRtBuffer>> = Vec::new();
+        let mut order: Vec<Staged> = Vec::with_capacity(inputs.len());
+        for a in inputs {
+            match a {
+                ExecArg::Host(t) => {
+                    fresh.push(self.rt.client.buffer_from_host_buffer(&t.data, &t.shape, None)?);
+                    order.push(Staged::Fresh(fresh.len() - 1));
+                }
+                ExecArg::Const(tag, t) => {
+                    cached.push(self.const_buffer(tag, bucket, t)?);
+                    order.push(Staged::Cached(cached.len() - 1));
+                }
+            }
+        }
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(inputs.len() + 1);
+        args.push(theta.as_ref());
+        for s in &order {
+            match s {
+                Staged::Fresh(i) => args.push(&fresh[*i]),
+                Staged::Cached(i) => args.push(cached[*i].as_ref()),
+            }
+        }
+        self.rt.note_call(program);
+        run(&exe, ExecArgs::Buffers(&args))
     }
 }
 
@@ -380,5 +474,35 @@ trait CloneLiteral {
 impl CloneLiteral for Literal {
     fn clone_literal(&self) -> Result<Literal> {
         literal_util::clone_literal(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::pick_bucket;
+
+    #[test]
+    fn pick_bucket_smallest_fitting() {
+        let buckets = [1, 2, 4, 16, 64];
+        assert_eq!(pick_bucket(&buckets, 1), Some(1));
+        assert_eq!(pick_bucket(&buckets, 3), Some(4));
+        assert_eq!(pick_bucket(&buckets, 16), Some(16));
+        assert_eq!(pick_bucket(&buckets, 17), Some(64));
+    }
+
+    #[test]
+    fn pick_bucket_n_zero_takes_smallest() {
+        assert_eq!(pick_bucket(&[4, 8], 0), Some(4));
+    }
+
+    #[test]
+    fn pick_bucket_oversubscribed_clamps_to_largest() {
+        assert_eq!(pick_bucket(&[4, 8], 1000), Some(8));
+    }
+
+    #[test]
+    fn pick_bucket_empty_is_none() {
+        assert_eq!(pick_bucket(&[], 1), None);
+        assert_eq!(pick_bucket(&[], 0), None);
     }
 }

@@ -1,12 +1,21 @@
 //! JSON-lines TCP serving front-end + client library.
 //!
 //! Protocol (one JSON object per line, both directions):
-//!   -> {"op":"generate","n":16,"eps_rel":0.05,"seed":7}
-//!   <- {"ok":true,"n":16,"h":16,"w":16,"nfe":[...],"wall_s":...,
-//!       "queued_s":...,"images_b64":"<f32-le raw, base64>"}
+//!   -> {"op":"generate","n":16,"eps_rel":0.05,"seed":7,"model":"vp"}
+//!   <- {"ok":true,"model":"vp","n":16,"h":16,"w":16,"nfe":[...],
+//!       "wall_s":...,"queued_s":...,"images_b64":"<f32-le raw, base64>"}
 //!   -> {"op":"stats"}
-//!   <- {"ok":true,"requests_done":...,...}
+//!   <- {"ok":true,"requests_done":...,"models":[...],
+//!       "steps_per_bucket":{"<bucket>":steps,...},
+//!       "migrations_up":...,"migrations_down":...,
+//!       "wasted_lane_steps":...,"occupied_lane_steps":...,...}
 //!   -> {"op":"ping"} / <- {"ok":true}
+//!
+//! `model` is optional and defaults to the engine's first configured
+//! model; the response `h`/`w` are the geometry of the model that
+//! actually served the request. `steps_per_bucket` counts fused
+//! adaptive_step executions at each slot-pool width the occupancy-aware
+//! scheduler ran (docs/ARCHITECTURE.md §Scheduler).
 //!
 //! One OS thread per connection (requests within a connection pipeline
 //! through the shared engine, which does the real batching).
@@ -21,8 +30,7 @@ use std::net::{TcpListener, TcpStream};
 
 pub struct ServerConfig {
     pub port: u16,
-    pub img_h: usize,
-    pub img_w: usize,
+    /// eps_rel applied when a generate request omits the field.
     pub default_eps_rel: f64,
 }
 
@@ -85,14 +93,18 @@ fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Resu
                 .transpose()?
                 .unwrap_or(cfg.default_eps_rel);
             let seed = req.get("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64;
+            let model =
+                req.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("").to_string();
             let want_images =
                 req.get("images").map(|v| v.as_bool()).transpose()?.unwrap_or(true);
-            let r = engine.generate(n, eps_rel, seed)?;
+            let r = engine.generate_on(&model, n, eps_rel, seed)?;
             let mut pairs = vec![
                 ("ok", Value::Bool(true)),
+                // the model that actually served it (resolved default)
+                ("model", Value::str(r.model)),
                 ("n", Value::num(n as f64)),
-                ("h", Value::num(cfg.img_h as f64)),
-                ("w", Value::num(cfg.img_w as f64)),
+                ("h", Value::num(r.h as f64)),
+                ("w", Value::num(r.w as f64)),
                 ("wall_s", Value::num(r.wall_s)),
                 ("queued_s", Value::num(r.queued_s)),
                 (
@@ -125,6 +137,20 @@ fn stats_to_json(s: &EngineStats) -> Value {
         ("latency_p95_s", Value::num(s.latency_p95_s)),
         ("latency_mean_s", Value::num(s.latency_mean_s)),
         ("mean_occupancy", Value::num(s.mean_occupancy)),
+        ("models", Value::Arr(s.models.iter().map(|m| Value::str(m.clone())).collect())),
+        (
+            "steps_per_bucket",
+            Value::Obj(
+                s.steps_per_bucket
+                    .iter()
+                    .map(|(b, n)| (b.to_string(), Value::num(*n as f64)))
+                    .collect(),
+            ),
+        ),
+        ("migrations_up", Value::num(s.migrations_up as f64)),
+        ("migrations_down", Value::num(s.migrations_down as f64)),
+        ("wasted_lane_steps", Value::num(s.wasted_lane_steps as f64)),
+        ("occupied_lane_steps", Value::num(s.occupied_lane_steps as f64)),
     ])
 }
 
@@ -182,13 +208,29 @@ impl Client {
         seed: u64,
         want_images: bool,
     ) -> Result<ClientGenResult> {
-        let req = Value::obj(vec![
+        self.generate_on("", n, eps_rel, seed, want_images)
+    }
+
+    /// Generate on a named model ("" = the server's default model).
+    pub fn generate_on(
+        &mut self,
+        model: &str,
+        n: usize,
+        eps_rel: f64,
+        seed: u64,
+        want_images: bool,
+    ) -> Result<ClientGenResult> {
+        let mut pairs = vec![
             ("op", Value::str("generate")),
             ("n", Value::num(n as f64)),
             ("eps_rel", Value::num(eps_rel)),
             ("seed", Value::num(seed as f64)),
             ("images", Value::Bool(want_images)),
-        ]);
+        ];
+        if !model.is_empty() {
+            pairs.push(("model", Value::str(model)));
+        }
+        let req = Value::obj(pairs);
         let v = self.call(&req)?;
         let nfe = v
             .req("nfe")?

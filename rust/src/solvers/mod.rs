@@ -59,6 +59,9 @@ pub struct SolveResult {
 
 impl SolveResult {
     pub fn mean_nfe(&self) -> f64 {
+        if self.nfe_per_sample.is_empty() {
+            return 0.0;
+        }
         self.nfe_per_sample.iter().sum::<u64>() as f64 / self.nfe_per_sample.len() as f64
     }
 
@@ -160,5 +163,28 @@ mod tests {
         let t = t_vec(4, 0.5);
         assert_eq!(t.shape, vec![4]);
         assert!(t.data.iter().all(|&v| v == 0.5));
+    }
+
+    #[test]
+    fn mean_nfe_of_empty_result_is_zero_not_nan() {
+        let r = SolveResult {
+            x: Tensor::zeros(&[0]),
+            nfe_per_sample: vec![],
+            steps: 0,
+            rejections: 0,
+        };
+        assert_eq!(r.mean_nfe(), 0.0);
+        assert_eq!(r.max_nfe(), 0);
+    }
+
+    #[test]
+    fn mean_nfe_averages_per_sample_counts() {
+        let r = SolveResult {
+            x: Tensor::zeros(&[2, 1]),
+            nfe_per_sample: vec![10, 20],
+            steps: 10,
+            rejections: 0,
+        };
+        assert_eq!(r.mean_nfe(), 15.0);
     }
 }

@@ -1,5 +1,6 @@
 //! Integration: the continuous-batching engine — request lifecycle,
-//! mixed tolerances in one batch, admission control, determinism.
+//! mixed tolerances in one batch, admission control, determinism,
+//! bucket migration, multi-model routing.
 
 mod common;
 
@@ -102,4 +103,95 @@ fn occupancy_reported_under_load() {
     let stats = c.stats().unwrap();
     assert!(stats.mean_occupancy > 1.0, "occupancy {}", stats.mean_occupancy);
     assert!(stats.steps > 0);
+}
+
+#[test]
+fn unknown_model_is_rejected() {
+    let Some(engine) = engine() else { return };
+    let err = engine.client().generate_on("nope", 1, 0.1, 0).unwrap_err().to_string();
+    assert!(err.contains("unknown model"), "{err}");
+}
+
+/// The acceptance criterion of the bucket scheduler: a migrating pool
+/// must produce the same images as a fixed-width pool for the same
+/// seeds — migration moves lane state between widths without altering
+/// any sample's trajectory.
+#[test]
+fn migrating_engine_matches_fixed_engine() {
+    let Some(dir) = common::artifacts() else { return };
+    let mut fixed_cfg = EngineConfig::new(dir.clone(), "vp");
+    fixed_cfg.bucket = 16;
+    fixed_cfg.migrate = false;
+    let mut mig_cfg = EngineConfig::new(dir, "vp");
+    mig_cfg.bucket = 16;
+    mig_cfg.migrate = true;
+    let fixed = Engine::start(fixed_cfg).unwrap();
+    let migr = Engine::start(mig_cfg).unwrap();
+    for (n, eps, seed) in [(1usize, 0.1, 41u64), (3, 0.05, 777)] {
+        let a = fixed.client().generate(n, eps, seed).unwrap();
+        let b = migr.client().generate(n, eps, seed).unwrap();
+        assert_eq!(a.images, b.images, "bucket migration altered the trajectory (n={n})");
+        assert_eq!(a.nfe, b.nfe, "bucket migration altered NFE (n={n})");
+    }
+    // active lanes <= half the width the whole run: the scheduler must
+    // actually have dropped below the max bucket, and wasted fewer
+    // lane-steps than the fixed pool on the identical workload
+    let ms = migr.client().stats().unwrap();
+    let narrow: u64 =
+        ms.steps_per_bucket.iter().filter(|(b, _)| *b < 16).map(|(_, s)| *s).sum();
+    assert!(narrow > 0, "no steps below max bucket: {:?}", ms.steps_per_bucket);
+    assert!(ms.migrations_down > 0, "no downshift recorded");
+    let fs = fixed.client().stats().unwrap();
+    assert!(
+        ms.wasted_lane_steps < fs.wasted_lane_steps,
+        "migrating wasted {} lane-steps vs fixed {}",
+        ms.wasted_lane_steps,
+        fs.wasted_lane_steps
+    );
+}
+
+#[test]
+fn per_bucket_stats_cover_all_steps() {
+    let Some(engine) = engine() else { return };
+    let c = engine.client();
+    c.generate(1, 0.1, 3).unwrap();
+    let stats = c.stats().unwrap();
+    let total: u64 = stats.steps_per_bucket.iter().map(|(_, s)| *s).sum();
+    assert_eq!(total, stats.steps, "per-bucket step counts must sum to total steps");
+    assert_eq!(
+        stats.wasted_lane_steps + stats.occupied_lane_steps,
+        stats.steps_per_bucket.iter().map(|(b, s)| *b as u64 * *s).sum::<u64>(),
+        "lane-step accounting must balance"
+    );
+    assert_eq!(stats.models, vec!["vp".to_string()]);
+}
+
+#[test]
+fn multi_model_round_robin_serves_both() {
+    let Some(dir) = common::artifacts() else { return };
+    let rt = gofast::runtime::Runtime::new(&dir).unwrap();
+    let mut names = rt.variant_names();
+    drop(rt);
+    names.sort();
+    if names.len() < 2 {
+        eprintln!("skipping: needs >= 2 variants, have {names:?}");
+        return;
+    }
+    let mut cfg = EngineConfig::new(dir, &names[0]);
+    cfg.models = vec![names[0].clone(), names[1].clone()];
+    cfg.bucket = 16;
+    let engine = Engine::start(cfg).unwrap();
+    let mut handles = Vec::new();
+    for name in [names[0].clone(), names[1].clone()] {
+        let c = engine.client();
+        handles.push(std::thread::spawn(move || {
+            c.generate_on(&name, 2, 0.1, 7).unwrap().nfe.len()
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 4);
+    let stats = engine.client().stats().unwrap();
+    assert_eq!(stats.samples_done, 4);
+    assert_eq!(stats.requests_done, 2);
+    assert_eq!(stats.models, names[..2].to_vec());
 }

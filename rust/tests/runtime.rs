@@ -142,3 +142,17 @@ fn bucket_for_picks_smallest_fitting() {
     // oversubscribed requests clamp to the largest bucket
     assert_eq!(m.bucket_for("score", largest + 1).unwrap(), largest);
 }
+
+#[test]
+fn bucket_for_edge_cases() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    // n = 0 picks the smallest compiled bucket
+    assert_eq!(m.bucket_for("score", 0).unwrap(), m.buckets("score")[0]);
+    // unknown program is a clean error naming the program
+    let err = m.bucket_for("warp_drive", 4).unwrap_err().to_string();
+    assert!(err.contains("warp_drive"), "{err}");
+    // an unknown program also has an empty bucket view
+    assert!(m.buckets("warp_drive").is_empty());
+}

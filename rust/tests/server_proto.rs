@@ -20,7 +20,7 @@ fn spawn_server() -> Option<(Engine, std::net::SocketAddr)> {
         let _ = serve(
             listener,
             client,
-            ServerConfig { port: addr.port(), img_h: 16, img_w: 16, default_eps_rel: 0.05 },
+            ServerConfig { port: addr.port(), default_eps_rel: 0.05 },
         );
     });
     Some((engine, addr))
