@@ -10,8 +10,8 @@ use gofast::metrics::{self, FeatureStats};
 use gofast::rng::Rng;
 use gofast::runtime::{FidNet, Model, Runtime};
 use gofast::solvers::{Ctx, SolveOpts, Spec};
-use gofast::tensor::{read_f32_file, Tensor};
-use gofast::{json, Context, Result};
+use gofast::tensor::Tensor;
+use gofast::{Context, Result};
 use std::path::PathBuf;
 
 pub fn bench_args() -> Args {
@@ -29,21 +29,11 @@ pub fn artifacts() -> PathBuf {
     p
 }
 
-/// Reference feature stats for a model's eval dataset split.
+/// Reference feature stats for a model's eval dataset split (shared
+/// helper — the same reference the engine's eval lanes fit against).
 pub fn ref_stats<'rt>(rt: &'rt Runtime, model: &Model) -> Result<(FidNet<'rt>, FeatureStats)> {
-    let fid_name = if model.meta.dim == 768 { "fid16" } else { "fid32" };
-    let net = rt.fid_net(fid_name).context("fid net missing — rerun `make artifacts`")?;
-    let dataset = &model.meta.dataset;
-    let meta = json::parse_file(&rt.root().join("data").join(format!("{dataset}.meta.json")))?;
-    let n_total = meta.req("n")?.as_usize()?;
-    let n = n_total.min(2048);
-    let all = read_f32_file(
-        &rt.root().join("data").join(format!("{dataset}.bin")),
-        &[n_total, model.meta.dim],
-    )?;
-    let refs = Tensor::from_vec(&[n, model.meta.dim], all.data[..n * model.meta.dim].to_vec())?;
-    let (f, _) = metrics::extract_features(&net, &refs)?;
-    Ok((net, metrics::feature_stats(&f)))
+    metrics::reference_for(rt, &model.meta)
+        .context("fid reference missing — rerun `make artifacts`")
 }
 
 pub struct GenOutcome {

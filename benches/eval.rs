@@ -1,0 +1,164 @@
+//! FID*-vs-NFE through the serving path — the paper's headline
+//! quality-vs-speed tradeoff, measured on the same scheduler/registry
+//! machinery that serves traffic, so solver *and* scheduler regressions
+//! move the same metric.
+//!
+//! Rows:
+//! * served / adaptive — `evaluate` requests against an in-process
+//!   engine at a sweep of `eps_rel` tolerances (the adaptive solver's
+//!   quality knob; each tolerance is one point of the FID*-vs-NFE curve);
+//! * offline / em, ddim — the paper's fixed-step baselines at step
+//!   budgets matched to each adaptive run's NFE, through the engine
+//!   bypass (the engine's step loop only speaks Algorithm 1).
+//!
+//! Output: table on stdout, CSV + JSON under bench_out/ (the JSON is
+//! uploaded as a CI artifact on main-branch pushes).
+//!
+//!   cargo bench --offline --bench eval -- [--model vp] [--samples 128]
+//!       [--eps 0.02,0.05,0.1,0.2] [--seed 0] [--bucket 16]
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gofast::bench::Table;
+use gofast::coordinator::{Engine, EngineConfig, EvalRequest};
+use gofast::json::Value;
+use gofast::runtime::Runtime;
+use gofast::solvers::Spec;
+use gofast::Result;
+
+struct Row {
+    path: &'static str,
+    solver: String,
+    knob: String,
+    mean_nfe: f64,
+    fid: f64,
+    is: f64,
+    wall_s: f64,
+}
+
+fn main() -> Result<()> {
+    let args = bench_args();
+    let dir = artifacts();
+    let model_name = args.str_or("model", "vp");
+    let samples = args.usize_or("samples", 128)?;
+    let eps_list = args.f64_list_or("eps", &[0.02, 0.05, 0.1, 0.2])?;
+    let seed = args.u64_or("seed", 0)?;
+    let max_bucket = args.usize_or("bucket", 16)?;
+
+    // local runtime for bucket discovery + the offline baseline rows
+    let rt = Runtime::new(&dir)?;
+    let model = rt.model(&model_name)?;
+    let bucket = *model
+        .buckets("adaptive_step")
+        .iter()
+        .filter(|&&b| b <= max_bucket)
+        .max()
+        .unwrap_or(&model.buckets("adaptive_step")[0]);
+
+    let mut ecfg = EngineConfig::new(&dir, &model_name);
+    ecfg.bucket = bucket;
+    let engine = Engine::start(ecfg)?;
+    let client = engine.client();
+
+    let mut rows: Vec<Row> = Vec::new();
+    println!("== eval: model={model_name} samples={samples} bucket={bucket} eps={eps_list:?} ==");
+    for &eps in &eps_list {
+        let r = client.evaluate(EvalRequest {
+            model: String::new(),
+            solver: "adaptive".into(),
+            samples,
+            eps_rel: eps,
+            seed,
+        })?;
+        println!(
+            "  [served] adaptive eps={eps} NFE={:.1} FID*={:.3} IS*={:.3} ({:.1}s)",
+            r.mean_nfe, r.fid, r.is, r.wall_s
+        );
+        rows.push(Row {
+            path: "served",
+            solver: "adaptive".into(),
+            knob: format!("eps={eps}"),
+            mean_nfe: r.mean_nfe,
+            fid: r.fid,
+            is: r.is,
+            wall_s: r.wall_s,
+        });
+    }
+    let stats = client.stats()?;
+    println!(
+        "  engine: evals_done={} eval_samples_done={} eval_lane_steps={}",
+        stats.evals_done, stats.eval_samples_done, stats.eval_lane_steps
+    );
+
+    // offline fixed-step baselines at matched NFE budgets
+    let (net, refstats) = ref_stats(&rt, &model)?;
+    let adaptive_nfes: Vec<f64> = rows.iter().map(|r| r.mean_nfe).collect();
+    for nfe in adaptive_nfes {
+        let steps = em_steps_for_nfe(nfe);
+        let mut specs = vec![(Spec::Em(steps), "em")];
+        if model.meta.sde_kind == "vp" {
+            specs.push((Spec::Ddim(steps), "ddim"));
+        }
+        for (spec, name) in specs {
+            let out = generate(&model, &spec, samples, seed)?;
+            let (fid, is) = eval_fid(&net, &refstats, &out)?;
+            println!(
+                "  [offline] {name} steps={steps} NFE={:.1} FID*={:.3} IS*={:.3} ({:.1}s)",
+                out.mean_nfe, fid, is, out.wall_s
+            );
+            rows.push(Row {
+                path: "offline",
+                solver: name.into(),
+                knob: format!("steps={steps}"),
+                mean_nfe: out.mean_nfe,
+                fid,
+                is,
+                wall_s: out.wall_s,
+            });
+        }
+    }
+
+    let mut table = Table::new(&["path", "solver", "knob", "mean_nfe", "fid", "is", "wall_s"]);
+    for r in &rows {
+        table.row(vec![
+            r.path.to_string(),
+            r.solver.clone(),
+            r.knob.clone(),
+            fmt_f(r.mean_nfe, 1),
+            fmt_f(r.fid, 3),
+            fmt_f(r.is, 3),
+            fmt_f(r.wall_s, 2),
+        ]);
+    }
+    print!("\n{}", table.render());
+    write_outputs("eval", &table)?;
+
+    // machine-readable companion for the CI artifact
+    let json_rows: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            Value::obj(vec![
+                ("path", Value::str(r.path)),
+                ("solver", Value::str(r.solver.clone())),
+                ("knob", Value::str(r.knob.clone())),
+                ("mean_nfe", Value::num(r.mean_nfe)),
+                ("fid", Value::num(r.fid)),
+                ("is", Value::num(r.is)),
+                ("wall_s", Value::num(r.wall_s)),
+            ])
+        })
+        .collect();
+    let doc = Value::obj(vec![
+        ("model", Value::str(model_name.clone())),
+        ("samples", Value::num(samples as f64)),
+        ("seed", Value::num(seed as f64)),
+        ("bucket", Value::num(bucket as f64)),
+        ("rows", Value::Arr(json_rows)),
+    ]);
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/eval.json", format!("{doc}"))?;
+    println!("[eval] json -> bench_out/eval.json");
+    Ok(())
+}

@@ -11,8 +11,8 @@ use gofast::metrics;
 use gofast::rng::Rng;
 use gofast::runtime::Runtime;
 use gofast::solvers::{adaptive, Ctx, SolveOpts};
-use gofast::tensor::{read_f32_file, Tensor};
-use gofast::{json, Result};
+use gofast::tensor::Tensor;
+use gofast::Result;
 use std::path::Path;
 
 fn main() -> Result<()> {
@@ -27,24 +27,7 @@ fn main() -> Result<()> {
     let ctx = Ctx::new(&model, bucket, SolveOpts::default());
 
     // FID reference (optional — NFE-only sweep if nets are not built yet)
-    let fid_name = if model.meta.dim == 768 { "fid16" } else { "fid32" };
-    let fid_setup = rt.fid_net(fid_name).ok().and_then(|net| {
-        let meta = json::parse_file(Path::new(&format!(
-            "artifacts/data/{}.meta.json",
-            model.meta.dataset
-        )))
-        .ok()?;
-        let n = meta.get("n")?.as_usize().ok()?.min(2048);
-        let all = read_f32_file(
-            Path::new(&format!("artifacts/data/{}.bin", model.meta.dataset)),
-            &[meta.get("n")?.as_usize().ok()?, model.meta.dim],
-        )
-        .ok()?;
-        let refs =
-            Tensor::from_vec(&[n, model.meta.dim], all.data[..n * model.meta.dim].to_vec()).ok()?;
-        let (f, _) = metrics::extract_features(&net, &refs).ok()?;
-        Some((net, metrics::feature_stats(&f)))
-    });
+    let fid_setup = metrics::reference_for(&rt, &model.meta).ok();
 
     let mut table = Table::new(&["eps_rel", "mean NFE", "reject%", "FID*", "IS*", "wall_s"]);
     for &eps in &eps_list {

@@ -50,6 +50,14 @@ STEP_BUCKETS = (1, 2, 4, 8, 16, 64)
 AUX_BUCKETS = (16, 64)
 FID_BUCKETS = (64,)
 
+# CLI-overridable (see main): CI builds a miniature artifact set with
+# --step-buckets 1,2 so the artifact-gated serving tests run in minutes.
+BUCKET_OVERRIDES: dict[str, tuple[int, ...]] = {}
+
+
+def _buckets(kind: str, default: tuple[int, ...]) -> tuple[int, ...]:
+    return BUCKET_OVERRIDES.get(kind, default)
+
 
 def to_hlo_text(lowered) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -146,15 +154,18 @@ def program_specs(cfg: model.ModelCfg, n_theta: int):
             return (theta, f32(b, d), f32(b), f32(b))
         raise KeyError(program)
 
+    score_b = _buckets("score", SCORE_BUCKETS)
+    step_b = _buckets("step", STEP_BUCKETS)
+    aux_b = _buckets("aux", AUX_BUCKETS)
     buckets = {
-        "score": SCORE_BUCKETS,
-        "adaptive_step": STEP_BUCKETS,
-        "em_step": STEP_BUCKETS,
-        "pc_step": AUX_BUCKETS,
-        "ddim_step": AUX_BUCKETS,
-        "ode_drift": AUX_BUCKETS,
+        "score": score_b,
+        "adaptive_step": step_b,
+        "em_step": step_b,
+        "pc_step": aux_b,
+        "ddim_step": aux_b,
+        "ode_drift": aux_b,
         # denoise runs at whatever bucket the solver/engine uses
-        "denoise": STEP_BUCKETS,
+        "denoise": step_b,
     }
     return buckets, args
 
@@ -205,7 +216,7 @@ def lower_fidnet(name: str, art_dir: str, manifest: dict):
     vdir = os.path.join(art_dir, name)
     os.makedirs(vdir, exist_ok=True)
     entries = []
-    for b in FID_BUCKETS:
+    for b in _buckets("fid", FID_BUCKETS):
         spec = (
             jax.ShapeDtypeStruct((n_theta,), jnp.float32),
             jax.ShapeDtypeStruct((b, cfg.dim), jnp.float32),
@@ -222,11 +233,31 @@ def lower_fidnet(name: str, art_dir: str, manifest: dict):
     manifest["fidnets"][name] = {"meta": meta, "programs": entries}
 
 
+def _bucket_list(spec: str) -> tuple[int, ...]:
+    return tuple(sorted({int(p) for p in spec.split(",") if p.strip()}))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="../artifacts")
     ap.add_argument("--variant", default=None, help="limit to one variant")
+    for kind, default in [
+        ("score", SCORE_BUCKETS),
+        ("step", STEP_BUCKETS),
+        ("aux", AUX_BUCKETS),
+        ("fid", FID_BUCKETS),
+    ]:
+        ap.add_argument(
+            f"--{kind}-buckets",
+            default=None,
+            help=f"comma-separated bucket override (default {default}); "
+            "e.g. --step-buckets 1,2 for a miniature CI artifact set",
+        )
     args = ap.parse_args()
+    for kind in ("score", "step", "aux", "fid"):
+        spec = getattr(args, f"{kind}_buckets")
+        if spec is not None:
+            BUCKET_OVERRIDES[kind] = _bucket_list(spec)
     art = args.out
     manifest = {"variants": {}, "fidnets": {}}
     mpath = os.path.join(art, "manifest.json")

@@ -7,9 +7,10 @@
 //! width that fits its demand, admit queued samples into free lanes, and
 //! advance it one fused Algorithm-1 step.
 
+use super::eval::{ChunkSpec, EvalManager, EvalRequest, EvalResult};
 use super::registry::{ModelEntry, Registry};
 use super::scheduler::migrate_lanes;
-use super::{Msg, Pending, SampleRequest, Slot};
+use super::{Msg, Pending, SampleRequest, Sink, Slot};
 use crate::metrics::hist::Histogram;
 use crate::rng::Rng;
 use crate::runtime::{ExecArg, Runtime};
@@ -96,6 +97,16 @@ pub struct EngineStats {
     pub wasted_lane_steps: u64,
     /// Occupied lanes advanced through steps.
     pub occupied_lane_steps: u64,
+    /// Engine-served evaluation runs completed.
+    pub evals_done: u64,
+    /// Evaluation jobs currently in flight.
+    pub eval_active: usize,
+    /// Samples generated for evaluation jobs (disjoint from client
+    /// traffic; both are included in `samples_done`).
+    pub eval_samples_done: u64,
+    /// Occupied lanes owned by eval jobs, summed over steps — the eval
+    /// share of `occupied_lane_steps`.
+    pub eval_lane_steps: u64,
 }
 
 /// Handle owning the engine thread.
@@ -150,10 +161,18 @@ impl EngineClient {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Msg::Generate(
-                SampleRequest { model: model.to_string(), n, eps_rel, seed },
+                SampleRequest { model: model.to_string(), n, eps_rel, seed, sample_base: 0 },
                 rtx,
             ))
             .map_err(|_| anyhow!("engine is down"))?;
+        rrx.recv().map_err(|_| anyhow!("engine dropped the request"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// FID*/IS* evaluation served through the engine's scheduler/registry
+    /// machinery (blocks until the run completes).
+    pub fn evaluate(&self, req: EvalRequest) -> Result<EvalResult> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Evaluate(req, rtx)).map_err(|_| anyhow!("engine is down"))?;
         rrx.recv().map_err(|_| anyhow!("engine dropped the request"))?.map_err(|e| anyhow!(e))
     }
 
@@ -193,6 +212,7 @@ struct EngineState<'rt> {
     next_req_id: u64,
     queued_samples: usize,
     metrics: Metrics,
+    evals: EvalManager<'rt>,
 }
 
 fn engine_main(
@@ -221,6 +241,7 @@ fn engine_main(
         next_req_id: 1,
         queued_samples: 0,
         metrics: Metrics::new(),
+        evals: EvalManager::new(),
     };
     let _ = ready.send(Ok(()));
 
@@ -253,9 +274,12 @@ fn engine_main(
             st.rebucket(mi);
             st.admit(mi);
             if st.registry.entries()[mi].pool.active() > 0 {
-                if let Err(e) = st.step(mi) {
-                    // fault isolation: only this model's requests fail
-                    st.fail_pool(mi, &format!("engine step failed: {e:#}"));
+                match st.step(mi) {
+                    Ok(eval_chunks) => st.on_eval_chunks(mi, eval_chunks),
+                    Err(e) => {
+                        // fault isolation: only this model's requests fail
+                        st.fail_pool(mi, &format!("engine step failed: {e:#}"));
+                    }
                 }
             }
         }
@@ -290,25 +314,102 @@ impl<'rt> EngineState<'rt> {
                     )));
                     return false;
                 }
-                let id = self.next_req_id;
-                self.next_req_id += 1;
-                self.queued_samples += req.n;
-                let dim = self.registry.entries()[mi].model.meta.dim;
-                self.pending.insert(
-                    id,
-                    Pending {
-                        images: Tensor::zeros(&[req.n, dim]),
-                        nfe: vec![0; req.n],
-                        next_sample: 0,
-                        done: 0,
-                        reply,
-                        enqueued: Instant::now(),
-                        started: None,
-                        req,
-                    },
-                );
-                self.registry.entry_mut(mi).pool.fifo.push(id);
+                self.enqueue(mi, req, Sink::Client(reply));
                 false
+            }
+            Msg::Evaluate(req, reply) => {
+                let mi = match self.registry.resolve(&req.model) {
+                    Ok(i) => i,
+                    Err(e) => {
+                        let _ = reply.send(Err(format!("{e:#}")));
+                        return false;
+                    }
+                };
+                if !(req.solver.is_empty() || req.solver == "adaptive") {
+                    let _ = reply.send(Err(format!(
+                        "the engine serves the 'adaptive' solver only (got '{}'); \
+                         use `gofast evaluate --offline` for other solvers",
+                        req.solver
+                    )));
+                    return false;
+                }
+                if req.samples < 2 {
+                    // fail at admission, not after the run: FID needs a
+                    // non-singular feature covariance
+                    let _ = reply.send(Err(format!(
+                        "evaluate needs samples >= 2 (got {}); the feature \
+                         covariance is singular below that",
+                        req.samples
+                    )));
+                    return false;
+                }
+                if let Err(e) = self.evals.ensure_net(mi, &self.registry) {
+                    let _ = reply.send(Err(e));
+                    return false;
+                }
+                let snapshot = self.registry.entries()[mi].pool.sched.steps_per_bucket();
+                let chunks = self.evals.start_job(mi, req, reply, snapshot);
+                for spec in chunks {
+                    self.enqueue_eval_chunk(spec);
+                }
+                false
+            }
+        }
+    }
+
+    /// Register a request's accumulation state and queue it on pool `mi`.
+    fn enqueue(&mut self, mi: usize, req: SampleRequest, sink: Sink) {
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        self.queued_samples += req.n;
+        let dim = self.registry.entries()[mi].model.meta.dim;
+        self.pending.insert(
+            id,
+            Pending {
+                images: Tensor::zeros(&[req.n, dim]),
+                nfe: vec![0; req.n],
+                next_sample: 0,
+                done: 0,
+                sink,
+                enqueued: Instant::now(),
+                started: None,
+                req,
+            },
+        );
+        self.registry.entry_mut(mi).pool.fifo.push(id);
+    }
+
+    /// Admit one evaluation chunk through the normal request path.
+    /// Chunks bypass the client queue cap: their in-flight volume is
+    /// already bounded by `MAX_INFLIGHT_CHUNKS` fid-bucket batches.
+    fn enqueue_eval_chunk(&mut self, spec: ChunkSpec) {
+        let req = SampleRequest {
+            model: String::new(), // routed by index below
+            n: spec.n,
+            eps_rel: spec.eps_rel,
+            seed: spec.seed,
+            sample_base: spec.sample_base,
+        };
+        let sink = Sink::Eval { job: spec.job, chunk: spec.chunk };
+        self.enqueue(spec.model_idx, req, sink);
+    }
+
+    /// Fold completed eval chunks into their jobs, admitting follow-up
+    /// chunks as each one lands.
+    fn on_eval_chunks(&mut self, mi: usize, done: Vec<(u64, usize, GenResult)>) {
+        for (job, chunk, gen) in done {
+            let sched_now = self.registry.entries()[mi].pool.sched.steps_per_bucket();
+            let model_name = self.registry.entries()[mi].model.meta.name.clone();
+            let follow = self.evals.on_chunk_done(
+                job,
+                chunk,
+                &gen.images,
+                &gen.nfe,
+                &sched_now,
+                &model_name,
+            );
+            for spec in follow {
+                self.enqueue_eval_chunk(spec);
             }
         }
     }
@@ -370,7 +471,9 @@ impl<'rt> EngineState<'rt> {
             }
             *queued_samples -= 1;
             // init the lane: prior draw, fresh forked rng per sample
-            let mut rng = Rng::new(p.req.seed).fork(sample_idx as u64);
+            // (sample_base keeps chunked eval runs on the same streams
+            // as one big request — and as the offline `run_lanes` twin)
+            let mut rng = Rng::new(p.req.seed).fork(p.req.sample_base + sample_idx as u64);
             {
                 let row = pool.x.row_mut(si);
                 for v in row.iter_mut() {
@@ -394,8 +497,9 @@ impl<'rt> EngineState<'rt> {
     }
 
     /// One fused adaptive_step over pool `mi` at its current width.
-    fn step(&mut self, mi: usize) -> Result<()> {
-        let EngineState { registry, pending, cfg, metrics, .. } = self;
+    /// Returns the eval chunks that completed this iteration.
+    fn step(&mut self, mi: usize) -> Result<Vec<(u64, usize, GenResult)>> {
+        let EngineState { registry, pending, cfg, metrics, evals, .. } = self;
         let e = registry.entry_mut(mi);
         let b = e.pool.sched.width();
         let dim = e.model.meta.dim;
@@ -406,9 +510,13 @@ impl<'rt> EngineState<'rt> {
         let mut er_in = vec![0.01f32; b];
         let mut z = Tensor::zeros(&[b, dim]);
         let mut occupied = 0usize;
+        let mut eval_occupied = 0u64;
         for (i, slot) in e.pool.slots.iter_mut().enumerate() {
-            if let Slot::Running { t, h, eps_rel, rng, .. } = slot {
+            if let Slot::Running { req_id, t, h, eps_rel, rng, .. } = slot {
                 occupied += 1;
+                if pending.get(req_id).is_some_and(|p| EvalManager::is_eval_sink(&p.sink)) {
+                    eval_occupied += 1;
+                }
                 *h = h.min(*t - t_eps).max(0.0);
                 t_in[i] = *t as f32;
                 h_in[i] = *h as f32;
@@ -416,6 +524,7 @@ impl<'rt> EngineState<'rt> {
                 rng.fill_normal(z.row_mut(i));
             }
         }
+        evals.eval_lane_steps += eval_occupied;
         let t_t = Tensor { shape: vec![b], data: t_in };
         let h_t = Tensor { shape: vec![b], data: h_in };
         let er_t = Tensor { shape: vec![b], data: er_in };
@@ -459,9 +568,9 @@ impl<'rt> EngineState<'rt> {
             *h = (*h * grow).min((*t - t_eps).max(0.0));
         }
         if !converged.is_empty() {
-            finish_lanes(e, pending, metrics, cfg.fused_buffers, &converged)?;
+            return finish_lanes(e, pending, metrics, cfg.fused_buffers, &converged);
         }
-        Ok(())
+        Ok(Vec::new())
     }
 
     /// Fail every request owned by pool `mi` (incomplete requests stay
@@ -481,9 +590,13 @@ impl<'rt> EngineState<'rt> {
         for id in ids {
             if let Some(p) = self.pending.remove(&id) {
                 self.queued_samples -= p.req.n - p.next_sample;
-                let _ = p.reply.send(Err(msg.to_string()));
+                if let Sink::Client(reply) = p.sink {
+                    let _ = reply.send(Err(msg.to_string()));
+                }
+                // eval sinks are answered once per job below
             }
         }
+        self.evals.fail_jobs_on_pool(mi, msg);
     }
 
     fn stats(&self) -> EngineStats {
@@ -530,20 +643,25 @@ impl<'rt> EngineState<'rt> {
             migrations_down: mig_down,
             wasted_lane_steps: wasted,
             occupied_lane_steps: occupied,
+            evals_done: self.evals.evals_done,
+            eval_active: self.evals.active(),
+            eval_samples_done: self.evals.eval_samples_done,
+            eval_lane_steps: self.evals.eval_lane_steps,
         }
     }
 }
 
 /// Denoise converged lanes (one batched Tweedie call at the pool's
 /// current width) and hand their images back to their requests; free the
-/// lanes.
+/// lanes. Client requests are answered directly; completed eval chunks
+/// are returned to the caller for folding into their jobs.
 fn finish_lanes(
     e: &mut ModelEntry<'_>,
     pending: &mut HashMap<u64, Pending>,
     metrics: &mut Metrics,
     fused_buffers: bool,
     lanes: &[usize],
-) -> Result<()> {
+) -> Result<Vec<(u64, usize, GenResult)>> {
     let b = e.pool.sched.width();
     let t_end = crate::solvers::t_vec(b, e.process.t_eps());
     let mut out = e.model.exec_args(
@@ -556,6 +674,7 @@ fn finish_lanes(
     let (img_h, img_w) = (e.model.meta.h, e.model.meta.w);
     let (lo, hi) = e.process.data_range();
     let (lo, hi) = (lo as f32, hi as f32);
+    let mut eval_done = Vec::new();
     for &i in lanes {
         let Slot::Running { req_id, sample_idx, nfe, .. } = e.pool.slots[i] else {
             continue;
@@ -578,9 +697,7 @@ fn finish_lanes(
                 .started
                 .map(|s| s.duration_since(p.enqueued).as_secs_f64())
                 .unwrap_or(0.0);
-            metrics.latency.record(now.duration_since(p.enqueued).as_secs_f64());
-            metrics.requests_done += 1;
-            let _ = p.reply.send(Ok(GenResult {
+            let result = GenResult {
                 images: p.images,
                 nfe: p.nfe,
                 model: e.model.meta.name.clone(),
@@ -588,9 +705,19 @@ fn finish_lanes(
                 w: img_w,
                 wall_s: wall,
                 queued_s: queued,
-            }));
+            };
+            match p.sink {
+                Sink::Client(reply) => {
+                    // client latency/throughput metrics count client
+                    // traffic only; eval chunks have their own counters
+                    metrics.latency.record(now.duration_since(p.enqueued).as_secs_f64());
+                    metrics.requests_done += 1;
+                    let _ = reply.send(Ok(result));
+                }
+                Sink::Eval { job, chunk } => eval_done.push((job, chunk, result)),
+            }
         }
         e.pool.slots[i] = Slot::Free;
     }
-    Ok(())
+    Ok(eval_done)
 }

@@ -1,0 +1,311 @@
+//! Engine-side FID*/IS* evaluation jobs (docs/ARCHITECTURE.md
+//! §Evaluation).
+//!
+//! An `evaluate` request is serviced by the *serving* machinery, not a
+//! side path: the job is cut into fid-bucket-sized chunks, each admitted
+//! as an internal sample request through the same FIFO / scheduler /
+//! registry route client traffic takes (so solver or scheduler
+//! regressions move the reported FID*). Completed chunks are pushed
+//! through the model's feature net into per-chunk `EvalAccumulator`s and
+//! Chan-merged **in chunk order** — completion order may vary with
+//! co-batched traffic, but the merge order never does, which keeps the
+//! result reproducible and comparable with the `--offline` bypass
+//! (bit-identical when the lane order matches; the per-lane RNG contract
+//! in `solvers::adaptive::run_lanes` is what makes that possible).
+//!
+//! At most `MAX_INFLIGHT_CHUNKS` chunks are outstanding per job, so an
+//! evaluation run holds O(chunk) images in memory regardless of its
+//! sample count and cannot flood the admission queue.
+
+use super::registry::Registry;
+use crate::metrics::{self, EvalAccumulator, FeatureStats};
+use crate::runtime::FidNet;
+use crate::tensor::Tensor;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Evaluation chunks admitted concurrently per job (bounds eval memory
+/// and queue pressure; merge order is by chunk index either way).
+pub(crate) const MAX_INFLIGHT_CHUNKS: usize = 2;
+
+/// An evaluation request as accepted by the engine. The engine's step
+/// loop *is* the paper's adaptive solver, so `solver` must be
+/// "adaptive" (or "" meaning the same); other solvers evaluate through
+/// the offline bypass (`gofast evaluate --offline`).
+#[derive(Clone, Debug)]
+pub struct EvalRequest {
+    /// Model variant ("" = the engine's default model).
+    pub model: String,
+    /// Solver spec; only "adaptive" (the serving solver) is accepted.
+    pub solver: String,
+    pub samples: usize,
+    pub eps_rel: f64,
+    pub seed: u64,
+}
+
+/// Outcome of an engine-served evaluation run.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    /// Model that served the run (resolved default).
+    pub model: String,
+    pub solver: String,
+    pub samples: usize,
+    pub fid: f64,
+    pub is: f64,
+    /// Mean score-net evaluations per sample (incl. the denoise call).
+    pub mean_nfe: f64,
+    pub wall_s: f64,
+    /// Fused steps per pool width the serving pool ran while this job
+    /// was in flight (shared with concurrent traffic on the same model).
+    pub steps_per_bucket: Vec<(usize, u64)>,
+}
+
+/// Feature net + reference Gaussian for one model, loaded lazily on the
+/// first evaluate request that names it.
+struct EvalNet<'rt> {
+    net: FidNet<'rt>,
+    reference: FeatureStats,
+    /// Generation/featurization chunk: the net's widest bucket.
+    chunk: usize,
+}
+
+struct EvalJob {
+    model_idx: usize,
+    req: EvalRequest,
+    reply: mpsc::Sender<Result<EvalResult, String>>,
+    merged: EvalAccumulator,
+    /// Completed chunks awaiting in-order merge, keyed by chunk index.
+    ready: BTreeMap<usize, EvalAccumulator>,
+    next_merge: usize,
+    chunks_total: usize,
+    submitted: usize,
+    nfe_sum: u64,
+    started: Instant,
+    steps_before: Vec<(usize, u64)>,
+}
+
+/// A chunk of an eval job to admit as an internal sample request.
+pub(crate) struct ChunkSpec {
+    pub job: u64,
+    pub chunk: usize,
+    pub model_idx: usize,
+    pub n: usize,
+    pub sample_base: u64,
+    pub eps_rel: f64,
+    pub seed: u64,
+}
+
+/// All in-flight evaluation jobs plus the eval-lane counters exported
+/// through `EngineStats`.
+pub(crate) struct EvalManager<'rt> {
+    jobs: HashMap<u64, EvalJob>,
+    nets: HashMap<usize, EvalNet<'rt>>,
+    next_id: u64,
+    pub evals_done: u64,
+    pub eval_samples_done: u64,
+    /// Occupied lanes owned by eval jobs, summed over steps (the eval
+    /// share of `occupied_lane_steps`).
+    pub eval_lane_steps: u64,
+}
+
+impl<'rt> EvalManager<'rt> {
+    pub fn new() -> EvalManager<'rt> {
+        EvalManager {
+            jobs: HashMap::new(),
+            nets: HashMap::new(),
+            next_id: 1,
+            evals_done: 0,
+            eval_samples_done: 0,
+            eval_lane_steps: 0,
+        }
+    }
+
+    pub fn active(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_eval_sink(sink: &super::Sink) -> bool {
+        matches!(sink, super::Sink::Eval { .. })
+    }
+
+    /// Load (once) the feature net + reference stats for model `mi`.
+    /// Runs on the engine thread (PJRT handles are not `Send`), so the
+    /// *first* evaluate against a model pays the reference featurization
+    /// as a one-time stall of co-batched traffic; later evaluates hit
+    /// this cache.
+    pub fn ensure_net(&mut self, mi: usize, registry: &Registry<'rt>) -> Result<(), String> {
+        if self.nets.contains_key(&mi) {
+            return Ok(());
+        }
+        let model = &registry.entries()[mi].model;
+        let (net, reference) = metrics::reference_for(model.runtime(), &model.meta)
+            .map_err(|e| format!("loading eval reference: {e:#}"))?;
+        let chunk = *net
+            .meta
+            .buckets
+            .last()
+            .ok_or_else(|| "fid net has no compiled buckets".to_string())?;
+        self.nets.insert(mi, EvalNet { net, reference, chunk });
+        Ok(())
+    }
+
+    /// Register a job; `ensure_net(mi)` must have succeeded first.
+    /// Returns the chunk specs to admit now.
+    pub fn start_job(
+        &mut self,
+        mi: usize,
+        req: EvalRequest,
+        reply: mpsc::Sender<Result<EvalResult, String>>,
+        steps_before: Vec<(usize, u64)>,
+    ) -> Vec<ChunkSpec> {
+        let net = &self.nets[&mi];
+        let chunk = net.chunk;
+        let chunks_total = req.samples.div_ceil(chunk);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.insert(
+            id,
+            EvalJob {
+                model_idx: mi,
+                merged: EvalAccumulator::new(net.net.meta.feat_dim, net.net.meta.n_classes),
+                ready: BTreeMap::new(),
+                next_merge: 0,
+                chunks_total,
+                submitted: 0,
+                nfe_sum: 0,
+                started: Instant::now(),
+                steps_before,
+                req,
+                reply,
+            },
+        );
+        self.next_chunks(id)
+    }
+
+    /// Chunk specs to admit so the job keeps `MAX_INFLIGHT_CHUNKS`
+    /// outstanding.
+    fn next_chunks(&mut self, job_id: u64) -> Vec<ChunkSpec> {
+        let Some(job) = self.jobs.get_mut(&job_id) else {
+            return Vec::new();
+        };
+        let chunk = self.nets[&job.model_idx].chunk;
+        let mut specs = Vec::new();
+        let merged_or_ready = job.next_merge + job.ready.len();
+        while job.submitted < job.chunks_total
+            && job.submitted - merged_or_ready < MAX_INFLIGHT_CHUNKS
+        {
+            let start = job.submitted * chunk;
+            let n = (job.req.samples - start).min(chunk);
+            specs.push(ChunkSpec {
+                job: job_id,
+                chunk: job.submitted,
+                model_idx: job.model_idx,
+                n,
+                sample_base: start as u64,
+                eps_rel: job.req.eps_rel,
+                seed: job.req.seed,
+            });
+            job.submitted += 1;
+        }
+        specs
+    }
+
+    /// Fold a completed chunk in. Returns follow-up chunk specs to admit
+    /// (empty when the job just finished or is unknown). `sched_now` is
+    /// the serving pool's current per-bucket step counters, used for the
+    /// consumed-steps delta when the job completes.
+    pub fn on_chunk_done(
+        &mut self,
+        job_id: u64,
+        chunk_idx: usize,
+        images: &Tensor,
+        nfe: &[u64],
+        sched_now: &[(usize, u64)],
+        model_name: &str,
+    ) -> Vec<ChunkSpec> {
+        let Some(job) = self.jobs.get_mut(&job_id) else {
+            // job already failed (pool fault) — drop the stale chunk
+            return Vec::new();
+        };
+        let net = &self.nets[&job.model_idx];
+        let mut acc = EvalAccumulator::new(net.net.meta.feat_dim, net.net.meta.n_classes);
+        match metrics::extract_features(&net.net, images) {
+            Ok((f, l)) => acc.push(&f, &l),
+            Err(e) => {
+                let job = self.jobs.remove(&job_id).unwrap();
+                let _ = job.reply.send(Err(format!("feature extraction failed: {e:#}")));
+                return Vec::new();
+            }
+        }
+        job.nfe_sum += nfe.iter().sum::<u64>();
+        self.eval_samples_done += images.shape[0] as u64;
+        job.ready.insert(chunk_idx, acc);
+        // merge every chunk that is now contiguous with the merged prefix
+        while let Some(acc) = job.ready.remove(&job.next_merge) {
+            job.merged.merge(&acc);
+            job.next_merge += 1;
+        }
+        if job.next_merge == job.chunks_total {
+            let job = self.jobs.remove(&job_id).unwrap();
+            let reply = match job.merged.finalize(&net.reference) {
+                Ok((fid, is)) => {
+                    self.evals_done += 1;
+                    Ok(EvalResult {
+                        model: model_name.to_string(),
+                        solver: "adaptive".to_string(),
+                        samples: job.req.samples,
+                        fid,
+                        is,
+                        mean_nfe: job.nfe_sum as f64 / job.req.samples as f64,
+                        wall_s: job.started.elapsed().as_secs_f64(),
+                        steps_per_bucket: steps_delta(&job.steps_before, sched_now),
+                    })
+                }
+                Err(e) => Err(format!("finalizing eval stats: {e:#}")),
+            };
+            let _ = job.reply.send(reply);
+            return Vec::new();
+        }
+        self.next_chunks(job_id)
+    }
+
+    /// Fail every job whose serving pool died. Returns how many were
+    /// failed (their chunk pendings are being torn down by the caller).
+    pub fn fail_jobs_on_pool(&mut self, mi: usize, msg: &str) -> usize {
+        let ids: Vec<u64> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.model_idx == mi)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &ids {
+            if let Some(j) = self.jobs.remove(id) {
+                let _ = j.reply.send(Err(msg.to_string()));
+            }
+        }
+        ids.len()
+    }
+}
+
+/// Per-bucket steps consumed between two scheduler snapshots.
+fn steps_delta(before: &[(usize, u64)], now: &[(usize, u64)]) -> Vec<(usize, u64)> {
+    now.iter()
+        .map(|&(b, n)| {
+            let prev = before.iter().find(|(pb, _)| *pb == b).map(|(_, p)| *p).unwrap_or(0);
+            (b, n.saturating_sub(prev))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::steps_delta;
+
+    #[test]
+    fn steps_delta_subtracts_per_bucket() {
+        let before = vec![(1, 5), (2, 10)];
+        let now = vec![(1, 5), (2, 25), (4, 3)];
+        assert_eq!(steps_delta(&before, &now), vec![(1, 0), (2, 15), (4, 3)]);
+    }
+}

@@ -24,10 +24,12 @@
 //! owns the `Runtime`; everything else talks to it via channels.
 
 pub mod engine;
+pub(crate) mod eval;
 pub(crate) mod registry;
 pub mod scheduler;
 
 pub use engine::{Engine, EngineClient, EngineConfig, EngineStats, GenResult};
+pub use eval::{EvalRequest, EvalResult};
 pub use scheduler::BucketScheduler;
 
 use crate::tensor::Tensor;
@@ -41,13 +43,26 @@ pub struct SampleRequest {
     pub n: usize,
     pub eps_rel: f64,
     pub seed: u64,
+    /// Global index of this request's first sample: lane `i` forks its
+    /// RNG as `Rng::new(seed).fork(sample_base + i)`. Client generates
+    /// use 0; evaluation chunks use their offset into the eval run so a
+    /// chunked run draws the same per-sample streams as one big request.
+    pub sample_base: u64,
 }
 
 /// Engine mailbox messages.
 pub(crate) enum Msg {
     Generate(SampleRequest, mpsc::Sender<Result<GenResult, String>>),
+    Evaluate(EvalRequest, mpsc::Sender<Result<EvalResult, String>>),
     Stats(mpsc::Sender<EngineStats>),
     Shutdown,
+}
+
+/// Where a finished request's images go: back to a waiting client, or
+/// into an in-engine evaluation job's feature accumulator.
+pub(crate) enum Sink {
+    Client(mpsc::Sender<Result<GenResult, String>>),
+    Eval { job: u64, chunk: usize },
 }
 
 /// Per-request accumulation state while its samples move through slots.
@@ -57,7 +72,7 @@ pub(crate) struct Pending {
     pub done: usize,
     pub images: Tensor, // [n, dim] unit-range, filled as samples finish
     pub nfe: Vec<u64>,
-    pub reply: mpsc::Sender<Result<GenResult, String>>,
+    pub sink: Sink,
     pub enqueued: std::time::Instant,
     pub started: Option<std::time::Instant>,
 }

@@ -5,7 +5,8 @@
 //!   serve     start the continuous-batching TCP server
 //!   client    issue generate/stats requests against a running server
 //!   inspect   list artifact variants, programs and buckets
-//!   evaluate  FID*/IS* of a model+solver against the reference split
+//!   evaluate  FID*/IS* against the reference split, served through the
+//!             engine's scheduler/registry path (--offline bypasses it)
 //!
 //! Paper-table regeneration lives in `benches/` (cargo bench).
 
@@ -16,7 +17,7 @@ use gofast::metrics;
 use gofast::rng::Rng;
 use gofast::runtime::Runtime;
 use gofast::solvers::{self, adaptive, ddim, em, lamba, prob_flow, rdl, Ctx, SolveOpts};
-use gofast::tensor::{read_f32_file, save_image_grid, Tensor};
+use gofast::tensor::{save_image_grid, Tensor};
 use gofast::{bail, json, Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -63,7 +64,11 @@ USAGE: gofast <command> [flags]
             [--max-bucket 16] [--no-migrate] [--set k=v ...]
   client    [--addr 127.0.0.1:7878] [--model vp] [--n 4] [--eps-rel 0.05]
             [--seed 0] [--stats] [--out grid.ppm]
-  evaluate  --model vp [--solver ...] [--samples 256] [...generate flags]
+  evaluate  --model vp [--solver adaptive] [--samples 256] [--eps-rel 0.05]
+            [--seed 0] [--addr host:port] [--offline] [--check]
+            [...generate flags]
+            (default: served through the engine; --offline bypasses the
+             coordinator; --check runs both and asserts agreement)
   inspect   [--artifacts artifacts]
 ";
 
@@ -289,36 +294,123 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_evaluate(args: &Args) -> Result<()> {
+struct EvalSummary {
+    fid: f64,
+    is: f64,
+    mean_nfe: f64,
+    steps_per_bucket: Vec<(usize, u64)>,
+}
+
+/// Evaluation through the serving path: a running server (`--addr`) or
+/// an in-process engine spun up on the artifacts dir.
+fn evaluate_served(args: &Args) -> Result<EvalSummary> {
+    let model = args.str_or("model", "vp");
+    let solver = args.str_or("solver", "adaptive");
+    let samples = args.usize_or("samples", 256)?;
+    let eps_rel = args.f64_or("eps-rel", 0.05)?;
+    let seed = args.u64_or("seed", 0)?;
+    if let Some(addr) = args.get("addr") {
+        // the wire request carries no controller/bucket config — those
+        // are the remote server's; a silent mismatch would make --check
+        // fail spuriously, so refuse the combination instead
+        for flag in ["r", "safety", "bucket", "no-migrate"] {
+            if args.has(flag) {
+                if args.has("check") {
+                    bail!(
+                        "--{flag} does not travel with --addr (the server keeps its own \
+                         solver config), so --check would compare different controllers; \
+                         drop --{flag} or evaluate against a local engine"
+                    );
+                }
+                eprintln!("note: --{flag} is ignored with --addr (server config wins)");
+            }
+        }
+        let mut client = gofast::server::Client::connect(addr)?;
+        let r = client.evaluate(&model, &solver, samples, eps_rel, seed)?;
+        return Ok(EvalSummary {
+            fid: r.fid,
+            is: r.is,
+            mean_nfe: r.mean_nfe,
+            steps_per_bucket: r.steps_per_bucket,
+        });
+    }
+    let dir = artifacts_dir(args);
+    let bucket =
+        gofast::runtime::manifest_engine_bucket(&dir, &model, args.usize_or("bucket", 16)?)?;
+    let mut ecfg = EngineConfig::new(&dir, &model);
+    ecfg.bucket = bucket;
+    ecfg.migrate = !args.has("no-migrate");
+    ecfg.r = args.f64_or("r", ecfg.r)?;
+    ecfg.safety = args.f64_or("safety", ecfg.safety)?;
+    let engine = Engine::start(ecfg)?;
+    let r = engine.client().evaluate(gofast::coordinator::EvalRequest {
+        model: String::new(),
+        solver,
+        samples,
+        eps_rel,
+        seed,
+    })?;
+    Ok(EvalSummary {
+        fid: r.fid,
+        is: r.is,
+        mean_nfe: r.mean_nfe,
+        steps_per_bucket: r.steps_per_bucket,
+    })
+}
+
+/// The engine bypass: generate and score locally, no coordinator.
+/// `adaptive` runs engine-equivalent per-sample lanes
+/// (`adaptive::run_lanes`), so its FID*/IS* match the served path on the
+/// same seed; other solvers use their batch RNG scheme and are only
+/// available here.
+fn evaluate_offline(args: &Args) -> Result<EvalSummary> {
     let dir = artifacts_dir(args);
     let rt = Runtime::new(&dir)?;
     let model_name = args.str_or("model", "vp");
     let model = rt.model(&model_name)?;
-    let fid_name = if model.meta.dim == 768 { "fid16" } else { "fid32" };
-    let net = rt.fid_net(fid_name)?;
+    let (net, ref_stats) = metrics::reference_for(&rt, &model.meta)?;
     let samples = args.usize_or("samples", 256)?;
-    let bucket = args.usize_or("bucket", 64)?;
-    let ctx = Ctx::new(&model, bucket, SolveOpts::default());
     let solver = args.str_or("solver", "adaptive");
-    let mut rng = Rng::new(args.u64_or("seed", 0)?);
-
-    // reference stats from the exported eval split
-    let data_meta =
-        json::parse_file(&dir.join("data").join(format!("{}.meta.json", model.meta.dataset)))?;
-    let n_ref = data_meta.req("n")?.as_usize()?.min(2048);
-    let reference = read_f32_file(
-        &dir.join("data").join(format!("{}.bin", model.meta.dataset)),
-        &[data_meta.req("n")?.as_usize()?, model.meta.dim],
-    )?;
-    let ref_slice = Tensor::from_vec(
-        &[n_ref, model.meta.dim],
-        reference.data[..n_ref * model.meta.dim].to_vec(),
-    )?;
-    let (rf, _) = metrics::extract_features(&net, &ref_slice)?;
-    let ref_stats = metrics::feature_stats(&rf);
-
+    let seed = args.u64_or("seed", 0)?;
     let mut images = Tensor::zeros(&[samples, model.meta.dim]);
     let mut nfe_sum = 0u64;
+    if solver == "adaptive" {
+        let bucket = gofast::runtime::manifest_engine_bucket(
+            &dir,
+            &model_name,
+            args.usize_or("bucket", 16)?,
+        )?;
+        let ctx = Ctx::new(&model, bucket, SolveOpts::default());
+        let opts = adaptive::AdaptiveOpts {
+            eps_rel: args.f64_or("eps-rel", 0.05)?,
+            r: args.f64_or("r", 0.9)?,
+            safety: args.f64_or("safety", 0.9)?,
+            ..Default::default()
+        };
+        let mut done = 0;
+        while done < samples {
+            let take = (samples - done).min(bucket);
+            let res = adaptive::run_lanes(&ctx, seed, done as u64, take, &opts)?;
+            for i in 0..take {
+                images.row_mut(done + i).copy_from_slice(res.x.row(i));
+            }
+            nfe_sum += res.nfe_per_sample.iter().sum::<u64>();
+            done += take;
+        }
+        model.meta.process().to_unit_range(&mut images);
+        // same chunked accumulator arithmetic as the engine's eval lanes
+        let (fid, is) = metrics::evaluate_streaming(&net, &images, &ref_stats)?;
+        return Ok(EvalSummary {
+            fid,
+            is,
+            mean_nfe: nfe_sum as f64 / samples as f64,
+            steps_per_bucket: Vec::new(),
+        });
+    }
+    // non-adaptive solvers: the legacy batch bypass
+    let bucket = args.usize_or("bucket", 64)?;
+    let ctx = Ctx::new(&model, bucket, SolveOpts::default());
+    let mut rng = Rng::new(seed);
     let mut done = 0;
     while done < samples {
         let take = (samples - done).min(bucket);
@@ -331,9 +423,63 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
     }
     model.meta.process().to_unit_range(&mut images);
     let (fid, is) = metrics::evaluate(&net, &images, &ref_stats)?;
-    println!(
-        "model={model_name} solver={solver} samples={samples} NFE={:.0} FID*={fid:.2} IS*={is:.2}",
-        nfe_sum as f64 / samples as f64
+    Ok(EvalSummary {
+        fid,
+        is,
+        mean_nfe: nfe_sum as f64 / samples as f64,
+        steps_per_bucket: Vec::new(),
+    })
+}
+
+fn print_eval(path: &str, args: &Args, s: &EvalSummary) -> Result<()> {
+    let model = args.str_or("model", "vp");
+    let solver = args.str_or("solver", "adaptive");
+    let samples = args.usize_or("samples", 256)?;
+    print!(
+        "[{path}] model={model} solver={solver} samples={samples} NFE={:.1} FID*={:.3} IS*={:.3}",
+        s.mean_nfe, s.fid, s.is
     );
+    let consumed: Vec<String> = s
+        .steps_per_bucket
+        .iter()
+        .filter(|(_, n)| *n > 0)
+        .map(|(b, n)| format!("{b}:{n}"))
+        .collect();
+    if consumed.is_empty() {
+        println!();
+    } else {
+        println!(" steps_per_bucket={}", consumed.join(","));
+    }
+    Ok(())
+}
+
+/// FID*/IS* of a model+solver against the reference split. Default route
+/// is the serving path (in-process engine, or a live server with
+/// `--addr`); `--offline` bypasses the coordinator; `--check` runs both
+/// and asserts they agree (<= 1e-6 relative — the offline adaptive
+/// bypass mirrors the engine's per-lane RNG streams exactly).
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let check = args.has("check");
+    if args.has("offline") && !check {
+        let s = evaluate_offline(args)?;
+        return print_eval("offline", args, &s);
+    }
+    let served = evaluate_served(args)?;
+    print_eval("served", args, &served)?;
+    if check {
+        let off = evaluate_offline(args)?;
+        print_eval("offline", args, &off)?;
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1.0);
+        if rel(served.fid, off.fid) > 1e-6
+            || rel(served.is, off.is) > 1e-6
+            || served.mean_nfe != off.mean_nfe
+        {
+            bail!(
+                "served/offline evaluation disagree: FID* {:.9} vs {:.9}, IS* {:.9} vs {:.9}, NFE {:.3} vs {:.3}",
+                served.fid, off.fid, served.is, off.is, served.mean_nfe, off.mean_nfe
+            );
+        }
+        println!("check ok: served == offline (<= 1e-6 relative)");
+    }
     Ok(())
 }

@@ -12,6 +12,12 @@ pub struct Histogram {
     max: f64,
 }
 
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
 impl Histogram {
     /// Covers ~[10us, 1000s] with 5% resolution by default.
     pub fn new() -> Histogram {

@@ -3,11 +3,20 @@
 //! serving-side latency histograms and throughput counters.
 
 pub mod hist;
+pub mod streaming;
 
+pub use streaming::{EvalAccumulator, IsAccumulator, StreamingStats};
+
+use crate::json;
 use crate::linalg::{mean_cov, trace, trace_sqrt_product};
-use crate::runtime::FidNet;
-use crate::tensor::Tensor;
+use crate::runtime::{FidNet, ModelMeta, Runtime};
+use crate::tensor::{read_f32_file, Tensor};
 use crate::{bail, Result};
+
+/// Cap on reference-split samples used for the FID* reference Gaussian
+/// (shared by the offline bypass, the engine eval path and the benches,
+/// so all three fit the same reference).
+pub const REF_SAMPLES: usize = 2048;
 
 /// First/second moments of feature activations over a sample set.
 #[derive(Clone, Debug)]
@@ -26,7 +35,11 @@ pub fn extract_features(net: &FidNet, images: &Tensor) -> Result<(Tensor, Tensor
     if dim != net.meta.dim {
         bail!("image dim {dim} != fid net dim {}", net.meta.dim);
     }
-    let bucket = *net.meta.buckets.last().expect("fid net has no buckets");
+    let bucket = *net
+        .meta
+        .buckets
+        .last()
+        .ok_or_else(|| crate::anyhow!("fid net has no compiled buckets"))?;
     let fd = net.meta.feat_dim;
     let nc = net.meta.n_classes;
     let mut feats = Tensor::zeros(&[n, fd]);
@@ -53,10 +66,16 @@ pub fn extract_features(net: &FidNet, images: &Tensor) -> Result<(Tensor, Tensor
     Ok((feats, logits))
 }
 
-pub fn feature_stats(feats: &Tensor) -> FeatureStats {
+/// Fit a Gaussian to feature rows. Errors below two samples: the
+/// covariance is undefined there and `fid` would silently return
+/// garbage from a singular fit.
+pub fn feature_stats(feats: &Tensor) -> Result<FeatureStats> {
     let (n, d) = (feats.shape[0], feats.shape[1]);
+    if n < 2 {
+        bail!("feature stats need >= 2 samples, have {n}");
+    }
     let (mu, cov) = mean_cov(&feats.data, n, d);
-    FeatureStats { mu, cov, d, n }
+    Ok(FeatureStats { mu, cov, d, n })
 }
 
 /// Fréchet distance between two Gaussians fitted to feature sets:
@@ -112,8 +131,69 @@ pub fn evaluate(
     reference: &FeatureStats,
 ) -> Result<(f64, f64)> {
     let (feats, logits) = extract_features(net, generated_unit)?;
-    let stats = feature_stats(&feats);
+    let stats = feature_stats(&feats)?;
     Ok((fid(&stats, reference), inception_score(&logits)))
+}
+
+/// Like `evaluate`, but folds fid-bucket-sized chunks through an
+/// `EvalAccumulator` — the exact arithmetic the engine's eval lanes use,
+/// so the `--offline` bypass and the served path agree bit-for-bit when
+/// the lane order matches.
+pub fn evaluate_streaming(
+    net: &FidNet,
+    generated_unit: &Tensor,
+    reference: &FeatureStats,
+) -> Result<(f64, f64)> {
+    let chunk = *net
+        .meta
+        .buckets
+        .last()
+        .ok_or_else(|| crate::anyhow!("fid net has no compiled buckets"))?;
+    let (n, dim) = (generated_unit.shape[0], generated_unit.shape[1]);
+    let mut acc = EvalAccumulator::new(net.meta.feat_dim, net.meta.n_classes);
+    let mut start = 0;
+    while start < n {
+        let take = (n - start).min(chunk);
+        let part = Tensor::from_vec(
+            &[take, dim],
+            generated_unit.data[start * dim..(start + take) * dim].to_vec(),
+        )?;
+        let (f, l) = extract_features(net, &part)?;
+        acc.push(&f, &l);
+        start += take;
+    }
+    acc.finalize(reference)
+}
+
+/// The fid net paired with a score model's image geometry (the 16x16
+/// synth-cifar models share fid16; the 32x32 ones fid32).
+pub fn fid_net_name_for(dim: usize) -> &'static str {
+    if dim == 768 {
+        "fid16"
+    } else {
+        "fid32"
+    }
+}
+
+/// Load the feature net for `meta`'s geometry plus reference stats fitted
+/// to (at most `REF_SAMPLES` of) the exported eval split — shared by the
+/// offline bypass, the engine eval path, and the benches.
+pub fn reference_for<'rt>(
+    rt: &'rt Runtime,
+    meta: &ModelMeta,
+) -> Result<(FidNet<'rt>, FeatureStats)> {
+    let net = rt.fid_net(fid_net_name_for(meta.dim))?;
+    let data_meta =
+        json::parse_file(&rt.root().join("data").join(format!("{}.meta.json", meta.dataset)))?;
+    let n_total = data_meta.req("n")?.as_usize()?;
+    let n_ref = n_total.min(REF_SAMPLES);
+    let all = read_f32_file(
+        &rt.root().join("data").join(format!("{}.bin", meta.dataset)),
+        &[n_total, meta.dim],
+    )?;
+    let refs = Tensor::from_vec(&[n_ref, meta.dim], all.data[..n_ref * meta.dim].to_vec())?;
+    let (f, _) = extract_features(&net, &refs)?;
+    Ok((net, feature_stats(&f)?))
 }
 
 #[cfg(test)]
@@ -129,17 +209,17 @@ mod tests {
 
     #[test]
     fn fid_zero_for_same_distribution() {
-        let a = feature_stats(&gaussian_feats(4000, 8, 0.0, 1));
-        let b = feature_stats(&gaussian_feats(4000, 8, 0.0, 2));
+        let a = feature_stats(&gaussian_feats(4000, 8, 0.0, 1)).unwrap();
+        let b = feature_stats(&gaussian_feats(4000, 8, 0.0, 2)).unwrap();
         let v = fid(&a, &b);
         assert!(v < 0.05, "fid {v}");
     }
 
     #[test]
     fn fid_grows_with_mean_shift() {
-        let a = feature_stats(&gaussian_feats(2000, 8, 0.0, 1));
-        let b = feature_stats(&gaussian_feats(2000, 8, 0.5, 2));
-        let c = feature_stats(&gaussian_feats(2000, 8, 2.0, 3));
+        let a = feature_stats(&gaussian_feats(2000, 8, 0.0, 1)).unwrap();
+        let b = feature_stats(&gaussian_feats(2000, 8, 0.5, 2)).unwrap();
+        let c = feature_stats(&gaussian_feats(2000, 8, 2.0, 3)).unwrap();
         let f_ab = fid(&a, &b);
         let f_ac = fid(&a, &c);
         // mean term alone: d * shift^2 = 8*0.25 = 2 and 8*4 = 32
@@ -150,10 +230,10 @@ mod tests {
 
     #[test]
     fn fid_detects_covariance_mismatch() {
-        let a = feature_stats(&gaussian_feats(4000, 4, 0.0, 1));
+        let a = feature_stats(&gaussian_feats(4000, 4, 0.0, 1)).unwrap();
         let mut wide = gaussian_feats(4000, 4, 0.0, 2);
         wide.scale(2.0);
-        let b = feature_stats(&wide);
+        let b = feature_stats(&wide).unwrap();
         // analytic: tr(I + 4I - 2*2I) = d*(1+4-4) = 4 (per-dim (s1-s2)^2)
         let v = fid(&a, &b);
         assert!((v - 4.0).abs() < 0.5, "fid {v}");

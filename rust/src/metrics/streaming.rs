@@ -1,0 +1,335 @@
+//! Incremental FID*/IS* accumulators for engine-driven evaluation.
+//!
+//! The serving engine generates evaluation samples in scheduler-sized
+//! chunks, so the feature statistics must be *mergeable*: `StreamingStats`
+//! keeps (n, mean, comoment) and combines partitions with Chan's parallel
+//! update, which is exact for any split of the sample set — batches of
+//! any bucket width combine into the same mean/covariance (up to fp
+//! rounding) as a one-shot fit. `IsAccumulator` does the analogous
+//! decomposition for the Inception Score: per-sample `sum p ln p` plus
+//! class mass totals, from which the marginal term is recovered at
+//! finalization.
+//!
+//! `EvalAccumulator` bundles both; the engine's eval lanes and the
+//! `--offline` bypass in `main.rs` push identical chunk sequences through
+//! it, which is what makes the two paths comparable to 1e-6 (exact when
+//! the lane order matches).
+
+use super::FeatureStats;
+use crate::tensor::Tensor;
+use crate::{bail, Result};
+
+/// Mergeable first/second feature moments: n, mean, and the comoment
+/// matrix M2 = sum (x - mean)(x - mean)^T (row-major d x d, f64).
+#[derive(Clone, Debug)]
+pub struct StreamingStats {
+    d: usize,
+    n: usize,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl StreamingStats {
+    pub fn new(d: usize) -> StreamingStats {
+        StreamingStats { d, n: 0, mean: vec![0.0; d], m2: vec![0.0; d * d] }
+    }
+
+    /// Fit one batch of feature rows ([n, d], f32) — the same two-pass
+    /// mean/comoment arithmetic as `linalg::mean_cov`, unnormalized.
+    pub fn from_feats(feats: &Tensor) -> StreamingStats {
+        let (n, d) = (feats.shape[0], feats.shape[1]);
+        let mut s = StreamingStats::new(d);
+        s.n = n;
+        if n == 0 {
+            return s;
+        }
+        for r in 0..n {
+            let row = feats.row(r);
+            for j in 0..d {
+                s.mean[j] += row[j] as f64;
+            }
+        }
+        s.mean.iter_mut().for_each(|v| *v /= n as f64);
+        for r in 0..n {
+            let row = feats.row(r);
+            for i in 0..d {
+                let di = row[i] as f64 - s.mean[i];
+                for j in i..d {
+                    s.m2[i * d + j] += di * (row[j] as f64 - s.mean[j]);
+                }
+            }
+        }
+        for i in 0..d {
+            for j in i..d {
+                s.m2[j * d + i] = s.m2[i * d + j];
+            }
+        }
+        s
+    }
+
+    /// Fold a batch of feature rows in (fit, then Chan-merge).
+    pub fn push(&mut self, feats: &Tensor) {
+        self.merge(&StreamingStats::from_feats(feats));
+    }
+
+    /// Chan's parallel update: combine two partitions exactly.
+    ///   delta = mean_b - mean_a
+    ///   mean  = mean_a + delta * n_b / n
+    ///   M2    = M2_a + M2_b + outer(delta, delta) * n_a n_b / n
+    pub fn merge(&mut self, other: &StreamingStats) {
+        assert_eq!(self.d, other.d, "feature dims differ");
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            self.n = other.n;
+            self.mean.copy_from_slice(&other.mean);
+            self.m2.copy_from_slice(&other.m2);
+            return;
+        }
+        let d = self.d;
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let total = na + nb;
+        let delta: Vec<f64> = (0..d).map(|j| other.mean[j] - self.mean[j]).collect();
+        for j in 0..d {
+            self.mean[j] += delta[j] * nb / total;
+        }
+        let w = na * nb / total;
+        for i in 0..d {
+            for j in 0..d {
+                self.m2[i * d + j] += other.m2[i * d + j] + delta[i] * delta[j] * w;
+            }
+        }
+        self.n += other.n;
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Normalize into `FeatureStats` (cov = M2 / (n-1)); errors below two
+    /// samples, where the covariance is undefined/singular.
+    pub fn finalize(&self) -> Result<FeatureStats> {
+        if self.n < 2 {
+            bail!("feature stats need >= 2 samples, have {}", self.n);
+        }
+        let norm = 1.0 / (self.n as f64 - 1.0);
+        Ok(FeatureStats {
+            mu: self.mean.clone(),
+            cov: self.m2.iter().map(|v| v * norm).collect(),
+            d: self.d,
+            n: self.n,
+        })
+    }
+}
+
+/// Mergeable Inception Score* state. For softmax rows p_i:
+///   IS = exp( (sum_ij p_ij ln p_ij - sum_j c_j ln(c_j / n)) / n )
+/// with c_j = sum_i p_ij, which equals the one-shot
+/// `metrics::inception_score` decomposition of E_x KL(p(y|x) || p(y)).
+#[derive(Clone, Debug)]
+pub struct IsAccumulator {
+    n: usize,
+    sum_plogp: f64,
+    class_mass: Vec<f64>,
+}
+
+impl IsAccumulator {
+    pub fn new(n_classes: usize) -> IsAccumulator {
+        IsAccumulator { n: 0, sum_plogp: 0.0, class_mass: vec![0.0; n_classes] }
+    }
+
+    /// Fold a batch of raw logits ([n, C]); softmax arithmetic matches
+    /// `metrics::inception_score` (f64, max-subtracted).
+    pub fn push(&mut self, logits: &Tensor) {
+        let (n, c) = (logits.shape[0], logits.shape[1]);
+        assert_eq!(c, self.class_mass.len(), "class count differs");
+        let mut p = vec![0f64; c];
+        for i in 0..n {
+            let row = logits.row(i);
+            let m = row.iter().cloned().fold(f32::MIN, f32::max) as f64;
+            let mut z = 0f64;
+            for j in 0..c {
+                let e = ((row[j] as f64) - m).exp();
+                p[j] = e;
+                z += e;
+            }
+            for j in 0..c {
+                let pj = p[j] / z;
+                self.class_mass[j] += pj;
+                if pj > 1e-12 {
+                    self.sum_plogp += pj * pj.ln();
+                }
+            }
+        }
+        self.n += n;
+    }
+
+    pub fn merge(&mut self, other: &IsAccumulator) {
+        assert_eq!(self.class_mass.len(), other.class_mass.len());
+        self.n += other.n;
+        self.sum_plogp += other.sum_plogp;
+        for (a, b) in self.class_mass.iter_mut().zip(&other.class_mass) {
+            *a += b;
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn finalize(&self) -> Result<f64> {
+        if self.n == 0 {
+            bail!("inception score needs >= 1 sample");
+        }
+        let n = self.n as f64;
+        let mut marginal_term = 0f64;
+        for &cj in &self.class_mass {
+            if cj > 1e-12 {
+                marginal_term += cj * (cj / n).ln();
+            }
+        }
+        Ok(((self.sum_plogp - marginal_term) / n).exp())
+    }
+}
+
+/// FID* + IS* over a stream of (features, logits) chunks. Both the
+/// engine's eval lanes and the offline bypass feed chunks in sample
+/// order, so identical lane order gives bit-identical results.
+#[derive(Clone, Debug)]
+pub struct EvalAccumulator {
+    pub stats: StreamingStats,
+    pub is: IsAccumulator,
+}
+
+impl EvalAccumulator {
+    pub fn new(feat_dim: usize, n_classes: usize) -> EvalAccumulator {
+        EvalAccumulator { stats: StreamingStats::new(feat_dim), is: IsAccumulator::new(n_classes) }
+    }
+
+    pub fn push(&mut self, feats: &Tensor, logits: &Tensor) {
+        self.stats.push(feats);
+        self.is.push(logits);
+    }
+
+    pub fn merge(&mut self, other: &EvalAccumulator) {
+        self.stats.merge(&other.stats);
+        self.is.merge(&other.is);
+    }
+
+    pub fn n(&self) -> usize {
+        self.stats.n()
+    }
+
+    /// (FID* against `reference`, IS*).
+    pub fn finalize(&self, reference: &FeatureStats) -> Result<(f64, f64)> {
+        let stats = self.stats.finalize()?;
+        Ok((super::fid(&stats, reference), self.is.finalize()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{feature_stats, inception_score};
+    use crate::rng::Rng;
+
+    fn gaussian(n: usize, d: usize, seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        let data = (0..n * d).map(|_| r.normal() as f32).collect();
+        Tensor { shape: vec![n, d], data }
+    }
+
+    fn rows(t: &Tensor, lo: usize, hi: usize) -> Tensor {
+        let d = t.shape[1];
+        Tensor { shape: vec![hi - lo, d], data: t.data[lo * d..hi * d].to_vec() }
+    }
+
+    /// Satellite: merging uneven batch splits must match whole-batch
+    /// stats to tight tolerance.
+    #[test]
+    fn uneven_split_merge_matches_one_shot() {
+        let n = 1000;
+        let d = 8;
+        let feats = gaussian(n, d, 11);
+        let whole = feature_stats(&feats).unwrap();
+        // splits of widths a fused pool might actually produce
+        for splits in [vec![1, 7, 64, 128, 800], vec![999, 1], vec![500, 500]] {
+            assert_eq!(splits.iter().sum::<usize>(), n);
+            let mut acc = StreamingStats::new(d);
+            let mut lo = 0;
+            for w in splits {
+                acc.push(&rows(&feats, lo, lo + w));
+                lo += w;
+            }
+            let merged = acc.finalize().unwrap();
+            assert_eq!(merged.n, whole.n);
+            for (a, b) in merged.mu.iter().zip(&whole.mu) {
+                assert!((a - b).abs() < 1e-10, "mu {a} vs {b}");
+            }
+            for (a, b) in merged.cov.iter().zip(&whole.cov) {
+                assert!((a - b).abs() < 1e-9, "cov {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_batch_matches_one_shot_exactly() {
+        let feats = gaussian(64, 6, 3);
+        let one = feature_stats(&feats).unwrap();
+        let s = StreamingStats::from_feats(&feats).finalize().unwrap();
+        assert_eq!(s.mu, one.mu);
+        assert_eq!(s.cov, one.cov);
+    }
+
+    #[test]
+    fn finalize_guards_degenerate_sample_counts() {
+        assert!(StreamingStats::new(4).finalize().is_err());
+        let one = gaussian(1, 4, 1);
+        assert!(StreamingStats::from_feats(&one).finalize().is_err());
+        let two = gaussian(2, 4, 1);
+        assert!(StreamingStats::from_feats(&two).finalize().is_ok());
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let feats = gaussian(16, 4, 9);
+        let mut a = StreamingStats::from_feats(&feats);
+        a.merge(&StreamingStats::new(4));
+        let mut b = StreamingStats::new(4);
+        b.merge(&StreamingStats::from_feats(&feats));
+        let (fa, fb) = (a.finalize().unwrap(), b.finalize().unwrap());
+        assert_eq!(fa.mu, fb.mu);
+        assert_eq!(fa.cov, fb.cov);
+    }
+
+    #[test]
+    fn streaming_is_matches_one_shot() {
+        let mut r = Rng::new(7);
+        let (n, c) = (96, 5);
+        let data: Vec<f32> = (0..n * c).map(|_| (r.normal() * 2.0) as f32).collect();
+        let logits = Tensor { shape: vec![n, c], data };
+        let one = inception_score(&logits);
+        let mut acc = IsAccumulator::new(c);
+        for (lo, hi) in [(0usize, 1usize), (1, 33), (33, 96)] {
+            acc.push(&rows(&logits, lo, hi));
+        }
+        let v = acc.finalize().unwrap();
+        assert!((v - one).abs() < 1e-9, "{v} vs {one}");
+    }
+
+    /// Satellite: IS* of a single-sample batch is exactly 1 (marginal
+    /// equals the sample's own p(y|x), so the KL is 0).
+    #[test]
+    fn single_sample_inception_score_is_one() {
+        let logits = Tensor { shape: vec![1, 4], data: vec![3.0, -1.0, 0.5, 7.0] };
+        assert!((inception_score(&logits) - 1.0).abs() < 1e-12);
+        let mut acc = IsAccumulator::new(4);
+        acc.push(&logits);
+        assert!((acc.finalize().unwrap() - 1.0).abs() < 1e-12);
+    }
+}

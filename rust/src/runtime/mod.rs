@@ -36,6 +36,40 @@ pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
     buckets.iter().copied().find(|&b| b >= n).or_else(|| buckets.last().copied())
 }
 
+/// Compiled buckets of `program` for `variant`, ascending, read straight
+/// from the manifest — no PJRT client needed, so CLI bucket selection
+/// and the integration tests can size an engine before starting one.
+pub fn manifest_buckets(artifacts_dir: &Path, variant: &str, program: &str) -> Result<Vec<usize>> {
+    let man = json::parse_file(&artifacts_dir.join("manifest.json"))?;
+    let v = man
+        .req("variants")?
+        .get(variant)
+        .ok_or_else(|| anyhow!("variant '{variant}' not in manifest"))?;
+    let mut out = Vec::new();
+    for p in v.req("programs")?.as_arr()? {
+        if p.req("program")?.as_str()? == program {
+            out.push(p.req("bucket")?.as_usize()?);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
+/// Largest compiled `adaptive_step` bucket <= `cap` for `variant` (or
+/// the smallest compiled one when all exceed `cap`) — the ladder-capped
+/// engine-width policy shared by `gofast evaluate` and the tests.
+pub fn manifest_engine_bucket(artifacts_dir: &Path, variant: &str, cap: usize) -> Result<usize> {
+    let buckets = manifest_buckets(artifacts_dir, variant, "adaptive_step")?;
+    buckets
+        .iter()
+        .rev()
+        .find(|&&b| b <= cap)
+        .or(buckets.first())
+        .copied()
+        .ok_or_else(|| anyhow!("{variant} has no adaptive_step artifacts"))
+}
+
 /// Number of score-network evaluations a single call of each program
 /// performs — the paper's cost metric (NFE).
 pub fn score_evals_per_call(program: &str) -> u64 {

@@ -4,11 +4,18 @@
 //!   -> {"op":"generate","n":16,"eps_rel":0.05,"seed":7,"model":"vp"}
 //!   <- {"ok":true,"model":"vp","n":16,"h":16,"w":16,"nfe":[...],
 //!       "wall_s":...,"queued_s":...,"images_b64":"<f32-le raw, base64>"}
+//!   -> {"op":"evaluate","samples":256,"eps_rel":0.05,"seed":7,
+//!       "model":"vp","solver":"adaptive"}
+//!   <- {"ok":true,"model":"vp","solver":"adaptive","samples":256,
+//!       "fid":...,"is":...,"mean_nfe":...,"wall_s":...,
+//!       "steps_per_bucket":{"<bucket>":steps,...}}
 //!   -> {"op":"stats"}
 //!   <- {"ok":true,"requests_done":...,"models":[...],
 //!       "steps_per_bucket":{"<bucket>":steps,...},
 //!       "migrations_up":...,"migrations_down":...,
-//!       "wasted_lane_steps":...,"occupied_lane_steps":...,...}
+//!       "wasted_lane_steps":...,"occupied_lane_steps":...,
+//!       "evals_done":...,"eval_active":...,"eval_samples_done":...,
+//!       "eval_lane_steps":...,...}
 //!   -> {"op":"ping"} / <- {"ok":true}
 //!
 //! `model` is optional and defaults to the engine's first configured
@@ -17,12 +24,27 @@
 //! adaptive_step executions at each slot-pool width the occupancy-aware
 //! scheduler ran (docs/ARCHITECTURE.md §Scheduler).
 //!
+//! `evaluate` runs FID*/IS* *through the serving path*: its samples are
+//! admitted as evaluation lanes through the same scheduler/registry
+//! machinery as `generate` traffic (docs/ARCHITECTURE.md §Evaluation).
+//! `solver` is optional and must be "adaptive" — the engine's step loop
+//! is the paper's adaptive solver; other solvers evaluate offline via
+//! `gofast evaluate --offline`. `eps_rel` defaults to the server's
+//! solver tolerance, `samples` to 256 (must be >= 2: FID needs a
+//! non-singular feature covariance). The response `steps_per_bucket`
+//! counts the fused steps the serving pool ran while the job was in
+//! flight (shared with concurrent traffic on the same model); `fid`/`is`
+//! use the in-tree synthception feature net (values comparable within
+//! this repo only). The `stats` op's `evals_done` / `eval_active` /
+//! `eval_samples_done` / `eval_lane_steps` counters expose the eval-lane
+//! share of engine work.
+//!
 //! One OS thread per connection (requests within a connection pipeline
 //! through the shared engine, which does the real batching).
 
 pub mod b64;
 
-use crate::coordinator::{EngineClient, EngineStats};
+use crate::coordinator::{EngineClient, EngineStats, EvalRequest};
 use crate::json::{self, Value};
 use crate::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Write};
@@ -119,6 +141,43 @@ fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Resu
             }
             Ok(Value::obj(pairs))
         }
+        "evaluate" => {
+            let samples = req.get("samples").map(|v| v.as_usize()).transpose()?.unwrap_or(256);
+            let eps_rel = req
+                .get("eps_rel")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .unwrap_or(cfg.default_eps_rel);
+            let seed = req.get("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64;
+            let model =
+                req.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("").to_string();
+            let solver = req
+                .get("solver")
+                .map(|v| v.as_str())
+                .transpose()?
+                .unwrap_or("adaptive")
+                .to_string();
+            let r = engine.evaluate(EvalRequest { model, solver, samples, eps_rel, seed })?;
+            Ok(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("model", Value::str(r.model)),
+                ("solver", Value::str(r.solver)),
+                ("samples", Value::num(r.samples as f64)),
+                ("fid", Value::num(r.fid)),
+                ("is", Value::num(r.is)),
+                ("mean_nfe", Value::num(r.mean_nfe)),
+                ("wall_s", Value::num(r.wall_s)),
+                (
+                    "steps_per_bucket",
+                    Value::Obj(
+                        r.steps_per_bucket
+                            .iter()
+                            .map(|(b, n)| (b.to_string(), Value::num(*n as f64)))
+                            .collect(),
+                    ),
+                ),
+            ]))
+        }
         other => Err(anyhow!("unknown op '{other}'")),
     }
 }
@@ -151,6 +210,10 @@ fn stats_to_json(s: &EngineStats) -> Value {
         ("migrations_down", Value::num(s.migrations_down as f64)),
         ("wasted_lane_steps", Value::num(s.wasted_lane_steps as f64)),
         ("occupied_lane_steps", Value::num(s.occupied_lane_steps as f64)),
+        ("evals_done", Value::num(s.evals_done as f64)),
+        ("eval_active", Value::num(s.eval_active as f64)),
+        ("eval_samples_done", Value::num(s.eval_samples_done as f64)),
+        ("eval_lane_steps", Value::num(s.eval_lane_steps as f64)),
     ])
 }
 
@@ -168,6 +231,20 @@ pub struct ClientGenResult {
     pub nfe: Vec<u64>,
     pub wall_s: f64,
     pub queued_s: f64,
+}
+
+/// Parsed `evaluate` response (wire format in the module docs).
+#[derive(Clone, Debug)]
+pub struct ClientEvalResult {
+    pub model: String,
+    pub solver: String,
+    pub samples: usize,
+    pub fid: f64,
+    pub is: f64,
+    pub mean_nfe: f64,
+    pub wall_s: f64,
+    /// Fused steps per pool width consumed while the run was in flight.
+    pub steps_per_bucket: Vec<(usize, u64)>,
 }
 
 impl Client {
@@ -254,6 +331,53 @@ impl Client {
             nfe,
             wall_s: v.req("wall_s")?.as_f64()?,
             queued_s: v.req("queued_s")?.as_f64()?,
+        })
+    }
+
+    /// FID*/IS* evaluation served through the engine ("" model/solver =
+    /// the server defaults; the engine only serves "adaptive").
+    pub fn evaluate(
+        &mut self,
+        model: &str,
+        solver: &str,
+        samples: usize,
+        eps_rel: f64,
+        seed: u64,
+    ) -> Result<ClientEvalResult> {
+        let mut pairs = vec![
+            ("op", Value::str("evaluate")),
+            ("samples", Value::num(samples as f64)),
+            ("eps_rel", Value::num(eps_rel)),
+            ("seed", Value::num(seed as f64)),
+        ];
+        if !model.is_empty() {
+            pairs.push(("model", Value::str(model)));
+        }
+        if !solver.is_empty() {
+            pairs.push(("solver", Value::str(solver)));
+        }
+        let v = self.call(&Value::obj(pairs))?;
+        let mut steps_per_bucket = v
+            .req("steps_per_bucket")?
+            .members()
+            .iter()
+            .map(|(b, n)| {
+                Ok((
+                    b.parse::<usize>().map_err(|_| anyhow!("bad bucket key '{b}'"))?,
+                    n.as_f64()? as u64,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        steps_per_bucket.sort();
+        Ok(ClientEvalResult {
+            model: v.req("model")?.as_str()?.to_string(),
+            solver: v.req("solver")?.as_str()?.to_string(),
+            samples: v.req("samples")?.as_usize()?,
+            fid: v.req("fid")?.as_f64()?,
+            is: v.req("is")?.as_f64()?,
+            mean_nfe: v.req("mean_nfe")?.as_f64()?,
+            wall_s: v.req("wall_s")?.as_f64()?,
+            steps_per_bucket,
         })
     }
 }

@@ -279,6 +279,103 @@ pub fn run_composed(ctx: &Ctx, rng: &mut Rng, opts: &AdaptiveOpts) -> Result<Sol
     finishup(ctx, st)
 }
 
+/// Algorithm 1 with *per-lane* RNG streams matching the serving engine's
+/// lane semantics exactly: lane `i` owns `Rng::new(seed).fork(base + i)`,
+/// draws its prior and every step's noise from that stream, and carries
+/// `(t, h)` through the same clamp/controller arithmetic as
+/// `coordinator::engine`'s step loop. Because no lane's update reads
+/// another lane's state (§3.1.5), a sample's trajectory here is
+/// bit-identical to the one the engine produces for the same
+/// `(seed, base + i, eps_rel)` — regardless of pool width, migration, or
+/// co-batched traffic. This is the `--offline` evaluation bypass the
+/// engine-vs-offline agreement check is defined against.
+///
+/// `count` lanes (<= `ctx.bucket`) run batched at `ctx.bucket`; returns
+/// `count` rows. Controller parameters come from `opts` (engine defaults:
+/// `h_init` 0.01, `r` 0.9, `safety` 0.9).
+pub fn run_lanes(
+    ctx: &Ctx,
+    seed: u64,
+    base: u64,
+    count: usize,
+    opts: &AdaptiveOpts,
+) -> Result<SolveResult> {
+    let b = ctx.bucket;
+    if count > b {
+        crate::bail!("count {count} exceeds bucket {b}");
+    }
+    let d = ctx.dim();
+    let t_eps = ctx.process.t_eps();
+    let eps_abs = opts.resolve_eps_abs(&ctx.process);
+    let prior_std = ctx.process.prior_std() as f32;
+
+    let mut rngs: Vec<Rng> = (0..count).map(|i| Rng::new(seed).fork(base + i as u64)).collect();
+    let mut x = Tensor::zeros(&[b, d]);
+    for (i, rng) in rngs.iter_mut().enumerate() {
+        for v in x.row_mut(i).iter_mut() {
+            *v = rng.normal() as f32 * prior_std;
+        }
+    }
+    let mut st = AdaptiveState::new(x, opts.h_init, 1.0);
+    for i in count..b {
+        st.active[i] = false;
+    }
+    let mut z = Tensor::zeros(&[b, d]);
+    while !st.all_done() {
+        if st.steps >= opts.max_iters {
+            crate::bail!("adaptive solver exceeded {} iterations", opts.max_iters);
+        }
+        let mut t_in = vec![1.0f32; b];
+        let mut h_in = vec![0.0f32; b];
+        for i in 0..count {
+            if st.active[i] {
+                st.h[i] = st.h[i].min(st.t[i] - t_eps).max(0.0);
+                t_in[i] = st.t[i] as f32;
+                h_in[i] = st.h[i] as f32;
+                rngs[i].fill_normal(z.row_mut(i));
+            }
+        }
+        let t_t = Tensor { shape: vec![b], data: t_in };
+        let h_t = Tensor { shape: vec![b], data: h_in };
+        let ea = Tensor::scalar(eps_abs as f32);
+        let er = Tensor { shape: vec![b], data: vec![opts.eps_rel as f32; b] };
+        let out = ctx.model.exec(
+            "adaptive_step",
+            b,
+            &[&st.x, &st.xprev, &t_t, &h_t, &z, &ea, &er],
+            ctx.opts.fused_buffers,
+        )?;
+        let (xpp, xp, e2) = (&out[0], &out[1], &out[2]);
+        st.steps += 1;
+        for i in 0..count {
+            if !st.active[i] {
+                continue;
+            }
+            st.nfe[i] += 2;
+            let e = e2.data[i] as f64;
+            if e <= 1.0 {
+                st.x.row_mut(i).copy_from_slice(xpp.row(i));
+                st.xprev.row_mut(i).copy_from_slice(xp.row(i));
+                st.t[i] -= st.h[i];
+                if st.t[i] <= t_eps + 1e-12 {
+                    st.active[i] = false;
+                }
+            } else {
+                st.rejections += 1;
+            }
+            // engine controller form: h clamp floors at 0 so converged
+            // lanes park rather than going negative
+            let grow = opts.safety * e.max(1e-12).powf(-opts.r);
+            st.h[i] = (st.h[i] * grow).min((st.t[i] - t_eps).max(0.0));
+        }
+    }
+    let mut res = finishup(ctx, st)?;
+    // trim the padding lanes off the result
+    res.x = Tensor::from_vec(&[count, d], res.x.data[..count * d].to_vec())?;
+    res.nfe_per_sample.truncate(count);
+    Ok(res)
+}
+
 fn finishup(ctx: &Ctx, mut st: AdaptiveState) -> Result<SolveResult> {
     if ctx.opts.denoise {
         let t_end = t_vec(ctx.bucket, ctx.process.t_eps());

@@ -2,7 +2,9 @@
 //! (pass vacuously with a note) when `make artifacts` has not run yet,
 //! so `cargo test` works at any build stage.
 
-use std::path::PathBuf;
+#![allow(dead_code)] // each integration test binary uses a subset
+
+use std::path::{Path, PathBuf};
 
 pub fn artifacts() -> Option<PathBuf> {
     let p = PathBuf::from("artifacts");
@@ -12,6 +14,19 @@ pub fn artifacts() -> Option<PathBuf> {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         None
     }
+}
+
+/// Widest compiled `adaptive_step` bucket for `vp`, capped at 16 — the
+/// engine width the coordinator/server tests run at. Read from the
+/// manifest (no PJRT needed) so the tests also pass against miniature
+/// artifact sets (CI builds one with STEP_BUCKETS=(1,2)).
+pub fn engine_bucket(dir: &Path) -> usize {
+    gofast::runtime::manifest_engine_bucket(dir, "vp", 16).unwrap_or(16)
+}
+
+/// All compiled `adaptive_step` buckets for `vp`, ascending.
+pub fn step_buckets(dir: &Path) -> Vec<usize> {
+    gofast::runtime::manifest_buckets(dir, "vp", "adaptive_step").unwrap_or_default()
 }
 
 #[macro_export]

@@ -8,8 +8,8 @@ use gofast::coordinator::{Engine, EngineConfig};
 
 fn engine() -> Option<Engine> {
     let dir = common::artifacts()?;
-    let mut cfg = EngineConfig::new(dir, "vp");
-    cfg.bucket = 16;
+    let mut cfg = EngineConfig::new(dir.clone(), "vp");
+    cfg.bucket = common::engine_bucket(&dir);
     Some(Engine::start(cfg).expect("engine start"))
 }
 
@@ -87,8 +87,8 @@ fn zero_sample_request_is_rejected() {
 #[test]
 fn admission_control_rejects_overflow() {
     let Some(dir) = common::artifacts() else { return };
-    let mut cfg = EngineConfig::new(dir, "vp");
-    cfg.bucket = 16;
+    let mut cfg = EngineConfig::new(dir.clone(), "vp");
+    cfg.bucket = common::engine_bucket(&dir);
     cfg.max_queue_samples = 8;
     let engine = Engine::start(cfg).unwrap();
     let err = engine.client().generate(100, 0.5, 0).unwrap_err().to_string();
@@ -119,11 +119,16 @@ fn unknown_model_is_rejected() {
 #[test]
 fn migrating_engine_matches_fixed_engine() {
     let Some(dir) = common::artifacts() else { return };
+    let bucket = common::engine_bucket(&dir);
+    if common::step_buckets(&dir).iter().filter(|&&b| b <= bucket).count() < 2 {
+        eprintln!("skipping: needs a multi-rung bucket ladder");
+        return;
+    }
     let mut fixed_cfg = EngineConfig::new(dir.clone(), "vp");
-    fixed_cfg.bucket = 16;
+    fixed_cfg.bucket = bucket;
     fixed_cfg.migrate = false;
     let mut mig_cfg = EngineConfig::new(dir, "vp");
-    mig_cfg.bucket = 16;
+    mig_cfg.bucket = bucket;
     mig_cfg.migrate = true;
     let fixed = Engine::start(fixed_cfg).unwrap();
     let migr = Engine::start(mig_cfg).unwrap();
@@ -138,7 +143,7 @@ fn migrating_engine_matches_fixed_engine() {
     // lane-steps than the fixed pool on the identical workload
     let ms = migr.client().stats().unwrap();
     let narrow: u64 =
-        ms.steps_per_bucket.iter().filter(|(b, _)| *b < 16).map(|(_, s)| *s).sum();
+        ms.steps_per_bucket.iter().filter(|(b, _)| *b < bucket).map(|(_, s)| *s).sum();
     assert!(narrow > 0, "no steps below max bucket: {:?}", ms.steps_per_bucket);
     assert!(ms.migrations_down > 0, "no downshift recorded");
     let fs = fixed.client().stats().unwrap();
@@ -177,9 +182,9 @@ fn multi_model_round_robin_serves_both() {
         eprintln!("skipping: needs >= 2 variants, have {names:?}");
         return;
     }
-    let mut cfg = EngineConfig::new(dir, &names[0]);
+    let mut cfg = EngineConfig::new(dir.clone(), &names[0]);
     cfg.models = vec![names[0].clone(), names[1].clone()];
-    cfg.bucket = 16;
+    cfg.bucket = common::engine_bucket(&dir);
     let engine = Engine::start(cfg).unwrap();
     let mut handles = Vec::new();
     for name in [names[0].clone(), names[1].clone()] {

@@ -1,0 +1,164 @@
+//! Integration: engine-served FID*/IS* evaluation — agreement with the
+//! offline per-lane bypass, eval-lane counters, and isolation from
+//! concurrent client traffic. Skips (with a note) when artifacts or the
+//! fid net/eval split are missing.
+
+mod common;
+
+use gofast::coordinator::{Engine, EngineConfig, EvalRequest};
+use gofast::metrics;
+use gofast::runtime::Runtime;
+use gofast::solvers::{adaptive, Ctx, SolveOpts};
+use gofast::tensor::Tensor;
+use std::path::{Path, PathBuf};
+
+/// The eval path additionally needs the feature net + exported split.
+fn eval_artifacts() -> Option<PathBuf> {
+    let dir = common::artifacts()?;
+    for need in ["params/fid16.bin", "data/synth-cifar.bin"] {
+        if !dir.join(need).exists() {
+            eprintln!("skipping: {need} not built (run `make artifacts`)");
+            return None;
+        }
+    }
+    Some(dir)
+}
+
+fn start_engine(dir: &Path) -> Engine {
+    let mut cfg = EngineConfig::new(dir.to_path_buf(), "vp");
+    cfg.bucket = common::engine_bucket(dir);
+    Engine::start(cfg).expect("engine start")
+}
+
+fn eval_req(samples: usize, eps_rel: f64, seed: u64) -> EvalRequest {
+    EvalRequest { model: String::new(), solver: "adaptive".to_string(), samples, eps_rel, seed }
+}
+
+/// Offline twin of the engine's eval lanes: per-sample forked RNG
+/// streams, chunked generation, and the same streaming accumulator
+/// arithmetic (this is what `gofast evaluate --offline` runs for the
+/// adaptive solver).
+fn offline_eval(dir: &Path, samples: usize, eps_rel: f64, seed: u64) -> (f64, f64, f64) {
+    let rt = Runtime::new(dir).unwrap();
+    let model = rt.model("vp").unwrap();
+    let (net, refstats) = metrics::reference_for(&rt, &model.meta).unwrap();
+    let bucket = common::engine_bucket(dir);
+    let ctx = Ctx::new(&model, bucket, SolveOpts::default());
+    let opts = adaptive::AdaptiveOpts { eps_rel, ..Default::default() };
+    let mut images = Tensor::zeros(&[samples, model.meta.dim]);
+    let mut nfe_sum = 0u64;
+    let mut done = 0;
+    while done < samples {
+        let take = (samples - done).min(bucket);
+        let res = adaptive::run_lanes(&ctx, seed, done as u64, take, &opts).unwrap();
+        for i in 0..take {
+            images.row_mut(done + i).copy_from_slice(res.x.row(i));
+        }
+        nfe_sum += res.nfe_per_sample.iter().sum::<u64>();
+        done += take;
+    }
+    model.meta.process().to_unit_range(&mut images);
+    let (fid, is) = metrics::evaluate_streaming(&net, &images, &refstats).unwrap();
+    (fid, is, nfe_sum as f64 / samples as f64)
+}
+
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1.0)
+}
+
+/// The acceptance criterion: `evaluate` served through the engine must
+/// match the offline bypass on the same model/solver/seed. 70 samples
+/// spans two fid-bucket chunks, so chunked admission (`sample_base`) and
+/// the ordered Chan merge are both on the line.
+#[test]
+fn engine_evaluate_matches_offline_bypass() {
+    let Some(dir) = eval_artifacts() else { return };
+    let (samples, eps, seed) = (70usize, 0.5f64, 11u64);
+    let engine = start_engine(&dir);
+    let served = engine.client().evaluate(eval_req(samples, eps, seed)).unwrap();
+    assert_eq!(served.samples, samples);
+    assert_eq!(served.model, "vp");
+    let consumed: u64 = served.steps_per_bucket.iter().map(|(_, n)| *n).sum();
+    assert!(consumed > 0, "evaluate consumed no steps: {:?}", served.steps_per_bucket);
+
+    let stats = engine.client().stats().unwrap();
+    assert_eq!(stats.evals_done, 1);
+    assert_eq!(stats.eval_samples_done, samples as u64);
+    assert_eq!(stats.eval_active, 0);
+    assert!(stats.eval_lane_steps > 0);
+    // eval samples are engine work too
+    assert_eq!(stats.samples_done, samples as u64);
+    // ...but not client requests
+    assert_eq!(stats.requests_done, 0);
+    drop(engine);
+
+    let (fid, is, mean_nfe) = offline_eval(&dir, samples, eps, seed);
+    assert!(
+        rel(served.fid, fid) <= 1e-6,
+        "FID* disagrees: served {} vs offline {}",
+        served.fid,
+        fid
+    );
+    assert!(rel(served.is, is) <= 1e-6, "IS* disagrees: served {} vs offline {}", served.is, is);
+    assert_eq!(served.mean_nfe, mean_nfe, "NFE disagrees");
+    assert!(served.is >= 1.0 - 1e-9);
+    assert!(served.fid.is_finite() && served.fid >= 0.0);
+}
+
+/// Per-lane RNG streams make an eval run independent of co-batched
+/// traffic: the same request must produce the same numbers with and
+/// without concurrent client generates sharing the pool.
+#[test]
+fn evaluate_is_deterministic_under_concurrent_traffic() {
+    let Some(dir) = eval_artifacts() else { return };
+    let (samples, eps, seed) = (6usize, 0.5f64, 3u64);
+    let quiet = {
+        let engine = start_engine(&dir);
+        engine.client().evaluate(eval_req(samples, eps, seed)).unwrap()
+    };
+    let busy = {
+        let engine = start_engine(&dir);
+        let bg = {
+            let c = engine.client();
+            std::thread::spawn(move || c.generate(8, 0.1, 999).unwrap())
+        };
+        let r = engine.client().evaluate(eval_req(samples, eps, seed)).unwrap();
+        bg.join().unwrap();
+        r
+    };
+    assert!(rel(quiet.fid, busy.fid) <= 1e-9, "fid {} vs {}", quiet.fid, busy.fid);
+    assert!(rel(quiet.is, busy.is) <= 1e-9, "is {} vs {}", quiet.is, busy.is);
+    assert_eq!(quiet.mean_nfe, busy.mean_nfe);
+}
+
+#[test]
+fn evaluate_validates_request() {
+    let Some(dir) = common::artifacts() else { return };
+    let engine = start_engine(&dir);
+    let err = engine
+        .client()
+        .evaluate(EvalRequest {
+            model: String::new(),
+            solver: "ode".to_string(),
+            samples: 2,
+            eps_rel: 0.5,
+            seed: 0,
+        })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("adaptive"), "{err}");
+    let err = engine.client().evaluate(eval_req(0, 0.5, 0)).unwrap_err().to_string();
+    assert!(err.contains("samples"), "{err}");
+    let err = engine
+        .client()
+        .evaluate(EvalRequest {
+            model: "nope".to_string(),
+            solver: String::new(),
+            samples: 2,
+            eps_rel: 0.5,
+            seed: 0,
+        })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown model"), "{err}");
+}

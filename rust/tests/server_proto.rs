@@ -10,8 +10,8 @@ use std::net::{TcpListener, TcpStream};
 
 fn spawn_server() -> Option<(Engine, std::net::SocketAddr)> {
     let dir = common::artifacts()?;
-    let mut cfg = EngineConfig::new(dir, "vp");
-    cfg.bucket = 16;
+    let mut cfg = EngineConfig::new(dir.clone(), "vp");
+    cfg.bucket = common::engine_bucket(&dir);
     let engine = Engine::start(cfg).expect("engine");
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -75,6 +75,42 @@ fn unknown_op_is_rejected() {
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("unknown op"), "{line}");
+}
+
+/// The evaluate op goes through the engine's eval lanes and reports the
+/// run in both the response and the stats counters.
+#[test]
+fn evaluate_roundtrip_reports_metrics_and_counters() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    // eval additionally needs the fid net + exported eval split
+    for need in ["artifacts/params/fid16.bin", "artifacts/data/synth-cifar.bin"] {
+        if !std::path::Path::new(need).exists() {
+            eprintln!("skipping: {need} not built");
+            return;
+        }
+    }
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let r = c.evaluate("", "adaptive", 3, 0.5, 7).unwrap();
+    assert_eq!(r.samples, 3);
+    assert_eq!(r.solver, "adaptive");
+    assert!(r.fid.is_finite() && r.fid >= 0.0, "fid {}", r.fid);
+    assert!(r.is >= 1.0 - 1e-9, "is {}", r.is);
+    assert!(r.mean_nfe >= 3.0, "nfe {}", r.mean_nfe);
+    let consumed: u64 = r.steps_per_bucket.iter().map(|(_, n)| *n).sum();
+    assert!(consumed > 0, "no steps consumed: {:?}", r.steps_per_bucket);
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("evals_done").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(stats.get("eval_samples_done").unwrap().as_f64().unwrap(), 3.0);
+    assert!(stats.get("eval_lane_steps").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(stats.get("eval_active").unwrap().as_f64().unwrap(), 0.0);
+}
+
+#[test]
+fn evaluate_rejects_unknown_solver() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let err = c.evaluate("", "ddim", 2, 0.5, 0).unwrap_err().to_string();
+    assert!(err.contains("adaptive"), "{err}");
 }
 
 #[test]

@@ -1,16 +1,19 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build + tests + formatting. Artifact-dependent
-# integration tests skip themselves when `make artifacts` has not run,
-# so this works on a fresh checkout.
+# Tier-1 verification: build + tests + lints + formatting.
+# Artifact-dependent integration tests skip themselves when
+# `make artifacts` has not run, so this works on a fresh checkout; the CI
+# `artifacts` job builds a miniature set so they actually execute there.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 if [ ! -f artifacts/manifest.json ]; then
   echo "NOTE: artifacts/ absent — artifact-gated integration tests (incl. the" >&2
-  echo "bucket-migration determinism tests) self-skip; run 'make artifacts'" >&2
-  echo "before trusting a green run for serving-path coverage." >&2
+  echo "bucket-migration determinism and engine-evaluate tests) self-skip; run" >&2
+  echo "'make artifacts' (or see the ci.yml artifacts job for the miniature" >&2
+  echo "recipe) before trusting a green run for serving-path coverage." >&2
 fi
 
 cargo build --release
 cargo test --release -q
+cargo clippy --all-targets -- -D warnings
 cargo fmt --check
