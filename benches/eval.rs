@@ -1,15 +1,17 @@
 //! FID*-vs-NFE through the serving path — the paper's headline
-//! quality-vs-speed tradeoff, measured on the same scheduler/registry
-//! machinery that serves traffic, so solver *and* scheduler regressions
-//! move the same metric.
+//! quality-vs-speed tradeoff (Table 1's fixed-vs-adaptive framing),
+//! measured on the same scheduler/registry machinery that serves
+//! traffic, so solver *and* scheduler regressions move the same metric.
 //!
-//! Rows:
-//! * served / adaptive — `evaluate` requests against an in-process
-//!   engine at a sweep of `eps_rel` tolerances (the adaptive solver's
-//!   quality knob; each tolerance is one point of the FID*-vs-NFE curve);
-//! * offline / em, ddim — the paper's fixed-step baselines at step
-//!   budgets matched to each adaptive run's NFE, through the engine
-//!   bypass (the engine's step loop only speaks Algorithm 1).
+//! Every solver is *served*: adaptive at a sweep of `eps_rel`
+//! tolerances, then EM and DDIM (VP only) at step budgets matched to
+//! each adaptive run's NFE — all through `evaluate` requests against an
+//! in-process engine's solver-program lane pools. Each served row is
+//! paired with its offline per-lane twin (`spec::run_lanes` + the same
+//! streaming accumulator), and the CSV/JSON carry the served-vs-offline
+//! NFE/FID*/IS* deltas per solver, so the bench doubles as a
+//! serving-path parity check (`tools/check_eval.py` enforces thresholds
+//! on the JSON in CI).
 //!
 //! Output: table on stdout, CSV + JSON under bench_out/ (the JSON is
 //! uploaded as a CI artifact on main-branch pushes).
@@ -25,7 +27,7 @@ use gofast::bench::Table;
 use gofast::coordinator::{Engine, EngineConfig, EvalRequest};
 use gofast::json::Value;
 use gofast::runtime::Runtime;
-use gofast::solvers::Spec;
+use gofast::solvers::{adaptive, spec, ServingSolver};
 use gofast::Result;
 
 struct Row {
@@ -36,6 +38,28 @@ struct Row {
     fid: f64,
     is: f64,
     wall_s: f64,
+    /// served - offline deltas (served rows only).
+    d_nfe: Option<f64>,
+    d_fid: Option<f64>,
+    d_is: Option<f64>,
+}
+
+/// Offline per-lane twin of a served evaluation —
+/// `spec::evaluate_offline_lanes`, the same implementation behind
+/// `gofast evaluate --offline` and the agreement tests.
+fn offline_eval(
+    model: &gofast::runtime::Model,
+    net: &gofast::runtime::FidNet,
+    refstats: &gofast::metrics::FeatureStats,
+    solver: ServingSolver,
+    samples: usize,
+    eps_rel: f64,
+    seed: u64,
+    cap: usize,
+) -> Result<(f64, f64, f64, f64)> {
+    let opts = adaptive::AdaptiveOpts { eps_rel, ..Default::default() };
+    let r = spec::evaluate_offline_lanes(model, net, refstats, solver, samples, seed, &opts, cap)?;
+    Ok((r.fid, r.is, r.mean_nfe, r.wall_s))
 }
 
 fn main() -> Result<()> {
@@ -47,15 +71,19 @@ fn main() -> Result<()> {
     let seed = args.u64_or("seed", 0)?;
     let max_bucket = args.usize_or("bucket", 16)?;
 
-    // local runtime for bucket discovery + the offline baseline rows
+    // local runtime for bucket discovery + the offline twin rows
     let rt = Runtime::new(&dir)?;
     let model = rt.model(&model_name)?;
+    let (net, refstats) = ref_stats(&rt, &model)?;
+    let is_vp = model.meta.sde_kind == "vp";
     let bucket = *model
         .buckets("adaptive_step")
         .iter()
         .filter(|&&b| b <= max_bucket)
         .max()
         .unwrap_or(&model.buckets("adaptive_step")[0]);
+    // a ddim pool exists only when a rung fits under the engine cap
+    let has_ddim = model.buckets("ddim_step").iter().any(|&b| b <= bucket);
 
     let mut ecfg = EngineConfig::new(&dir, &model_name);
     ecfg.bucket = bucket;
@@ -64,63 +92,91 @@ fn main() -> Result<()> {
 
     let mut rows: Vec<Row> = Vec::new();
     println!("== eval: model={model_name} samples={samples} bucket={bucket} eps={eps_list:?} ==");
-    for &eps in &eps_list {
+
+    // one served + offline pair per (solver, knob); returns the served
+    // mean NFE (to match fixed-step budgets to the adaptive sweep)
+    let mut measure = |solver: ServingSolver, eps_rel: f64, knob: String| -> Result<f64> {
         let r = client.evaluate(EvalRequest {
             model: String::new(),
-            solver: "adaptive".into(),
+            solver,
             samples,
-            eps_rel: eps,
+            eps_rel,
             seed,
         })?;
+        let (off_fid, off_is, off_nfe, off_wall) =
+            offline_eval(&model, &net, &refstats, solver, samples, eps_rel, seed, max_bucket)?;
         println!(
-            "  [served] adaptive eps={eps} NFE={:.1} FID*={:.3} IS*={:.3} ({:.1}s)",
-            r.mean_nfe, r.fid, r.is, r.wall_s
+            "  [served]  {} {knob} NFE={:.1} FID*={:.3} IS*={:.3} ({:.1}s)  \
+             [offline d_nfe={:+.1e} d_fid={:+.1e}]",
+            solver.name(),
+            r.mean_nfe,
+            r.fid,
+            r.is,
+            r.wall_s,
+            r.mean_nfe - off_nfe,
+            r.fid - off_fid,
         );
         rows.push(Row {
             path: "served",
-            solver: "adaptive".into(),
-            knob: format!("eps={eps}"),
+            solver: solver.name().into(),
+            knob: knob.clone(),
             mean_nfe: r.mean_nfe,
             fid: r.fid,
             is: r.is,
             wall_s: r.wall_s,
+            d_nfe: Some(r.mean_nfe - off_nfe),
+            d_fid: Some(r.fid - off_fid),
+            d_is: Some(r.is - off_is),
         });
+        let served_nfe = r.mean_nfe;
+        rows.push(Row {
+            path: "offline",
+            solver: solver.name().into(),
+            knob,
+            mean_nfe: off_nfe,
+            fid: off_fid,
+            is: off_is,
+            wall_s: off_wall,
+            d_nfe: None,
+            d_fid: None,
+            d_is: None,
+        });
+        Ok(served_nfe)
+    };
+
+    let mut adaptive_nfes: Vec<f64> = Vec::new();
+    for &eps in &eps_list {
+        adaptive_nfes.push(measure(ServingSolver::Adaptive, eps, format!("eps={eps}"))?);
     }
+    // the paper's fixed-step baselines at matched NFE budgets — served
+    // from their own lane pools
+    for nfe in adaptive_nfes {
+        let steps = em_steps_for_nfe(nfe);
+        measure(ServingSolver::Em { steps }, 0.05, format!("steps={steps}"))?;
+        if is_vp && has_ddim {
+            measure(ServingSolver::Ddim { steps }, 0.05, format!("steps={steps}"))?;
+        }
+    }
+    if !(is_vp && has_ddim) {
+        println!("  (ddim rows skipped: model is not VP or has no ddim_step artifacts)");
+    }
+
     let stats = client.stats()?;
     println!(
         "  engine: evals_done={} eval_samples_done={} eval_lane_steps={}",
         stats.evals_done, stats.eval_samples_done, stats.eval_lane_steps
     );
-
-    // offline fixed-step baselines at matched NFE budgets
-    let (net, refstats) = ref_stats(&rt, &model)?;
-    let adaptive_nfes: Vec<f64> = rows.iter().map(|r| r.mean_nfe).collect();
-    for nfe in adaptive_nfes {
-        let steps = em_steps_for_nfe(nfe);
-        let mut specs = vec![(Spec::Em(steps), "em")];
-        if model.meta.sde_kind == "vp" {
-            specs.push((Spec::Ddim(steps), "ddim"));
-        }
-        for (spec, name) in specs {
-            let out = generate(&model, &spec, samples, seed)?;
-            let (fid, is) = eval_fid(&net, &refstats, &out)?;
-            println!(
-                "  [offline] {name} steps={steps} NFE={:.1} FID*={:.3} IS*={:.3} ({:.1}s)",
-                out.mean_nfe, fid, is, out.wall_s
-            );
-            rows.push(Row {
-                path: "offline",
-                solver: name.into(),
-                knob: format!("steps={steps}"),
-                mean_nfe: out.mean_nfe,
-                fid,
-                is,
-                wall_s: out.wall_s,
-            });
-        }
+    for p in &stats.programs {
+        println!(
+            "  program {}: steps={} occupied_lane_steps={} wasted_lane_steps={}",
+            p.solver, p.steps, p.occupied_lane_steps, p.wasted_lane_steps
+        );
     }
 
-    let mut table = Table::new(&["path", "solver", "knob", "mean_nfe", "fid", "is", "wall_s"]);
+    let fmt_d = |v: Option<f64>| v.map(|d| format!("{d:+.3e}")).unwrap_or_default();
+    let mut table = Table::new(&[
+        "path", "solver", "knob", "mean_nfe", "fid", "is", "wall_s", "d_nfe", "d_fid",
+    ]);
     for r in &rows {
         table.row(vec![
             r.path.to_string(),
@@ -130,16 +186,19 @@ fn main() -> Result<()> {
             fmt_f(r.fid, 3),
             fmt_f(r.is, 3),
             fmt_f(r.wall_s, 2),
+            fmt_d(r.d_nfe),
+            fmt_d(r.d_fid),
         ]);
     }
     print!("\n{}", table.render());
     write_outputs("eval", &table)?;
 
-    // machine-readable companion for the CI artifact
+    // machine-readable companion for the CI artifact; `parity` is what
+    // tools/check_eval.py enforces thresholds on
     let json_rows: Vec<Value> = rows
         .iter()
         .map(|r| {
-            Value::obj(vec![
+            let mut pairs = vec![
                 ("path", Value::str(r.path)),
                 ("solver", Value::str(r.solver.clone())),
                 ("knob", Value::str(r.knob.clone())),
@@ -147,6 +206,27 @@ fn main() -> Result<()> {
                 ("fid", Value::num(r.fid)),
                 ("is", Value::num(r.is)),
                 ("wall_s", Value::num(r.wall_s)),
+            ];
+            if let (Some(dn), Some(df), Some(di)) = (r.d_nfe, r.d_fid, r.d_is) {
+                pairs.push(("d_nfe", Value::num(dn)));
+                pairs.push(("d_fid", Value::num(df)));
+                pairs.push(("d_is", Value::num(di)));
+            }
+            Value::obj(pairs)
+        })
+        .collect();
+    let parity: Vec<Value> = rows
+        .iter()
+        .filter(|r| r.path == "served")
+        .map(|r| {
+            Value::obj(vec![
+                ("solver", Value::str(r.solver.clone())),
+                ("knob", Value::str(r.knob.clone())),
+                ("fid", Value::num(r.fid)),
+                ("is", Value::num(r.is)),
+                ("d_nfe", Value::num(r.d_nfe.unwrap_or(f64::NAN))),
+                ("d_fid", Value::num(r.d_fid.unwrap_or(f64::NAN))),
+                ("d_is", Value::num(r.d_is.unwrap_or(f64::NAN))),
             ])
         })
         .collect();
@@ -156,6 +236,7 @@ fn main() -> Result<()> {
         ("seed", Value::num(seed as f64)),
         ("bucket", Value::num(bucket as f64)),
         ("rows", Value::Arr(json_rows)),
+        ("parity", Value::Arr(parity)),
     ]);
     std::fs::create_dir_all("bench_out")?;
     std::fs::write("bench_out/eval.json", format!("{doc}"))?;

@@ -44,8 +44,11 @@ SCORE_BUCKETS = (1, 16, 64)
 # Power-of-two ladder up to 16: the serving engine's occupancy-aware
 # scheduler migrates lanes to the smallest compiled bucket that fits the
 # live batch, so low-occupancy traffic stops paying full-width steps.
-# denoise shares the ladder because converged lanes are denoised at
-# whatever width the pool currently runs.
+# Every *serving* step program shares this ladder — adaptive_step,
+# em_step and ddim_step each back a lane-program pool behind the
+# scheduler (rust coordinator/programs.rs) — and denoise shares it too
+# because converged lanes are denoised at whatever width the pool
+# currently runs.
 STEP_BUCKETS = (1, 2, 4, 8, 16, 64)
 AUX_BUCKETS = (16, 64)
 FID_BUCKETS = (64,)
@@ -162,7 +165,9 @@ def program_specs(cfg: model.ModelCfg, n_theta: int):
         "adaptive_step": step_b,
         "em_step": step_b,
         "pc_step": aux_b,
-        "ddim_step": aux_b,
+        # ddim_step backs a serving lane pool (VP only), so it rides the
+        # step ladder like adaptive_step/em_step
+        "ddim_step": step_b,
         "ode_drift": aux_b,
         # denoise runs at whatever bucket the solver/engine uses
         "denoise": step_b,

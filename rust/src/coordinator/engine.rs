@@ -1,19 +1,24 @@
 //! Engine thread: owns the PJRT runtime and runs the continuous-batching
-//! step loop over every registered model's pool. See module docs in
-//! `coordinator/mod.rs` and docs/ARCHITECTURE.md §Coordinator.
+//! step loop over every registered (model, solver-program) pool. See
+//! module docs in `coordinator/mod.rs` and docs/ARCHITECTURE.md
+//! §Coordinator.
 //!
 //! Loop shape per iteration: drain the mailbox, pick the next pool with
-//! work (round-robin over models), re-bucket it to the cheapest compiled
-//! width that fits its demand, admit queued samples into free lanes, and
-//! advance it one fused Algorithm-1 step.
+//! work (round-robin over the flattened model x program pool list),
+//! re-bucket it to the cheapest compiled width that fits its demand,
+//! admit queued samples into free lanes, and advance it one fused step
+//! of its program — so adaptive generate traffic and EM/DDIM eval lanes
+//! interleave on the single engine thread.
 
 use super::eval::{ChunkSpec, EvalManager, EvalRequest, EvalResult};
-use super::registry::{ModelEntry, Registry};
+use super::programs::StepIo;
+use super::registry::{ModelEntry, ProgramPool, Registry};
 use super::scheduler::migrate_lanes;
 use super::{Msg, Pending, SampleRequest, Sink, Slot};
 use crate::metrics::hist::Histogram;
 use crate::rng::Rng;
 use crate::runtime::{ExecArg, Runtime};
+use crate::solvers::ServingSolver;
 use crate::tensor::Tensor;
 use crate::{anyhow, Result};
 use std::collections::HashMap;
@@ -27,11 +32,16 @@ pub struct EngineConfig {
     /// Models served from the shared engine thread; the first is the
     /// default for requests that don't name one.
     pub models: Vec<String>,
+    /// Solver programs each model gets a lane pool for (names accepted
+    /// by `solvers::spec::parse`). "adaptive" is validated strictly;
+    /// fixed-step pools are built from whatever artifacts exist.
+    pub programs: Vec<String>,
     /// Widest slot-pool bucket; must be a compiled adaptive_step bucket
-    /// of every served model.
+    /// of every served model (fixed-step pools cap their own ladders at
+    /// the widest compiled rung <= this).
     pub bucket: usize,
     /// Occupancy-aware bucket migration. Off = every pool is pinned at
-    /// `bucket` (the pre-scheduler fixed-width behaviour).
+    /// its widest rung (the pre-scheduler fixed-width behaviour).
     pub migrate: bool,
     pub fused_buffers: bool,
     /// Admission control: maximum queued samples before rejecting.
@@ -47,6 +57,7 @@ impl EngineConfig {
         EngineConfig {
             artifacts: artifacts.into(),
             models: vec![model.to_string()],
+            programs: default_programs(),
             bucket: 16,
             migrate: true,
             fused_buffers: true,
@@ -56,6 +67,12 @@ impl EngineConfig {
             safety: 0.9,
         }
     }
+}
+
+/// The full served-solver set: adaptive (mandatory artifacts) plus the
+/// fixed-step baselines wherever their artifacts exist.
+pub fn default_programs() -> Vec<String> {
+    vec!["adaptive".to_string(), "em".to_string(), "ddim".to_string()]
 }
 
 #[derive(Clone, Debug)]
@@ -69,6 +86,29 @@ pub struct GenResult {
     pub w: usize,
     pub wall_s: f64,
     pub queued_s: f64,
+}
+
+/// Per-solver-program share of engine work, summed over models.
+#[derive(Clone, Debug, Default)]
+pub struct ProgramStats {
+    /// Solver name ("adaptive" | "em" | "ddim").
+    pub solver: String,
+    /// Pools serving this program (one per model that supports it).
+    pub pools: usize,
+    /// Currently occupied lanes.
+    pub active_lanes: usize,
+    /// Fused step-program executions.
+    pub steps: u64,
+    pub occupied_lane_steps: u64,
+    pub wasted_lane_steps: u64,
+    /// Score-network evaluations spent advancing occupied lanes
+    /// (occupied_lane_steps x the program's per-step NFE cost; excludes
+    /// denoise calls and free-lane no-ops).
+    pub score_evals: u64,
+    pub migrations_up: u64,
+    pub migrations_down: u64,
+    /// Step executions per bucket width, ascending.
+    pub steps_per_bucket: Vec<(usize, u64)>,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -87,12 +127,15 @@ pub struct EngineStats {
     pub mean_occupancy: f64,
     /// Models served, default first.
     pub models: Vec<String>,
-    /// adaptive_step executions per bucket width, summed over models.
+    /// Per-solver-program lane/step counters (the program breakdown of
+    /// the aggregate counters below).
+    pub programs: Vec<ProgramStats>,
+    /// Step executions per bucket width, summed over models & programs.
     pub steps_per_bucket: Vec<(usize, u64)>,
-    /// Pool-width switches, summed over models.
+    /// Pool-width switches, summed over models & programs.
     pub migrations_up: u64,
     pub migrations_down: u64,
-    /// Free lanes advanced through steps as h = 0 no-ops — the cost the
+    /// Free lanes advanced through steps as exact no-ops — the cost the
     /// bucket scheduler exists to shrink.
     pub wasted_lane_steps: u64,
     /// Occupied lanes advanced through steps.
@@ -151,17 +194,37 @@ impl Drop for Engine {
 }
 
 impl EngineClient {
-    /// Generate on the engine's default model.
+    /// Generate on the engine's default model with the adaptive solver.
     pub fn generate(&self, n: usize, eps_rel: f64, seed: u64) -> Result<GenResult> {
         self.generate_on("", n, eps_rel, seed)
     }
 
-    /// Generate on a named model ("" = the default model).
+    /// Generate on a named model ("" = the default model) with the
+    /// adaptive solver.
     pub fn generate_on(&self, model: &str, n: usize, eps_rel: f64, seed: u64) -> Result<GenResult> {
+        self.generate_with(model, ServingSolver::Adaptive, n, eps_rel, seed)
+    }
+
+    /// Generate on a named model with any served solver program.
+    pub fn generate_with(
+        &self,
+        model: &str,
+        solver: ServingSolver,
+        n: usize,
+        eps_rel: f64,
+        seed: u64,
+    ) -> Result<GenResult> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Msg::Generate(
-                SampleRequest { model: model.to_string(), n, eps_rel, seed, sample_base: 0 },
+                SampleRequest {
+                    model: model.to_string(),
+                    solver,
+                    n,
+                    eps_rel,
+                    seed,
+                    sample_base: 0,
+                },
                 rtx,
             ))
             .map_err(|_| anyhow!("engine is down"))?;
@@ -227,13 +290,14 @@ fn engine_main(
             return;
         }
     };
-    let registry = match Registry::load(&rt, &cfg.models, cfg.bucket, cfg.migrate) {
-        Ok(r) => r,
-        Err(e) => {
-            let _ = ready.send(Err(format!("{e:#}")));
-            return;
-        }
-    };
+    let registry =
+        match Registry::load(&rt, &cfg.models, cfg.bucket, cfg.migrate, &cfg.programs) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = ready.send(Err(format!("{e:#}")));
+                return;
+            }
+        };
     let mut st = EngineState {
         registry,
         cfg,
@@ -270,15 +334,16 @@ fn engine_main(
         }
         // 2. service the next pool with work: re-bucket to the cheapest
         //    fitting width, admit queued samples, advance one iteration
-        if let Some(mi) = st.registry.next_runnable() {
-            st.rebucket(mi);
-            st.admit(mi);
-            if st.registry.entries()[mi].pool.active() > 0 {
-                match st.step(mi) {
-                    Ok(eval_chunks) => st.on_eval_chunks(mi, eval_chunks),
+        //    of its solver program
+        if let Some((mi, pi)) = st.registry.next_runnable() {
+            st.rebucket(mi, pi);
+            st.admit(mi, pi);
+            if st.registry.entries()[mi].pools[pi].active() > 0 {
+                match st.step(mi, pi) {
+                    Ok(eval_chunks) => st.on_eval_chunks(mi, pi, eval_chunks),
                     Err(e) => {
-                        // fault isolation: only this model's requests fail
-                        st.fail_pool(mi, &format!("engine step failed: {e:#}"));
+                        // fault isolation: only this pool's requests fail
+                        st.fail_pool(mi, pi, &format!("engine step failed: {e:#}"));
                     }
                 }
             }
@@ -296,8 +361,12 @@ impl<'rt> EngineState<'rt> {
                 false
             }
             Msg::Generate(req, reply) => {
-                let mi = match self.registry.resolve(&req.model) {
-                    Ok(i) => i,
+                if let Err(e) = req.solver.validate() {
+                    let _ = reply.send(Err(format!("{e:#}")));
+                    return false;
+                }
+                let (mi, pi) = match self.registry.resolve_pool(&req.model, &req.solver) {
+                    Ok(v) => v,
                     Err(e) => {
                         let _ = reply.send(Err(format!("{e:#}")));
                         return false;
@@ -314,25 +383,21 @@ impl<'rt> EngineState<'rt> {
                     )));
                     return false;
                 }
-                self.enqueue(mi, req, Sink::Client(reply));
+                self.enqueue(mi, pi, req, Sink::Client(reply));
                 false
             }
             Msg::Evaluate(req, reply) => {
-                let mi = match self.registry.resolve(&req.model) {
-                    Ok(i) => i,
+                if let Err(e) = req.solver.validate() {
+                    let _ = reply.send(Err(format!("{e:#}")));
+                    return false;
+                }
+                let (mi, pi) = match self.registry.resolve_pool(&req.model, &req.solver) {
+                    Ok(v) => v,
                     Err(e) => {
                         let _ = reply.send(Err(format!("{e:#}")));
                         return false;
                     }
                 };
-                if !(req.solver.is_empty() || req.solver == "adaptive") {
-                    let _ = reply.send(Err(format!(
-                        "the engine serves the 'adaptive' solver only (got '{}'); \
-                         use `gofast evaluate --offline` for other solvers",
-                        req.solver
-                    )));
-                    return false;
-                }
                 if req.samples < 2 {
                     // fail at admission, not after the run: FID needs a
                     // non-singular feature covariance
@@ -347,8 +412,8 @@ impl<'rt> EngineState<'rt> {
                     let _ = reply.send(Err(e));
                     return false;
                 }
-                let snapshot = self.registry.entries()[mi].pool.sched.steps_per_bucket();
-                let chunks = self.evals.start_job(mi, req, reply, snapshot);
+                let snapshot = self.registry.entries()[mi].pools[pi].sched.steps_per_bucket();
+                let chunks = self.evals.start_job(mi, pi, req, reply, snapshot);
                 for spec in chunks {
                     self.enqueue_eval_chunk(spec);
                 }
@@ -357,8 +422,9 @@ impl<'rt> EngineState<'rt> {
         }
     }
 
-    /// Register a request's accumulation state and queue it on pool `mi`.
-    fn enqueue(&mut self, mi: usize, req: SampleRequest, sink: Sink) {
+    /// Register a request's accumulation state and queue it on pool
+    /// `(mi, pi)`.
+    fn enqueue(&mut self, mi: usize, pi: usize, req: SampleRequest, sink: Sink) {
         let id = self.next_req_id;
         self.next_req_id += 1;
         self.queued_samples += req.n;
@@ -376,7 +442,7 @@ impl<'rt> EngineState<'rt> {
                 req,
             },
         );
-        self.registry.entry_mut(mi).pool.fifo.push(id);
+        self.registry.entry_mut(mi).pools[pi].fifo.push(id);
     }
 
     /// Admit one evaluation chunk through the normal request path.
@@ -385,20 +451,21 @@ impl<'rt> EngineState<'rt> {
     fn enqueue_eval_chunk(&mut self, spec: ChunkSpec) {
         let req = SampleRequest {
             model: String::new(), // routed by index below
+            solver: spec.solver,
             n: spec.n,
             eps_rel: spec.eps_rel,
             seed: spec.seed,
             sample_base: spec.sample_base,
         };
         let sink = Sink::Eval { job: spec.job, chunk: spec.chunk };
-        self.enqueue(spec.model_idx, req, sink);
+        self.enqueue(spec.model_idx, spec.pool_idx, req, sink);
     }
 
     /// Fold completed eval chunks into their jobs, admitting follow-up
     /// chunks as each one lands.
-    fn on_eval_chunks(&mut self, mi: usize, done: Vec<(u64, usize, GenResult)>) {
+    fn on_eval_chunks(&mut self, mi: usize, pi: usize, done: Vec<(u64, usize, GenResult)>) {
         for (job, chunk, gen) in done {
-            let sched_now = self.registry.entries()[mi].pool.sched.steps_per_bucket();
+            let sched_now = self.registry.entries()[mi].pools[pi].sched.steps_per_bucket();
             let model_name = self.registry.entries()[mi].model.meta.name.clone();
             let follow = self.evals.on_chunk_done(
                 job,
@@ -414,9 +481,9 @@ impl<'rt> EngineState<'rt> {
         }
     }
 
-    /// Live lanes plus samples still queued for pool `mi`.
-    fn pool_demand(&self, mi: usize) -> usize {
-        let pool = &self.registry.entries()[mi].pool;
+    /// Live lanes plus samples still queued for pool `(mi, pi)`.
+    fn pool_demand(&self, mi: usize, pi: usize) -> usize {
+        let pool = &self.registry.entries()[mi].pools[pi];
         let queued: usize = pool
             .fifo
             .iter()
@@ -426,43 +493,47 @@ impl<'rt> EngineState<'rt> {
         pool.active() + queued
     }
 
-    /// Switch pool `mi` to the scheduler's target width, migrating live
-    /// lanes. A no-op unless the target differs from the current width.
-    fn rebucket(&mut self, mi: usize) {
-        let demand = self.pool_demand(mi);
-        let e = self.registry.entry_mut(mi);
-        let active = e.pool.active();
-        let target = e.pool.sched.target_width(active, demand);
-        if target != e.pool.sched.width() {
-            migrate_lanes(&mut e.pool.slots, &mut e.pool.x, &mut e.pool.xprev, target);
-            e.pool.sched.set_width(target);
+    /// Switch pool `(mi, pi)` to the scheduler's target width, migrating
+    /// live lanes. A no-op unless the target differs from the current
+    /// width.
+    fn rebucket(&mut self, mi: usize, pi: usize) {
+        let demand = self.pool_demand(mi, pi);
+        let pool = &mut self.registry.entry_mut(mi).pools[pi];
+        let active = pool.active();
+        let target = pool.sched.target_width(active, demand);
+        if target != pool.sched.width() {
+            migrate_lanes(&mut pool.slots, &mut pool.x, &mut pool.xprev, target);
+            pool.sched.set_width(target);
         }
     }
 
-    /// FIFO admission of queued samples into pool `mi`'s free slots.
-    fn admit(&mut self, mi: usize) {
+    /// FIFO admission of queued samples into pool `(mi, pi)`'s free
+    /// slots. Admission is program-agnostic: the prior draw and the
+    /// forked per-sample RNG stream are shared by every solver; the
+    /// pool's program supplies the per-lane integration state.
+    fn admit(&mut self, mi: usize, pi: usize) {
         let EngineState { registry, pending, queued_samples, cfg, .. } = self;
         let e = registry.entry_mut(mi);
         let prior_std = e.process.prior_std() as f32;
-        let pool = &mut e.pool;
+        let ProgramPool { program, slots, x, xprev, fifo, .. } = &mut e.pools[pi];
         let mut fi = 0;
-        for si in 0..pool.slots.len() {
-            if !pool.slots[si].is_free() {
+        for si in 0..slots.len() {
+            if !slots[si].is_free() {
                 continue;
             }
             // find next request with samples left to admit (completed
             // requests may still sit in fifo until the retain below)
-            while fi < pool.fifo.len() {
-                let id = pool.fifo[fi];
+            while fi < fifo.len() {
+                let id = fifo[fi];
                 match pending.get(&id) {
                     Some(p) if p.next_sample < p.req.n => break,
                     _ => fi += 1,
                 }
             }
-            if fi >= pool.fifo.len() {
+            if fi >= fifo.len() {
                 break;
             }
-            let id = pool.fifo[fi];
+            let id = fifo[fi];
             let p = pending.get_mut(&id).unwrap();
             let sample_idx = p.next_sample;
             p.next_sample += 1;
@@ -475,111 +546,70 @@ impl<'rt> EngineState<'rt> {
             // as one big request — and as the offline `run_lanes` twin)
             let mut rng = Rng::new(p.req.seed).fork(p.req.sample_base + sample_idx as u64);
             {
-                let row = pool.x.row_mut(si);
+                let row = x.row_mut(si);
                 for v in row.iter_mut() {
                     *v = rng.normal() as f32 * prior_std;
                 }
                 let prev = row.to_vec();
-                pool.xprev.row_mut(si).copy_from_slice(&prev);
+                xprev.row_mut(si).copy_from_slice(&prev);
             }
-            pool.slots[si] = Slot::Running {
+            slots[si] = Slot::Running {
                 req_id: id,
                 sample_idx,
-                t: 1.0,
-                h: cfg.h_init,
-                eps_rel: p.req.eps_rel,
                 nfe: 0,
                 rng,
+                state: program.init_lane(cfg, &p.req),
             };
         }
         // drop fully-admitted-and-finished request ids from fifo head
-        pool.fifo.retain(|id| pending.contains_key(id));
+        fifo.retain(|id| pending.contains_key(id));
     }
 
-    /// One fused adaptive_step over pool `mi` at its current width.
+    /// One fused step of pool `(mi, pi)`'s program at its current width.
     /// Returns the eval chunks that completed this iteration.
-    fn step(&mut self, mi: usize) -> Result<Vec<(u64, usize, GenResult)>> {
+    fn step(&mut self, mi: usize, pi: usize) -> Result<Vec<(u64, usize, GenResult)>> {
         let EngineState { registry, pending, cfg, metrics, evals, .. } = self;
         let e = registry.entry_mut(mi);
-        let b = e.pool.sched.width();
-        let dim = e.model.meta.dim;
-        let t_eps = e.process.t_eps();
-        let eps_abs = e.process.eps_abs();
-        let mut t_in = vec![1.0f32; b];
-        let mut h_in = vec![0.0f32; b];
-        let mut er_in = vec![0.01f32; b];
-        let mut z = Tensor::zeros(&[b, dim]);
-        let mut occupied = 0usize;
+        // eval-lane share of this step's occupancy
         let mut eval_occupied = 0u64;
-        for (i, slot) in e.pool.slots.iter_mut().enumerate() {
-            if let Slot::Running { req_id, t, h, eps_rel, rng, .. } = slot {
-                occupied += 1;
+        for s in e.pools[pi].slots.iter() {
+            if let Slot::Running { req_id, .. } = s {
                 if pending.get(req_id).is_some_and(|p| EvalManager::is_eval_sink(&p.sink)) {
                     eval_occupied += 1;
                 }
-                *h = h.min(*t - t_eps).max(0.0);
-                t_in[i] = *t as f32;
-                h_in[i] = *h as f32;
-                er_in[i] = *eps_rel as f32;
-                rng.fill_normal(z.row_mut(i));
             }
         }
         evals.eval_lane_steps += eval_occupied;
-        let t_t = Tensor { shape: vec![b], data: t_in };
-        let h_t = Tensor { shape: vec![b], data: h_in };
-        let er_t = Tensor { shape: vec![b], data: er_in };
-        let ea_t = Tensor::scalar(eps_abs as f32);
-        let out = e.model.exec_args(
-            "adaptive_step",
-            b,
-            &[
-                ExecArg::Host(&e.pool.x),
-                ExecArg::Host(&e.pool.xprev),
-                ExecArg::Host(&t_t),
-                ExecArg::Host(&h_t),
-                ExecArg::Host(&z),
-                ExecArg::Const("eps_abs", &ea_t),
-                ExecArg::Host(&er_t),
-            ],
-            cfg.fused_buffers,
-        )?;
-        let (xpp, xp, e2) = (&out[0], &out[1], &out[2]);
+        let outcome = {
+            let ModelEntry { model, process, pools } = e;
+            let ProgramPool { program, slots, x, xprev, .. } = &mut pools[pi];
+            program.step(StepIo {
+                model: &*model,
+                process: &*process,
+                cfg: &*cfg,
+                slots: slots.as_mut_slice(),
+                x,
+                xprev,
+            })?
+        };
         metrics.steps += 1;
-        e.pool.sched.note_step(occupied);
-
-        let mut converged: Vec<usize> = Vec::new();
-        for i in 0..b {
-            let Slot::Running { t, h, nfe, .. } = &mut e.pool.slots[i] else {
-                continue;
-            };
-            *nfe += 2;
-            let err = e2.data[i] as f64;
-            if err <= 1.0 {
-                e.pool.x.row_mut(i).copy_from_slice(xpp.row(i));
-                e.pool.xprev.row_mut(i).copy_from_slice(xp.row(i));
-                *t -= *h;
-                if *t <= t_eps + 1e-12 {
-                    converged.push(i);
-                }
-            } else {
-                metrics.rejections += 1;
-            }
-            let grow = cfg.safety * err.max(1e-12).powf(-cfg.r);
-            *h = (*h * grow).min((*t - t_eps).max(0.0));
+        metrics.rejections += outcome.rejections;
+        let e = registry.entry_mut(mi);
+        e.pools[pi].sched.note_step(outcome.occupied);
+        if outcome.converged.is_empty() {
+            return Ok(Vec::new());
         }
-        if !converged.is_empty() {
-            return finish_lanes(e, pending, metrics, cfg.fused_buffers, &converged);
-        }
-        Ok(Vec::new())
+        finish_lanes(e, pi, pending, metrics, cfg.fused_buffers, &outcome.converged)
     }
 
-    /// Fail every request owned by pool `mi` (incomplete requests stay
-    /// in the pool's fifo until done, so the fifo names them all) and
-    /// reset its lanes. Other models' pools are untouched.
-    fn fail_pool(&mut self, mi: usize, msg: &str) {
-        let e = self.registry.entry_mut(mi);
-        let mut ids: Vec<u64> = e.pool.fifo.drain(..).collect();
-        for s in e.pool.slots.iter_mut() {
+    /// Fail every request owned by pool `(mi, pi)` (incomplete requests
+    /// stay in the pool's fifo until done, so the fifo names them all)
+    /// and reset its lanes. Other pools — of this model and others — are
+    /// untouched.
+    fn fail_pool(&mut self, mi: usize, pi: usize, msg: &str) {
+        let pool = &mut self.registry.entry_mut(mi).pools[pi];
+        let mut ids: Vec<u64> = pool.fifo.drain(..).collect();
+        for s in pool.slots.iter_mut() {
             if let Slot::Running { req_id, .. } = *s {
                 ids.push(req_id);
             }
@@ -596,7 +626,7 @@ impl<'rt> EngineState<'rt> {
                 // eval sinks are answered once per job below
             }
         }
-        self.evals.fail_jobs_on_pool(mi, msg);
+        self.evals.fail_jobs_on_pool(mi, pi, msg);
     }
 
     fn stats(&self) -> EngineStats {
@@ -605,19 +635,45 @@ impl<'rt> EngineState<'rt> {
         let (mut wasted, mut occupied) = (0u64, 0u64);
         let mut active_slots = 0usize;
         let mut models = Vec::new();
+        let mut programs: Vec<ProgramStats> = Vec::new();
         for e in self.registry.entries() {
             models.push(e.model.meta.name.clone());
-            active_slots += e.pool.active();
-            let s = &e.pool.sched;
-            mig_up += s.migrations_up;
-            mig_down += s.migrations_down;
-            wasted += s.wasted_lane_steps;
-            occupied += s.occupied_lane_steps;
-            for (bucket, n) in s.steps_per_bucket() {
-                match steps_per_bucket.iter_mut().find(|(b, _)| *b == bucket) {
-                    Some((_, acc)) => *acc += n,
-                    None => steps_per_bucket.push((bucket, n)),
+            for pool in &e.pools {
+                active_slots += pool.active();
+                let s = &pool.sched;
+                mig_up += s.migrations_up;
+                mig_down += s.migrations_down;
+                wasted += s.wasted_lane_steps;
+                occupied += s.occupied_lane_steps;
+                let name = pool.program.solver_name();
+                let ps = match programs.iter_mut().find(|p| p.solver == name) {
+                    Some(p) => p,
+                    None => {
+                        programs.push(ProgramStats {
+                            solver: name.to_string(),
+                            ..Default::default()
+                        });
+                        programs.last_mut().unwrap()
+                    }
+                };
+                ps.pools += 1;
+                ps.active_lanes += pool.active();
+                ps.occupied_lane_steps += s.occupied_lane_steps;
+                ps.wasted_lane_steps += s.wasted_lane_steps;
+                ps.score_evals +=
+                    s.occupied_lane_steps * pool.program.score_evals_per_step();
+                ps.migrations_up += s.migrations_up;
+                ps.migrations_down += s.migrations_down;
+                for (bucket, n) in s.steps_per_bucket() {
+                    ps.steps += n;
+                    for acc in [&mut ps.steps_per_bucket, &mut steps_per_bucket] {
+                        match acc.iter_mut().find(|(b, _)| *b == bucket) {
+                            Some((_, v)) => *v += n,
+                            None => acc.push((bucket, n)),
+                        }
+                    }
                 }
+                ps.steps_per_bucket.sort();
             }
         }
         steps_per_bucket.sort();
@@ -638,6 +694,7 @@ impl<'rt> EngineState<'rt> {
                 occupied as f64 / self.metrics.steps as f64
             },
             models,
+            programs,
             steps_per_bucket,
             migrations_up: mig_up,
             migrations_down: mig_down,
@@ -654,20 +711,22 @@ impl<'rt> EngineState<'rt> {
 /// Denoise converged lanes (one batched Tweedie call at the pool's
 /// current width) and hand their images back to their requests; free the
 /// lanes. Client requests are answered directly; completed eval chunks
-/// are returned to the caller for folding into their jobs.
+/// are returned to the caller for folding into their jobs. The denoise
+/// call is shared by every solver program (+1 NFE per sample).
 fn finish_lanes(
     e: &mut ModelEntry<'_>,
+    pi: usize,
     pending: &mut HashMap<u64, Pending>,
     metrics: &mut Metrics,
     fused_buffers: bool,
     lanes: &[usize],
 ) -> Result<Vec<(u64, usize, GenResult)>> {
-    let b = e.pool.sched.width();
+    let b = e.pools[pi].sched.width();
     let t_end = crate::solvers::t_vec(b, e.process.t_eps());
     let mut out = e.model.exec_args(
         "denoise",
         b,
-        &[ExecArg::Host(&e.pool.x), ExecArg::Const("t_end", &t_end)],
+        &[ExecArg::Host(&e.pools[pi].x), ExecArg::Const("t_end", &t_end)],
         fused_buffers,
     )?;
     let x0 = out.pop().unwrap();
@@ -676,7 +735,7 @@ fn finish_lanes(
     let (lo, hi) = (lo as f32, hi as f32);
     let mut eval_done = Vec::new();
     for &i in lanes {
-        let Slot::Running { req_id, sample_idx, nfe, .. } = e.pool.slots[i] else {
+        let Slot::Running { req_id, sample_idx, nfe, .. } = e.pools[pi].slots[i] else {
             continue;
         };
         let nfe_total = nfe + 1; // the denoise eval
@@ -717,7 +776,7 @@ fn finish_lanes(
                 Sink::Eval { job, chunk } => eval_done.push((job, chunk, result)),
             }
         }
-        e.pool.slots[i] = Slot::Free;
+        e.pools[pi].slots[i] = Slot::Free;
     }
     Ok(eval_done)
 }

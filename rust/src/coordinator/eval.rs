@@ -4,14 +4,16 @@
 //! An `evaluate` request is serviced by the *serving* machinery, not a
 //! side path: the job is cut into fid-bucket-sized chunks, each admitted
 //! as an internal sample request through the same FIFO / scheduler /
-//! registry route client traffic takes (so solver or scheduler
-//! regressions move the reported FID*). Completed chunks are pushed
-//! through the model's feature net into per-chunk `EvalAccumulator`s and
-//! Chan-merged **in chunk order** — completion order may vary with
-//! co-batched traffic, but the merge order never does, which keeps the
-//! result reproducible and comparable with the `--offline` bypass
-//! (bit-identical when the lane order matches; the per-lane RNG contract
-//! in `solvers::adaptive::run_lanes` is what makes that possible).
+//! registry route client traffic takes — onto the lane-program pool of
+//! whichever solver the request names (adaptive, em:<n>, ddim:<n>), so
+//! solver or scheduler regressions move the reported FID*. Completed
+//! chunks are pushed through the model's feature net into per-chunk
+//! `EvalAccumulator`s and Chan-merged **in chunk order** — completion
+//! order may vary with co-batched traffic, but the merge order never
+//! does, which keeps the result reproducible and comparable with the
+//! `--offline` bypass (bit-identical when the lane order matches; the
+//! per-lane RNG contract in `solvers::spec::run_lanes` is what makes
+//! that possible, for fixed-step programs exactly as for adaptive).
 //!
 //! At most `MAX_INFLIGHT_CHUNKS` chunks are outstanding per job, so an
 //! evaluation run holds O(chunk) images in memory regardless of its
@@ -20,6 +22,7 @@
 use super::registry::Registry;
 use crate::metrics::{self, EvalAccumulator, FeatureStats};
 use crate::runtime::FidNet;
+use crate::solvers::ServingSolver;
 use crate::tensor::Tensor;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc;
@@ -29,17 +32,18 @@ use std::time::Instant;
 /// and queue pressure; merge order is by chunk index either way).
 pub(crate) const MAX_INFLIGHT_CHUNKS: usize = 2;
 
-/// An evaluation request as accepted by the engine. The engine's step
-/// loop *is* the paper's adaptive solver, so `solver` must be
-/// "adaptive" (or "" meaning the same); other solvers evaluate through
-/// the offline bypass (`gofast evaluate --offline`).
+/// An evaluation request as accepted by the engine. Any solver the
+/// model has a lane-program pool for (adaptive, em:<n>, ddim:<n>) can
+/// be evaluated through the serving path; parse specs with
+/// `solvers::spec::parse`.
 #[derive(Clone, Debug)]
 pub struct EvalRequest {
     /// Model variant ("" = the engine's default model).
     pub model: String,
-    /// Solver spec; only "adaptive" (the serving solver) is accepted.
-    pub solver: String,
+    /// Solver program the evaluation lanes advance under.
+    pub solver: ServingSolver,
     pub samples: usize,
+    /// Adaptive tolerance knob (ignored by fixed-step solvers).
     pub eps_rel: f64,
     pub seed: u64,
 }
@@ -49,6 +53,8 @@ pub struct EvalRequest {
 pub struct EvalResult {
     /// Model that served the run (resolved default).
     pub model: String,
+    /// Canonical spec string of the solver that ran ("adaptive",
+    /// "em:<n>", "ddim:<n>").
     pub solver: String,
     pub samples: usize,
     pub fid: f64,
@@ -72,6 +78,8 @@ struct EvalNet<'rt> {
 
 struct EvalJob {
     model_idx: usize,
+    /// Pool (within the model) serving this job's lanes.
+    pool_idx: usize,
     req: EvalRequest,
     reply: mpsc::Sender<Result<EvalResult, String>>,
     merged: EvalAccumulator,
@@ -90,6 +98,8 @@ pub(crate) struct ChunkSpec {
     pub job: u64,
     pub chunk: usize,
     pub model_idx: usize,
+    pub pool_idx: usize,
+    pub solver: ServingSolver,
     pub n: usize,
     pub sample_base: u64,
     pub eps_rel: f64,
@@ -150,11 +160,12 @@ impl<'rt> EvalManager<'rt> {
         Ok(())
     }
 
-    /// Register a job; `ensure_net(mi)` must have succeeded first.
-    /// Returns the chunk specs to admit now.
+    /// Register a job on pool `pi` of model `mi`; `ensure_net(mi)` must
+    /// have succeeded first. Returns the chunk specs to admit now.
     pub fn start_job(
         &mut self,
         mi: usize,
+        pi: usize,
         req: EvalRequest,
         reply: mpsc::Sender<Result<EvalResult, String>>,
         steps_before: Vec<(usize, u64)>,
@@ -168,6 +179,7 @@ impl<'rt> EvalManager<'rt> {
             id,
             EvalJob {
                 model_idx: mi,
+                pool_idx: pi,
                 merged: EvalAccumulator::new(net.net.meta.feat_dim, net.net.meta.n_classes),
                 ready: BTreeMap::new(),
                 next_merge: 0,
@@ -201,6 +213,8 @@ impl<'rt> EvalManager<'rt> {
                 job: job_id,
                 chunk: job.submitted,
                 model_idx: job.model_idx,
+                pool_idx: job.pool_idx,
+                solver: job.req.solver,
                 n,
                 sample_base: start as u64,
                 eps_rel: job.req.eps_rel,
@@ -253,7 +267,7 @@ impl<'rt> EvalManager<'rt> {
                     self.evals_done += 1;
                     Ok(EvalResult {
                         model: model_name.to_string(),
-                        solver: "adaptive".to_string(),
+                        solver: job.req.solver.spec_string(),
                         samples: job.req.samples,
                         fid,
                         is,
@@ -272,11 +286,11 @@ impl<'rt> EvalManager<'rt> {
 
     /// Fail every job whose serving pool died. Returns how many were
     /// failed (their chunk pendings are being torn down by the caller).
-    pub fn fail_jobs_on_pool(&mut self, mi: usize, msg: &str) -> usize {
+    pub fn fail_jobs_on_pool(&mut self, mi: usize, pi: usize, msg: &str) -> usize {
         let ids: Vec<u64> = self
             .jobs
             .iter()
-            .filter(|(_, j)| j.model_idx == mi)
+            .filter(|(_, j)| j.model_idx == mi && j.pool_idx == pi)
             .map(|(id, _)| *id)
             .collect();
         for id in &ids {

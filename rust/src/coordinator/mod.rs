@@ -10,13 +10,18 @@
 //! admission queue. No request ever waits for another request's slowest
 //! sample (the lockstep penalty the paper's batch solver pays).
 //!
-//! Three sub-layers (bottom up):
-//! * `scheduler` — occupancy-aware bucket selection: each iteration the
+//! Four sub-layers (bottom up):
+//! * `programs` — solver-program abstraction: a `LaneProgram` advances
+//!   a pool of lanes under one compiled step artifact (`adaptive_step`,
+//!   `em_step`, `ddim_step`), owning per-lane state, device args and
+//!   the completion predicate;
+//! * `scheduler` — occupancy-aware bucket selection: each iteration a
 //!   pool runs at the smallest compiled width that fits its live +
 //!   queued lanes, migrating lane state between widths so low-occupancy
 //!   traffic stops paying full-width steps;
-//! * `registry` — N models loaded from one artifacts dir, each with its
-//!   own pool, serviced round-robin and routed by request model name;
+//! * `registry` — N models loaded from one artifacts dir, each with one
+//!   pool per served solver program, serviced round-robin and routed by
+//!   the request's (model, solver) pair;
 //! * `engine` — the thread that owns the PJRT runtime and runs the
 //!   admit / rebucket / step loop over every pool.
 //!
@@ -25,14 +30,17 @@
 
 pub mod engine;
 pub(crate) mod eval;
+pub(crate) mod programs;
 pub(crate) mod registry;
 pub mod scheduler;
 
-pub use engine::{Engine, EngineClient, EngineConfig, EngineStats, GenResult};
+pub use engine::{Engine, EngineClient, EngineConfig, EngineStats, GenResult, ProgramStats};
 pub use eval::{EvalRequest, EvalResult};
 pub use scheduler::BucketScheduler;
 
+use crate::solvers::ServingSolver;
 use crate::tensor::Tensor;
+use programs::LaneState;
 use std::sync::mpsc;
 
 /// A sampling request as admitted by the engine.
@@ -40,7 +48,11 @@ use std::sync::mpsc;
 pub struct SampleRequest {
     /// Model variant to sample from ("" = the engine's default model).
     pub model: String,
+    /// Solver program the samples advance under (routes to the model's
+    /// matching lane pool).
+    pub solver: ServingSolver,
     pub n: usize,
+    /// Adaptive tolerance knob (ignored by fixed-step solvers).
     pub eps_rel: f64,
     pub seed: u64,
     /// Global index of this request's first sample: lane `i` forks its
@@ -86,11 +98,10 @@ pub(crate) enum Slot {
         /// index into the engine's pending list (by request id)
         req_id: u64,
         sample_idx: usize,
-        t: f64,
-        h: f64,
-        eps_rel: f64,
         nfe: u64,
         rng: crate::rng::Rng,
+        /// Program-specific integration state (see `programs`).
+        state: LaneState,
     },
 }
 

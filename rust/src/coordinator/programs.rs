@@ -1,0 +1,361 @@
+//! Solver-program lane pools (docs/ARCHITECTURE.md §Solver-program
+//! pools).
+//!
+//! The engine's step loop used to *be* Algorithm 1: the only thing a
+//! pool could do was advance `adaptive_step`. This module abstracts "a
+//! pool of lanes advancing under a compiled step program" behind the
+//! [`LaneProgram`] trait, so the paper's fixed-step baselines (EM,
+//! DDIM) are first-class serving workloads instead of offline bypasses
+//! — the fixed-vs-adaptive comparison of the paper's Table 1 becomes a
+//! pure serving-path measurement.
+//!
+//! A program owns three things:
+//! * the per-lane integration state it threads through [`Slot::Running`]
+//!   (a [`LaneState`] variant) — created at admission by `init_lane`;
+//! * one fused `step` over the pool at its current bucket width: build
+//!   the device args per lane, execute the compiled step artifact, fold
+//!   the outputs back into lane state, and report which lanes completed
+//!   their trajectory (the per-lane completion predicate);
+//! * its cost model (`score_evals_per_step`, the paper's NFE metric).
+//!
+//! Free lanes ride through every program's step as exact no-ops
+//! (`h = 0` for adaptive/EM, `t == t_next` for DDIM), which is what
+//! makes the pools continuously batchable. Because no lane's update
+//! reads another lane's state (§3.1.5), a lane's trajectory is
+//! bit-identical to its offline twin (`solvers::spec::run_lanes`)
+//! regardless of pool width, migration, or co-batched traffic — for
+//! fixed-step programs exactly as for the adaptive solver.
+
+use super::engine::EngineConfig;
+use super::{SampleRequest, Slot};
+use crate::runtime::{ExecArg, Model};
+use crate::sde::Process;
+use crate::solvers::uniform_t;
+use crate::tensor::Tensor;
+use crate::{bail, Result};
+
+/// Program-specific per-lane integration state, carried in
+/// [`Slot::Running`] and migrated verbatim across bucket switches.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum LaneState {
+    /// Algorithm-1 controller state: current time, step size, tolerance.
+    Adaptive { t: f64, h: f64, eps_rel: f64 },
+    /// Fixed uniform schedule: `done` of `total` steps taken; the lane's
+    /// position is `uniform_t(t_eps, total, done)`. Per-lane `total`
+    /// lets requests with different step budgets co-batch in one pool.
+    Fixed { done: usize, total: usize },
+}
+
+/// Everything a program needs to advance one pool by one fused step.
+pub(crate) struct StepIo<'a, 'rt> {
+    pub model: &'a Model<'rt>,
+    pub process: &'a Process,
+    pub cfg: &'a EngineConfig,
+    /// Pool lanes; length is the pool's current bucket width.
+    pub slots: &'a mut [Slot],
+    pub x: &'a mut Tensor,
+    pub xprev: &'a mut Tensor,
+}
+
+/// Outcome of one fused pool step.
+pub(crate) struct StepOutcome {
+    /// Lanes that were live during the step (occupancy numerator).
+    pub occupied: usize,
+    /// Rejected proposals (adaptive programs only).
+    pub rejections: u64,
+    /// Lanes that completed their trajectory this step (to denoise).
+    pub converged: Vec<usize>,
+}
+
+/// A compiled step program driving a pool of lanes.
+pub(crate) trait LaneProgram {
+    /// Solver-spec name requests route by ("adaptive" | "em" | "ddim").
+    fn solver_name(&self) -> &'static str;
+    /// Compiled artifact advancing the pool ("adaptive_step", ...).
+    fn step_artifact(&self) -> &'static str;
+    /// Score-network evaluations one fused step costs each live lane.
+    fn score_evals_per_step(&self) -> u64;
+    /// Fresh per-lane integration state for an admitted sample.
+    fn init_lane(&self, cfg: &EngineConfig, req: &SampleRequest) -> LaneState;
+    /// Advance the pool one fused step at its current width.
+    fn step(&self, io: StepIo<'_, '_>) -> Result<StepOutcome>;
+}
+
+/// Program for a solver-spec name, if one exists.
+pub(crate) fn for_solver(name: &str) -> Option<Box<dyn LaneProgram>> {
+    match name {
+        "adaptive" => Some(Box::new(AdaptiveProgram)),
+        "em" => Some(Box::new(EmProgram)),
+        "ddim" => Some(Box::new(DdimProgram)),
+        _ => None,
+    }
+}
+
+fn fixed_total(req: &SampleRequest) -> usize {
+    req.solver.steps().unwrap_or(crate::solvers::spec::DEFAULT_FIXED_STEPS)
+}
+
+/// Fold a fixed-step kernel's output back into the pool — shared by
+/// every `LaneState::Fixed` program so the completion predicate and
+/// NFE accounting cannot diverge between EM and DDIM: each live lane
+/// advances one grid node (+1 NFE), takes its output row, and is
+/// reported converged once its schedule is exhausted.
+fn fold_fixed_step(slots: &mut [Slot], x: &mut Tensor, xn: &Tensor) -> Vec<usize> {
+    let mut converged = Vec::new();
+    for i in 0..slots.len() {
+        let Slot::Running { nfe, state: LaneState::Fixed { done, total }, .. } = &mut slots[i]
+        else {
+            continue;
+        };
+        *nfe += 1;
+        x.row_mut(i).copy_from_slice(xn.row(i));
+        *done += 1;
+        if *done == *total {
+            converged.push(i);
+        }
+    }
+    converged
+}
+
+// --- Algorithm 1 ---------------------------------------------------------------
+
+/// The paper's adaptive solver: 2 score evaluations per step, per-lane
+/// step-size control, accept/reject on the host.
+pub(crate) struct AdaptiveProgram;
+
+impl LaneProgram for AdaptiveProgram {
+    fn solver_name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn step_artifact(&self) -> &'static str {
+        "adaptive_step"
+    }
+
+    fn score_evals_per_step(&self) -> u64 {
+        2
+    }
+
+    fn init_lane(&self, cfg: &EngineConfig, req: &SampleRequest) -> LaneState {
+        LaneState::Adaptive { t: 1.0, h: cfg.h_init, eps_rel: req.eps_rel }
+    }
+
+    fn step(&self, io: StepIo<'_, '_>) -> Result<StepOutcome> {
+        let b = io.slots.len();
+        let dim = io.model.meta.dim;
+        let t_eps = io.process.t_eps();
+        let eps_abs = io.process.eps_abs();
+        let mut t_in = vec![1.0f32; b];
+        let mut h_in = vec![0.0f32; b];
+        let mut er_in = vec![0.01f32; b];
+        let mut z = Tensor::zeros(&[b, dim]);
+        let mut occupied = 0usize;
+        for (i, slot) in io.slots.iter_mut().enumerate() {
+            if let Slot::Running { rng, state: LaneState::Adaptive { t, h, eps_rel }, .. } = slot
+            {
+                occupied += 1;
+                *h = h.min(*t - t_eps).max(0.0);
+                t_in[i] = *t as f32;
+                h_in[i] = *h as f32;
+                er_in[i] = *eps_rel as f32;
+                rng.fill_normal(z.row_mut(i));
+            }
+        }
+        let t_t = Tensor { shape: vec![b], data: t_in };
+        let h_t = Tensor { shape: vec![b], data: h_in };
+        let er_t = Tensor { shape: vec![b], data: er_in };
+        let ea_t = Tensor::scalar(eps_abs as f32);
+        let out = io.model.exec_args(
+            "adaptive_step",
+            b,
+            &[
+                ExecArg::Host(io.x),
+                ExecArg::Host(io.xprev),
+                ExecArg::Host(&t_t),
+                ExecArg::Host(&h_t),
+                ExecArg::Host(&z),
+                ExecArg::Const("eps_abs", &ea_t),
+                ExecArg::Host(&er_t),
+            ],
+            io.cfg.fused_buffers,
+        )?;
+        let (xpp, xp, e2) = (&out[0], &out[1], &out[2]);
+        let mut rejections = 0u64;
+        let mut converged: Vec<usize> = Vec::new();
+        for i in 0..b {
+            let Slot::Running { nfe, state: LaneState::Adaptive { t, h, .. }, .. } =
+                &mut io.slots[i]
+            else {
+                continue;
+            };
+            *nfe += 2;
+            let err = e2.data[i] as f64;
+            if err <= 1.0 {
+                io.x.row_mut(i).copy_from_slice(xpp.row(i));
+                io.xprev.row_mut(i).copy_from_slice(xp.row(i));
+                *t -= *h;
+                if *t <= t_eps + 1e-12 {
+                    converged.push(i);
+                }
+            } else {
+                rejections += 1;
+            }
+            // controller update either way (paper §3.1.4); the clamp
+            // floors at 0 so converged lanes park rather than going
+            // negative
+            let grow = io.cfg.safety * err.max(1e-12).powf(-io.cfg.r);
+            *h = (*h * grow).min((*t - t_eps).max(0.0));
+        }
+        Ok(StepOutcome { occupied, rejections, converged })
+    }
+}
+
+// --- Euler–Maruyama ------------------------------------------------------------
+
+/// Fixed uniform-schedule EM: 1 score evaluation per step, fresh noise
+/// each step, per-lane step counts.
+pub(crate) struct EmProgram;
+
+impl LaneProgram for EmProgram {
+    fn solver_name(&self) -> &'static str {
+        "em"
+    }
+
+    fn step_artifact(&self) -> &'static str {
+        "em_step"
+    }
+
+    fn score_evals_per_step(&self) -> u64 {
+        1
+    }
+
+    fn init_lane(&self, _cfg: &EngineConfig, req: &SampleRequest) -> LaneState {
+        LaneState::Fixed { done: 0, total: fixed_total(req) }
+    }
+
+    fn step(&self, io: StepIo<'_, '_>) -> Result<StepOutcome> {
+        let b = io.slots.len();
+        let dim = io.model.meta.dim;
+        let t_eps = io.process.t_eps();
+        let mut t_in = vec![1.0f32; b];
+        let mut h_in = vec![0.0f32; b];
+        let mut z = Tensor::zeros(&[b, dim]);
+        let mut occupied = 0usize;
+        for (i, slot) in io.slots.iter_mut().enumerate() {
+            if let Slot::Running { rng, state: LaneState::Fixed { done, total }, .. } = slot {
+                occupied += 1;
+                let t = uniform_t(t_eps, *total, *done);
+                let tn = uniform_t(t_eps, *total, *done + 1);
+                t_in[i] = t as f32;
+                h_in[i] = (t - tn) as f32;
+                rng.fill_normal(z.row_mut(i));
+            }
+        }
+        let t_t = Tensor { shape: vec![b], data: t_in };
+        let h_t = Tensor { shape: vec![b], data: h_in };
+        let out = io.model.exec_args(
+            "em_step",
+            b,
+            &[ExecArg::Host(io.x), ExecArg::Host(&t_t), ExecArg::Host(&h_t), ExecArg::Host(&z)],
+            io.cfg.fused_buffers,
+        )?;
+        let converged = fold_fixed_step(io.slots, io.x, &out[0]);
+        Ok(StepOutcome { occupied, rejections: 0, converged })
+    }
+}
+
+// --- DDIM ----------------------------------------------------------------------
+
+/// Deterministic DDIM (VP only): 1 score evaluation per step, no noise
+/// after the prior draw, per-lane step counts.
+pub(crate) struct DdimProgram;
+
+impl LaneProgram for DdimProgram {
+    fn solver_name(&self) -> &'static str {
+        "ddim"
+    }
+
+    fn step_artifact(&self) -> &'static str {
+        "ddim_step"
+    }
+
+    fn score_evals_per_step(&self) -> u64 {
+        1
+    }
+
+    fn init_lane(&self, _cfg: &EngineConfig, req: &SampleRequest) -> LaneState {
+        LaneState::Fixed { done: 0, total: fixed_total(req) }
+    }
+
+    fn step(&self, io: StepIo<'_, '_>) -> Result<StepOutcome> {
+        if io.process.kind() != "vp" {
+            // the registry refuses to build a ddim pool for non-VP
+            // models, so this is a defence-in-depth invariant, not a
+            // reachable serving path
+            bail!("ddim_step pool on a non-VP model");
+        }
+        let b = io.slots.len();
+        let t_eps = io.process.t_eps();
+        let mut t_in = vec![1.0f32; b];
+        let mut tn_in = vec![1.0f32; b];
+        let mut occupied = 0usize;
+        for (i, slot) in io.slots.iter_mut().enumerate() {
+            if let Slot::Running { state: LaneState::Fixed { done, total }, .. } = slot {
+                occupied += 1;
+                t_in[i] = uniform_t(t_eps, *total, *done) as f32;
+                tn_in[i] = uniform_t(t_eps, *total, *done + 1) as f32;
+            }
+        }
+        let t_t = Tensor { shape: vec![b], data: t_in };
+        let tn_t = Tensor { shape: vec![b], data: tn_in };
+        let out = io.model.exec_args(
+            "ddim_step",
+            b,
+            &[ExecArg::Host(io.x), ExecArg::Host(&t_t), ExecArg::Host(&tn_t)],
+            io.cfg.fused_buffers,
+        )?;
+        let converged = fold_fixed_step(io.slots, io.x, &out[0]);
+        Ok(StepOutcome { occupied, rejections: 0, converged })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_solver_covers_the_served_trio() {
+        for (name, artifact, evals) in [
+            ("adaptive", "adaptive_step", 2),
+            ("em", "em_step", 1),
+            ("ddim", "ddim_step", 1),
+        ] {
+            let p = for_solver(name).expect(name);
+            assert_eq!(p.solver_name(), name);
+            assert_eq!(p.step_artifact(), artifact);
+            assert_eq!(p.score_evals_per_step(), evals);
+        }
+        assert!(for_solver("ode").is_none());
+    }
+
+    #[test]
+    fn init_lane_seeds_program_state_from_the_request() {
+        let cfg = EngineConfig::new("artifacts", "vp");
+        let req = SampleRequest {
+            model: String::new(),
+            solver: crate::solvers::ServingSolver::Em { steps: 12 },
+            n: 1,
+            eps_rel: 0.07,
+            seed: 0,
+            sample_base: 0,
+        };
+        assert_eq!(
+            EmProgram.init_lane(&cfg, &req),
+            LaneState::Fixed { done: 0, total: 12 }
+        );
+        assert_eq!(
+            AdaptiveProgram.init_lane(&cfg, &req),
+            LaneState::Adaptive { t: 1.0, h: cfg.h_init, eps_rel: 0.07 }
+        );
+    }
+}

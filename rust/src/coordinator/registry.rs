@@ -1,31 +1,50 @@
-//! Model registry + per-model slot pools (docs/ARCHITECTURE.md §Registry).
+//! Model registry + per-(model, program) slot pools
+//! (docs/ARCHITECTURE.md §Registry).
 //!
-//! Loads N score-model variants from one artifacts dir, gives each its
-//! own continuous-batching lane pool, and routes requests by model name
-//! (the first listed model is the default). PJRT handles are not `Send`,
-//! so every pool shares the single engine thread; the engine services
-//! them round-robin, one fused step per turn, so a hot model cannot
-//! starve the others for more than one step.
+//! Loads N score-model variants from one artifacts dir, gives each a
+//! continuous-batching lane pool **per served solver program**
+//! (adaptive / em / ddim — see `programs`), and routes requests by the
+//! (model name, solver) pair (the first listed model is the default).
+//! Each pool carries its own bucket ladder, scheduler and FIFO, so
+//! mixed traffic — adaptive generates next to EM eval lanes — co-exists
+//! on one engine thread. PJRT handles are not `Send`, so every pool
+//! shares the single engine thread; the engine services them
+//! round-robin, one fused step per turn, so a hot pool cannot starve
+//! the others for more than one step.
+//!
+//! Pool ladders are validated against the artifact manifest up front: a
+//! rung needs both the step program and `denoise` compiled at that
+//! width (converged lanes denoise at pool width). The adaptive pool is
+//! mandatory when configured (missing artifacts fail startup, as
+//! before); fixed-step pools are built best-effort from whatever the
+//! manifest offers, and requests for an absent pool get a clean
+//! protocol error at admission instead of an engine-thread fault.
 
+use super::programs::{self, LaneProgram};
 use super::scheduler::BucketScheduler;
 use super::Slot;
 use crate::runtime::{Model, Runtime};
 use crate::sde::Process;
+use crate::solvers::ServingSolver;
 use crate::tensor::Tensor;
 use crate::{anyhow, bail, Result};
 use std::collections::HashMap;
 
-/// One model's continuous-batching lane pool.
-pub(crate) struct Pool {
+/// One (model, solver program) continuous-batching lane pool.
+pub(crate) struct ProgramPool {
+    pub program: Box<dyn LaneProgram>,
     pub slots: Vec<Slot>,
     pub x: Tensor,
+    /// Companion state for the adaptive program's extrapolation pair;
+    /// migrated with `x` for every program (fixed-step programs simply
+    /// never read it).
     pub xprev: Tensor,
     /// Request ids (into the engine's pending map) in arrival order.
     pub fifo: Vec<u64>,
     pub sched: BucketScheduler,
 }
 
-impl Pool {
+impl ProgramPool {
     pub fn active(&self) -> usize {
         self.slots.iter().filter(|s| !s.is_free()).count()
     }
@@ -38,28 +57,42 @@ impl Pool {
 pub(crate) struct ModelEntry<'rt> {
     pub model: Model<'rt>,
     pub process: Process,
-    pub pool: Pool,
+    pub pools: Vec<ProgramPool>,
+}
+
+impl ModelEntry<'_> {
+    /// Pool index serving solver `name`, if this model has one.
+    pub fn pool_for(&self, name: &str) -> Option<usize> {
+        self.pools.iter().position(|p| p.program.solver_name() == name)
+    }
 }
 
 pub(crate) struct Registry<'rt> {
     entries: Vec<ModelEntry<'rt>>,
     by_name: HashMap<String, usize>,
-    /// Round-robin position for fair pool servicing.
+    /// Round-robin position over the flattened pool list.
     cursor: usize,
 }
 
 impl<'rt> Registry<'rt> {
-    /// Load every named variant. Each pool starts at width `max_bucket`;
-    /// with `migrate` on it may move across every compiled
-    /// `adaptive_step` bucket <= `max_bucket`, otherwise it is pinned.
+    /// Load every named variant with a pool per entry of `programs`
+    /// (solver names; see `programs::for_solver`). The adaptive pool
+    /// starts at width `max_bucket` and — with `migrate` on — may move
+    /// across every compiled rung <= `max_bucket`; fixed-step pools use
+    /// the widest rung their own artifacts provide under the same cap.
+    /// With `migrate` off every pool is pinned at its widest rung.
     pub fn load(
         rt: &'rt Runtime,
         names: &[String],
         max_bucket: usize,
         migrate: bool,
+        programs: &[String],
     ) -> Result<Registry<'rt>> {
         if names.is_empty() {
             bail!("registry needs at least one model");
+        }
+        if programs.is_empty() {
+            bail!("registry needs at least one solver program");
         }
         let mut entries = Vec::new();
         let mut by_name = HashMap::new();
@@ -68,56 +101,73 @@ impl<'rt> Registry<'rt> {
                 bail!("model '{name}' listed twice");
             }
             let model = rt.model(name)?;
-            let buckets = model.buckets("adaptive_step");
-            if !buckets.contains(&max_bucket) {
-                bail!(
-                    "bucket {max_bucket} not available for {name}/adaptive_step (have {buckets:?})"
-                );
-            }
-            // fail fast on missing artifacts — a lazy compile error
-            // mid-serving would otherwise be the first sign (converged
-            // lanes denoise at pool width, so a rung needs both
-            // programs). The mandatory max rung errors; optional smaller
-            // rungs just drop off the ladder.
-            for prog in ["adaptive_step", "denoise"] {
-                if !model.has_artifact(prog, max_bucket) {
-                    bail!("{name}: {prog}_b{max_bucket} artifact missing on disk");
+            let process = model.meta.process();
+            let mut pools = Vec::new();
+            for prog_name in programs {
+                let program = programs::for_solver(prog_name)
+                    .ok_or_else(|| anyhow!("no lane program for solver '{prog_name}'"))?;
+                if program.solver_name() == "ddim" && process.kind() != "vp" {
+                    continue; // DDIM is VP-only (paper §4)
                 }
-            }
-            let ladder: Vec<usize> = if migrate {
-                buckets
+                let step = program.step_artifact();
+                if program.solver_name() == "adaptive" {
+                    // mandatory pool: keep the strict fail-fast
+                    // validation the engine has always had
+                    let buckets = model.buckets(step);
+                    if !buckets.contains(&max_bucket) {
+                        bail!(
+                            "bucket {max_bucket} not available for {name}/{step} (have {buckets:?})"
+                        );
+                    }
+                    for prog in [step, "denoise"] {
+                        if !model.has_artifact(prog, max_bucket) {
+                            bail!("{name}: {prog}_b{max_bucket} artifact missing on disk");
+                        }
+                    }
+                }
+                // a rung needs the step program and denoise both listed
+                // in the manifest and present on disk — converged lanes
+                // denoise at pool width, and a lazy compile error
+                // mid-serving would otherwise be the first sign
+                let ladder: Vec<usize> = model
+                    .buckets(step)
                     .iter()
                     .copied()
                     .filter(|&b| {
-                        b == max_bucket
-                            || (b < max_bucket
-                                && model.has_artifact("adaptive_step", b)
-                                && model.has_artifact("denoise", b))
+                        b <= max_bucket
+                            && model.has_artifact(step, b)
+                            && model.has_artifact("denoise", b)
                     })
-                    .collect()
-            } else {
-                vec![max_bucket]
-            };
-            let dim = model.meta.dim;
-            let sched = BucketScheduler::new(ladder);
-            let width = sched.width();
-            by_name.insert(name.clone(), entries.len());
-            entries.push(ModelEntry {
-                process: model.meta.process(),
-                pool: Pool {
+                    .collect();
+                if ladder.is_empty() {
+                    continue; // fixed-step pool absent: clean error at admit
+                }
+                let ladder = if migrate { ladder } else { vec![*ladder.last().unwrap()] };
+                let dim = model.meta.dim;
+                let sched = BucketScheduler::new(ladder);
+                let width = sched.width();
+                pools.push(ProgramPool {
+                    program,
                     slots: vec![Slot::Free; width],
                     x: Tensor::zeros(&[width, dim]),
                     xprev: Tensor::zeros(&[width, dim]),
                     fifo: Vec::new(),
                     sched,
-                },
-                model,
-            });
+                });
+            }
+            if pools.is_empty() {
+                bail!(
+                    "model '{name}' supports none of the configured solver \
+                     programs {programs:?}"
+                );
+            }
+            by_name.insert(name.clone(), entries.len());
+            entries.push(ModelEntry { model, process, pools });
         }
         Ok(Registry { entries, by_name, cursor: 0 })
     }
 
-    /// Pool index for a request's model name ("" = the default model).
+    /// Model index for a request's model name ("" = the default model).
     pub fn resolve(&self, name: &str) -> Result<usize> {
         if name.is_empty() {
             return Ok(0);
@@ -129,6 +179,32 @@ impl<'rt> Registry<'rt> {
         })
     }
 
+    /// (model, pool) indices for a request's (model, solver), with a
+    /// clean protocol error when the model has no pool for the solver
+    /// (non-VP DDIM, missing step artifacts, or a program excluded from
+    /// the serve config).
+    pub fn resolve_pool(&self, model: &str, solver: &ServingSolver) -> Result<(usize, usize)> {
+        let mi = self.resolve(model)?;
+        let e = &self.entries[mi];
+        let name = solver.name();
+        if let Some(pi) = e.pool_for(name) {
+            return Ok((mi, pi));
+        }
+        let mname = &e.model.meta.name;
+        if name == "ddim" && e.process.kind() != "vp" {
+            bail!(
+                "solver 'ddim' requires a VP model (paper §4); '{mname}' is {}",
+                e.process.kind()
+            );
+        }
+        let served: Vec<&str> = e.pools.iter().map(|p| p.program.solver_name()).collect();
+        bail!(
+            "model '{mname}' does not serve solver '{name}' (serving: {served:?}; \
+             lower {} artifacts with aot.py or adjust the serve --solvers list)",
+            solver.step_artifact()
+        )
+    }
+
     pub fn entries(&self) -> &[ModelEntry<'rt>] {
         &self.entries
     }
@@ -137,21 +213,33 @@ impl<'rt> Registry<'rt> {
         &mut self.entries[i]
     }
 
-    /// Next pool with runnable or admissible work, scanning round-robin
-    /// from the cursor; advances the cursor so pools take turns.
-    pub fn next_runnable(&mut self) -> Option<usize> {
-        let n = self.entries.len();
-        for k in 0..n {
-            let i = (self.cursor + k) % n;
-            if !self.entries[i].pool.idle() {
-                self.cursor = (i + 1) % n;
-                return Some(i);
+    fn unflatten(&self, mut flat: usize) -> (usize, usize) {
+        for (mi, e) in self.entries.iter().enumerate() {
+            if flat < e.pools.len() {
+                return (mi, flat);
+            }
+            flat -= e.pools.len();
+        }
+        unreachable!("flat pool index out of range")
+    }
+
+    /// Next (model, pool) with runnable or admissible work, scanning
+    /// round-robin over the flattened pool list from the cursor;
+    /// advances the cursor so pools take turns.
+    pub fn next_runnable(&mut self) -> Option<(usize, usize)> {
+        let total: usize = self.entries.iter().map(|e| e.pools.len()).sum();
+        for k in 0..total {
+            let flat = (self.cursor + k) % total;
+            let (mi, pi) = self.unflatten(flat);
+            if !self.entries[mi].pools[pi].idle() {
+                self.cursor = (flat + 1) % total;
+                return Some((mi, pi));
             }
         }
         None
     }
 
     pub fn all_idle(&self) -> bool {
-        self.entries.iter().all(|e| e.pool.idle())
+        self.entries.iter().all(|e| e.pools.iter().all(|p| p.idle()))
     }
 }

@@ -142,6 +142,7 @@ pub(crate) fn migrate_lanes(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::programs::LaneState;
     use crate::rng::Rng;
 
     fn sched() -> BucketScheduler {
@@ -206,17 +207,19 @@ mod tests {
         Slot::Running {
             req_id,
             sample_idx: req_id as usize,
-            t: 0.5 + req_id as f64 * 0.01,
-            h: 0.003 + req_id as f64 * 1e-4,
-            eps_rel: 0.05,
             nfe: 10 + req_id,
             rng: Rng::new(seed),
+            state: LaneState::Adaptive {
+                t: 0.5 + req_id as f64 * 0.01,
+                h: 0.003 + req_id as f64 * 1e-4,
+                eps_rel: 0.05,
+            },
         }
     }
 
-    /// A lane's full state — controller variables, rng stream, and both
-    /// tensor rows — must be bit-identical across a 16 -> 4 -> 16
-    /// round-trip (the determinism contract bucket switches rely on).
+    /// A lane's full state — program state, rng stream, and both tensor
+    /// rows — must be bit-identical across a 16 -> 4 -> 16 round-trip
+    /// (the determinism contract bucket switches rely on).
     #[test]
     fn migration_preserves_lane_state_bit_identically() {
         let dim = 6;
@@ -244,16 +247,18 @@ mod tests {
         assert_eq!(slots.len(), 16);
 
         for (k, exp_x) in snapshot_x.iter().enumerate() {
-            let Slot::Running { req_id, sample_idx, t, h, eps_rel, nfe, rng } = &mut slots[k]
-            else {
+            let Slot::Running { req_id, sample_idx, nfe, rng, state } = &mut slots[k] else {
                 panic!("lane {k} lost in migration");
             };
             assert_eq!(*req_id, k as u64);
             assert_eq!(*sample_idx, k);
+            assert_eq!(*nfe, 10 + k as u64);
+            let LaneState::Adaptive { t, h, eps_rel } = state else {
+                panic!("lane {k} changed program state kind");
+            };
             assert_eq!(t.to_bits(), (0.5 + k as f64 * 0.01).to_bits());
             assert_eq!(h.to_bits(), (0.003 + k as f64 * 1e-4).to_bits());
             assert_eq!(eps_rel.to_bits(), 0.05f64.to_bits());
-            assert_eq!(*nfe, 10 + k as u64);
             // rng stream unchanged: same next draw as a fresh twin
             assert_eq!(rng.next_u64(), Rng::new(100 + k as u64).next_u64());
             assert_eq!(x.row(k), &exp_x[..]);
@@ -261,6 +266,40 @@ mod tests {
         }
         for s in &slots[3..] {
             assert!(s.is_free(), "tail lanes must be free");
+        }
+    }
+
+    /// Fixed-step lanes migrate like adaptive ones: the grid position
+    /// `(done, total)` and the rng stream survive a bucket switch
+    /// untouched, so a mid-trajectory EM/DDIM sample cannot drift.
+    #[test]
+    fn migration_preserves_fixed_step_lane_state() {
+        let dim = 3;
+        let mut slots = vec![Slot::Free; 8];
+        let mut x = Tensor::zeros(&[8, dim]);
+        let mut xprev = Tensor::zeros(&[8, dim]);
+        for (k, i) in [1usize, 6].iter().enumerate() {
+            slots[*i] = Slot::Running {
+                req_id: k as u64,
+                sample_idx: k,
+                nfe: 7 + k as u64,
+                rng: Rng::new(40 + k as u64),
+                state: LaneState::Fixed { done: 5 + k, total: 20 + k },
+            };
+            for v in x.row_mut(*i).iter_mut() {
+                *v = (k + 1) as f32 * 1.5;
+            }
+        }
+        assert_eq!(migrate_lanes(&mut slots, &mut x, &mut xprev, 2), 2);
+        assert_eq!(migrate_lanes(&mut slots, &mut x, &mut xprev, 8), 2);
+        for k in 0..2 {
+            let Slot::Running { nfe, rng, state, .. } = &mut slots[k] else {
+                panic!("fixed lane {k} lost in migration");
+            };
+            assert_eq!(*nfe, 7 + k as u64);
+            assert_eq!(*state, LaneState::Fixed { done: 5 + k, total: 20 + k });
+            assert_eq!(rng.next_u64(), Rng::new(40 + k as u64).next_u64());
+            assert!(x.row(k).iter().all(|&v| v == (k + 1) as f32 * 1.5));
         }
     }
 

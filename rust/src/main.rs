@@ -16,7 +16,7 @@ use gofast::coordinator::{Engine, EngineConfig};
 use gofast::metrics;
 use gofast::rng::Rng;
 use gofast::runtime::Runtime;
-use gofast::solvers::{self, adaptive, ddim, em, lamba, prob_flow, rdl, Ctx, SolveOpts};
+use gofast::solvers::{self, adaptive, ddim, em, lamba, prob_flow, rdl, spec, Ctx, SolveOpts};
 use gofast::tensor::{save_image_grid, Tensor};
 use gofast::{bail, json, Context, Result};
 use std::path::{Path, PathBuf};
@@ -61,14 +61,17 @@ USAGE: gofast <command> [flags]
             [--bucket 16] [--composed] [--no-denoise] [--out grid.ppm]
             [--artifacts artifacts]
   serve     [--config configs/server.toml] [--models vp,ve]
-            [--max-bucket 16] [--no-migrate] [--set k=v ...]
-  client    [--addr 127.0.0.1:7878] [--model vp] [--n 4] [--eps-rel 0.05]
-            [--seed 0] [--stats] [--out grid.ppm]
-  evaluate  --model vp [--solver adaptive] [--samples 256] [--eps-rel 0.05]
-            [--seed 0] [--addr host:port] [--offline] [--check]
-            [...generate flags]
-            (default: served through the engine; --offline bypasses the
-             coordinator; --check runs both and asserts agreement)
+            [--solvers adaptive,em,ddim] [--max-bucket 16] [--no-migrate]
+            [--set k=v ...]
+  client    [--addr 127.0.0.1:7878] [--model vp] [--solver adaptive|em:<n>|ddim:<n>]
+            [--n 4] [--eps-rel 0.05] [--seed 0] [--stats] [--out grid.ppm]
+  evaluate  --model vp [--solver adaptive|em:<n>|ddim:<n>|...] [--samples 256]
+            [--eps-rel 0.05] [--seed 0] [--addr host:port] [--offline]
+            [--check] [...generate flags]
+            (default: served through the engine's solver-program lane
+             pools; --offline bypasses the coordinator; --check runs both
+             and asserts agreement. Non-served solvers — ode, rdl, ... —
+             are --offline only.)
   inspect   [--artifacts artifacts]
 ";
 
@@ -203,8 +206,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         args.bool_or("migrate", cfg.bool_or("server.migrate", true)?)?
     };
+    // --solvers: which lane-program pools each model gets; names are
+    // validated by the same spec parser the wire layer uses, so serve
+    // and the protocol cannot drift in accepted solvers
+    let mut programs = Vec::new();
+    for name in args.str_list_or("solvers", &["adaptive", "em", "ddim"]) {
+        if name.contains(':') {
+            // a silently-dropped step count would misconfigure every
+            // bare-name request, so refuse it outright
+            bail!(
+                "--solvers takes bare program names (got '{name}'); step counts \
+                 travel per request, e.g. solver=em:128"
+            );
+        }
+        let prog = spec::parse(&name)?.name().to_string();
+        if !programs.contains(&prog) {
+            programs.push(prog);
+        }
+    }
     let mut ecfg = EngineConfig::new(&artifacts, &models[0]);
     ecfg.models = models.clone();
+    ecfg.programs = programs.clone();
     ecfg.bucket = bucket;
     ecfg.migrate = migrate;
     ecfg.fused_buffers = cfg.bool_or("server.fused_buffers", true)?;
@@ -214,7 +236,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))
         .with_context(|| format!("binding port {port}"))?;
     println!(
-        "gofast serving models={models:?} on 127.0.0.1:{port} (max-bucket={bucket}, migrate={migrate})"
+        "gofast serving models={models:?} solvers={programs:?} on 127.0.0.1:{port} \
+         (max-bucket={bucket}, migrate={migrate})"
     );
     gofast::server::serve(
         listener,
@@ -235,8 +258,10 @@ fn cmd_client(args: &Args) -> Result<()> {
     }
     let n = args.usize_or("n", 4)?;
     let model = args.str_or("model", "");
-    let r = client.generate_on(
+    let solver = args.str_or("solver", "");
+    let r = client.generate_spec(
         &model,
+        &solver,
         n,
         args.f64_or("eps-rel", 0.05)?,
         args.u64_or("seed", 0)?,
@@ -244,8 +269,9 @@ fn cmd_client(args: &Args) -> Result<()> {
     )?;
     let mean_nfe = r.nfe.iter().sum::<u64>() as f64 / r.nfe.len() as f64;
     println!(
-        "model={} n={n} wall={:.2}s queued={:.3}s mean_nfe={mean_nfe:.1}",
+        "model={} solver={} n={n} wall={:.2}s queued={:.3}s mean_nfe={mean_nfe:.1}",
         if model.is_empty() { "<default>" } else { &model },
+        if solver.is_empty() { "adaptive" } else { &solver },
         r.wall_s,
         r.queued_s
     );
@@ -301,11 +327,23 @@ struct EvalSummary {
     steps_per_bucket: Vec<(usize, u64)>,
 }
 
+/// Solver spec for the serving path, consolidated through
+/// `solvers::spec::parse` (the same parser the server wire layer and
+/// `serve --solvers` use). A `--steps` flag supplies the default step
+/// count for bare fixed-step names (`--solver em --steps 100` ==
+/// `--solver em:100`).
+fn parse_served_solver(args: &Args) -> Result<solvers::ServingSolver> {
+    let steps = match args.get("steps") {
+        None => None,
+        Some(_) => Some(args.usize_or("steps", 256)?),
+    };
+    spec::parse_with_steps(&args.str_or("solver", "adaptive"), steps)
+}
+
 /// Evaluation through the serving path: a running server (`--addr`) or
 /// an in-process engine spun up on the artifacts dir.
-fn evaluate_served(args: &Args) -> Result<EvalSummary> {
+fn evaluate_served(args: &Args, solver: solvers::ServingSolver) -> Result<EvalSummary> {
     let model = args.str_or("model", "vp");
-    let solver = args.str_or("solver", "adaptive");
     let samples = args.usize_or("samples", 256)?;
     let eps_rel = args.f64_or("eps-rel", 0.05)?;
     let seed = args.u64_or("seed", 0)?;
@@ -326,7 +364,7 @@ fn evaluate_served(args: &Args) -> Result<EvalSummary> {
             }
         }
         let mut client = gofast::server::Client::connect(addr)?;
-        let r = client.evaluate(&model, &solver, samples, eps_rel, seed)?;
+        let r = client.evaluate(&model, &solver.spec_string(), samples, eps_rel, seed)?;
         return Ok(EvalSummary {
             fid: r.fid,
             is: r.is,
@@ -359,10 +397,10 @@ fn evaluate_served(args: &Args) -> Result<EvalSummary> {
 }
 
 /// The engine bypass: generate and score locally, no coordinator.
-/// `adaptive` runs engine-equivalent per-sample lanes
-/// (`adaptive::run_lanes`), so its FID*/IS* match the served path on the
-/// same seed; other solvers use their batch RNG scheme and are only
-/// available here.
+/// Served solvers (adaptive, em:<n>, ddim:<n>) run engine-equivalent
+/// per-sample lanes (`spec::run_lanes`), so their FID*/IS* match the
+/// served path on the same seed; other solvers (ode, rdl, ...) use
+/// their batch RNG scheme and are only available here.
 fn evaluate_offline(args: &Args) -> Result<EvalSummary> {
     let dir = artifacts_dir(args);
     let rt = Runtime::new(&dir)?;
@@ -370,46 +408,37 @@ fn evaluate_offline(args: &Args) -> Result<EvalSummary> {
     let model = rt.model(&model_name)?;
     let (net, ref_stats) = metrics::reference_for(&rt, &model.meta)?;
     let samples = args.usize_or("samples", 256)?;
-    let solver = args.str_or("solver", "adaptive");
     let seed = args.u64_or("seed", 0)?;
-    let mut images = Tensor::zeros(&[samples, model.meta.dim]);
-    let mut nfe_sum = 0u64;
-    if solver == "adaptive" {
-        let bucket = gofast::runtime::manifest_engine_bucket(
-            &dir,
-            &model_name,
-            args.usize_or("bucket", 16)?,
-        )?;
-        let ctx = Ctx::new(&model, bucket, SolveOpts::default());
+    if let Ok(solver) = parse_served_solver(args) {
         let opts = adaptive::AdaptiveOpts {
             eps_rel: args.f64_or("eps-rel", 0.05)?,
             r: args.f64_or("r", 0.9)?,
             safety: args.f64_or("safety", 0.9)?,
             ..Default::default()
         };
-        let mut done = 0;
-        while done < samples {
-            let take = (samples - done).min(bucket);
-            let res = adaptive::run_lanes(&ctx, seed, done as u64, take, &opts)?;
-            for i in 0..take {
-                images.row_mut(done + i).copy_from_slice(res.x.row(i));
-            }
-            nfe_sum += res.nfe_per_sample.iter().sum::<u64>();
-            done += take;
-        }
-        model.meta.process().to_unit_range(&mut images);
-        // same chunked accumulator arithmetic as the engine's eval lanes
-        let (fid, is) = metrics::evaluate_streaming(&net, &images, &ref_stats)?;
+        let r = spec::evaluate_offline_lanes(
+            &model,
+            &net,
+            &ref_stats,
+            solver,
+            samples,
+            seed,
+            &opts,
+            args.usize_or("bucket", 16)?,
+        )?;
         return Ok(EvalSummary {
-            fid,
-            is,
-            mean_nfe: nfe_sum as f64 / samples as f64,
+            fid: r.fid,
+            is: r.is,
+            mean_nfe: r.mean_nfe,
             steps_per_bucket: Vec::new(),
         });
     }
-    // non-adaptive solvers: the legacy batch bypass
+    // non-served solvers: the legacy batch bypass
+    let solver = args.str_or("solver", "adaptive");
     let bucket = args.usize_or("bucket", 64)?;
     let ctx = Ctx::new(&model, bucket, SolveOpts::default());
+    let mut images = Tensor::zeros(&[samples, model.meta.dim]);
+    let mut nfe_sum = 0u64;
     let mut rng = Rng::new(seed);
     let mut done = 0;
     while done < samples {
@@ -431,12 +460,11 @@ fn evaluate_offline(args: &Args) -> Result<EvalSummary> {
     })
 }
 
-fn print_eval(path: &str, args: &Args, s: &EvalSummary) -> Result<()> {
+fn print_eval(path: &str, args: &Args, solver_label: &str, s: &EvalSummary) -> Result<()> {
     let model = args.str_or("model", "vp");
-    let solver = args.str_or("solver", "adaptive");
     let samples = args.usize_or("samples", 256)?;
     print!(
-        "[{path}] model={model} solver={solver} samples={samples} NFE={:.1} FID*={:.3} IS*={:.3}",
+        "[{path}] model={model} solver={solver_label} samples={samples} NFE={:.1} FID*={:.3} IS*={:.3}",
         s.mean_nfe, s.fid, s.is
     );
     let consumed: Vec<String> = s
@@ -456,19 +484,26 @@ fn print_eval(path: &str, args: &Args, s: &EvalSummary) -> Result<()> {
 /// FID*/IS* of a model+solver against the reference split. Default route
 /// is the serving path (in-process engine, or a live server with
 /// `--addr`); `--offline` bypasses the coordinator; `--check` runs both
-/// and asserts they agree (<= 1e-6 relative — the offline adaptive
-/// bypass mirrors the engine's per-lane RNG streams exactly).
+/// and asserts they agree (<= 1e-6 relative — the offline per-lane
+/// bypass mirrors the engine's RNG streams exactly, for fixed-step
+/// solvers just like adaptive).
 fn cmd_evaluate(args: &Args) -> Result<()> {
     let check = args.has("check");
     if args.has("offline") && !check {
+        let label = match parse_served_solver(args) {
+            Ok(s) => s.spec_string(),
+            Err(_) => args.str_or("solver", "adaptive"),
+        };
         let s = evaluate_offline(args)?;
-        return print_eval("offline", args, &s);
+        return print_eval("offline", args, &label, &s);
     }
-    let served = evaluate_served(args)?;
-    print_eval("served", args, &served)?;
+    let solver = parse_served_solver(args)?;
+    let label = solver.spec_string();
+    let served = evaluate_served(args, solver)?;
+    print_eval("served", args, &label, &served)?;
     if check {
         let off = evaluate_offline(args)?;
-        print_eval("offline", args, &off)?;
+        print_eval("offline", args, &label, &off)?;
         let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1.0);
         if rel(served.fid, off.fid) > 1e-6
             || rel(served.is, off.is) > 1e-6

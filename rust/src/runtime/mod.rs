@@ -56,18 +56,30 @@ pub fn manifest_buckets(artifacts_dir: &Path, variant: &str, program: &str) -> R
     Ok(out)
 }
 
-/// Largest compiled `adaptive_step` bucket <= `cap` for `variant` (or
-/// the smallest compiled one when all exceed `cap`) — the ladder-capped
-/// engine-width policy shared by `gofast evaluate` and the tests.
-pub fn manifest_engine_bucket(artifacts_dir: &Path, variant: &str, cap: usize) -> Result<usize> {
-    let buckets = manifest_buckets(artifacts_dir, variant, "adaptive_step")?;
+/// Largest compiled `program` bucket <= `cap` for `variant` (or the
+/// smallest compiled one when all exceed `cap`) — the ladder-capped
+/// pool-width policy shared by `gofast evaluate`, the benches and the
+/// tests, for any solver step program.
+pub fn manifest_program_bucket(
+    artifacts_dir: &Path,
+    variant: &str,
+    program: &str,
+    cap: usize,
+) -> Result<usize> {
+    let buckets = manifest_buckets(artifacts_dir, variant, program)?;
     buckets
         .iter()
         .rev()
         .find(|&&b| b <= cap)
         .or(buckets.first())
         .copied()
-        .ok_or_else(|| anyhow!("{variant} has no adaptive_step artifacts"))
+        .ok_or_else(|| anyhow!("{variant} has no {program} artifacts"))
+}
+
+/// [`manifest_program_bucket`] for `adaptive_step` (the engine's
+/// mandatory pool width).
+pub fn manifest_engine_bucket(artifacts_dir: &Path, variant: &str, cap: usize) -> Result<usize> {
+    manifest_program_bucket(artifacts_dir, variant, "adaptive_step", cap)
 }
 
 /// Number of score-network evaluations a single call of each program

@@ -1,16 +1,22 @@
 //! JSON-lines TCP serving front-end + client library.
 //!
 //! Protocol (one JSON object per line, both directions):
-//!   -> {"op":"generate","n":16,"eps_rel":0.05,"seed":7,"model":"vp"}
-//!   <- {"ok":true,"model":"vp","n":16,"h":16,"w":16,"nfe":[...],
-//!       "wall_s":...,"queued_s":...,"images_b64":"<f32-le raw, base64>"}
+//!   -> {"op":"generate","n":16,"eps_rel":0.05,"seed":7,"model":"vp",
+//!       "solver":"adaptive"}
+//!   <- {"ok":true,"model":"vp","solver":"adaptive","n":16,"h":16,
+//!       "w":16,"nfe":[...],"wall_s":...,"queued_s":...,
+//!       "images_b64":"<f32-le raw, base64>"}
 //!   -> {"op":"evaluate","samples":256,"eps_rel":0.05,"seed":7,
-//!       "model":"vp","solver":"adaptive"}
-//!   <- {"ok":true,"model":"vp","solver":"adaptive","samples":256,
+//!       "model":"vp","solver":"em:128"}
+//!   <- {"ok":true,"model":"vp","solver":"em:128","samples":256,
 //!       "fid":...,"is":...,"mean_nfe":...,"wall_s":...,
 //!       "steps_per_bucket":{"<bucket>":steps,...}}
 //!   -> {"op":"stats"}
 //!   <- {"ok":true,"requests_done":...,"models":[...],
+//!       "programs":{"adaptive":{"pools":...,"active_lanes":...,
+//!         "steps":...,"occupied_lane_steps":...,"wasted_lane_steps":...,
+//!         "score_evals":...,"migrations_up":...,"migrations_down":...,
+//!         "steps_per_bucket":{"<bucket>":steps,...}},"em":{...},...},
 //!       "steps_per_bucket":{"<bucket>":steps,...},
 //!       "migrations_up":...,"migrations_down":...,
 //!       "wasted_lane_steps":...,"occupied_lane_steps":...,
@@ -20,24 +26,41 @@
 //!
 //! `model` is optional and defaults to the engine's first configured
 //! model; the response `h`/`w` are the geometry of the model that
-//! actually served the request. `steps_per_bucket` counts fused
-//! adaptive_step executions at each slot-pool width the occupancy-aware
-//! scheduler ran (docs/ARCHITECTURE.md §Scheduler).
+//! actually served the request.
+//!
+//! `solver` (optional on both `generate` and `evaluate`, default
+//! "adaptive") is a solver spec parsed by `solvers::spec::parse` — the
+//! same parser `gofast evaluate` and `gofast serve --solvers` use, so
+//! the accepted names and defaults cannot drift between the CLI and the
+//! wire: `"adaptive"` (Algorithm 1, per-lane step sizes; `eps_rel` is
+//! its tolerance knob), `"em[:<steps>]"` and `"ddim[:<steps>]"` (fixed
+//! uniform schedules, default 256 steps; `ddim` is VP-only and a
+//! request against a non-VP model gets a clean `ok:false` protocol
+//! error at admission). Each (model, solver) pair is served by its own
+//! lane-program pool behind the bucket scheduler (docs/ARCHITECTURE.md
+//! §Solver-program pools), so mixed solver traffic co-batches on one
+//! engine thread. The response echoes the canonical spec string.
 //!
 //! `evaluate` runs FID*/IS* *through the serving path*: its samples are
-//! admitted as evaluation lanes through the same scheduler/registry
-//! machinery as `generate` traffic (docs/ARCHITECTURE.md §Evaluation).
-//! `solver` is optional and must be "adaptive" — the engine's step loop
-//! is the paper's adaptive solver; other solvers evaluate offline via
-//! `gofast evaluate --offline`. `eps_rel` defaults to the server's
-//! solver tolerance, `samples` to 256 (must be >= 2: FID needs a
-//! non-singular feature covariance). The response `steps_per_bucket`
+//! admitted as evaluation lanes onto the named solver's pool through
+//! the same scheduler/registry machinery as `generate` traffic
+//! (docs/ARCHITECTURE.md §Evaluation). `eps_rel` defaults to the
+//! server's solver tolerance, `samples` to 256 (must be >= 2: FID needs
+//! a non-singular feature covariance). The response `steps_per_bucket`
 //! counts the fused steps the serving pool ran while the job was in
-//! flight (shared with concurrent traffic on the same model); `fid`/`is`
+//! flight (shared with concurrent traffic on the same pool); `fid`/`is`
 //! use the in-tree synthception feature net (values comparable within
-//! this repo only). The `stats` op's `evals_done` / `eval_active` /
-//! `eval_samples_done` / `eval_lane_steps` counters expose the eval-lane
-//! share of engine work.
+//! this repo only).
+//!
+//! The `stats` op reports, besides the aggregate counters, a
+//! `programs` object keyed by solver name with that program's pool
+//! count, live lanes, fused step executions, occupied/wasted
+//! lane-steps, useful score evaluations (occupied lane-steps x the
+//! program's per-step NFE cost), migration counters and per-bucket
+//! step counts — the per-program breakdown of the aggregate
+//! `steps_per_bucket` / `*_lane_steps` fields. `evals_done` / `eval_active` /
+//! `eval_samples_done` / `eval_lane_steps` expose the eval-lane share
+//! of engine work.
 //!
 //! One OS thread per connection (requests within a connection pipeline
 //! through the shared engine, which does the real batching).
@@ -46,6 +69,7 @@ pub mod b64;
 
 use crate::coordinator::{EngineClient, EngineStats, EvalRequest};
 use crate::json::{self, Value};
+use crate::solvers::spec;
 use crate::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -117,13 +141,16 @@ fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Resu
             let seed = req.get("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64;
             let model =
                 req.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("").to_string();
+            let solver =
+                spec::parse(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
             let want_images =
                 req.get("images").map(|v| v.as_bool()).transpose()?.unwrap_or(true);
-            let r = engine.generate_on(&model, n, eps_rel, seed)?;
+            let r = engine.generate_with(&model, solver, n, eps_rel, seed)?;
             let mut pairs = vec![
                 ("ok", Value::Bool(true)),
                 // the model that actually served it (resolved default)
                 ("model", Value::str(r.model)),
+                ("solver", Value::str(solver.spec_string())),
                 ("n", Value::num(n as f64)),
                 ("h", Value::num(r.h as f64)),
                 ("w", Value::num(r.w as f64)),
@@ -151,12 +178,8 @@ fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Resu
             let seed = req.get("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64;
             let model =
                 req.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("").to_string();
-            let solver = req
-                .get("solver")
-                .map(|v| v.as_str())
-                .transpose()?
-                .unwrap_or("adaptive")
-                .to_string();
+            let solver =
+                spec::parse(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
             let r = engine.evaluate(EvalRequest { model, solver, samples, eps_rel, seed })?;
             Ok(Value::obj(vec![
                 ("ok", Value::Bool(true)),
@@ -167,19 +190,15 @@ fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Resu
                 ("is", Value::num(r.is)),
                 ("mean_nfe", Value::num(r.mean_nfe)),
                 ("wall_s", Value::num(r.wall_s)),
-                (
-                    "steps_per_bucket",
-                    Value::Obj(
-                        r.steps_per_bucket
-                            .iter()
-                            .map(|(b, n)| (b.to_string(), Value::num(*n as f64)))
-                            .collect(),
-                    ),
-                ),
+                ("steps_per_bucket", buckets_obj(&r.steps_per_bucket)),
             ]))
         }
         other => Err(anyhow!("unknown op '{other}'")),
     }
+}
+
+fn buckets_obj(per: &[(usize, u64)]) -> Value {
+    Value::Obj(per.iter().map(|(b, n)| (b.to_string(), Value::num(*n as f64))).collect())
 }
 
 fn stats_to_json(s: &EngineStats) -> Value {
@@ -198,14 +217,33 @@ fn stats_to_json(s: &EngineStats) -> Value {
         ("mean_occupancy", Value::num(s.mean_occupancy)),
         ("models", Value::Arr(s.models.iter().map(|m| Value::str(m.clone())).collect())),
         (
-            "steps_per_bucket",
+            "programs",
             Value::Obj(
-                s.steps_per_bucket
+                s.programs
                     .iter()
-                    .map(|(b, n)| (b.to_string(), Value::num(*n as f64)))
+                    .map(|p| {
+                        (
+                            p.solver.clone(),
+                            Value::obj(vec![
+                                ("pools", Value::num(p.pools as f64)),
+                                ("active_lanes", Value::num(p.active_lanes as f64)),
+                                ("steps", Value::num(p.steps as f64)),
+                                (
+                                    "occupied_lane_steps",
+                                    Value::num(p.occupied_lane_steps as f64),
+                                ),
+                                ("wasted_lane_steps", Value::num(p.wasted_lane_steps as f64)),
+                                ("score_evals", Value::num(p.score_evals as f64)),
+                                ("migrations_up", Value::num(p.migrations_up as f64)),
+                                ("migrations_down", Value::num(p.migrations_down as f64)),
+                                ("steps_per_bucket", buckets_obj(&p.steps_per_bucket)),
+                            ]),
+                        )
+                    })
                     .collect(),
             ),
         ),
+        ("steps_per_bucket", buckets_obj(&s.steps_per_bucket)),
         ("migrations_up", Value::num(s.migrations_up as f64)),
         ("migrations_down", Value::num(s.migrations_down as f64)),
         ("wasted_lane_steps", Value::num(s.wasted_lane_steps as f64)),
@@ -288,10 +326,25 @@ impl Client {
         self.generate_on("", n, eps_rel, seed, want_images)
     }
 
-    /// Generate on a named model ("" = the server's default model).
+    /// Generate on a named model ("" = the server's default model) with
+    /// the adaptive solver.
     pub fn generate_on(
         &mut self,
         model: &str,
+        n: usize,
+        eps_rel: f64,
+        seed: u64,
+        want_images: bool,
+    ) -> Result<ClientGenResult> {
+        self.generate_spec(model, "", n, eps_rel, seed, want_images)
+    }
+
+    /// Generate with an explicit solver spec ("adaptive", "em:<n>",
+    /// "ddim:<n>"; "" = the server default, adaptive).
+    pub fn generate_spec(
+        &mut self,
+        model: &str,
+        solver: &str,
         n: usize,
         eps_rel: f64,
         seed: u64,
@@ -306,6 +359,9 @@ impl Client {
         ];
         if !model.is_empty() {
             pairs.push(("model", Value::str(model)));
+        }
+        if !solver.is_empty() {
+            pairs.push(("solver", Value::str(solver)));
         }
         let req = Value::obj(pairs);
         let v = self.call(&req)?;
@@ -335,7 +391,8 @@ impl Client {
     }
 
     /// FID*/IS* evaluation served through the engine ("" model/solver =
-    /// the server defaults; the engine only serves "adaptive").
+    /// the server defaults; solver specs: "adaptive", "em:<n>",
+    /// "ddim:<n>").
     pub fn evaluate(
         &mut self,
         model: &str,

@@ -3,6 +3,7 @@
 
 use super::{t_vec, time_grid, Ctx, SolveResult};
 use crate::rng::Rng;
+use crate::tensor::Tensor;
 use crate::{bail, Result};
 
 pub fn run(ctx: &Ctx, rng: &mut Rng, n_steps: usize) -> Result<SolveResult> {
@@ -29,4 +30,38 @@ pub fn run(ctx: &Ctx, rng: &mut Rng, n_steps: usize) -> Result<SolveResult> {
         nfe.iter_mut().for_each(|n| *n += 1);
     }
     Ok(SolveResult { x, nfe_per_sample: nfe, steps: n_steps as u64, rejections: 0 })
+}
+
+/// DDIM with *per-lane* RNG streams matching the serving engine's lane
+/// semantics: lane `i` draws its prior from `Rng::new(seed).fork(base +
+/// i)` (DDIM is deterministic after the prior, so that is the stream's
+/// only use) and walks the uniform grid `uniform_t(t_eps, n_steps, k)`
+/// — the nodes the engine's `ddim_step` lane pool feeds the kernel.
+/// The `--offline` twin for served DDIM evaluation; see
+/// `em::run_lanes` for the agreement contract.
+pub fn run_lanes(
+    ctx: &Ctx,
+    seed: u64,
+    base: u64,
+    count: usize,
+    n_steps: usize,
+) -> Result<SolveResult> {
+    if ctx.process.kind() != "vp" {
+        bail!("DDIM is only defined for VP models (paper §4)");
+    }
+    super::run_fixed_lanes(ctx, seed, base, count, n_steps, |x, t, tn, rngs| {
+        let b = x.shape[0];
+        // padding lanes ride along like the engine's free lanes:
+        // t == tn makes the update an exact no-op
+        let mut t_in = vec![1.0f32; b];
+        let mut tn_in = vec![1.0f32; b];
+        for i in 0..rngs.len() {
+            t_in[i] = t as f32;
+            tn_in[i] = tn as f32;
+        }
+        let t_t = Tensor { shape: vec![b], data: t_in };
+        let tn_t = Tensor { shape: vec![b], data: tn_in };
+        let mut out = ctx.model.exec("ddim_step", b, &[x, &t_t, &tn_t], ctx.opts.fused_buffers)?;
+        Ok(out.pop().unwrap())
+    })
 }

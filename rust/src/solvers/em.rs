@@ -35,6 +35,46 @@ pub fn run(ctx: &Ctx, rng: &mut Rng, n_steps: usize) -> Result<SolveResult> {
     Ok(SolveResult { x, nfe_per_sample: nfe, steps: n_steps as u64, rejections: 0 })
 }
 
+/// EM with *per-lane* RNG streams matching the serving engine's lane
+/// semantics exactly: lane `i` owns `Rng::new(seed).fork(base + i)`,
+/// draws its prior and every step's noise from that stream, and walks
+/// the uniform grid `uniform_t(t_eps, n_steps, k)` — the same nodes the
+/// engine's `em_step` lane pool feeds the kernel. Because no lane's
+/// update reads another lane's state, a sample's trajectory here is
+/// bit-identical to the served one for the same `(seed, base + i)`,
+/// regardless of pool width, migration, or co-batched traffic. This is
+/// the `--offline` twin the engine-vs-offline agreement check for
+/// served EM evaluation is defined against.
+///
+/// `count` lanes (<= `ctx.bucket`) run batched at `ctx.bucket`; returns
+/// `count` rows.
+pub fn run_lanes(
+    ctx: &Ctx,
+    seed: u64,
+    base: u64,
+    count: usize,
+    n_steps: usize,
+) -> Result<SolveResult> {
+    let mut z = Tensor::zeros(&[ctx.bucket, ctx.dim()]);
+    super::run_fixed_lanes(ctx, seed, base, count, n_steps, |x, t, tn, rngs| {
+        let b = x.shape[0];
+        // padding lanes ride along exactly like the engine's free lanes:
+        // t = 1, h = 0 (an exact no-op in the kernel), zero noise
+        let mut t_in = vec![1.0f32; b];
+        let mut h_in = vec![0.0f32; b];
+        for (i, rng) in rngs.iter_mut().enumerate() {
+            t_in[i] = t as f32;
+            h_in[i] = (t - tn) as f32;
+            rng.fill_normal(z.row_mut(i));
+        }
+        let t_t = Tensor { shape: vec![b], data: t_in };
+        let h_t = Tensor { shape: vec![b], data: h_in };
+        let mut out =
+            ctx.model.exec("em_step", b, &[x, &t_t, &h_t, &z], ctx.opts.fused_buffers)?;
+        Ok(out.pop().unwrap())
+    })
+}
+
 /// Composed EM (host update over raw score calls) — baseline for the
 /// fused-vs-composed perf comparison and cross-check tests.
 pub fn run_composed(ctx: &Ctx, rng: &mut Rng, n_steps: usize) -> Result<SolveResult> {

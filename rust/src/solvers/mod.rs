@@ -21,7 +21,7 @@ pub mod rdl;
 pub mod spec;
 pub mod table3;
 
-pub use spec::Spec;
+pub use spec::{ServingSolver, Spec};
 
 use crate::rng::Rng;
 use crate::runtime::Model;
@@ -125,11 +125,18 @@ impl<'m, 'rt> Ctx<'m, 'rt> {
     }
 }
 
-/// Uniform reverse-time grid from 1 down to t_eps with n steps
-/// (paper App. D time sequence).
+/// `i`-th node of the uniform reverse-time grid from 1 down to `t_eps`
+/// in `n` steps (paper App. D time sequence). The single definition both
+/// the offline grids and the serving fixed-step lane pools index, so the
+/// two paths cannot drift.
+pub fn uniform_t(t_eps: f64, n: usize, i: usize) -> f64 {
+    1.0 - (1.0 - t_eps) * i as f64 / n as f64
+}
+
+/// Uniform reverse-time grid from 1 down to t_eps with n steps.
 pub fn time_grid(process: &Process, n: usize) -> Vec<f64> {
     let t_eps = process.t_eps();
-    (0..=n).map(|i| 1.0 - (1.0 - t_eps) * i as f64 / n as f64).collect()
+    (0..=n).map(|i| uniform_t(t_eps, n, i)).collect()
 }
 
 /// Tensor of one repeated time value.
@@ -140,6 +147,56 @@ pub fn t_vec(bucket: usize, t: f64) -> Tensor {
 /// Fill `z` with standard normals.
 pub fn fill_noise(rng: &mut Rng, z: &mut Tensor) {
     rng.fill_normal(&mut z.data);
+}
+
+/// Shared scaffold for the fixed-step per-lane offline runs (EM, DDIM):
+/// guards, per-lane RNG/prior setup mirroring the engine's admission,
+/// the uniform-grid walk, denoising, and trimming to `count` rows.
+/// `step` advances the whole pool one grid node — it receives the pool
+/// state `x`, the grid pair `(t, t_next)` and the live lanes' RNG
+/// streams (`rngs.len() == count`; padding lanes must be filled
+/// engine-style: exact no-op inputs, zero noise) and returns the
+/// kernel's `x_next`.
+pub(crate) fn run_fixed_lanes(
+    ctx: &Ctx,
+    seed: u64,
+    base: u64,
+    count: usize,
+    n_steps: usize,
+    mut step: impl FnMut(&Tensor, f64, f64, &mut [Rng]) -> Result<Tensor>,
+) -> Result<SolveResult> {
+    let b = ctx.bucket;
+    if count > b {
+        crate::bail!("count {count} exceeds bucket {b}");
+    }
+    if n_steps == 0 {
+        crate::bail!("fixed-step solver needs at least 1 step");
+    }
+    let d = ctx.dim();
+    let t_eps = ctx.process.t_eps();
+    let prior_std = ctx.process.prior_std() as f32;
+    let mut rngs: Vec<Rng> = (0..count).map(|i| Rng::new(seed).fork(base + i as u64)).collect();
+    let mut x = Tensor::zeros(&[b, d]);
+    for (i, rng) in rngs.iter_mut().enumerate() {
+        for v in x.row_mut(i).iter_mut() {
+            *v = rng.normal() as f32 * prior_std;
+        }
+    }
+    for k in 0..n_steps {
+        let t = uniform_t(t_eps, n_steps, k);
+        let tn = uniform_t(t_eps, n_steps, k + 1);
+        let xn = step(&x, t, tn, &mut rngs)?;
+        for i in 0..count {
+            x.row_mut(i).copy_from_slice(xn.row(i));
+        }
+    }
+    let mut nfe = vec![n_steps as u64; count];
+    if ctx.opts.denoise {
+        x = ctx.denoise(&x, &t_vec(b, t_eps))?;
+        nfe.iter_mut().for_each(|n| *n += 1);
+    }
+    let x = Tensor::from_vec(&[count, d], x.data[..count * d].to_vec())?;
+    Ok(SolveResult { x, nfe_per_sample: nfe, steps: n_steps as u64, rejections: 0 })
 }
 
 #[cfg(test)]

@@ -1,10 +1,203 @@
-//! Unified solver specification: a single enum naming every solver the
-//! benches/tables exercise, with one dispatch point. Keeps paper-table
-//! code declarative ("run this list of rows").
+//! Unified solver specification.
+//!
+//! Two layers:
+//! * [`ServingSolver`] — the solvers the engine's lane-program pools
+//!   serve (`coordinator::programs`), with the **single** spec parser
+//!   ([`parse`]) shared by `gofast evaluate` (served and `--offline`),
+//!   `gofast serve --solvers`, and the server wire layer, so the paths
+//!   cannot drift in accepted names or defaults;
+//! * [`Spec`] — the wider bench/table enum naming every solver the
+//!   paper tables exercise, with one dispatch point.
 
 use super::{adaptive, ddim, em, lamba, prob_flow, rdl, table3, Ctx, SolveResult};
 use crate::rng::Rng;
-use crate::Result;
+use crate::{anyhow, bail, Result};
+
+/// Step count a fixed-step spec defaults to when neither the spec string
+/// (`em:<n>`) nor the caller supplies one.
+pub const DEFAULT_FIXED_STEPS: usize = 256;
+
+/// A solver the serving engine can run as a lane-program pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServingSolver {
+    /// Algorithm 1 (the paper's adaptive solver); per-lane step sizes.
+    Adaptive,
+    /// Euler–Maruyama, `steps` uniform steps per lane.
+    Em { steps: usize },
+    /// DDIM (deterministic, VP only), `steps` uniform steps per lane.
+    Ddim { steps: usize },
+}
+
+impl ServingSolver {
+    /// Routing name ("adaptive" | "em" | "ddim").
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServingSolver::Adaptive => "adaptive",
+            ServingSolver::Em { .. } => "em",
+            ServingSolver::Ddim { .. } => "ddim",
+        }
+    }
+
+    /// Compiled step artifact that advances a pool of this solver's lanes.
+    pub fn step_artifact(&self) -> &'static str {
+        match self {
+            ServingSolver::Adaptive => "adaptive_step",
+            ServingSolver::Em { .. } => "em_step",
+            ServingSolver::Ddim { .. } => "ddim_step",
+        }
+    }
+
+    /// Fixed step count (None for the adaptive solver).
+    pub fn steps(&self) -> Option<usize> {
+        match self {
+            ServingSolver::Adaptive => None,
+            ServingSolver::Em { steps } | ServingSolver::Ddim { steps } => Some(*steps),
+        }
+    }
+
+    /// Canonical spec string (`adaptive`, `em:<n>`, `ddim:<n>`) —
+    /// round-trips through [`parse`].
+    pub fn spec_string(&self) -> String {
+        match self.steps() {
+            None => self.name().to_string(),
+            Some(n) => format!("{}:{n}", self.name()),
+        }
+    }
+
+    /// Admission-time validation. [`parse`] already rejects `em:0` on
+    /// the wire/CLI, but a spec constructed directly through the Rust
+    /// API must not reach a lane pool: a zero-step fixed lane has no
+    /// grid and would never converge.
+    pub fn validate(&self) -> Result<()> {
+        if self.steps() == Some(0) {
+            bail!("solver '{}' needs at least 1 step", self.name());
+        }
+        Ok(())
+    }
+}
+
+/// Parse a serving solver spec: `""`/`"adaptive"`, `"em[:<steps>]"`,
+/// `"ddim[:<steps>]"` (bare fixed-step names default to
+/// [`DEFAULT_FIXED_STEPS`]).
+pub fn parse(s: &str) -> Result<ServingSolver> {
+    parse_with_steps(s, None)
+}
+
+/// [`parse`] with a caller-supplied default step count (e.g. the CLI's
+/// `--steps` flag); an explicit `name:<steps>` in the spec wins.
+pub fn parse_with_steps(s: &str, default_steps: Option<usize>) -> Result<ServingSolver> {
+    let s = s.trim();
+    let (name, arg) = match s.split_once(':') {
+        Some((n, a)) => (n.trim(), Some(a.trim())),
+        None => (s, None),
+    };
+    let fixed_steps = || -> Result<usize> {
+        let steps = match arg {
+            Some(a) => a
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad step count '{a}' in solver spec '{s}'"))?,
+            None => default_steps.unwrap_or(DEFAULT_FIXED_STEPS),
+        };
+        if steps == 0 {
+            bail!("solver spec '{s}' needs at least 1 step");
+        }
+        Ok(steps)
+    };
+    match name {
+        "" | "adaptive" => {
+            if arg.is_some() {
+                bail!("'adaptive' takes no step count (got '{s}')");
+            }
+            Ok(ServingSolver::Adaptive)
+        }
+        "em" | "euler-maruyama" => Ok(ServingSolver::Em { steps: fixed_steps()? }),
+        "ddim" => Ok(ServingSolver::Ddim { steps: fixed_steps()? }),
+        other => bail!(
+            "unknown solver '{other}' (serving specs: adaptive, em[:<steps>], ddim[:<steps>])"
+        ),
+    }
+}
+
+/// Engine-equivalent per-lane offline run — the `--offline` twin of the
+/// serving lane pools. Lane `i` forks `Rng::new(seed).fork(base + i)`
+/// and follows exactly the arithmetic the engine's pool for this solver
+/// runs, so results are bit-identical to the served path for the same
+/// `(seed, base, eps_rel)`. `aopts` configures the adaptive controller
+/// (fixed-step solvers ignore it).
+pub fn run_lanes(
+    solver: ServingSolver,
+    ctx: &Ctx,
+    seed: u64,
+    base: u64,
+    count: usize,
+    aopts: &adaptive::AdaptiveOpts,
+) -> Result<SolveResult> {
+    match solver {
+        ServingSolver::Adaptive => adaptive::run_lanes(ctx, seed, base, count, aopts),
+        ServingSolver::Em { steps } => em::run_lanes(ctx, seed, base, count, steps),
+        ServingSolver::Ddim { steps } => ddim::run_lanes(ctx, seed, base, count, steps),
+    }
+}
+
+/// Outcome of [`evaluate_offline_lanes`].
+#[derive(Clone, Copy, Debug)]
+pub struct OfflineEval {
+    pub fid: f64,
+    pub is: f64,
+    /// Mean score-net evaluations per sample (incl. the denoise call).
+    pub mean_nfe: f64,
+    pub wall_s: f64,
+}
+
+/// Chunked per-lane offline FID*/IS* evaluation of a served solver spec
+/// — the single implementation behind `gofast evaluate --offline`, the
+/// eval bench's parity twin, and the engine-vs-offline agreement
+/// tests (so the offline side of the <= 1e-6 contract cannot fork).
+/// Generates `samples` images through [`run_lanes`] in pool-width
+/// chunks (the width is the solver's widest compiled rung under
+/// `max_bucket`; the result does not depend on it — per-lane streams
+/// only see the global sample index), converts to unit range, and
+/// scores with the same streaming accumulator arithmetic as the
+/// engine's eval lanes.
+pub fn evaluate_offline_lanes(
+    model: &crate::runtime::Model,
+    net: &crate::runtime::FidNet,
+    reference: &crate::metrics::FeatureStats,
+    solver: ServingSolver,
+    samples: usize,
+    seed: u64,
+    aopts: &adaptive::AdaptiveOpts,
+    max_bucket: usize,
+) -> Result<OfflineEval> {
+    let bucket = crate::runtime::manifest_program_bucket(
+        model.runtime().root(),
+        &model.meta.name,
+        solver.step_artifact(),
+        max_bucket,
+    )?;
+    let ctx = Ctx::new(model, bucket, super::SolveOpts::default());
+    let mut images = crate::tensor::Tensor::zeros(&[samples, model.meta.dim]);
+    let mut nfe_sum = 0u64;
+    let t0 = std::time::Instant::now();
+    let mut done = 0;
+    while done < samples {
+        let take = (samples - done).min(bucket);
+        let res = run_lanes(solver, &ctx, seed, done as u64, take, aopts)?;
+        for i in 0..take {
+            images.row_mut(done + i).copy_from_slice(res.x.row(i));
+        }
+        nfe_sum += res.nfe_per_sample.iter().sum::<u64>();
+        done += take;
+    }
+    model.meta.process().to_unit_range(&mut images);
+    let (fid, is) = crate::metrics::evaluate_streaming(net, &images, reference)?;
+    Ok(OfflineEval {
+        fid,
+        is,
+        mean_nfe: nfe_sum as f64 / samples as f64,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
 
 #[derive(Clone, Debug)]
 pub enum Spec {
@@ -65,6 +258,54 @@ impl Spec {
             Spec::Sra1(o) => table3::sra1(ctx, rng, o),
             Spec::Milstein(e) => table3::milstein(ctx, rng, *e),
             Spec::Issem(n) => table3::issem(ctx, rng, *n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_served_specs() {
+        assert_eq!(parse("").unwrap(), ServingSolver::Adaptive);
+        assert_eq!(parse("adaptive").unwrap(), ServingSolver::Adaptive);
+        assert_eq!(parse("em:128").unwrap(), ServingSolver::Em { steps: 128 });
+        assert_eq!(parse(" ddim : 32 ").unwrap(), ServingSolver::Ddim { steps: 32 });
+        assert_eq!(parse("em").unwrap(), ServingSolver::Em { steps: DEFAULT_FIXED_STEPS });
+        assert_eq!(parse("euler-maruyama:8").unwrap(), ServingSolver::Em { steps: 8 });
+    }
+
+    #[test]
+    fn parse_with_steps_prefers_the_explicit_suffix() {
+        assert_eq!(
+            parse_with_steps("em", Some(64)).unwrap(),
+            ServingSolver::Em { steps: 64 }
+        );
+        assert_eq!(
+            parse_with_steps("em:100", Some(64)).unwrap(),
+            ServingSolver::Em { steps: 100 }
+        );
+        assert_eq!(parse_with_steps("adaptive", Some(64)).unwrap(), ServingSolver::Adaptive);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in ["ode", "em:zero", "em:0", "adaptive:5", "rdl:10"] {
+            assert!(parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        let err = parse("ode").unwrap_err().to_string();
+        assert!(err.contains("adaptive, em[:<steps>], ddim[:<steps>]"), "{err}");
+    }
+
+    #[test]
+    fn spec_string_round_trips() {
+        for s in [
+            ServingSolver::Adaptive,
+            ServingSolver::Em { steps: 12 },
+            ServingSolver::Ddim { steps: 7 },
+        ] {
+            assert_eq!(parse(&s.spec_string()).unwrap(), s);
         }
     }
 }

@@ -1,10 +1,12 @@
 //! Integration: the continuous-batching engine — request lifecycle,
 //! mixed tolerances in one batch, admission control, determinism,
-//! bucket migration, multi-model routing.
+//! bucket migration, multi-model routing, and fixed-step solver-program
+//! pools (em/ddim lanes behind the same scheduler).
 
 mod common;
 
 use gofast::coordinator::{Engine, EngineConfig};
+use gofast::solvers::ServingSolver;
 
 fn engine() -> Option<Engine> {
     let dir = common::artifacts()?;
@@ -153,6 +155,113 @@ fn migrating_engine_matches_fixed_engine() {
         ms.wasted_lane_steps,
         fs.wasted_lane_steps
     );
+}
+
+/// EM lanes are first-class serving workloads: correct image range,
+/// exact per-sample NFE (steps + denoise), per-program stats, and
+/// per-lane step budgets co-batching in one pool.
+#[test]
+fn fixed_step_generate_roundtrip() {
+    let Some(engine) = engine() else { return };
+    let c = engine.client();
+    let a = c.generate_with("", ServingSolver::Em { steps: 6 }, 3, 0.5, 42).unwrap();
+    assert_eq!(a.images.shape, vec![3, 768]);
+    assert!(a.images.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    assert!(a.nfe.iter().all(|&n| n == 7), "em nfe {:?}", a.nfe);
+    // different step budgets in the same pool: each lane keeps its own
+    let b = c.generate_with("", ServingSolver::Em { steps: 11 }, 2, 0.5, 42).unwrap();
+    assert!(b.nfe.iter().all(|&n| n == 12), "em nfe {:?}", b.nfe);
+    let stats = c.stats().unwrap();
+    let em = stats.programs.iter().find(|p| p.solver == "em").expect("em stats");
+    assert!(em.steps >= 11, "em steps {}", em.steps);
+    assert_eq!(stats.samples_done, 5);
+    // aggregate counters cover the per-program ones
+    let prog_steps: u64 = stats.programs.iter().map(|p| p.steps).sum();
+    assert_eq!(prog_steps, stats.steps);
+}
+
+/// Fixed-step samples are batching-independent exactly like adaptive
+/// ones: per-lane RNG streams + per-lane grid positions.
+#[test]
+fn fixed_step_same_seed_same_images_under_load() {
+    let Some(engine) = engine() else { return };
+    let c = engine.client();
+    let solver = ServingSolver::Em { steps: 8 };
+    let a = c.generate_with("", solver, 3, 0.5, 123).unwrap();
+    let c2 = engine.client();
+    let bg = std::thread::spawn(move || c2.generate(6, 0.1, 555).unwrap());
+    let b = c.generate_with("", solver, 3, 0.5, 123).unwrap();
+    bg.join().unwrap();
+    assert_eq!(a.images, b.images, "em lanes must be batching-independent");
+    assert_eq!(a.nfe, b.nfe);
+}
+
+/// The migration-determinism contract extends to fixed-step lanes: a
+/// migrating em pool must produce the same images as a pinned one while
+/// lanes move buckets mid-trajectory. A long-running lane is admitted
+/// alone (the pool shrinks around it), then a second request grows the
+/// pool back — so a live lane crosses bucket widths both ways.
+#[test]
+fn fixed_step_migration_matches_pinned_pool() {
+    let Some(dir) = common::artifacts() else { return };
+    let bucket = common::engine_bucket(&dir);
+    if common::step_buckets(&dir).iter().filter(|&&b| b <= bucket).count() < 2 {
+        eprintln!("skipping: needs a multi-rung bucket ladder");
+        return;
+    }
+    let run = |migrate: bool| {
+        let mut cfg = EngineConfig::new(dir.clone(), "vp");
+        cfg.bucket = bucket;
+        cfg.migrate = migrate;
+        let engine = Engine::start(cfg).unwrap();
+        let c_bg = engine.client();
+        let long = std::thread::spawn(move || {
+            c_bg.generate_with("", ServingSolver::Em { steps: 400 }, 1, 0.5, 41).unwrap()
+        });
+        // wait until the long lane is live so the short request
+        // co-batches with (and then outlives-into) a width change
+        let c = engine.client();
+        while c.stats().unwrap().active_slots == 0 {
+            std::thread::yield_now();
+        }
+        let short = c.generate_with("", ServingSolver::Em { steps: 4 }, 2, 0.5, 77).unwrap();
+        let long = long.join().unwrap();
+        let stats = c.stats().unwrap();
+        (long, short, stats)
+    };
+    let (long_m, short_m, stats_m) = run(true);
+    let (long_f, short_f, _) = run(false);
+    assert_eq!(long_m.images, long_f.images, "em migration altered the long lane's trajectory");
+    assert_eq!(long_m.nfe, long_f.nfe);
+    assert_eq!(short_m.images, short_f.images, "em migration altered the short lanes");
+    assert_eq!(short_m.nfe, short_f.nfe);
+    // the migrating em pool must actually have moved: steps below the
+    // max rung and at least one width switch
+    let em = stats_m.programs.iter().find(|p| p.solver == "em").expect("em stats");
+    let narrow: u64 =
+        em.steps_per_bucket.iter().filter(|(b, _)| *b < bucket).map(|(_, s)| *s).sum();
+    assert!(narrow > 0, "no em steps below max bucket: {:?}", em.steps_per_bucket);
+    assert!(
+        em.migrations_up + em.migrations_down > 0,
+        "em pool never switched width"
+    );
+}
+
+/// Requesting a solver the model has no pool for is a clean protocol
+/// error at admission, not an engine-thread fault.
+#[test]
+fn solver_without_pool_is_rejected_cleanly() {
+    let Some(engine) = engine() else { return };
+    // vp serves ddim only if its artifacts exist; either way the error
+    // paths below must be admission-time rejections
+    let err = engine
+        .client()
+        .generate_with("nope", ServingSolver::Em { steps: 4 }, 1, 0.5, 0)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown model"), "{err}");
+    // the engine must still be healthy after a rejection
+    engine.client().generate(1, 0.5, 0).unwrap();
 }
 
 #[test]

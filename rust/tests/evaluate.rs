@@ -1,5 +1,6 @@
 //! Integration: engine-served FID*/IS* evaluation — agreement with the
-//! offline per-lane bypass, eval-lane counters, and isolation from
+//! offline per-lane bypass (for the adaptive solver *and* the served
+//! fixed-step programs), eval-lane counters, and isolation from
 //! concurrent client traffic. Skips (with a note) when artifacts or the
 //! fid net/eval split are missing.
 
@@ -8,8 +9,7 @@ mod common;
 use gofast::coordinator::{Engine, EngineConfig, EvalRequest};
 use gofast::metrics;
 use gofast::runtime::Runtime;
-use gofast::solvers::{adaptive, Ctx, SolveOpts};
-use gofast::tensor::Tensor;
+use gofast::solvers::{adaptive, spec, ServingSolver};
 use std::path::{Path, PathBuf};
 
 /// The eval path additionally needs the feature net + exported split.
@@ -30,36 +30,27 @@ fn start_engine(dir: &Path) -> Engine {
     Engine::start(cfg).expect("engine start")
 }
 
-fn eval_req(samples: usize, eps_rel: f64, seed: u64) -> EvalRequest {
-    EvalRequest { model: String::new(), solver: "adaptive".to_string(), samples, eps_rel, seed }
+fn eval_req(solver: ServingSolver, samples: usize, eps_rel: f64, seed: u64) -> EvalRequest {
+    EvalRequest { model: String::new(), solver, samples, eps_rel, seed }
 }
 
-/// Offline twin of the engine's eval lanes: per-sample forked RNG
-/// streams, chunked generation, and the same streaming accumulator
-/// arithmetic (this is what `gofast evaluate --offline` runs for the
-/// adaptive solver).
-fn offline_eval(dir: &Path, samples: usize, eps_rel: f64, seed: u64) -> (f64, f64, f64) {
+/// Offline twin of the engine's eval lanes for any served solver —
+/// `spec::evaluate_offline_lanes`, the same implementation
+/// `gofast evaluate --offline` runs for served solver specs.
+fn offline_eval(
+    dir: &Path,
+    solver: ServingSolver,
+    samples: usize,
+    eps_rel: f64,
+    seed: u64,
+) -> (f64, f64, f64) {
     let rt = Runtime::new(dir).unwrap();
     let model = rt.model("vp").unwrap();
     let (net, refstats) = metrics::reference_for(&rt, &model.meta).unwrap();
-    let bucket = common::engine_bucket(dir);
-    let ctx = Ctx::new(&model, bucket, SolveOpts::default());
     let opts = adaptive::AdaptiveOpts { eps_rel, ..Default::default() };
-    let mut images = Tensor::zeros(&[samples, model.meta.dim]);
-    let mut nfe_sum = 0u64;
-    let mut done = 0;
-    while done < samples {
-        let take = (samples - done).min(bucket);
-        let res = adaptive::run_lanes(&ctx, seed, done as u64, take, &opts).unwrap();
-        for i in 0..take {
-            images.row_mut(done + i).copy_from_slice(res.x.row(i));
-        }
-        nfe_sum += res.nfe_per_sample.iter().sum::<u64>();
-        done += take;
-    }
-    model.meta.process().to_unit_range(&mut images);
-    let (fid, is) = metrics::evaluate_streaming(&net, &images, &refstats).unwrap();
-    (fid, is, nfe_sum as f64 / samples as f64)
+    let r = spec::evaluate_offline_lanes(&model, &net, &refstats, solver, samples, seed, &opts, 16)
+        .unwrap();
+    (r.fid, r.is, r.mean_nfe)
 }
 
 fn rel(a: f64, b: f64) -> f64 {
@@ -75,9 +66,11 @@ fn engine_evaluate_matches_offline_bypass() {
     let Some(dir) = eval_artifacts() else { return };
     let (samples, eps, seed) = (70usize, 0.5f64, 11u64);
     let engine = start_engine(&dir);
-    let served = engine.client().evaluate(eval_req(samples, eps, seed)).unwrap();
+    let served =
+        engine.client().evaluate(eval_req(ServingSolver::Adaptive, samples, eps, seed)).unwrap();
     assert_eq!(served.samples, samples);
     assert_eq!(served.model, "vp");
+    assert_eq!(served.solver, "adaptive");
     let consumed: u64 = served.steps_per_bucket.iter().map(|(_, n)| *n).sum();
     assert!(consumed > 0, "evaluate consumed no steps: {:?}", served.steps_per_bucket);
 
@@ -92,7 +85,7 @@ fn engine_evaluate_matches_offline_bypass() {
     assert_eq!(stats.requests_done, 0);
     drop(engine);
 
-    let (fid, is, mean_nfe) = offline_eval(&dir, samples, eps, seed);
+    let (fid, is, mean_nfe) = offline_eval(&dir, ServingSolver::Adaptive, samples, eps, seed);
     assert!(
         rel(served.fid, fid) <= 1e-6,
         "FID* disagrees: served {} vs offline {}",
@@ -105,16 +98,92 @@ fn engine_evaluate_matches_offline_bypass() {
     assert!(served.fid.is_finite() && served.fid >= 0.0);
 }
 
+/// Served fixed-step programs must agree with their offline per-lane
+/// twins exactly like the adaptive solver does — the acceptance
+/// criterion of the solver-program pool subsystem. 70 samples again
+/// spans two fid-bucket chunks.
+#[test]
+fn engine_evaluate_em_matches_offline_bypass() {
+    let Some(dir) = eval_artifacts() else { return };
+    let solver = ServingSolver::Em { steps: 12 };
+    let (samples, seed) = (70usize, 5u64);
+    let engine = start_engine(&dir);
+    let served = engine.client().evaluate(eval_req(solver, samples, 0.5, seed)).unwrap();
+    assert_eq!(served.solver, "em:12");
+    // fixed schedule: every sample costs exactly steps + denoise
+    assert_eq!(served.mean_nfe, 13.0);
+    let stats = engine.client().stats().unwrap();
+    let em = stats
+        .programs
+        .iter()
+        .find(|p| p.solver == "em")
+        .expect("em program stats present");
+    assert!(em.steps > 0, "em pool ran no steps");
+    assert!(em.occupied_lane_steps > 0);
+    let ad = stats.programs.iter().find(|p| p.solver == "adaptive").unwrap();
+    assert_eq!(ad.steps, 0, "adaptive pool should be untouched by an em eval");
+    drop(engine);
+
+    let (fid, is, mean_nfe) = offline_eval(&dir, solver, samples, 0.5, seed);
+    assert!(
+        rel(served.fid, fid) <= 1e-6,
+        "EM FID* disagrees: served {} vs offline {}",
+        served.fid,
+        fid
+    );
+    assert!(
+        rel(served.is, is) <= 1e-6,
+        "EM IS* disagrees: served {} vs offline {}",
+        served.is,
+        is
+    );
+    assert_eq!(served.mean_nfe, mean_nfe);
+}
+
+/// Same agreement contract for the deterministic DDIM program (VP only).
+#[test]
+fn engine_evaluate_ddim_matches_offline_bypass() {
+    let Some(dir) = eval_artifacts() else { return };
+    let pool_rung = gofast::runtime::manifest_buckets(&dir, "vp", "ddim_step")
+        .map(|b| b.iter().any(|&x| x <= common::engine_bucket(&dir)))
+        .unwrap_or(false);
+    if !pool_rung {
+        eprintln!("skipping: no ddim_step artifacts at or below the engine bucket");
+        return;
+    }
+    let solver = ServingSolver::Ddim { steps: 9 };
+    let (samples, seed) = (6usize, 21u64);
+    let engine = start_engine(&dir);
+    let served = engine.client().evaluate(eval_req(solver, samples, 0.5, seed)).unwrap();
+    assert_eq!(served.solver, "ddim:9");
+    assert_eq!(served.mean_nfe, 10.0);
+    drop(engine);
+
+    let (fid, is, mean_nfe) = offline_eval(&dir, solver, samples, 0.5, seed);
+    assert!(
+        rel(served.fid, fid) <= 1e-6,
+        "DDIM FID* disagrees: served {} vs offline {}",
+        served.fid,
+        fid
+    );
+    assert!(rel(served.is, is) <= 1e-6, "DDIM IS* disagrees");
+    assert_eq!(served.mean_nfe, mean_nfe);
+}
+
 /// Per-lane RNG streams make an eval run independent of co-batched
 /// traffic: the same request must produce the same numbers with and
-/// without concurrent client generates sharing the pool.
+/// without concurrent client generates sharing the engine — including
+/// cross-program traffic on a *different* pool of the same model.
 #[test]
 fn evaluate_is_deterministic_under_concurrent_traffic() {
     let Some(dir) = eval_artifacts() else { return };
     let (samples, eps, seed) = (6usize, 0.5f64, 3u64);
     let quiet = {
         let engine = start_engine(&dir);
-        engine.client().evaluate(eval_req(samples, eps, seed)).unwrap()
+        engine
+            .client()
+            .evaluate(eval_req(ServingSolver::Adaptive, samples, eps, seed))
+            .unwrap()
     };
     let busy = {
         let engine = start_engine(&dir);
@@ -122,8 +191,19 @@ fn evaluate_is_deterministic_under_concurrent_traffic() {
             let c = engine.client();
             std::thread::spawn(move || c.generate(8, 0.1, 999).unwrap())
         };
-        let r = engine.client().evaluate(eval_req(samples, eps, seed)).unwrap();
+        let bg_em = {
+            let c = engine.client();
+            std::thread::spawn(move || {
+                c.generate_with("", ServingSolver::Em { steps: 7 }, 3, 0.1, 77)
+            })
+        };
+        let r = engine
+            .client()
+            .evaluate(eval_req(ServingSolver::Adaptive, samples, eps, seed))
+            .unwrap();
         bg.join().unwrap();
+        let em = bg_em.join().unwrap().unwrap();
+        assert!(em.nfe.iter().all(|&n| n == 8), "em nfe {:?}", em.nfe);
         r
     };
     assert!(rel(quiet.fid, busy.fid) <= 1e-9, "fid {} vs {}", quiet.fid, busy.fid);
@@ -137,23 +217,30 @@ fn evaluate_validates_request() {
     let engine = start_engine(&dir);
     let err = engine
         .client()
-        .evaluate(EvalRequest {
-            model: String::new(),
-            solver: "ode".to_string(),
-            samples: 2,
-            eps_rel: 0.5,
-            seed: 0,
-        })
+        .evaluate(eval_req(ServingSolver::Adaptive, 0, 0.5, 0))
         .unwrap_err()
         .to_string();
-    assert!(err.contains("adaptive"), "{err}");
-    let err = engine.client().evaluate(eval_req(0, 0.5, 0)).unwrap_err().to_string();
     assert!(err.contains("samples"), "{err}");
+    // a zero-step fixed lane has no grid and would never converge; the
+    // wire parser rejects "em:0", and direct API construction must be
+    // rejected at admission too (not hang the pool)
+    let err = engine
+        .client()
+        .evaluate(eval_req(ServingSolver::Em { steps: 0 }, 2, 0.5, 0))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("at least 1 step"), "{err}");
+    let err = engine
+        .client()
+        .generate_with("", ServingSolver::Ddim { steps: 0 }, 1, 0.5, 0)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("at least 1 step"), "{err}");
     let err = engine
         .client()
         .evaluate(EvalRequest {
             model: "nope".to_string(),
-            solver: String::new(),
+            solver: ServingSolver::Adaptive,
             samples: 2,
             eps_rel: 0.5,
             seed: 0,

@@ -1,5 +1,6 @@
 //! Integration: TCP JSON-lines protocol end to end — ping/stats/generate,
-//! image payload integrity, malformed-request handling.
+//! solver specs on the wire, image payload integrity, malformed-request
+//! handling.
 
 mod common;
 
@@ -8,9 +9,10 @@ use gofast::server::{serve, Client, ServerConfig};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
-fn spawn_server() -> Option<(Engine, std::net::SocketAddr)> {
+fn spawn_server_for(models: &[&str]) -> Option<(Engine, std::net::SocketAddr)> {
     let dir = common::artifacts()?;
-    let mut cfg = EngineConfig::new(dir.clone(), "vp");
+    let mut cfg = EngineConfig::new(dir.clone(), models[0]);
+    cfg.models = models.iter().map(|m| m.to_string()).collect();
     cfg.bucket = common::engine_bucket(&dir);
     let engine = Engine::start(cfg).expect("engine");
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -24,6 +26,10 @@ fn spawn_server() -> Option<(Engine, std::net::SocketAddr)> {
         );
     });
     Some((engine, addr))
+}
+
+fn spawn_server() -> Option<(Engine, std::net::SocketAddr)> {
+    spawn_server_for(&["vp"])
 }
 
 #[test]
@@ -105,12 +111,74 @@ fn evaluate_roundtrip_reports_metrics_and_counters() {
     assert_eq!(stats.get("eval_active").unwrap().as_f64().unwrap(), 0.0);
 }
 
+/// Fixed-step solver specs ride the wire end to end: the request names
+/// `em:<n>`, the engine serves it from the em lane pool, and both the
+/// response and the per-program stats counters report it.
+#[test]
+fn evaluate_em_roundtrip_over_the_wire() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    for need in ["artifacts/params/fid16.bin", "artifacts/data/synth-cifar.bin"] {
+        if !std::path::Path::new(need).exists() {
+            eprintln!("skipping: {need} not built");
+            return;
+        }
+    }
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let r = c.evaluate("", "em:8", 3, 0.5, 7).unwrap();
+    assert_eq!(r.solver, "em:8");
+    assert_eq!(r.samples, 3);
+    assert_eq!(r.mean_nfe, 9.0, "em NFE must be steps + denoise exactly");
+    assert!(r.fid.is_finite() && r.fid >= 0.0, "fid {}", r.fid);
+    let stats = c.stats().unwrap();
+    let programs = stats.get("programs").expect("stats.programs");
+    let em = programs.get("em").expect("programs.em");
+    assert!(em.get("steps").unwrap().as_f64().unwrap() >= 8.0);
+    assert!(em.get("occupied_lane_steps").unwrap().as_f64().unwrap() > 0.0);
+    let adaptive = programs.get("adaptive").expect("programs.adaptive");
+    assert_eq!(adaptive.get("steps").unwrap().as_f64().unwrap(), 0.0);
+}
+
+/// Generate accepts a solver spec too and echoes the canonical string.
+#[test]
+fn generate_with_solver_spec() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let r = c.generate_spec("", "em:5", 2, 0.5, 3, false).unwrap();
+    assert_eq!(r.nfe, vec![6, 6], "em nfe is steps + denoise");
+}
+
+/// Satellite guard: requesting DDIM on a non-VP model must be a clean
+/// `ok:false` protocol error at admission (naming the constraint), not
+/// an engine-thread fault — and the connection must stay usable.
+#[test]
+fn ddim_on_non_vp_model_is_clean_protocol_error() {
+    let Some(dir) = common::artifacts() else { return };
+    if !dir.join("params/ve.bin").exists() {
+        eprintln!("skipping: ve variant not built");
+        return;
+    }
+    let Some((_engine, addr)) = spawn_server_for(&["vp", "ve"]) else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let err = c.evaluate("ve", "ddim:4", 2, 0.5, 0).unwrap_err().to_string();
+    assert!(err.contains("VP"), "error must name the VP constraint: {err}");
+    let err = c.generate_spec("ve", "ddim:4", 1, 0.5, 0, false).unwrap_err().to_string();
+    assert!(err.contains("VP"), "{err}");
+    // the engine survived both rejections: vp traffic still flows, and
+    // ve still serves its own solvers
+    c.generate_spec("ve", "em:3", 1, 0.5, 0, false).unwrap();
+    c.generate(1, 0.5, 0, false).unwrap();
+}
+
+/// Unknown or malformed solver specs die in the wire parser with the
+/// accepted-spec list.
 #[test]
 fn evaluate_rejects_unknown_solver() {
     let Some((_engine, addr)) = spawn_server() else { return };
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let err = c.evaluate("", "ddim", 2, 0.5, 0).unwrap_err().to_string();
-    assert!(err.contains("adaptive"), "{err}");
+    let err = c.evaluate("", "ode", 2, 0.5, 0).unwrap_err().to_string();
+    assert!(err.contains("adaptive, em[:<steps>], ddim[:<steps>]"), "{err}");
+    let err = c.evaluate("", "em:nope", 2, 0.5, 0).unwrap_err().to_string();
+    assert!(err.contains("bad step count"), "{err}");
 }
 
 #[test]

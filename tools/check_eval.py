@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""FID*-vs-NFE regression thresholds for benches/eval.rs output.
+
+The eval bench (benches/eval.rs) runs every served solver (adaptive /
+em / ddim) through the engine's lane-program pools AND through the
+offline per-lane bypass, and records the served-vs-offline deltas in
+bench_out/eval.json. This script turns that upload-only artifact into a
+CI gate:
+
+  * parity: for every served row, |d_nfe| must be 0 (the per-lane RNG
+    contract makes NFE exactly equal) and |d_fid| / |d_is| within 1e-6
+    relative — the engine-vs-offline agreement criterion;
+  * sanity: every FID*/IS* finite, FID* >= 0, IS* >= 1 - 1e-9;
+  * regression ceiling: served FID* must stay below EVAL_FID_MAX
+    (env, default 5000 — generous enough for the miniature CI models,
+    tight enough to catch a diverged solver or a broken feature net).
+
+Usage: python3 tools/check_eval.py bench_out/eval.json
+Exits non-zero with a per-violation report on failure.
+"""
+
+import json
+import math
+import os
+import sys
+
+
+def rel(delta: float, base: float) -> float:
+    return abs(delta) / max(abs(base), 1.0)
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench_out/eval.json"
+    fid_max = float(os.environ.get("EVAL_FID_MAX", "5000"))
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("rows", [])
+    parity = doc.get("parity", [])
+    errors = []
+    if not rows:
+        errors.append("no rows in eval output")
+    if not parity:
+        errors.append("no parity entries in eval output (served rows missing?)")
+
+    for r in rows:
+        tag = f"{r.get('path')}/{r.get('solver')}/{r.get('knob')}"
+        for key, lo in [("fid", 0.0), ("is", 1.0 - 1e-9)]:
+            v = r.get(key)
+            if v is None or not math.isfinite(v):
+                errors.append(f"{tag}: {key} not finite ({v})")
+            elif v < lo:
+                errors.append(f"{tag}: {key}={v} below {lo}")
+        if r.get("path") == "served" and math.isfinite(r.get("fid", math.nan)):
+            if r["fid"] > fid_max:
+                errors.append(
+                    f"{tag}: FID* {r['fid']:.3f} exceeds EVAL_FID_MAX={fid_max}"
+                )
+
+    for p in parity:
+        tag = f"parity/{p.get('solver')}/{p.get('knob')}"
+        d_nfe = p.get("d_nfe", math.nan)
+        if not (math.isfinite(d_nfe) and d_nfe == 0.0):
+            errors.append(f"{tag}: served/offline NFE differ (d_nfe={d_nfe})")
+        for key, base_key in [("d_fid", "fid"), ("d_is", "is")]:
+            d = p.get(key, math.nan)
+            base = p.get(base_key, math.nan)
+            if not math.isfinite(d) or rel(d, base) > 1e-6:
+                errors.append(
+                    f"{tag}: served/offline {base_key} drift {key}={d} "
+                    f"(rel {rel(d, base) if math.isfinite(d) else math.nan:.3e} > 1e-6)"
+                )
+
+    solvers = sorted({p.get("solver") for p in parity})
+    print(
+        f"[check_eval] {path}: {len(rows)} rows, parity over solvers {solvers}, "
+        f"EVAL_FID_MAX={fid_max}"
+    )
+    if errors:
+        for e in errors:
+            print(f"[check_eval] FAIL: {e}", file=sys.stderr)
+        return 1
+    print("[check_eval] ok: parity and FID* thresholds hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,3 +17,11 @@ cargo build --release
 cargo test --release -q
 cargo clippy --all-targets -- -D warnings
 cargo fmt --check
+
+# FID*-vs-NFE regression thresholds: when the eval bench has produced
+# its JSON (the CI artifacts job runs `cargo bench --bench eval` first),
+# enforce served-vs-offline parity and the FID* ceiling instead of
+# merely uploading the curve.
+if [ -f bench_out/eval.json ]; then
+  python3 tools/check_eval.py bench_out/eval.json
+fi
