@@ -36,6 +36,14 @@ pub fn ref_stats<'rt>(rt: &'rt Runtime, model: &Model) -> Result<(FidNet<'rt>, F
         .context("fid reference missing — rerun `make artifacts`")
 }
 
+/// Widest compiled `adaptive_step` bucket <= `cap` (falling back to the
+/// smallest rung), so benches run unmodified on the miniature CI
+/// artifact set with its (1, 2) ladder.
+pub fn engine_bucket(model: &Model, cap: usize) -> usize {
+    let buckets = model.buckets("adaptive_step");
+    *buckets.iter().filter(|&&b| b <= cap).max().unwrap_or(&buckets[0])
+}
+
 pub struct GenOutcome {
     pub images_unit: Tensor,
     pub mean_nfe: f64,

@@ -76,12 +76,7 @@ fn main() -> Result<()> {
     let model = rt.model(&model_name)?;
     let (net, refstats) = ref_stats(&rt, &model)?;
     let is_vp = model.meta.sde_kind == "vp";
-    let bucket = *model
-        .buckets("adaptive_step")
-        .iter()
-        .filter(|&&b| b <= max_bucket)
-        .max()
-        .unwrap_or(&model.buckets("adaptive_step")[0]);
+    let bucket = engine_bucket(&model, max_bucket);
     // a ddim pool exists only when a rung fits under the engine cap
     let has_ddim = model.buckets("ddim_step").iter().any(|&b| b <= bucket);
 
@@ -102,6 +97,7 @@ fn main() -> Result<()> {
             samples,
             eps_rel,
             seed,
+            priority: None,
         })?;
         let (off_fid, off_is, off_nfe, off_wall) =
             offline_eval(&model, &net, &refstats, solver, samples, eps_rel, seed, max_bucket)?;

@@ -1,4 +1,5 @@
-//! Serving benchmark (the L3 contribution; not a paper table), two parts:
+//! Serving benchmark (the L3 contribution; not a paper table), three
+//! parts:
 //!
 //! 1. continuous batching vs request-exclusive ("static") batching under
 //!    a Poisson trace with mixed request sizes and tolerances. Static
@@ -9,19 +10,31 @@
 //!    fixed-width pool vs the occupancy-aware bucket-migrating
 //!    scheduler, reporting per-bucket step counts and wasted lane-steps
 //!    (free lanes advanced as h = 0 no-ops).
+//! 3. QoS (docs/ARCHITECTURE.md §Admission & QoS), two experiments:
+//!    (a) weighted fairness — two pools saturated with deep backlogs
+//!    under 3:1 deficit-round-robin weights must receive fused steps in
+//!    a 3:1 ratio; (b) priority latency — interactive n=1 probes next
+//!    to a saturating batch flood on the same pool, FIFO baseline vs
+//!    priority classes: interactive p95 must improve without reducing
+//!    total throughput. Results land in bench_out/serving_qos.json,
+//!    gated in CI by tools/check_qos.py.
 //!
 //!   cargo bench --offline --bench serving -- [--rate 2] [--duration 12]
-//!       [--bucket 16] [--model vp]
+//!       [--bucket 16] [--model vp] [--qos-only] [--qos-duration 4]
 
 #[path = "common.rs"]
 mod common;
 
 use common::*;
 use gofast::bench::{summarize, Table};
-use gofast::coordinator::{Engine, EngineConfig};
+use gofast::cli::Args;
+use gofast::coordinator::{qos, Engine, EngineConfig, SampleRequest};
+use gofast::json::Value;
 use gofast::rng::Rng;
+use gofast::solvers::ServingSolver;
 use gofast::workload::{poisson_trace, TraceConfig};
 use gofast::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -32,6 +45,9 @@ fn main() -> Result<()> {
     let duration = args.f64_or("duration", 8.0)?;
     let bucket = args.usize_or("bucket", 16)?;
     let _ = artifacts();
+    if args.has("qos-only") {
+        return qos_bench(&args, &model);
+    }
 
     let mut table = Table::new(&[
         "mode", "requests", "samples", "p50_s", "p95_s", "samples/s", "occupancy", "score_evals",
@@ -178,5 +194,215 @@ fn main() -> Result<()> {
             "\nwasted lane-steps: fixed {fixed} vs migrating {migrating} ({ratio:.1}x reduction)"
         );
     }
-    write_outputs("serving_low_occupancy", &lo_table)
+    write_outputs("serving_low_occupancy", &lo_table)?;
+
+    qos_bench(&args, &model)
+}
+
+/// Part 3: the QoS subsystem under mixed traffic. Writes
+/// bench_out/serving_qos.json for tools/check_qos.py.
+fn qos_bench(args: &Args, model: &str) -> Result<()> {
+    let dur = args.f64_or("qos-duration", 4.0)?;
+    let bucket = {
+        let rt = gofast::runtime::Runtime::new("artifacts")?;
+        engine_bucket(&rt.model(model)?, args.usize_or("bucket", 16)?)
+    };
+
+    // --- 3a: weighted fairness under saturation -----------------------
+    // Both pools carry backlogs deep enough to stay busy for the whole
+    // measurement window; under 3:1 weights the deficit round-robin
+    // must split fused steps 3:1 (±10%, the acceptance criterion
+    // tools/check_qos.py enforces).
+    let (w_adaptive, w_em) = (3.0, 1.0);
+    println!(
+        "\n== qos fairness: {model}/adaptive (w={w_adaptive}) vs {model}/em (w={w_em}), \
+         saturated {dur}s =="
+    );
+    let mut cfg = EngineConfig::new("artifacts", model);
+    cfg.bucket = bucket;
+    cfg.max_queue_samples = 100_000;
+    // exactly the two pools under test — an idle third pool would trip
+    // the all-pools-saturated snapshot condition
+    cfg.programs = vec!["adaptive".to_string(), "em".to_string()];
+    cfg.qos.weights = vec![
+        (format!("{model}/adaptive"), w_adaptive),
+        (format!("{model}/em"), w_em),
+    ];
+    let engine = Engine::start(cfg)?;
+    let sat_reqs = args.usize_or("qos-sat-requests", 6)?;
+    let sat_n = 4 * bucket;
+    let mut backlog = Vec::new();
+    for i in 0..sat_reqs {
+        for solver in [ServingSolver::Adaptive, ServingSolver::Em { steps: 300 }] {
+            let c = engine.client();
+            backlog.push(std::thread::spawn(move || {
+                // replies after engine teardown are expected failures
+                let _ = c.generate_request(SampleRequest {
+                    model: String::new(),
+                    solver,
+                    n: sat_n,
+                    eps_rel: 0.02,
+                    seed: 100 + i as u64,
+                    sample_base: 0,
+                    priority: None,
+                    deadline_ms: None,
+                });
+            }));
+        }
+    }
+    // poll until the window closes or a pool drains; keep the last
+    // snapshot with both pools still saturated so the share math only
+    // covers the saturated period
+    let c = engine.client();
+    let t0 = Instant::now();
+    let mut snapshot = None;
+    loop {
+        let stats = c.stats()?;
+        let saturated = stats.pool_qos.iter().all(|p| p.queue_depth > 0);
+        if saturated && stats.steps > 0 {
+            snapshot = Some(stats);
+        } else if snapshot.is_some() {
+            break; // a pool drained: keep the last saturated snapshot
+        }
+        if t0.elapsed().as_secs_f64() >= dur {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let fair = match snapshot {
+        Some(s) => s,
+        None => c.stats()?,
+    };
+    drop(engine); // tear down the backlog
+    for h in backlog {
+        let _ = h.join();
+    }
+    let mut fair_pools = Vec::new();
+    let total_w: f64 = fair.pool_qos.iter().map(|p| p.weight).sum();
+    let total_steps: u64 = fair.pool_qos.iter().map(|p| p.steps).sum();
+    for p in &fair.pool_qos {
+        let share = p.steps as f64 / total_steps.max(1) as f64;
+        let expect = p.weight / total_w;
+        println!(
+            "  {}/{}: weight {} steps {} (share {:.3}, expected {:.3}) queue_depth {}",
+            p.model, p.solver, p.weight, p.steps, share, expect, p.queue_depth
+        );
+        fair_pools.push(Value::obj(vec![
+            ("pool", Value::str(format!("{}/{}", p.model, p.solver))),
+            ("weight", Value::num(p.weight)),
+            ("turns", Value::num(p.turns as f64)),
+            ("steps", Value::num(p.steps as f64)),
+            ("occupied_lane_steps", Value::num(p.occupied_lane_steps as f64)),
+            ("queue_depth", Value::num(p.queue_depth as f64)),
+            ("saturated", Value::Bool(p.queue_depth > 0)),
+        ]));
+    }
+
+    // --- 3b: priority latency under a batch flood ---------------------
+    // Interactive n=1 probes arrive while batch floods keep the same
+    // pool saturated. Baseline: one class (plain FIFO). QoS: probes
+    // marked interactive jump the batch queue. p95 must improve without
+    // reducing total throughput (same work, different order).
+    let flood_threads = 3;
+    let mut modes = Vec::new();
+    for mode in ["fifo", "qos"] {
+        let mut cfg = EngineConfig::new("artifacts", model);
+        cfg.bucket = bucket;
+        cfg.max_queue_samples = 100_000;
+        let engine = Engine::start(cfg)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut floods = Vec::new();
+        for f in 0..flood_threads {
+            let c = engine.client();
+            let stop = stop.clone();
+            let flood_prio = if mode == "qos" { Some(qos::Priority::Batch) } else { None };
+            floods.push(std::thread::spawn(move || {
+                let mut k = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = c.generate_request(SampleRequest {
+                        model: String::new(),
+                        solver: ServingSolver::Adaptive,
+                        n: bucket,
+                        eps_rel: 0.05,
+                        seed: 5000 + f as u64 * 1000 + k,
+                        sample_base: 0,
+                        priority: flood_prio,
+                        deadline_ms: None,
+                    });
+                    k += 1;
+                }
+            }));
+        }
+        let probe_prio =
+            if mode == "qos" { Some(qos::Priority::Interactive) } else { None };
+        let c = engine.client();
+        let t0 = Instant::now();
+        let mut lat = Vec::new();
+        let mut k = 0u64;
+        while t0.elapsed().as_secs_f64() < dur {
+            let t_req = Instant::now();
+            let r = c.generate_request(SampleRequest {
+                model: String::new(),
+                solver: ServingSolver::Adaptive,
+                n: 1,
+                eps_rel: 0.05,
+                seed: 9000 + k,
+                sample_base: 0,
+                priority: probe_prio,
+                deadline_ms: None,
+            });
+            if r.is_ok() {
+                lat.push(t_req.elapsed().as_secs_f64());
+            }
+            k += 1;
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in floods {
+            let _ = h.join();
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let stats = c.stats()?;
+        drop(engine);
+        let tput = stats.samples_done as f64 / elapsed;
+        // a probe-less run is a gate failure, not a bench panic
+        let (n, p50, p95) = if lat.is_empty() {
+            (0, f64::NAN, f64::NAN)
+        } else {
+            let s = summarize(lat);
+            (s.n, s.p50, s.p95)
+        };
+        println!(
+            "  {mode}: probes {n} p50 {p50:.3}s p95 {p95:.3}s throughput {tput:.1} samples/s"
+        );
+        modes.push((
+            mode,
+            Value::obj(vec![
+                ("probes", Value::num(n as f64)),
+                ("p50_s", Value::num(p50)),
+                ("p95_s", Value::num(p95)),
+                ("throughput_sps", Value::num(tput)),
+                ("samples_done", Value::num(stats.samples_done as f64)),
+                ("elapsed_s", Value::num(elapsed)),
+            ]),
+        ));
+    }
+
+    let doc = Value::obj(vec![
+        ("model", Value::str(model)),
+        ("bucket", Value::num(bucket as f64)),
+        ("duration_s", Value::num(dur)),
+        (
+            "fairness",
+            Value::obj(vec![("pools", Value::Arr(fair_pools))]),
+        ),
+        (
+            "latency",
+            Value::Obj(modes.into_iter().map(|(m, v)| (m.to_string(), v)).collect()),
+        ),
+    ]);
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/serving_qos.json", format!("{doc}"))?;
+    println!("[serving_qos] json -> bench_out/serving_qos.json");
+    Ok(())
 }

@@ -4,14 +4,19 @@
 //! §Coordinator.
 //!
 //! Loop shape per iteration: drain the mailbox, pick the next pool with
-//! work (round-robin over the flattened model x program pool list),
-//! re-bucket it to the cheapest compiled width that fits its demand,
-//! admit queued samples into free lanes, and advance it one fused step
-//! of its program — so adaptive generate traffic and EM/DDIM eval lanes
-//! interleave on the single engine thread.
+//! work (deficit-weighted round-robin over the flattened model x
+//! program pool list — flat rotation at the default equal weights),
+//! shed queued requests whose deadline expired, re-bucket the pool to
+//! the cheapest compiled width that fits its demand, admit queued
+//! samples into free lanes (interactive ahead of batch, capped by the
+//! model's lane quota), and advance it one fused step of its program —
+//! so adaptive generate traffic and EM/DDIM eval lanes interleave on
+//! the single engine thread. Admission control (quotas, priorities,
+//! deadlines, weights) lives in `coordinator/qos.rs`.
 
 use super::eval::{ChunkSpec, EvalManager, EvalRequest, EvalResult};
 use super::programs::StepIo;
+use super::qos::{self, ClassLatencyStats, PoolQosStats, QosConfig, QosState};
 use super::registry::{ModelEntry, ProgramPool, Registry};
 use super::scheduler::migrate_lanes;
 use super::{Msg, Pending, SampleRequest, Sink, Slot};
@@ -44,8 +49,13 @@ pub struct EngineConfig {
     /// its widest rung (the pre-scheduler fixed-width behaviour).
     pub migrate: bool,
     pub fused_buffers: bool,
-    /// Admission control: maximum queued samples before rejecting.
+    /// Admission control: maximum queued samples before rejecting
+    /// (global; per-model quotas live in `qos`).
     pub max_queue_samples: usize,
+    /// QoS policy: pool weights, per-model quotas, default priority
+    /// class. The default is behaviour-preserving (flat rotation, no
+    /// quotas, every request interactive).
+    pub qos: QosConfig,
     /// Algorithm-1 controller parameters (paper defaults).
     pub h_init: f64,
     pub r: f64,
@@ -62,6 +72,7 @@ impl EngineConfig {
             migrate: true,
             fused_buffers: true,
             max_queue_samples: 4096,
+            qos: QosConfig::default(),
             h_init: 0.01,
             r: 0.9,
             safety: 0.9,
@@ -97,6 +108,8 @@ pub struct ProgramStats {
     pub pools: usize,
     /// Currently occupied lanes.
     pub active_lanes: usize,
+    /// Samples queued on this program's pools, not yet in a lane.
+    pub queue_depth: usize,
     /// Fused step-program executions.
     pub steps: u64,
     pub occupied_lane_steps: u64,
@@ -115,6 +128,9 @@ pub struct ProgramStats {
 pub struct EngineStats {
     pub requests_done: u64,
     pub samples_done: u64,
+    /// Samples queued awaiting a lane, globally (the wire also exports
+    /// this as `queue_depth`; per-pool split in `pool_qos`, per-program
+    /// split in `programs`).
     pub queued_samples: usize,
     pub active_slots: usize,
     pub steps: u64,
@@ -150,6 +166,16 @@ pub struct EngineStats {
     /// Occupied lanes owned by eval jobs, summed over steps — the eval
     /// share of `occupied_lane_steps`.
     pub eval_lane_steps: u64,
+    /// Per-(model, program) pool QoS view: configured weight, service
+    /// turns, steps, queue depth, active lanes.
+    pub pool_qos: Vec<PoolQosStats>,
+    /// Per-priority-class queue-wait / end-to-end latency percentiles
+    /// (client traffic only), interactive first.
+    pub classes: Vec<ClassLatencyStats>,
+    /// Queued requests shed because their deadline expired.
+    pub shed_deadline: u64,
+    /// Requests rejected by per-model admission quotas.
+    pub rejected_quota: u64,
 }
 
 /// Handle owning the engine thread.
@@ -214,20 +240,23 @@ impl EngineClient {
         eps_rel: f64,
         seed: u64,
     ) -> Result<GenResult> {
+        self.generate_request(SampleRequest {
+            model: model.to_string(),
+            solver,
+            n,
+            eps_rel,
+            seed,
+            sample_base: 0,
+            priority: None,
+            deadline_ms: None,
+        })
+    }
+
+    /// Generate with full request control (priority class, deadline).
+    /// Client requests use `sample_base` 0.
+    pub fn generate_request(&self, req: SampleRequest) -> Result<GenResult> {
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Msg::Generate(
-                SampleRequest {
-                    model: model.to_string(),
-                    solver,
-                    n,
-                    eps_rel,
-                    seed,
-                    sample_base: 0,
-                },
-                rtx,
-            ))
-            .map_err(|_| anyhow!("engine is down"))?;
+        self.tx.send(Msg::Generate(req, rtx)).map_err(|_| anyhow!("engine is down"))?;
         rrx.recv().map_err(|_| anyhow!("engine dropped the request"))?.map_err(|e| anyhow!(e))
     }
 
@@ -276,6 +305,7 @@ struct EngineState<'rt> {
     queued_samples: usize,
     metrics: Metrics,
     evals: EvalManager<'rt>,
+    qos: QosState,
 }
 
 fn engine_main(
@@ -298,6 +328,15 @@ fn engine_main(
                 return;
             }
         };
+    let model_names: Vec<String> =
+        registry.entries().iter().map(|e| e.model.meta.name.clone()).collect();
+    let qos = match QosState::new(&cfg.qos, &registry.pool_labels(), &model_names) {
+        Ok(q) => q,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
     let mut st = EngineState {
         registry,
         cfg,
@@ -306,6 +345,7 @@ fn engine_main(
         queued_samples: 0,
         metrics: Metrics::new(),
         evals: EvalManager::new(),
+        qos,
     };
     let _ = ready.send(Ok(()));
 
@@ -332,10 +372,20 @@ fn engine_main(
                 Err(mpsc::TryRecvError::Disconnected) => return,
             }
         }
-        // 2. service the next pool with work: re-bucket to the cheapest
-        //    fitting width, admit queued samples, advance one iteration
-        //    of its solver program
-        if let Some((mi, pi)) = st.registry.next_runnable() {
+        // 2. service the next pool with work (deficit-weighted
+        //    round-robin): shed expired queued requests, re-bucket to
+        //    the cheapest fitting width, admit queued samples, advance
+        //    one iteration of its solver program
+        let next = {
+            let EngineState { qos, registry, .. } = &mut st;
+            qos.wrr.next(&mut |flat| {
+                let (mi, pi) = registry.pool_at(flat);
+                !registry.entries()[mi].pools[pi].idle()
+            })
+        };
+        if let Some(flat) = next {
+            let (mi, pi) = st.registry.pool_at(flat);
+            st.shed_expired(mi, pi);
             st.rebucket(mi, pi);
             st.admit(mi, pi);
             if st.registry.entries()[mi].pools[pi].active() > 0 {
@@ -377,11 +427,29 @@ impl<'rt> EngineState<'rt> {
                     return false;
                 }
                 if self.queued_samples + req.n > self.cfg.max_queue_samples {
-                    let _ = reply.send(Err(format!(
-                        "queue full ({} samples queued, max {})",
-                        self.queued_samples, self.cfg.max_queue_samples
+                    let _ = reply.send(Err(qos::coded(
+                        qos::CODE_QUEUE_FULL,
+                        &format!(
+                            "queue full ({} samples queued, max {})",
+                            self.queued_samples, self.cfg.max_queue_samples
+                        ),
                     )));
                     return false;
+                }
+                if let Some(maxq) = self.qos.quotas[mi].max_queued {
+                    if self.qos.queued_per_model[mi] + req.n > maxq {
+                        self.qos.rejected_quota += 1;
+                        let model = &self.registry.entries()[mi].model.meta.name;
+                        let _ = reply.send(Err(qos::coded(
+                            qos::CODE_QUOTA,
+                            &format!(
+                                "model '{model}' admission quota exceeded ({} samples \
+                                 queued + {} requested > quota {maxq})",
+                                self.qos.queued_per_model[mi], req.n
+                            ),
+                        )));
+                        return false;
+                    }
                 }
                 self.enqueue(mi, pi, req, Sink::Client(reply));
                 false
@@ -423,11 +491,15 @@ impl<'rt> EngineState<'rt> {
     }
 
     /// Register a request's accumulation state and queue it on pool
-    /// `(mi, pi)`.
+    /// `(mi, pi)`. Interactive requests are queued ahead of batch ones,
+    /// but never ahead of an earlier request of their own class (stable
+    /// within a class), and never preempt lanes already granted.
     fn enqueue(&mut self, mi: usize, pi: usize, req: SampleRequest, sink: Sink) {
         let id = self.next_req_id;
         self.next_req_id += 1;
         self.queued_samples += req.n;
+        self.qos.queued_per_model[mi] += req.n;
+        let priority = req.priority.unwrap_or(self.qos.default_priority);
         let dim = self.registry.entries()[mi].model.meta.dim;
         self.pending.insert(
             id,
@@ -439,15 +511,23 @@ impl<'rt> EngineState<'rt> {
                 sink,
                 enqueued: Instant::now(),
                 started: None,
+                priority,
                 req,
             },
         );
-        self.registry.entry_mut(mi).pools[pi].fifo.push(id);
+        let EngineState { registry, pending, .. } = self;
+        let fifo = &mut registry.entry_mut(mi).pools[pi].fifo;
+        let pos = fifo
+            .iter()
+            .position(|other| pending.get(other).is_some_and(|p| p.priority < priority))
+            .unwrap_or(fifo.len());
+        fifo.insert(pos, id);
     }
 
     /// Admit one evaluation chunk through the normal request path.
-    /// Chunks bypass the client queue cap: their in-flight volume is
-    /// already bounded by `MAX_INFLIGHT_CHUNKS` fid-bucket batches.
+    /// Chunks bypass the client queue cap and the per-model quotas:
+    /// their in-flight volume is already bounded by
+    /// `MAX_INFLIGHT_CHUNKS` fid-bucket batches.
     fn enqueue_eval_chunk(&mut self, spec: ChunkSpec) {
         let req = SampleRequest {
             model: String::new(), // routed by index below
@@ -456,9 +536,52 @@ impl<'rt> EngineState<'rt> {
             eps_rel: spec.eps_rel,
             seed: spec.seed,
             sample_base: spec.sample_base,
+            priority: spec.priority,
+            deadline_ms: None, // eval jobs run to completion
         };
         let sink = Sink::Eval { job: spec.job, chunk: spec.chunk };
         self.enqueue(spec.model_idx, spec.pool_idx, req, sink);
+    }
+
+    /// Shed queued requests on pool `(mi, pi)` whose deadline expired
+    /// before any of their samples reached a lane. Requests with a lane
+    /// run to completion — shedding only refuses work not yet started,
+    /// so no lane time is ever wasted on it.
+    fn shed_expired(&mut self, mi: usize, pi: usize) {
+        let now = Instant::now();
+        let EngineState { registry, pending, queued_samples, qos, .. } = self;
+        let pool = &mut registry.entry_mut(mi).pools[pi];
+        let mut shed: Vec<u64> = Vec::new();
+        pool.fifo.retain(|id| {
+            let Some(p) = pending.get(id) else {
+                return true; // finished ids are cleaned up by admit()
+            };
+            let expired = p.next_sample == 0
+                && p.req.deadline_ms.is_some_and(|d| {
+                    now.duration_since(p.enqueued).as_millis() as u64 >= d
+                });
+            if expired {
+                shed.push(*id);
+            }
+            !expired
+        });
+        for id in shed {
+            let p = pending.remove(&id).unwrap();
+            *queued_samples -= p.req.n;
+            qos.queued_per_model[mi] -= p.req.n;
+            qos.shed_deadline += 1;
+            if let Sink::Client(reply) = p.sink {
+                let waited = now.duration_since(p.enqueued).as_millis();
+                let _ = reply.send(Err(qos::coded(
+                    qos::CODE_DEADLINE,
+                    &format!(
+                        "request shed after {waited}ms queued (deadline {}ms)",
+                        p.req.deadline_ms.unwrap_or(0)
+                    ),
+                )));
+            }
+            // eval chunks never carry deadlines (see enqueue_eval_chunk)
+        }
     }
 
     /// Fold completed eval chunks into their jobs, admitting follow-up
@@ -507,19 +630,27 @@ impl<'rt> EngineState<'rt> {
         }
     }
 
-    /// FIFO admission of queued samples into pool `(mi, pi)`'s free
-    /// slots. Admission is program-agnostic: the prior draw and the
+    /// Priority-ordered FIFO admission of queued samples into pool
+    /// `(mi, pi)`'s free slots (the fifo is kept interactive-first by
+    /// `enqueue`). Admission is program-agnostic: the prior draw and the
     /// forked per-sample RNG stream are shared by every solver; the
-    /// pool's program supplies the per-lane integration state.
+    /// pool's program supplies the per-lane integration state. A
+    /// per-model `max_active_lanes` quota pauses admission at the cap;
+    /// it resumes as lanes free up.
     fn admit(&mut self, mi: usize, pi: usize) {
-        let EngineState { registry, pending, queued_samples, cfg, .. } = self;
+        let EngineState { registry, pending, queued_samples, cfg, qos, .. } = self;
         let e = registry.entry_mut(mi);
+        let lane_cap = qos.quotas[mi].max_active_lanes;
+        let mut model_active: usize = e.pools.iter().map(|p| p.active()).sum();
         let prior_std = e.process.prior_std() as f32;
         let ProgramPool { program, slots, x, xprev, fifo, .. } = &mut e.pools[pi];
         let mut fi = 0;
         for si in 0..slots.len() {
             if !slots[si].is_free() {
                 continue;
+            }
+            if lane_cap.is_some_and(|c| model_active >= c) {
+                break;
             }
             // find next request with samples left to admit (completed
             // requests may still sit in fifo until the retain below)
@@ -538,9 +669,17 @@ impl<'rt> EngineState<'rt> {
             let sample_idx = p.next_sample;
             p.next_sample += 1;
             if p.started.is_none() {
-                p.started = Some(Instant::now());
+                let now = Instant::now();
+                p.started = Some(now);
+                if matches!(p.sink, Sink::Client(_)) {
+                    qos.classes[p.priority.idx()]
+                        .queue_wait
+                        .record(now.duration_since(p.enqueued).as_secs_f64());
+                }
             }
             *queued_samples -= 1;
+            qos.queued_per_model[mi] -= 1;
+            model_active += 1;
             // init the lane: prior draw, fresh forked rng per sample
             // (sample_base keeps chunked eval runs on the same streams
             // as one big request — and as the offline `run_lanes` twin)
@@ -568,7 +707,7 @@ impl<'rt> EngineState<'rt> {
     /// One fused step of pool `(mi, pi)`'s program at its current width.
     /// Returns the eval chunks that completed this iteration.
     fn step(&mut self, mi: usize, pi: usize) -> Result<Vec<(u64, usize, GenResult)>> {
-        let EngineState { registry, pending, cfg, metrics, evals, .. } = self;
+        let EngineState { registry, pending, cfg, metrics, evals, qos, .. } = self;
         let e = registry.entry_mut(mi);
         // eval-lane share of this step's occupancy
         let mut eval_occupied = 0u64;
@@ -599,7 +738,7 @@ impl<'rt> EngineState<'rt> {
         if outcome.converged.is_empty() {
             return Ok(Vec::new());
         }
-        finish_lanes(e, pi, pending, metrics, cfg.fused_buffers, &outcome.converged)
+        finish_lanes(e, pi, pending, metrics, qos, cfg.fused_buffers, &outcome.converged)
     }
 
     /// Fail every request owned by pool `(mi, pi)` (incomplete requests
@@ -620,6 +759,7 @@ impl<'rt> EngineState<'rt> {
         for id in ids {
             if let Some(p) = self.pending.remove(&id) {
                 self.queued_samples -= p.req.n - p.next_sample;
+                self.qos.queued_per_model[mi] -= p.req.n - p.next_sample;
                 if let Sink::Client(reply) = p.sink {
                     let _ = reply.send(Err(msg.to_string()));
                 }
@@ -636,15 +776,35 @@ impl<'rt> EngineState<'rt> {
         let mut active_slots = 0usize;
         let mut models = Vec::new();
         let mut programs: Vec<ProgramStats> = Vec::new();
+        let mut pool_qos: Vec<PoolQosStats> = Vec::new();
+        let mut flat = 0usize;
         for e in self.registry.entries() {
             models.push(e.model.meta.name.clone());
             for pool in &e.pools {
                 active_slots += pool.active();
+                let queue_depth: usize = pool
+                    .fifo
+                    .iter()
+                    .filter_map(|id| self.pending.get(id))
+                    .map(|p| p.req.n - p.next_sample)
+                    .sum();
                 let s = &pool.sched;
                 mig_up += s.migrations_up;
                 mig_down += s.migrations_down;
                 wasted += s.wasted_lane_steps;
                 occupied += s.occupied_lane_steps;
+                let pool_steps: u64 = s.steps_per_bucket().iter().map(|(_, n)| *n).sum();
+                pool_qos.push(PoolQosStats {
+                    model: e.model.meta.name.clone(),
+                    solver: pool.program.solver_name().to_string(),
+                    weight: self.qos.wrr.weight(flat),
+                    turns: self.qos.wrr.turns[flat],
+                    steps: pool_steps,
+                    occupied_lane_steps: s.occupied_lane_steps,
+                    queue_depth,
+                    active_lanes: pool.active(),
+                });
+                flat += 1;
                 let name = pool.program.solver_name();
                 let ps = match programs.iter_mut().find(|p| p.solver == name) {
                     Some(p) => p,
@@ -658,6 +818,7 @@ impl<'rt> EngineState<'rt> {
                 };
                 ps.pools += 1;
                 ps.active_lanes += pool.active();
+                ps.queue_depth += queue_depth;
                 ps.occupied_lane_steps += s.occupied_lane_steps;
                 ps.wasted_lane_steps += s.wasted_lane_steps;
                 ps.score_evals +=
@@ -704,6 +865,10 @@ impl<'rt> EngineState<'rt> {
             eval_active: self.evals.active(),
             eval_samples_done: self.evals.eval_samples_done,
             eval_lane_steps: self.evals.eval_lane_steps,
+            pool_qos,
+            classes: self.qos.class_stats(),
+            shed_deadline: self.qos.shed_deadline,
+            rejected_quota: self.qos.rejected_quota,
         }
     }
 }
@@ -718,6 +883,7 @@ fn finish_lanes(
     pi: usize,
     pending: &mut HashMap<u64, Pending>,
     metrics: &mut Metrics,
+    qos: &mut QosState,
     fused_buffers: bool,
     lanes: &[usize],
 ) -> Result<Vec<(u64, usize, GenResult)>> {
@@ -769,8 +935,12 @@ fn finish_lanes(
                 Sink::Client(reply) => {
                     // client latency/throughput metrics count client
                     // traffic only; eval chunks have their own counters
-                    metrics.latency.record(now.duration_since(p.enqueued).as_secs_f64());
+                    let e2e = now.duration_since(p.enqueued).as_secs_f64();
+                    metrics.latency.record(e2e);
                     metrics.requests_done += 1;
+                    let cm = &mut qos.classes[p.priority.idx()];
+                    cm.e2e.record(e2e);
+                    cm.requests_done += 1;
                     let _ = reply.send(Ok(result));
                 }
                 Sink::Eval { job, chunk } => eval_done.push((job, chunk, result)),

@@ -46,6 +46,11 @@ pub struct EvalRequest {
     /// Adaptive tolerance knob (ignored by fixed-step solvers).
     pub eps_rel: f64,
     pub seed: u64,
+    /// Priority class the job's chunks are queued at (`None` = the
+    /// engine's configured default). Evaluation runs are usually
+    /// background work — mark them `batch` so interactive generate
+    /// traffic on the same pool is admitted first.
+    pub priority: Option<super::qos::Priority>,
 }
 
 /// Outcome of an engine-served evaluation run.
@@ -104,6 +109,7 @@ pub(crate) struct ChunkSpec {
     pub sample_base: u64,
     pub eps_rel: f64,
     pub seed: u64,
+    pub priority: Option<super::qos::Priority>,
 }
 
 /// All in-flight evaluation jobs plus the eval-lane counters exported
@@ -219,6 +225,7 @@ impl<'rt> EvalManager<'rt> {
                 sample_base: start as u64,
                 eps_rel: job.req.eps_rel,
                 seed: job.req.seed,
+                priority: job.req.priority,
             });
             job.submitted += 1;
         }

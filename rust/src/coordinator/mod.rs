@@ -10,7 +10,7 @@
 //! admission queue. No request ever waits for another request's slowest
 //! sample (the lockstep penalty the paper's batch solver pays).
 //!
-//! Four sub-layers (bottom up):
+//! Five sub-layers (bottom up):
 //! * `programs` — solver-program abstraction: a `LaneProgram` advances
 //!   a pool of lanes under one compiled step artifact (`adaptive_step`,
 //!   `em_step`, `ddim_step`), owning per-lane state, device args and
@@ -20,8 +20,12 @@
 //!   queued lanes, migrating lane state between widths so low-occupancy
 //!   traffic stops paying full-width steps;
 //! * `registry` — N models loaded from one artifacts dir, each with one
-//!   pool per served solver program, serviced round-robin and routed by
-//!   the request's (model, solver) pair;
+//!   pool per served solver program, routed by the request's
+//!   (model, solver) pair;
+//! * `qos` — admission control and service order: per-model quotas,
+//!   priority classes, deadline shedding, and deficit-weighted
+//!   round-robin over the flattened pool list (flat rotation at the
+//!   default equal weights);
 //! * `engine` — the thread that owns the PJRT runtime and runs the
 //!   admit / rebucket / step loop over every pool.
 //!
@@ -31,11 +35,13 @@
 pub mod engine;
 pub(crate) mod eval;
 pub(crate) mod programs;
+pub mod qos;
 pub(crate) mod registry;
 pub mod scheduler;
 
 pub use engine::{Engine, EngineClient, EngineConfig, EngineStats, GenResult, ProgramStats};
 pub use eval::{EvalRequest, EvalResult};
+pub use qos::{ClassLatencyStats, PoolQosStats, Priority, QosConfig, Quota};
 pub use scheduler::BucketScheduler;
 
 use crate::solvers::ServingSolver;
@@ -60,6 +66,15 @@ pub struct SampleRequest {
     /// use 0; evaluation chunks use their offset into the eval run so a
     /// chunked run draws the same per-sample streams as one big request.
     pub sample_base: u64,
+    /// Priority class (`None` = the engine's configured default).
+    /// Interactive requests are queued ahead of batch within a pool's
+    /// FIFO; the class never changes a sample's content, only its wait.
+    pub priority: Option<qos::Priority>,
+    /// Optional deadline, milliseconds from enqueue. A request whose
+    /// deadline expires while it is still fully queued (no sample in a
+    /// lane yet) is shed with a `deadline_exceeded` error; once any
+    /// sample holds a lane the request runs to completion.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Engine mailbox messages.
@@ -80,6 +95,8 @@ pub(crate) enum Sink {
 /// Per-request accumulation state while its samples move through slots.
 pub(crate) struct Pending {
     pub req: SampleRequest,
+    /// Resolved priority class (request field or the engine default).
+    pub priority: qos::Priority,
     pub next_sample: usize,
     pub done: usize,
     pub images: Tensor, // [n, dim] unit-range, filled as samples finish

@@ -348,6 +348,8 @@ mod tests {
             eps_rel: 0.07,
             seed: 0,
             sample_base: 0,
+            priority: None,
+            deadline_ms: None,
         };
         assert_eq!(
             EmProgram.init_lane(&cfg, &req),

@@ -1,0 +1,623 @@
+//! QoS / admission control (docs/ARCHITECTURE.md §Admission & QoS).
+//!
+//! The registry used to service every (model, program) pool one fused
+//! step per turn, unweighted, and the only admission control was the
+//! engine's single global `max_queue_samples` cap. This module owns the
+//! two decisions the serving path was missing:
+//!
+//! * **which requests get in** — per-model admission quotas (max queued
+//!   samples, max active lanes), request priority classes
+//!   (`interactive` / `batch`: interactive requests are queued ahead of
+//!   batch within a pool's FIFO), and optional per-request deadlines
+//!   (`deadline_ms`): a request whose deadline expires while it is
+//!   still fully queued is shed with a structured error instead of
+//!   burning lane time on an answer nobody is waiting for — the
+//!   serving-side analogue of the paper's "never wastes work";
+//! * **which pool steps next** — deficit-weighted round-robin
+//!   ([`WeightedRoundRobin`]) across the flattened (model, program)
+//!   pool list. Each pool has a configurable weight (default 1); a
+//!   saturated pool receives fused steps proportional to its weight,
+//!   and with all weights equal the service order is *identical* to the
+//!   flat rotation the registry used before (the determinism guard in
+//!   the tests below pins this).
+//!
+//! Decision flow per request: quota check at admission → priority
+//! placement in the pool FIFO → deficit round-robin picks the pool →
+//! the pool's `BucketScheduler` picks the bucket width. Rejections and
+//! sheds carry machine-readable error codes ([`error_code`]) that the
+//! wire layer surfaces as a `code` field next to `error`.
+//!
+//! Per-class queue-wait and end-to-end latency histograms
+//! (`metrics::hist::Histogram`) are kept per priority class and
+//! exported through `stats` as p50/p95/p99.
+
+use crate::metrics::hist::Histogram;
+use crate::{anyhow, bail, Result};
+
+// --- priority classes -----------------------------------------------------------
+
+/// Request priority class. `Interactive` requests are queued ahead of
+/// `Batch` requests within a pool's FIFO (stable order within a class);
+/// classes do not preempt running lanes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Throughput traffic; queued behind interactive requests.
+    Batch,
+    /// Latency-sensitive traffic; jumps ahead of batch in the queue.
+    #[default]
+    Interactive,
+}
+
+pub const PRIORITY_CLASSES: [Priority; 2] = [Priority::Interactive, Priority::Batch];
+
+impl Priority {
+    /// Wire/CLI name ("interactive" | "batch").
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a wire/CLI priority name.
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s.trim() {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            other => bail!("unknown priority '{other}' (accepted: interactive, batch)"),
+        }
+    }
+
+    /// Index into per-class arrays (stable across the wire ordering).
+    pub fn idx(&self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+}
+
+// --- structured rejection codes -------------------------------------------------
+
+/// Machine-readable code for a per-model admission-quota rejection.
+pub const CODE_QUOTA: &str = "quota_exceeded";
+/// Machine-readable code for the global queue cap rejection.
+pub const CODE_QUEUE_FULL: &str = "queue_full";
+/// Machine-readable code for a deadline-shed request.
+pub const CODE_DEADLINE: &str = "deadline_exceeded";
+
+/// Prefix an error message with a structured code; [`error_code`]
+/// recovers it at the wire layer.
+pub fn coded(code: &str, msg: &str) -> String {
+    format!("{code}: {msg}")
+}
+
+/// The structured code a rejection message carries, if any. Engine
+/// errors travel as strings through reply channels; the wire layer uses
+/// this to emit a `code` field next to `error` without a parallel error
+/// type crossing every channel.
+pub fn error_code(msg: &str) -> Option<&'static str> {
+    for code in [CODE_QUOTA, CODE_QUEUE_FULL, CODE_DEADLINE] {
+        if let Some(rest) = msg.strip_prefix(code) {
+            if rest.starts_with(':') {
+                return Some(code);
+            }
+        }
+    }
+    None
+}
+
+// --- configuration --------------------------------------------------------------
+
+/// Per-model admission quota. `None` = unlimited (the global
+/// `max_queue_samples` cap still applies).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Quota {
+    /// Max samples queued (not yet in a lane) for the model, summed over
+    /// its pools; exceeding requests are rejected with [`CODE_QUOTA`].
+    pub max_queued: Option<usize>,
+    /// Max lanes the model may occupy concurrently, summed over its
+    /// pools. A throttle, not a rejection: admission into lanes pauses
+    /// at the cap and resumes as lanes free up.
+    pub max_active_lanes: Option<usize>,
+}
+
+/// QoS configuration carried in `EngineConfig`. The default is
+/// behaviour-preserving: every weight 1 (flat round-robin order), no
+/// quotas, every request `interactive` unless it names a class.
+#[derive(Clone, Debug, Default)]
+pub struct QosConfig {
+    /// Pool weights keyed by `"model"` (all of that model's pools) or
+    /// `"model/program"` (one pool; the more specific key wins).
+    /// Missing keys default to 1.0.
+    pub weights: Vec<(String, f64)>,
+    /// Per-model admission quotas keyed by model name.
+    pub quotas: Vec<(String, Quota)>,
+    /// Class assigned to requests that don't name one.
+    pub default_priority: Priority,
+}
+
+impl QosConfig {
+    fn quota_mut(&mut self, model: &str) -> &mut Quota {
+        if let Some(i) = self.quotas.iter().position(|(m, _)| m == model) {
+            return &mut self.quotas[i].1;
+        }
+        self.quotas.push((model.to_string(), Quota::default()));
+        &mut self.quotas.last_mut().unwrap().1
+    }
+
+    pub fn set_max_queued(&mut self, model: &str, n: usize) {
+        self.quota_mut(model).max_queued = Some(n);
+    }
+
+    pub fn set_max_active_lanes(&mut self, model: &str, n: usize) {
+        self.quota_mut(model).max_active_lanes = Some(n);
+    }
+}
+
+/// Parse a `--weights` spec: `"vp=3,ve=1"` or `"vp/em=0.5"`. Weights
+/// must be finite and > 0 (a zero weight would starve the pool
+/// forever — use a quota of 0 to close admission instead).
+pub fn parse_weights(s: &str) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (key, val) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("bad weight '{part}' (expected model=w or model/program=w)"))?;
+        let w: f64 = val
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad weight value '{val}' for '{key}'"))?;
+        if !w.is_finite() || w <= 0.0 {
+            bail!("weight for '{key}' must be finite and > 0 (got {w})");
+        }
+        let key = key.trim().to_string();
+        if out.iter().any(|(k, _)| *k == key) {
+            bail!("weight for '{key}' given twice");
+        }
+        out.push((key, w));
+    }
+    Ok(out)
+}
+
+/// Parse a `--quota` / `--quota-lanes` spec: `"vp=256,ve=64"`.
+pub fn parse_quota_list(s: &str) -> Result<Vec<(String, usize)>> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (key, val) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("bad quota '{part}' (expected model=n)"))?;
+        let n: usize = val
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad quota value '{val}' for '{key}'"))?;
+        let key = key.trim().to_string();
+        if out.iter().any(|(k, _)| *k == key) {
+            bail!("quota for '{key}' given twice");
+        }
+        out.push((key, n));
+    }
+    Ok(out)
+}
+
+// --- deficit-weighted round-robin ----------------------------------------------
+
+/// Deficit-weighted round-robin over the flattened (model, program)
+/// pool list: one service turn = one fused pool step (unit cost).
+///
+/// On each visit the cursor pool is granted its weight as credit; it is
+/// served while it holds at least one full credit, then the cursor
+/// moves on. A pool that goes idle forfeits its residual credit, so a
+/// quiet pool cannot bank turns into a burst. Saturated pools therefore
+/// receive turns proportional to their weights; with all weights 1 the
+/// order degenerates to exactly the flat rotation the registry used
+/// before (each busy pool: grant 1, spend 1, advance).
+#[derive(Clone, Debug)]
+pub struct WeightedRoundRobin {
+    weights: Vec<f64>,
+    deficit: Vec<f64>,
+    /// Service turns granted per pool (fairness accounting, exported
+    /// through `stats`).
+    pub turns: Vec<u64>,
+    cursor: usize,
+    /// Whether the cursor pool has received its quantum for the current
+    /// visit (cleared whenever the cursor advances).
+    granted: bool,
+}
+
+impl WeightedRoundRobin {
+    /// One weight per flattened pool; all must be finite and > 0.
+    pub fn new(weights: Vec<f64>) -> WeightedRoundRobin {
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w > 0.0),
+            "pool weights must be finite and > 0: {weights:?}"
+        );
+        let n = weights.len();
+        WeightedRoundRobin {
+            weights,
+            deficit: vec![0.0; n],
+            turns: vec![0; n],
+            cursor: 0,
+            granted: false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    pub fn weight(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    fn advance(&mut self) {
+        self.cursor = (self.cursor + 1) % self.weights.len();
+        self.granted = false;
+    }
+
+    /// Next pool to grant a service turn, among those `busy` reports
+    /// true for. Returns `None` only when no pool is busy. A full scan
+    /// adds at least `min(weight)` credit to every busy pool, so the
+    /// bounded number of passes below always finds an eligible pool
+    /// when one is busy.
+    pub fn next(&mut self, busy: &mut dyn FnMut(usize) -> bool) -> Option<usize> {
+        let n = self.weights.len();
+        if n == 0 {
+            return None;
+        }
+        let min_w = self.weights.iter().copied().fold(f64::INFINITY, f64::min);
+        let passes = (1.0 / min_w).ceil().max(1.0) as usize + 1;
+        for _ in 0..passes {
+            let mut any_busy = false;
+            for _ in 0..n {
+                let i = self.cursor;
+                if !busy(i) {
+                    // an emptied pool forfeits its residual credit
+                    self.deficit[i] = 0.0;
+                    self.advance();
+                    continue;
+                }
+                any_busy = true;
+                if !self.granted {
+                    self.deficit[i] += self.weights[i];
+                    self.granted = true;
+                }
+                if self.deficit[i] >= 1.0 {
+                    self.deficit[i] -= 1.0;
+                    self.turns[i] += 1;
+                    if self.deficit[i] < 1.0 {
+                        // visit exhausted; next call moves on
+                        self.advance();
+                    }
+                    return Some(i);
+                }
+                // fractional weight still accumulating: skip this visit
+                self.advance();
+            }
+            if !any_busy {
+                return None;
+            }
+        }
+        None
+    }
+}
+
+// --- engine-side state ----------------------------------------------------------
+
+/// Per-priority-class serving metrics (client traffic only; eval chunks
+/// are internal requests with their own counters).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct ClassMetrics {
+    /// Admission-queue wait: first-sample admission minus enqueue.
+    pub queue_wait: Histogram,
+    /// End-to-end: completion minus enqueue.
+    pub e2e: Histogram,
+    pub requests_done: u64,
+}
+
+/// Snapshot of one class's latency metrics, exported through `stats`.
+#[derive(Clone, Debug, Default)]
+pub struct ClassLatencyStats {
+    /// Class name ("interactive" | "batch").
+    pub class: String,
+    pub requests_done: u64,
+    pub queue_wait_p50_s: f64,
+    pub queue_wait_p95_s: f64,
+    pub queue_wait_p99_s: f64,
+    pub e2e_p50_s: f64,
+    pub e2e_p95_s: f64,
+    pub e2e_p99_s: f64,
+}
+
+/// Per-(model, program) pool QoS snapshot, exported through `stats`.
+#[derive(Clone, Debug, Default)]
+pub struct PoolQosStats {
+    pub model: String,
+    pub solver: String,
+    pub weight: f64,
+    /// DWRR service turns granted to the pool.
+    pub turns: u64,
+    /// Fused steps the pool executed.
+    pub steps: u64,
+    pub occupied_lane_steps: u64,
+    /// Samples queued on the pool (not yet in a lane).
+    pub queue_depth: usize,
+    pub active_lanes: usize,
+}
+
+/// All QoS state the engine threads through admission and service:
+/// the weighted scheduler, resolved per-model quotas, per-model queue
+/// accounting, per-class latency metrics, and shed/reject counters.
+pub(crate) struct QosState {
+    pub wrr: WeightedRoundRobin,
+    /// Per model index (parallel to the registry's entries).
+    pub quotas: Vec<Quota>,
+    pub queued_per_model: Vec<usize>,
+    pub default_priority: Priority,
+    /// Indexed by `Priority::idx()`.
+    pub classes: [ClassMetrics; 2],
+    pub shed_deadline: u64,
+    pub rejected_quota: u64,
+}
+
+impl QosState {
+    /// Resolve a config against the registry's flattened pool list.
+    /// `pools` is `(model name, solver name)` in flat service order;
+    /// `models` the model names in index order. Unknown weight/quota
+    /// keys fail startup — a typo'd model name silently serving at
+    /// weight 1 is exactly the misconfiguration this catches.
+    pub fn new(
+        cfg: &QosConfig,
+        pools: &[(String, String)],
+        models: &[String],
+    ) -> Result<QosState> {
+        for (key, _) in &cfg.weights {
+            let (model, prog) = match key.split_once('/') {
+                Some((m, p)) => (m, Some(p)),
+                None => (key.as_str(), None),
+            };
+            let hit = pools
+                .iter()
+                .any(|(m, p)| m == model && prog.is_none_or(|want| p == want));
+            if !hit {
+                bail!(
+                    "--weights key '{key}' matches no served pool (pools: {:?})",
+                    pools.iter().map(|(m, p)| format!("{m}/{p}")).collect::<Vec<_>>()
+                );
+            }
+        }
+        for (model, q) in &cfg.quotas {
+            if !models.contains(model) {
+                bail!("--quota model '{model}' is not served (serving: {models:?})");
+            }
+            if q.max_active_lanes == Some(0) {
+                // a 0-lane model could hold queued work forever; closing
+                // admission is the queued quota's job
+                bail!(
+                    "--quota-lanes for '{model}' must be >= 1 (use --quota {model}=0 \
+                     to close admission instead)"
+                );
+            }
+        }
+        let weights = pools
+            .iter()
+            .map(|(m, p)| {
+                let exact = format!("{m}/{p}");
+                cfg.weights
+                    .iter()
+                    .find(|(k, _)| *k == exact)
+                    .or_else(|| cfg.weights.iter().find(|(k, _)| k == m))
+                    .map(|(_, w)| *w)
+                    .unwrap_or(1.0)
+            })
+            .collect();
+        let quotas = models
+            .iter()
+            .map(|m| {
+                cfg.quotas
+                    .iter()
+                    .find(|(k, _)| k == m)
+                    .map(|(_, q)| *q)
+                    .unwrap_or_default()
+            })
+            .collect();
+        Ok(QosState {
+            wrr: WeightedRoundRobin::new(weights),
+            quotas,
+            queued_per_model: vec![0; models.len()],
+            default_priority: cfg.default_priority,
+            classes: Default::default(),
+            shed_deadline: 0,
+            rejected_quota: 0,
+        })
+    }
+
+    /// Latency snapshots for every class, interactive first.
+    pub fn class_stats(&self) -> Vec<ClassLatencyStats> {
+        PRIORITY_CLASSES
+            .iter()
+            .map(|p| {
+                let m = &self.classes[p.idx()];
+                ClassLatencyStats {
+                    class: p.as_str().to_string(),
+                    requests_done: m.requests_done,
+                    queue_wait_p50_s: m.queue_wait.quantile(0.5),
+                    queue_wait_p95_s: m.queue_wait.quantile(0.95),
+                    queue_wait_p99_s: m.queue_wait.quantile(0.99),
+                    e2e_p50_s: m.e2e.quantile(0.5),
+                    e2e_p95_s: m.e2e.quantile(0.95),
+                    e2e_p99_s: m.e2e.quantile(0.99),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_parses_and_orders() {
+        assert_eq!(Priority::parse("interactive").unwrap(), Priority::Interactive);
+        assert_eq!(Priority::parse(" batch ").unwrap(), Priority::Batch);
+        assert!(Priority::parse("urgent").is_err());
+        assert!(Priority::Interactive > Priority::Batch);
+        assert_eq!(Priority::default(), Priority::Interactive);
+        for p in PRIORITY_CLASSES {
+            assert_eq!(Priority::parse(p.as_str()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        let msg = coded(CODE_QUOTA, "model 'vp' over quota");
+        assert_eq!(error_code(&msg), Some(CODE_QUOTA));
+        assert_eq!(error_code("queue full (8 samples)"), None);
+        assert_eq!(error_code(&coded(CODE_DEADLINE, "x")), Some(CODE_DEADLINE));
+        assert_eq!(error_code("quota_exceeded_extra: x"), None);
+    }
+
+    #[test]
+    fn weight_and_quota_parsers() {
+        let w = parse_weights("vp=3, ve=1.5,vp/em=0.5").unwrap();
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[0], ("vp".to_string(), 3.0));
+        assert_eq!(w[2], ("vp/em".to_string(), 0.5));
+        assert!(parse_weights("vp=0").is_err(), "zero weight starves");
+        assert!(parse_weights("vp=-1").is_err());
+        assert!(parse_weights("vp").is_err());
+        assert!(parse_weights("vp=1,vp=2").is_err(), "duplicate key");
+        assert_eq!(parse_weights("").unwrap(), vec![]);
+        let q = parse_quota_list("vp=256,ve=0").unwrap();
+        assert_eq!(q, vec![("vp".to_string(), 256), ("ve".to_string(), 0)]);
+        assert!(parse_quota_list("vp=many").is_err());
+    }
+
+    /// Reference model of the registry's pre-QoS flat rotation: scan
+    /// from the cursor, serve the first busy pool, park the cursor just
+    /// past it.
+    struct FlatRr {
+        cursor: usize,
+        n: usize,
+    }
+
+    impl FlatRr {
+        fn next(&mut self, busy: &mut dyn FnMut(usize) -> bool) -> Option<usize> {
+            for k in 0..self.n {
+                let i = (self.cursor + k) % self.n;
+                if busy(i) {
+                    self.cursor = (i + 1) % self.n;
+                    return Some(i);
+                }
+            }
+            None
+        }
+    }
+
+    /// The determinism guard: with equal weights the DWRR service order
+    /// is identical to the flat round-robin it replaced, over a busy
+    /// pattern that churns (pools going idle and busy between turns).
+    #[test]
+    fn equal_weights_reproduce_flat_round_robin() {
+        let n = 5;
+        let mut wrr = WeightedRoundRobin::new(vec![1.0; n]);
+        let mut flat = FlatRr { cursor: 0, n };
+        // deterministic churn: pool i is busy at turn t iff (t + i) is
+        // not divisible by its own modulus
+        for t in 0..500u64 {
+            let mut busy_w = |i: usize| (t + i as u64) % (2 + i as u64 % 3) != 0;
+            let mut busy_f = |i: usize| (t + i as u64) % (2 + i as u64 % 3) != 0;
+            assert_eq!(
+                wrr.next(&mut busy_w),
+                flat.next(&mut busy_f),
+                "service order diverged from flat round-robin at turn {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn saturated_pools_share_turns_by_weight() {
+        let mut wrr = WeightedRoundRobin::new(vec![3.0, 1.0]);
+        for _ in 0..4000 {
+            assert!(wrr.next(&mut |_| true).is_some());
+        }
+        assert_eq!(wrr.turns, vec![3000, 1000], "3:1 weights must split turns 3:1");
+    }
+
+    #[test]
+    fn fractional_weights_accumulate_deficit() {
+        // weight 0.5 pool is served on every other visit
+        let mut wrr = WeightedRoundRobin::new(vec![1.0, 0.5]);
+        for _ in 0..300 {
+            assert!(wrr.next(&mut |_| true).is_some());
+        }
+        assert_eq!(wrr.turns, vec![200, 100], "1:0.5 weights must split turns 2:1");
+    }
+
+    #[test]
+    fn idle_pool_forfeits_credit() {
+        let mut wrr = WeightedRoundRobin::new(vec![4.0, 1.0]);
+        // pool 0 busy alone: consumes its visit quantum
+        assert_eq!(wrr.next(&mut |i| i == 0), Some(0));
+        // goes idle; pool 1 is served and pool 0's residue is cleared
+        assert_eq!(wrr.next(&mut |i| i == 1), Some(1));
+        // pool 0 busy again: it gets a fresh quantum (4 turns), not a
+        // banked burst on top of the 3 credits it abandoned
+        let mut served = Vec::new();
+        for _ in 0..5 {
+            served.push(wrr.next(&mut |_| true).unwrap());
+        }
+        assert_eq!(served, vec![0, 0, 0, 0, 1], "fresh visit grants exactly the weight");
+    }
+
+    #[test]
+    fn no_busy_pool_is_none() {
+        let mut wrr = WeightedRoundRobin::new(vec![1.0, 1.0]);
+        assert_eq!(wrr.next(&mut |_| false), None);
+        assert!(WeightedRoundRobin::new(vec![]).next(&mut |_| true).is_none());
+    }
+
+    #[test]
+    fn state_resolves_weights_and_quotas() {
+        let pools = vec![
+            ("vp".to_string(), "adaptive".to_string()),
+            ("vp".to_string(), "em".to_string()),
+            ("ve".to_string(), "adaptive".to_string()),
+        ];
+        let models = vec!["vp".to_string(), "ve".to_string()];
+        let mut cfg = QosConfig {
+            weights: parse_weights("vp=2,vp/em=5").unwrap(),
+            ..Default::default()
+        };
+        cfg.set_max_queued("ve", 64);
+        cfg.set_max_active_lanes("ve", 4);
+        let st = QosState::new(&cfg, &pools, &models).unwrap();
+        // model/program key wins over the model key; unlisted pools get 1
+        assert_eq!(st.wrr.weight(0), 2.0);
+        assert_eq!(st.wrr.weight(1), 5.0);
+        assert_eq!(st.wrr.weight(2), 1.0);
+        assert_eq!(st.quotas[0], Quota::default());
+        assert_eq!(
+            st.quotas[1],
+            Quota { max_queued: Some(64), max_active_lanes: Some(4) }
+        );
+
+        let bad = QosConfig { weights: parse_weights("nope=2").unwrap(), ..Default::default() };
+        assert!(QosState::new(&bad, &pools, &models).is_err(), "typo'd weight key");
+        let mut bad = QosConfig::default();
+        bad.set_max_queued("nope", 1);
+        assert!(QosState::new(&bad, &pools, &models).is_err(), "typo'd quota model");
+        let mut bad = QosConfig::default();
+        bad.set_max_active_lanes("vp", 0);
+        assert!(QosState::new(&bad, &pools, &models).is_err(), "0-lane quota would hang");
+        // a queued quota of 0 is the sanctioned way to close admission
+        let mut ok = QosConfig::default();
+        ok.set_max_queued("vp", 0);
+        assert!(QosState::new(&ok, &pools, &models).is_ok());
+    }
+}

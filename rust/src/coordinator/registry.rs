@@ -8,9 +8,10 @@
 //! Each pool carries its own bucket ladder, scheduler and FIFO, so
 //! mixed traffic — adaptive generates next to EM eval lanes — co-exists
 //! on one engine thread. PJRT handles are not `Send`, so every pool
-//! shares the single engine thread; the engine services them
-//! round-robin, one fused step per turn, so a hot pool cannot starve
-//! the others for more than one step.
+//! shares the single engine thread; service order over the flattened
+//! (model, program) pool list is owned by `qos::WeightedRoundRobin`
+//! (flat rotation at the default equal weights), one fused step per
+//! turn, so a hot pool cannot starve the others beyond its weight.
 //!
 //! Pool ladders are validated against the artifact manifest up front: a
 //! rung needs both the step program and `denoise` compiled at that
@@ -70,8 +71,6 @@ impl ModelEntry<'_> {
 pub(crate) struct Registry<'rt> {
     entries: Vec<ModelEntry<'rt>>,
     by_name: HashMap<String, usize>,
-    /// Round-robin position over the flattened pool list.
-    cursor: usize,
 }
 
 impl<'rt> Registry<'rt> {
@@ -164,7 +163,7 @@ impl<'rt> Registry<'rt> {
             by_name.insert(name.clone(), entries.len());
             entries.push(ModelEntry { model, process, pools });
         }
-        Ok(Registry { entries, by_name, cursor: 0 })
+        Ok(Registry { entries, by_name })
     }
 
     /// Model index for a request's model name ("" = the default model).
@@ -213,7 +212,9 @@ impl<'rt> Registry<'rt> {
         &mut self.entries[i]
     }
 
-    fn unflatten(&self, mut flat: usize) -> (usize, usize) {
+    /// (model, pool) indices for a flat pool index (flat service order
+    /// = the order `pool_labels` lists).
+    pub fn pool_at(&self, mut flat: usize) -> (usize, usize) {
         for (mi, e) in self.entries.iter().enumerate() {
             if flat < e.pools.len() {
                 return (mi, flat);
@@ -223,20 +224,17 @@ impl<'rt> Registry<'rt> {
         unreachable!("flat pool index out of range")
     }
 
-    /// Next (model, pool) with runnable or admissible work, scanning
-    /// round-robin over the flattened pool list from the cursor;
-    /// advances the cursor so pools take turns.
-    pub fn next_runnable(&mut self) -> Option<(usize, usize)> {
-        let total: usize = self.entries.iter().map(|e| e.pools.len()).sum();
-        for k in 0..total {
-            let flat = (self.cursor + k) % total;
-            let (mi, pi) = self.unflatten(flat);
-            if !self.entries[mi].pools[pi].idle() {
-                self.cursor = (flat + 1) % total;
-                return Some((mi, pi));
-            }
-        }
-        None
+    /// `(model name, solver name)` per pool in flat service order — the
+    /// list QoS weights are resolved against.
+    pub fn pool_labels(&self) -> Vec<(String, String)> {
+        self.entries
+            .iter()
+            .flat_map(|e| {
+                e.pools
+                    .iter()
+                    .map(|p| (e.model.meta.name.clone(), p.program.solver_name().to_string()))
+            })
+            .collect()
     }
 
     pub fn all_idle(&self) -> bool {

@@ -12,7 +12,7 @@
 
 use gofast::cli::Args;
 use gofast::config::Config;
-use gofast::coordinator::{Engine, EngineConfig};
+use gofast::coordinator::{qos, Engine, EngineConfig};
 use gofast::metrics;
 use gofast::rng::Rng;
 use gofast::runtime::Runtime;
@@ -62,9 +62,16 @@ USAGE: gofast <command> [flags]
             [--artifacts artifacts]
   serve     [--config configs/server.toml] [--models vp,ve]
             [--solvers adaptive,em,ddim] [--max-bucket 16] [--no-migrate]
+            [--weights vp=3,ve=1|vp/em=0.5] [--quota vp=256]
+            [--quota-lanes vp=8] [--default-priority interactive|batch]
             [--set k=v ...]
+            (QoS: --weights sets deficit-round-robin pool weights keyed
+             model or model/program; --quota caps queued samples and
+             --quota-lanes active lanes per model; requests may carry
+             priority/deadline_ms — see rust/src/server/mod.rs)
   client    [--addr 127.0.0.1:7878] [--model vp] [--solver adaptive|em:<n>|ddim:<n>]
-            [--n 4] [--eps-rel 0.05] [--seed 0] [--stats] [--out grid.ppm]
+            [--n 4] [--eps-rel 0.05] [--seed 0] [--priority interactive|batch]
+            [--deadline-ms 0] [--stats] [--out grid.ppm]
   evaluate  --model vp [--solver adaptive|em:<n>|ddim:<n>|...] [--samples 256]
             [--eps-rel 0.05] [--seed 0] [--addr host:port] [--offline]
             [--check] [...generate flags]
@@ -224,6 +231,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             programs.push(prog);
         }
     }
+    // QoS: pool weights, per-model quotas, default priority class
+    // (validated against the served models at engine startup)
+    let mut qcfg = qos::QosConfig {
+        weights: qos::parse_weights(&args.str_or("weights", ""))?,
+        quotas: Vec::new(),
+        default_priority: qos::Priority::parse(
+            &args.str_or("default-priority", "interactive"),
+        )?,
+    };
+    for (model, n) in qos::parse_quota_list(&args.str_or("quota", ""))? {
+        qcfg.set_max_queued(&model, n);
+    }
+    for (model, n) in qos::parse_quota_list(&args.str_or("quota-lanes", ""))? {
+        qcfg.set_max_active_lanes(&model, n);
+    }
+
     let mut ecfg = EngineConfig::new(&artifacts, &models[0]);
     ecfg.models = models.clone();
     ecfg.programs = programs.clone();
@@ -231,6 +254,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     ecfg.migrate = migrate;
     ecfg.fused_buffers = cfg.bool_or("server.fused_buffers", true)?;
     ecfg.max_queue_samples = cfg.usize_or("server.max_queue_samples", 4096)?;
+    ecfg.qos = qcfg;
 
     let engine = Engine::start(ecfg)?;
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))
@@ -259,12 +283,18 @@ fn cmd_client(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 4)?;
     let model = args.str_or("model", "");
     let solver = args.str_or("solver", "");
-    let r = client.generate_spec(
+    let priority = args.str_or("priority", "");
+    if !priority.is_empty() {
+        qos::Priority::parse(&priority)?; // fail locally, not on the wire
+    }
+    let r = client.generate_qos(
         &model,
         &solver,
         n,
         args.f64_or("eps-rel", 0.05)?,
         args.u64_or("seed", 0)?,
+        &priority,
+        args.u64_or("deadline-ms", 0)?,
         true,
     )?;
     let mean_nfe = r.nfe.iter().sum::<u64>() as f64 / r.nfe.len() as f64;
@@ -387,6 +417,7 @@ fn evaluate_served(args: &Args, solver: solvers::ServingSolver) -> Result<EvalSu
         samples,
         eps_rel,
         seed,
+        priority: None,
     })?;
     Ok(EvalSummary {
         fid: r.fid,

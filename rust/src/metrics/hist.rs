@@ -57,12 +57,16 @@ impl Histogram {
         self.max
     }
 
-    /// Quantile via bucket upper bound (<= 5% relative error by design).
+    /// Quantile via bucket upper bound (<= 5% relative error by
+    /// design). An empty histogram reports 0; `q <= 0` reports the
+    /// first occupied bucket (the target rank floors at 1, otherwise
+    /// the scan would stop at the first — possibly empty — bucket) and
+    /// `q >= 1` the last occupied one.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
         }
-        let target = (q * self.total as f64).ceil() as u64;
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
         let mut acc = 0;
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
@@ -81,12 +85,6 @@ impl Histogram {
         self.total += other.total;
         self.sum += other.sum;
         self.max = self.max.max(other.max);
-    }
-}
-
-impl Default for Histogram {
-    fn default() -> Self {
-        Self::new()
     }
 }
 
@@ -123,6 +121,56 @@ mod tests {
     fn empty_histogram_is_sane() {
         let h = Histogram::new();
         assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
         assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    /// A single sample dominates every quantile: q = 0, 0.5 and 1 must
+    /// all land in its bucket (within the 5% bucket resolution), never
+    /// at 0 or at the histogram floor.
+    #[test]
+    fn single_sample_dominates_every_quantile() {
+        let mut h = Histogram::new();
+        h.record(0.1);
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(
+                (0.1..=0.1 * 1.06).contains(&v),
+                "quantile({q}) = {v}, expected ~0.1 (bucket upper bound)"
+            );
+        }
+        assert_eq!(h.count(), 1);
+        assert!((h.mean() - 0.1).abs() < 1e-12);
+    }
+
+    /// q = 0 must report the smallest occupied bucket, q = 1 the
+    /// largest — not the ends of the bucket range.
+    #[test]
+    fn extreme_quantiles_hit_occupied_buckets() {
+        let mut h = Histogram::new();
+        h.record(0.01);
+        h.record(1.0);
+        let lo = h.quantile(0.0);
+        let hi = h.quantile(1.0);
+        assert!((0.01..=0.01 * 1.06).contains(&lo), "q=0 -> {lo}");
+        assert!((1.0..=1.0 * 1.06).contains(&hi), "q=1 -> {hi}");
+        // out-of-range q clamps rather than panicking or scanning past
+        // the table
+        assert_eq!(h.quantile(-0.5), lo);
+        assert_eq!(h.quantile(2.0), hi);
+    }
+
+    /// Values beyond the bucket table clamp into the last bucket and
+    /// keep quantiles finite.
+    #[test]
+    fn overflow_values_clamp_to_last_bucket() {
+        let mut h = Histogram::with_range(1e-5, 1.05, 10);
+        h.record(1e9);
+        let v = h.quantile(0.5);
+        assert!(v.is_finite() && v > 0.0, "overflow quantile {v}");
+        assert_eq!(h.max(), 1e9);
     }
 }

@@ -2,18 +2,19 @@
 //!
 //! Protocol (one JSON object per line, both directions):
 //!   -> {"op":"generate","n":16,"eps_rel":0.05,"seed":7,"model":"vp",
-//!       "solver":"adaptive"}
+//!       "solver":"adaptive","priority":"interactive","deadline_ms":2000}
 //!   <- {"ok":true,"model":"vp","solver":"adaptive","n":16,"h":16,
 //!       "w":16,"nfe":[...],"wall_s":...,"queued_s":...,
 //!       "images_b64":"<f32-le raw, base64>"}
 //!   -> {"op":"evaluate","samples":256,"eps_rel":0.05,"seed":7,
-//!       "model":"vp","solver":"em:128"}
+//!       "model":"vp","solver":"em:128","priority":"batch"}
 //!   <- {"ok":true,"model":"vp","solver":"em:128","samples":256,
 //!       "fid":...,"is":...,"mean_nfe":...,"wall_s":...,
 //!       "steps_per_bucket":{"<bucket>":steps,...}}
 //!   -> {"op":"stats"}
 //!   <- {"ok":true,"requests_done":...,"models":[...],
 //!       "programs":{"adaptive":{"pools":...,"active_lanes":...,
+//!         "queue_depth":...,
 //!         "steps":...,"occupied_lane_steps":...,"wasted_lane_steps":...,
 //!         "score_evals":...,"migrations_up":...,"migrations_down":...,
 //!         "steps_per_bucket":{"<bucket>":steps,...}},"em":{...},...},
@@ -21,8 +22,37 @@
 //!       "migrations_up":...,"migrations_down":...,
 //!       "wasted_lane_steps":...,"occupied_lane_steps":...,
 //!       "evals_done":...,"eval_active":...,"eval_samples_done":...,
-//!       "eval_lane_steps":...,...}
+//!       "eval_lane_steps":...,
+//!       "queue_depth":...,
+//!       "qos":{"shed_deadline":...,"rejected_quota":...,
+//!         "pools":{"<model>/<solver>":{"weight":...,"turns":...,
+//!           "steps":...,"occupied_lane_steps":...,"queue_depth":...,
+//!           "active_lanes":...},...},
+//!         "classes":{"interactive":{"requests_done":...,
+//!           "queue_wait_p50_s":...,"queue_wait_p95_s":...,
+//!           "queue_wait_p99_s":...,"e2e_p50_s":...,"e2e_p95_s":...,
+//!           "e2e_p99_s":...},"batch":{...}}},...}
 //!   -> {"op":"ping"} / <- {"ok":true}
+//!
+//! Error responses are `{"ok":false,"error":"<message>"}`; structured
+//! rejections additionally carry a machine-readable `"code"`:
+//! `"queue_full"` (global cap), `"quota_exceeded"` (per-model admission
+//! quota), `"deadline_exceeded"` (request shed after its `deadline_ms`
+//! expired while still queued).
+//!
+//! QoS fields (docs/ARCHITECTURE.md §Admission & QoS):
+//! * `priority` (optional on `generate` and `evaluate`; `"interactive"`
+//!   or `"batch"`, default = the server's `--default-priority`) —
+//!   interactive requests are queued ahead of batch within their pool;
+//!   the class never changes a sample's content, only its wait.
+//! * `deadline_ms` (optional on `generate`; 0 or absent = no deadline)
+//!   — a request still fully queued when the deadline expires is shed
+//!   with `code:"deadline_exceeded"` instead of burning lane time; once
+//!   any sample holds a lane the request runs to completion. `evaluate`
+//!   rejects the field (evaluation jobs run to completion).
+//! * `queue_depth` in `stats` is the QoS-standard alias of
+//!   `queued_samples` (kept for compatibility); the per-pool and
+//!   per-program splits exist only under the new names.
 //!
 //! `model` is optional and defaults to the engine's first configured
 //! model; the response `h`/`w` are the geometry of the model that
@@ -54,23 +84,28 @@
 //!
 //! The `stats` op reports, besides the aggregate counters, a
 //! `programs` object keyed by solver name with that program's pool
-//! count, live lanes, fused step executions, occupied/wasted
-//! lane-steps, useful score evaluations (occupied lane-steps x the
-//! program's per-step NFE cost), migration counters and per-bucket
-//! step counts — the per-program breakdown of the aggregate
-//! `steps_per_bucket` / `*_lane_steps` fields. `evals_done` / `eval_active` /
-//! `eval_samples_done` / `eval_lane_steps` expose the eval-lane share
-//! of engine work.
+//! count, live lanes, queued samples, fused step executions,
+//! occupied/wasted lane-steps, useful score evaluations (occupied
+//! lane-steps x the program's per-step NFE cost), migration counters
+//! and per-bucket step counts — the per-program breakdown of the
+//! aggregate `steps_per_bucket` / `*_lane_steps` fields. `evals_done` /
+//! `eval_active` / `eval_samples_done` / `eval_lane_steps` expose the
+//! eval-lane share of engine work. `queue_depth` is the global count of
+//! samples awaiting a lane; the `qos` object breaks it down per
+//! (model, solver) pool next to each pool's configured weight and
+//! service-turn share, and reports per-priority-class queue-wait and
+//! end-to-end latency percentiles plus the deadline-shed / quota-reject
+//! counters.
 //!
 //! One OS thread per connection (requests within a connection pipeline
 //! through the shared engine, which does the real batching).
 
 pub mod b64;
 
-use crate::coordinator::{EngineClient, EngineStats, EvalRequest};
+use crate::coordinator::{qos, EngineClient, EngineStats, EvalRequest, SampleRequest};
 use crate::json::{self, Value};
 use crate::solvers::spec;
-use crate::{anyhow, Context, Result};
+use crate::{anyhow, bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
@@ -114,13 +149,28 @@ pub fn handle_conn(
         }
         let resp = match handle_request(&line, &engine, cfg) {
             Ok(v) => v,
-            Err(e) => Value::obj(vec![
-                ("ok", Value::Bool(false)),
-                ("error", Value::str(format!("{e:#}"))),
-            ]),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let mut pairs = vec![("ok", Value::Bool(false))];
+                // structured rejections (quota / queue cap / deadline
+                // shed) carry a machine-readable code next to the text
+                if let Some(code) = qos::error_code(&msg) {
+                    pairs.push(("code", Value::str(code)));
+                }
+                pairs.push(("error", Value::str(msg)));
+                Value::obj(pairs)
+            }
         };
         writeln!(writer, "{resp}")?;
     }
+}
+
+/// Optional `priority` field ("interactive" | "batch"); `None` defers
+/// to the engine's configured default class.
+fn parse_priority(req: &Value) -> Result<Option<qos::Priority>> {
+    req.get("priority")
+        .map(|v| qos::Priority::parse(v.as_str()?))
+        .transpose()
 }
 
 fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Result<Value> {
@@ -145,7 +195,25 @@ fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Resu
                 spec::parse(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
             let want_images =
                 req.get("images").map(|v| v.as_bool()).transpose()?.unwrap_or(true);
-            let r = engine.generate_with(&model, solver, n, eps_rel, seed)?;
+            let priority = parse_priority(&req)?;
+            // 0 means "no deadline", matching Client::generate_qos and
+            // the CLI --deadline-ms convention — not "shed immediately"
+            let deadline_ms = req
+                .get("deadline_ms")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .map(|v| v as u64)
+                .filter(|&d| d > 0);
+            let r = engine.generate_request(SampleRequest {
+                model,
+                solver,
+                n,
+                eps_rel,
+                seed,
+                sample_base: 0,
+                priority,
+                deadline_ms,
+            })?;
             let mut pairs = vec![
                 ("ok", Value::Bool(true)),
                 // the model that actually served it (resolved default)
@@ -180,7 +248,15 @@ fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Resu
                 req.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("").to_string();
             let solver =
                 spec::parse(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
-            let r = engine.evaluate(EvalRequest { model, solver, samples, eps_rel, seed })?;
+            let priority = parse_priority(&req)?;
+            if req.get("deadline_ms").is_some() {
+                bail!(
+                    "deadline_ms is not supported on evaluate (deadlines shed queued \
+                     generate requests; evaluation jobs run to completion)"
+                );
+            }
+            let r = engine
+                .evaluate(EvalRequest { model, solver, samples, eps_rel, seed, priority })?;
             Ok(Value::obj(vec![
                 ("ok", Value::Bool(true)),
                 ("model", Value::str(r.model)),
@@ -227,6 +303,7 @@ fn stats_to_json(s: &EngineStats) -> Value {
                             Value::obj(vec![
                                 ("pools", Value::num(p.pools as f64)),
                                 ("active_lanes", Value::num(p.active_lanes as f64)),
+                                ("queue_depth", Value::num(p.queue_depth as f64)),
                                 ("steps", Value::num(p.steps as f64)),
                                 (
                                     "occupied_lane_steps",
@@ -252,6 +329,61 @@ fn stats_to_json(s: &EngineStats) -> Value {
         ("eval_active", Value::num(s.eval_active as f64)),
         ("eval_samples_done", Value::num(s.eval_samples_done as f64)),
         ("eval_lane_steps", Value::num(s.eval_lane_steps as f64)),
+        // QoS-standard alias of queued_samples (kept above for compat)
+        ("queue_depth", Value::num(s.queued_samples as f64)),
+        (
+            "qos",
+            Value::obj(vec![
+                ("shed_deadline", Value::num(s.shed_deadline as f64)),
+                ("rejected_quota", Value::num(s.rejected_quota as f64)),
+                (
+                    "pools",
+                    Value::Obj(
+                        s.pool_qos
+                            .iter()
+                            .map(|p| {
+                                (
+                                    format!("{}/{}", p.model, p.solver),
+                                    Value::obj(vec![
+                                        ("weight", Value::num(p.weight)),
+                                        ("turns", Value::num(p.turns as f64)),
+                                        ("steps", Value::num(p.steps as f64)),
+                                        (
+                                            "occupied_lane_steps",
+                                            Value::num(p.occupied_lane_steps as f64),
+                                        ),
+                                        ("queue_depth", Value::num(p.queue_depth as f64)),
+                                        ("active_lanes", Value::num(p.active_lanes as f64)),
+                                    ]),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "classes",
+                    Value::Obj(
+                        s.classes
+                            .iter()
+                            .map(|c| {
+                                (
+                                    c.class.clone(),
+                                    Value::obj(vec![
+                                        ("requests_done", Value::num(c.requests_done as f64)),
+                                        ("queue_wait_p50_s", Value::num(c.queue_wait_p50_s)),
+                                        ("queue_wait_p95_s", Value::num(c.queue_wait_p95_s)),
+                                        ("queue_wait_p99_s", Value::num(c.queue_wait_p99_s)),
+                                        ("e2e_p50_s", Value::num(c.e2e_p50_s)),
+                                        ("e2e_p95_s", Value::num(c.e2e_p95_s)),
+                                        ("e2e_p99_s", Value::num(c.e2e_p99_s)),
+                                    ]),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
     ])
 }
 
@@ -299,8 +431,17 @@ impl Client {
         }
         let v = json::parse(&line)?;
         if !v.req("ok")?.as_bool()? {
+            // the error text already embeds the code prefix for
+            // structured rejections; surface the field anyway so
+            // callers matching on "[quota_exceeded]" etc. are not
+            // parsing prose
+            let code = v
+                .get("code")
+                .and_then(|c| c.as_str().ok())
+                .map(|c| format!(" [{c}]"))
+                .unwrap_or_default();
             return Err(anyhow!(
-                "server error: {}",
+                "server error{code}: {}",
                 v.get("error").and_then(|e| e.as_str().ok()).unwrap_or("unknown")
             ));
         }
@@ -350,6 +491,24 @@ impl Client {
         seed: u64,
         want_images: bool,
     ) -> Result<ClientGenResult> {
+        self.generate_qos(model, solver, n, eps_rel, seed, "", 0, want_images)
+    }
+
+    /// Generate with QoS controls: `priority` is "interactive"/"batch"
+    /// ("" = the server's default class); `deadline_ms` > 0 sheds the
+    /// request if it is still fully queued when the deadline expires
+    /// (0 = no deadline).
+    pub fn generate_qos(
+        &mut self,
+        model: &str,
+        solver: &str,
+        n: usize,
+        eps_rel: f64,
+        seed: u64,
+        priority: &str,
+        deadline_ms: u64,
+        want_images: bool,
+    ) -> Result<ClientGenResult> {
         let mut pairs = vec![
             ("op", Value::str("generate")),
             ("n", Value::num(n as f64)),
@@ -362,6 +521,12 @@ impl Client {
         }
         if !solver.is_empty() {
             pairs.push(("solver", Value::str(solver)));
+        }
+        if !priority.is_empty() {
+            pairs.push(("priority", Value::str(priority)));
+        }
+        if deadline_ms > 0 {
+            pairs.push(("deadline_ms", Value::num(deadline_ms as f64)));
         }
         let req = Value::obj(pairs);
         let v = self.call(&req)?;
@@ -401,6 +566,22 @@ impl Client {
         eps_rel: f64,
         seed: u64,
     ) -> Result<ClientEvalResult> {
+        self.evaluate_qos(model, solver, samples, eps_rel, seed, "")
+    }
+
+    /// [`Client::evaluate`] with an explicit priority class
+    /// ("interactive"/"batch"; "" = the server's default). Mark bulk
+    /// evaluation runs "batch" so interactive traffic on the same pool
+    /// is admitted first.
+    pub fn evaluate_qos(
+        &mut self,
+        model: &str,
+        solver: &str,
+        samples: usize,
+        eps_rel: f64,
+        seed: u64,
+        priority: &str,
+    ) -> Result<ClientEvalResult> {
         let mut pairs = vec![
             ("op", Value::str("evaluate")),
             ("samples", Value::num(samples as f64)),
@@ -412,6 +593,9 @@ impl Client {
         }
         if !solver.is_empty() {
             pairs.push(("solver", Value::str(solver)));
+        }
+        if !priority.is_empty() {
+            pairs.push(("priority", Value::str(priority)));
         }
         let v = self.call(&Value::obj(pairs))?;
         let mut steps_per_bucket = v

@@ -1,11 +1,12 @@
 //! Integration: the continuous-batching engine — request lifecycle,
 //! mixed tolerances in one batch, admission control, determinism,
-//! bucket migration, multi-model routing, and fixed-step solver-program
-//! pools (em/ddim lanes behind the same scheduler).
+//! bucket migration, multi-model routing, fixed-step solver-program
+//! pools (em/ddim lanes behind the same scheduler), and the QoS
+//! subsystem (weights, quotas, priorities, deadline shedding).
 
 mod common;
 
-use gofast::coordinator::{Engine, EngineConfig};
+use gofast::coordinator::{qos, Engine, EngineConfig, SampleRequest};
 use gofast::solvers::ServingSolver;
 
 fn engine() -> Option<Engine> {
@@ -95,6 +96,154 @@ fn admission_control_rejects_overflow() {
     let engine = Engine::start(cfg).unwrap();
     let err = engine.client().generate(100, 0.5, 0).unwrap_err().to_string();
     assert!(err.contains("queue full"), "{err}");
+    // the global cap is a structured rejection too
+    assert!(err.starts_with(qos::CODE_QUEUE_FULL), "{err}");
+}
+
+/// Per-model admission quota: an over-quota generate is rejected with a
+/// structured `quota_exceeded` error instead of queuing unboundedly,
+/// and the engine keeps serving within-quota traffic.
+#[test]
+fn per_model_quota_rejects_with_coded_error() {
+    let Some(dir) = common::artifacts() else { return };
+    let mut cfg = EngineConfig::new(dir.clone(), "vp");
+    cfg.bucket = common::engine_bucket(&dir);
+    cfg.qos.set_max_queued("vp", 8);
+    let engine = Engine::start(cfg).unwrap();
+    let c = engine.client();
+    let err = c.generate(100, 0.5, 0).unwrap_err().to_string();
+    assert!(err.starts_with(qos::CODE_QUOTA), "{err}");
+    assert!(err.contains("'vp'") && err.contains("quota 8"), "{err}");
+    // within-quota traffic still flows, and the rejection was counted
+    c.generate(2, 0.5, 1).unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.rejected_quota, 1);
+    assert_eq!(stats.requests_done, 1);
+}
+
+/// A queued request whose deadline expires before any of its samples
+/// reaches a lane is shed with a `deadline_exceeded` error; requests
+/// already holding lanes run to completion.
+#[test]
+fn deadline_sheds_still_queued_requests() {
+    let Some(dir) = common::artifacts() else { return };
+    let mut cfg = EngineConfig::new(dir.clone(), "vp");
+    cfg.bucket = common::engine_bucket(&dir);
+    // one lane for the whole model, so the second request must queue
+    cfg.qos.set_max_active_lanes("vp", 1);
+    let engine = Engine::start(cfg).unwrap();
+    let c_long = engine.client();
+    let long = std::thread::spawn(move || {
+        c_long.generate_with("", ServingSolver::Em { steps: 2000 }, 1, 0.5, 7).unwrap()
+    });
+    let c = engine.client();
+    while c.stats().unwrap().active_slots == 0 {
+        std::thread::yield_now();
+    }
+    let err = c
+        .generate_request(SampleRequest {
+            model: String::new(),
+            solver: ServingSolver::Em { steps: 4 },
+            n: 1,
+            eps_rel: 0.5,
+            seed: 9,
+            sample_base: 0,
+            priority: None,
+            deadline_ms: Some(1),
+        })
+        .unwrap_err()
+        .to_string();
+    assert!(err.starts_with(qos::CODE_DEADLINE), "{err}");
+    let r = long.join().unwrap();
+    assert_eq!(r.nfe, vec![2001], "the running request must complete untouched");
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.shed_deadline, 1);
+    assert_eq!(stats.requests_done, 1);
+    // a deadline generous enough to be admitted is not shed
+    let ok = c
+        .generate_request(SampleRequest {
+            model: String::new(),
+            solver: ServingSolver::Em { steps: 4 },
+            n: 1,
+            eps_rel: 0.5,
+            seed: 9,
+            sample_base: 0,
+            priority: Some(qos::Priority::Interactive),
+            deadline_ms: Some(60_000),
+        })
+        .unwrap();
+    assert_eq!(ok.nfe, vec![5]);
+}
+
+/// The `max_active_lanes` quota is a throttle: a request larger than
+/// the cap still completes, but the model never occupies more lanes
+/// than granted.
+#[test]
+fn lane_quota_throttles_model_occupancy() {
+    let Some(dir) = common::artifacts() else { return };
+    let mut cfg = EngineConfig::new(dir.clone(), "vp");
+    cfg.bucket = common::engine_bucket(&dir);
+    cfg.qos.set_max_active_lanes("vp", 2);
+    let engine = Engine::start(cfg).unwrap();
+    let c_bg = engine.client();
+    let run = std::thread::spawn(move || {
+        c_bg.generate_with("", ServingSolver::Em { steps: 30 }, 6, 0.5, 3).unwrap()
+    });
+    let c = engine.client();
+    let mut peak = 0;
+    loop {
+        let s = c.stats().unwrap();
+        peak = peak.max(s.active_slots);
+        if s.requests_done >= 1 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    let r = run.join().unwrap();
+    assert_eq!(r.images.shape[0], 6, "throttled request still completes");
+    assert!(peak <= 2, "lane quota exceeded: observed {peak} active lanes");
+}
+
+/// The QoS determinism guard: weights, quotas and priority classes
+/// change who waits, never what is computed — single-tenant results are
+/// bit-identical between a default engine and a QoS-configured one.
+#[test]
+fn qos_config_is_bit_identical_for_single_tenant_traffic() {
+    let Some(dir) = common::artifacts() else { return };
+    let bucket = common::engine_bucket(&dir);
+    let mut plain_cfg = EngineConfig::new(dir.clone(), "vp");
+    plain_cfg.bucket = bucket;
+    let mut qos_cfg = EngineConfig::new(dir, "vp");
+    qos_cfg.bucket = bucket;
+    qos_cfg.qos.weights = qos::parse_weights("vp=3,vp/em=0.5").unwrap();
+    qos_cfg.qos.set_max_queued("vp", 4096);
+    qos_cfg.qos.default_priority = qos::Priority::Batch;
+    let plain = Engine::start(plain_cfg).unwrap();
+    let wqos = Engine::start(qos_cfg).unwrap();
+    for (solver, n, eps, seed) in [
+        (ServingSolver::Adaptive, 3usize, 0.1, 41u64),
+        (ServingSolver::Em { steps: 9 }, 2, 0.5, 7),
+        (ServingSolver::Adaptive, 1, 0.05, 77),
+    ] {
+        let a = plain.client().generate_with("", solver, n, eps, seed).unwrap();
+        let b = wqos.client().generate_with("", solver, n, eps, seed).unwrap();
+        assert_eq!(a.images, b.images, "QoS config altered sample content ({solver:?})");
+        assert_eq!(a.nfe, b.nfe, "QoS config altered NFE ({solver:?})");
+    }
+    // the weighted engine exports its policy through stats
+    let stats = wqos.client().stats().unwrap();
+    let adaptive =
+        stats.pool_qos.iter().find(|p| p.solver == "adaptive").expect("adaptive pool qos");
+    assert_eq!(adaptive.weight, 3.0);
+    let em = stats.pool_qos.iter().find(|p| p.solver == "em").expect("em pool qos");
+    assert_eq!(em.weight, 0.5, "model/program weight must win over the model weight");
+    assert!(adaptive.turns > 0 && em.turns > 0);
+    assert_eq!(stats.queued_samples, 0, "all traffic drained");
+    let interactive = stats.classes.iter().find(|c| c.class == "interactive").unwrap();
+    assert_eq!(interactive.requests_done, 0, "default class was overridden to batch");
+    let batch = stats.classes.iter().find(|c| c.class == "batch").unwrap();
+    assert_eq!(batch.requests_done, 3);
+    assert!(batch.e2e_p95_s > 0.0 && batch.queue_wait_p50_s >= 0.0);
 }
 
 #[test]

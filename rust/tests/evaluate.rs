@@ -31,7 +31,7 @@ fn start_engine(dir: &Path) -> Engine {
 }
 
 fn eval_req(solver: ServingSolver, samples: usize, eps_rel: f64, seed: u64) -> EvalRequest {
-    EvalRequest { model: String::new(), solver, samples, eps_rel, seed }
+    EvalRequest { model: String::new(), solver, samples, eps_rel, seed, priority: None }
 }
 
 /// Offline twin of the engine's eval lanes for any served solver —
@@ -244,6 +244,7 @@ fn evaluate_validates_request() {
             samples: 2,
             eps_rel: 0.5,
             seed: 0,
+            priority: None,
         })
         .unwrap_err()
         .to_string();

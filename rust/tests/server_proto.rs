@@ -9,11 +9,15 @@ use gofast::server::{serve, Client, ServerConfig};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
-fn spawn_server_for(models: &[&str]) -> Option<(Engine, std::net::SocketAddr)> {
+fn spawn_server_cfg(
+    models: &[&str],
+    tweak: impl FnOnce(&mut EngineConfig),
+) -> Option<(Engine, std::net::SocketAddr)> {
     let dir = common::artifacts()?;
     let mut cfg = EngineConfig::new(dir.clone(), models[0]);
     cfg.models = models.iter().map(|m| m.to_string()).collect();
     cfg.bucket = common::engine_bucket(&dir);
+    tweak(&mut cfg);
     let engine = Engine::start(cfg).expect("engine");
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -26,6 +30,10 @@ fn spawn_server_for(models: &[&str]) -> Option<(Engine, std::net::SocketAddr)> {
         );
     });
     Some((engine, addr))
+}
+
+fn spawn_server_for(models: &[&str]) -> Option<(Engine, std::net::SocketAddr)> {
+    spawn_server_cfg(models, |_| {})
 }
 
 fn spawn_server() -> Option<(Engine, std::net::SocketAddr)> {
@@ -179,6 +187,111 @@ fn evaluate_rejects_unknown_solver() {
     assert!(err.contains("adaptive, em[:<steps>], ddim[:<steps>]"), "{err}");
     let err = c.evaluate("", "em:nope", 2, 0.5, 0).unwrap_err().to_string();
     assert!(err.contains("bad step count"), "{err}");
+}
+
+/// The QoS wire fields ride generate end to end: `priority` and
+/// `deadline_ms` are accepted, a generous deadline does not shed, and a
+/// malformed priority dies in the parser with the accepted names.
+#[test]
+fn generate_priority_and_deadline_roundtrip() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let r = c.generate_qos("", "", 1, 0.5, 3, "interactive", 60_000, false).unwrap();
+    assert_eq!(r.nfe.len(), 1);
+    let r = c.generate_qos("", "em:4", 2, 0.5, 3, "batch", 0, false).unwrap();
+    assert_eq!(r.nfe, vec![5, 5]);
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{{\"op\":\"generate\",\"n\":1,\"priority\":\"urgent\"}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("unknown priority"), "{line}");
+    assert!(line.contains("interactive, batch"), "{line}");
+    // per-class counters saw both classes
+    let stats = c.stats().unwrap();
+    let classes = stats.get("qos").unwrap().get("classes").unwrap();
+    let inter = classes.get("interactive").unwrap();
+    assert_eq!(inter.get("requests_done").unwrap().as_f64().unwrap(), 1.0);
+    let batch = classes.get("batch").unwrap();
+    assert_eq!(batch.get("requests_done").unwrap().as_f64().unwrap(), 1.0);
+    assert!(batch.get("e2e_p95_s").unwrap().as_f64().unwrap() > 0.0);
+}
+
+/// Satellite guard: a quota-exceeded generate is a structured wire
+/// error — `ok:false` plus a machine-readable `code` field — not prose
+/// only, and not an unbounded queue.
+#[test]
+fn quota_rejection_error_shape_on_the_wire() {
+    let Some((_engine, addr)) =
+        spawn_server_cfg(&["vp"], |cfg| cfg.qos.set_max_queued("vp", 4))
+    else {
+        return;
+    };
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{{\"op\":\"generate\",\"n\":50,\"eps_rel\":0.5}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
+    assert!(line.contains("\"code\":\"quota_exceeded\""), "{line}");
+    assert!(line.contains("quota 4"), "{line}");
+    // the typed client surfaces the code, and within-quota traffic flows
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let err = c.generate(50, 0.5, 0, false).unwrap_err().to_string();
+    assert!(err.contains("[quota_exceeded]"), "{err}");
+    c.generate(2, 0.5, 1, false).unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("qos").unwrap().get("rejected_quota").unwrap().as_f64().unwrap(), 2.0);
+}
+
+/// `evaluate` takes a priority class but refuses `deadline_ms` (eval
+/// jobs run to completion); the refusal happens at the protocol layer,
+/// before any engine work.
+#[test]
+fn evaluate_priority_accepted_deadline_rejected() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{{\"op\":\"evaluate\",\"samples\":4,\"deadline_ms\":10}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("not supported on evaluate"), "{line}");
+    // a priority'd evaluate runs through the eval lanes (needs the fid
+    // net + reference split)
+    for need in ["artifacts/params/fid16.bin", "artifacts/data/synth-cifar.bin"] {
+        if !std::path::Path::new(need).exists() {
+            eprintln!("skipping evaluate half: {need} not built");
+            return;
+        }
+    }
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let r = c.evaluate_qos("", "em:6", 3, 0.5, 7, "batch").unwrap();
+    assert_eq!(r.samples, 3);
+    assert_eq!(r.mean_nfe, 7.0);
+}
+
+/// `stats` exports the QoS view: global + per-pool queue depth next to
+/// each pool's weight and service turns.
+#[test]
+fn stats_export_queue_depth_and_pool_qos() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.generate(2, 0.5, 1, false).unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("queue_depth").unwrap().as_f64().unwrap(), 0.0, "drained engine");
+    let qos = stats.get("qos").unwrap();
+    assert_eq!(qos.get("shed_deadline").unwrap().as_f64().unwrap(), 0.0);
+    let pools = qos.get("pools").unwrap();
+    let adaptive = pools.get("vp/adaptive").expect("vp/adaptive pool in qos stats");
+    assert_eq!(adaptive.get("weight").unwrap().as_f64().unwrap(), 1.0);
+    assert!(adaptive.get("turns").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(adaptive.get("queue_depth").unwrap().as_f64().unwrap(), 0.0);
+    // the per-program breakdown carries queue_depth too
+    let prog = stats.get("programs").unwrap().get("adaptive").unwrap();
+    assert_eq!(prog.get("queue_depth").unwrap().as_f64().unwrap(), 0.0);
 }
 
 #[test]

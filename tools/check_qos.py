@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""QoS fairness/latency regression gates for benches/serving.rs part 3.
+
+The serving bench's QoS part (`cargo bench --bench serving -- --qos-only`)
+writes bench_out/serving_qos.json with two experiments; this script turns
+it into a CI gate (mirroring tools/check_eval.py):
+
+  * fairness: two saturated pools under 3:1 deficit-round-robin weights
+    must receive fused steps proportional to their weights —
+    |share - weight_share| / weight_share <= QOS_SHARE_TOL (env,
+    default 0.10, the ±10% acceptance criterion) — and zero pools may
+    starve (steps == 0). Pools must still be saturated at the snapshot
+    (queue_depth > 0), else the share math covered a drained pool and
+    the bench needs a deeper backlog (--qos-sat-requests).
+  * latency: with priority classes on, interactive p95 under a batch
+    flood must not exceed the single-class FIFO baseline
+    (qos_p95 <= fifo_p95 * QOS_P95_FACTOR, default 1.0) and total
+    throughput must hold (>= fifo * QOS_TPUT_FACTOR, default 0.85 to
+    absorb wall-clock noise — priority reorders work, it does not add
+    any).
+
+Usage: python3 tools/check_qos.py bench_out/serving_qos.json
+Exits non-zero with a per-violation report on failure.
+"""
+
+import json
+import math
+import os
+import sys
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench_out/serving_qos.json"
+    share_tol = float(os.environ.get("QOS_SHARE_TOL", "0.10"))
+    p95_factor = float(os.environ.get("QOS_P95_FACTOR", "1.0"))
+    tput_factor = float(os.environ.get("QOS_TPUT_FACTOR", "0.85"))
+    with open(path) as f:
+        doc = json.load(f)
+    errors = []
+
+    pools = doc.get("fairness", {}).get("pools", [])
+    if len(pools) < 2:
+        errors.append(f"fairness: expected >= 2 pools, got {len(pools)}")
+    total_w = sum(p.get("weight", 0.0) for p in pools)
+    total_steps = sum(p.get("steps", 0) for p in pools)
+    for p in pools:
+        tag = f"fairness/{p.get('pool')}"
+        if not p.get("saturated", False):
+            errors.append(
+                f"{tag}: pool drained before the snapshot (queue_depth="
+                f"{p.get('queue_depth')}); rerun with a deeper backlog "
+                f"(--qos-sat-requests)"
+            )
+        if p.get("steps", 0) <= 0:
+            errors.append(f"{tag}: starved (0 steps under weight {p.get('weight')})")
+            continue
+        if total_steps > 0 and total_w > 0:
+            share = p["steps"] / total_steps
+            expect = p["weight"] / total_w
+            err = abs(share - expect) / expect
+            if err > share_tol:
+                errors.append(
+                    f"{tag}: step share {share:.3f} vs weight share {expect:.3f} "
+                    f"(rel err {err:.3f} > {share_tol})"
+                )
+
+    lat = doc.get("latency", {})
+    fifo, qos = lat.get("fifo"), lat.get("qos")
+    if not fifo or not qos:
+        errors.append("latency: missing fifo/qos modes")
+    else:
+        lat_sane = True
+        for mode, m in [("fifo", fifo), ("qos", qos)]:
+            if m.get("probes", 0) <= 0:
+                errors.append(f"latency/{mode}: no probes completed")
+                lat_sane = False
+            for key in ["p95_s", "throughput_sps"]:
+                v = m.get(key)
+                if v is None or not math.isfinite(v):
+                    errors.append(f"latency/{mode}: {key} not finite ({v})")
+                    lat_sane = False
+        if lat_sane:
+            if qos["p95_s"] > fifo["p95_s"] * p95_factor:
+                errors.append(
+                    f"latency: interactive p95 regressed with QoS on "
+                    f"({qos['p95_s']:.3f}s > {fifo['p95_s']:.3f}s * {p95_factor})"
+                )
+            if qos["throughput_sps"] < fifo["throughput_sps"] * tput_factor:
+                errors.append(
+                    f"latency: QoS reduced throughput "
+                    f"({qos['throughput_sps']:.2f} < {fifo['throughput_sps']:.2f} "
+                    f"* {tput_factor} samples/s)"
+                )
+
+    print(
+        f"[check_qos] {path}: {len(pools)} pools, share_tol={share_tol}, "
+        f"p95_factor={p95_factor}, tput_factor={tput_factor}"
+    )
+    if fifo and qos and "p95_s" in fifo and "p95_s" in qos:
+        speedup = fifo["p95_s"] / max(qos["p95_s"], 1e-9)
+        print(
+            f"[check_qos] interactive p95: fifo {fifo['p95_s']:.3f}s -> "
+            f"qos {qos['p95_s']:.3f}s ({speedup:.1f}x)"
+        )
+    if errors:
+        for e in errors:
+            print(f"[check_qos] FAIL: {e}", file=sys.stderr)
+        return 1
+    print("[check_qos] ok: weighted shares and priority latency hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
