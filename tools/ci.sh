@@ -25,3 +25,11 @@ cargo fmt --check
 if [ -f bench_out/eval.json ]; then
   python3 tools/check_eval.py bench_out/eval.json
 fi
+
+# QoS fairness/latency gates: when the serving bench's QoS part has run
+# (`cargo bench --bench serving -- --qos-only` in the CI artifacts job),
+# enforce weighted-share proportionality (±10%, zero starved pools) and
+# the interactive-p95 / throughput criteria on its JSON.
+if [ -f bench_out/serving_qos.json ]; then
+  python3 tools/check_qos.py bench_out/serving_qos.json
+fi
