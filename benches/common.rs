@@ -131,6 +131,12 @@ pub fn em_steps_for_nfe(nfe: f64) -> usize {
     (nfe.round() as usize).saturating_sub(1).max(2) // minus the denoise eval
 }
 
+/// Round a mean NFE to the nearest PC predictor-step count with the
+/// same budget (each predictor step costs 2 score evals, plus denoise).
+pub fn pc_steps_for_nfe(nfe: f64) -> usize {
+    (((nfe - 1.0) / 2.0).round() as usize).max(1)
+}
+
 pub fn variants_present(rt: &Runtime, wanted: &[&str]) -> Vec<String> {
     let have = rt.variant_names();
     wanted.iter().filter(|w| have.iter().any(|h| h == *w)).map(|s| s.to_string()).collect()

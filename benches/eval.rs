@@ -77,8 +77,9 @@ fn main() -> Result<()> {
     let (net, refstats) = ref_stats(&rt, &model)?;
     let is_vp = model.meta.sde_kind == "vp";
     let bucket = engine_bucket(&model, max_bucket);
-    // a ddim pool exists only when a rung fits under the engine cap
+    // a fixed-step pool exists only when a rung fits under the engine cap
     let has_ddim = model.buckets("ddim_step").iter().any(|&b| b <= bucket);
+    let has_pc = model.buckets("pc_step").iter().any(|&b| b <= bucket);
 
     let mut ecfg = EngineConfig::new(&dir, &model_name);
     ecfg.bucket = bucket;
@@ -145,16 +146,26 @@ fn main() -> Result<()> {
         adaptive_nfes.push(measure(ServingSolver::Adaptive, eps, format!("eps={eps}"))?);
     }
     // the paper's fixed-step baselines at matched NFE budgets — served
-    // from their own lane pools
+    // from their own lane pools (Table 1's EM / DDIM / Reverse-Diffusion
+    // + Langevin rows)
     for nfe in adaptive_nfes {
         let steps = em_steps_for_nfe(nfe);
         measure(ServingSolver::Em { steps }, 0.05, format!("steps={steps}"))?;
         if is_vp && has_ddim {
             measure(ServingSolver::Ddim { steps }, 0.05, format!("steps={steps}"))?;
         }
+        if has_pc {
+            // PC pays 2 score evals per predictor step: half the steps
+            // for the same budget (process-default Langevin SNR)
+            let steps = pc_steps_for_nfe(nfe);
+            measure(ServingSolver::Pc { steps, snr: None }, 0.05, format!("steps={steps}"))?;
+        }
     }
     if !(is_vp && has_ddim) {
         println!("  (ddim rows skipped: model is not VP or has no ddim_step artifacts)");
+    }
+    if !has_pc {
+        println!("  (pc rows skipped: no pc_step artifacts at or below the engine bucket)");
     }
 
     let stats = client.stats()?;

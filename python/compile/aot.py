@@ -6,7 +6,7 @@ One artifact per (model variant, program, batch bucket):
   adaptive_step  (theta, x, xprev, t[B], h[B], z[B,D],
                   eps_abs[1], eps_rel[B])                       -> (x'', x', E2[B])
   em_step        (theta, x, t[B], h[B], z[B,D])                 -> x_next
-  pc_step        (theta, x, t[B], h[B], z1, z2, snr[1])         -> x_next
+  pc_step        (theta, x, t[B], h[B], z1, z2, snr[B])         -> x_next
   ddim_step      (theta, x, t[B], tn[B])        [VP only]       -> x_next
   ode_drift      (theta, x, t[B])                               -> dx/dt
   denoise        (theta, x, t[B])                               -> x0_hat
@@ -45,8 +45,8 @@ SCORE_BUCKETS = (1, 16, 64)
 # scheduler migrates lanes to the smallest compiled bucket that fits the
 # live batch, so low-occupancy traffic stops paying full-width steps.
 # Every *serving* step program shares this ladder — adaptive_step,
-# em_step and ddim_step each back a lane-program pool behind the
-# scheduler (rust coordinator/programs.rs) — and denoise shares it too
+# em_step, ddim_step and pc_step each back a lane-program pool behind
+# the scheduler (rust coordinator/programs.rs) — and denoise shares it too
 # because converged lanes are denoised at whatever width the pool
 # currently runs.
 STEP_BUCKETS = (1, 2, 4, 8, 16, 64)
@@ -98,13 +98,16 @@ def make_programs(cfg: model.ModelCfg):
         return xpp, xp, e2
 
     def pc_step(flat, x, t, h, z1, z2, snr):
-        # predictor: reverse-diffusion (EM form); corrector: Langevin
+        # predictor: reverse-diffusion (EM form); corrector: Langevin.
+        # snr is per-lane (shape [B], like t and h — §3.1.5), so serving
+        # lanes with different SNR targets co-batch, and a free lane with
+        # h = 0, z1 = z2 = 0, snr = 0 rides through as an exact no-op.
         x1 = em_step(flat, x, t, h, z1)
         t2 = t - h
         s = score(flat, x1, t2)
         zn = jnp.sqrt(jnp.sum(z2 * z2, axis=1))
         sn = jnp.sqrt(jnp.sum(s * s, axis=1)) + 1e-20
-        alpha = 2.0 * (snr[0] * zn / sn) ** 2
+        alpha = 2.0 * (snr * zn / sn) ** 2
         return em_update(x1, s, z2, alpha, jnp.sqrt(2.0 * alpha))
 
     def ddim_step(flat, x, t, tn):
@@ -152,7 +155,7 @@ def program_specs(cfg: model.ModelCfg, n_theta: int):
         if program == "em_step":
             return (theta, f32(b, d), f32(b), f32(b), f32(b, d))
         if program == "pc_step":
-            return (theta, f32(b, d), f32(b), f32(b), f32(b, d), f32(b, d), f32(1))
+            return (theta, f32(b, d), f32(b), f32(b), f32(b, d), f32(b, d), f32(b))
         if program == "ddim_step":
             return (theta, f32(b, d), f32(b), f32(b))
         raise KeyError(program)
@@ -164,9 +167,9 @@ def program_specs(cfg: model.ModelCfg, n_theta: int):
         "score": score_b,
         "adaptive_step": step_b,
         "em_step": step_b,
-        "pc_step": aux_b,
-        # ddim_step backs a serving lane pool (VP only), so it rides the
-        # step ladder like adaptive_step/em_step
+        # pc_step and ddim_step back serving lane pools (ddim VP only),
+        # so they ride the step ladder like adaptive_step/em_step
+        "pc_step": step_b,
         "ddim_step": step_b,
         "ode_drift": aux_b,
         # denoise runs at whatever bucket the solver/engine uses

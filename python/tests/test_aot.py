@@ -55,6 +55,36 @@ def test_adaptive_step_abi(tiny_cfg):
     ]
 
 
+def test_pc_step_abi_and_ladder(tiny_cfg):
+    """The input ordering the Rust FixedProgram builds for the pc pool:
+    (theta, x, t, h, z1, z2, snr) with snr PER-LANE (shape [B]) so
+    requests with different SNR targets co-batch and free lanes ride as
+    no-ops — and pc_step rides the serving step ladder like em_step."""
+    n = model.n_params(tiny_cfg)
+    buckets, args = program_specs(tiny_cfg, n)
+    spec = args(8, "pc_step")
+    shapes = [s.shape for s in spec]
+    assert shapes == [(n,), (8, 128), (8,), (8,), (8, 128), (8, 128), (8,)]
+    assert buckets["pc_step"] == buckets["em_step"]
+
+
+def test_pc_step_is_noop_for_free_lanes(tiny_cfg):
+    """A free serving lane feeds pc_step h=0, z1=z2=0, snr=0 and must get
+    its row back bit-identically (the continuous-batching contract)."""
+    programs = make_programs(tiny_cfg)
+    n = model.n_params(tiny_cfg)
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.normal(size=(n,), scale=0.05), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4, 128)), jnp.float32)
+    t = jnp.full((4,), 0.7, jnp.float32)
+    zeros = jnp.zeros((4, 128), jnp.float32)
+    out = programs["pc_step"](
+        flat, x, t, jnp.zeros((4,), jnp.float32), zeros, zeros,
+        jnp.zeros((4,), jnp.float32),
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
 needs_artifacts = pytest.mark.skipif(
     not os.path.exists(os.path.join(ART, "manifest.json")),
     reason="run `make artifacts` first",

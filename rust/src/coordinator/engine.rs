@@ -81,9 +81,10 @@ impl EngineConfig {
 }
 
 /// The full served-solver set: adaptive (mandatory artifacts) plus the
-/// fixed-step baselines wherever their artifacts exist.
+/// fixed-step baselines — EM, DDIM and the predictor–corrector —
+/// wherever their artifacts exist.
 pub fn default_programs() -> Vec<String> {
-    vec!["adaptive".to_string(), "em".to_string(), "ddim".to_string()]
+    vec!["adaptive".to_string(), "em".to_string(), "ddim".to_string(), "pc".to_string()]
 }
 
 #[derive(Clone, Debug)]
@@ -102,7 +103,7 @@ pub struct GenResult {
 /// Per-solver-program share of engine work, summed over models.
 #[derive(Clone, Debug, Default)]
 pub struct ProgramStats {
-    /// Solver name ("adaptive" | "em" | "ddim").
+    /// Solver name ("adaptive" | "em" | "ddim" | "pc").
     pub solver: String,
     /// Pools serving this program (one per model that supports it).
     pub pools: usize,
@@ -412,7 +413,9 @@ impl<'rt> EngineState<'rt> {
             }
             Msg::Generate(req, reply) => {
                 if let Err(e) = req.solver.validate() {
-                    let _ = reply.send(Err(format!("{e:#}")));
+                    // a spec the wire parser would refuse (em:0, pc@0)
+                    // built via the Rust API: structured bad_solver code
+                    let _ = reply.send(Err(qos::coded(qos::CODE_BAD_SOLVER, &format!("{e:#}"))));
                     return false;
                 }
                 let (mi, pi) = match self.registry.resolve_pool(&req.model, &req.solver) {
@@ -456,7 +459,7 @@ impl<'rt> EngineState<'rt> {
             }
             Msg::Evaluate(req, reply) => {
                 if let Err(e) = req.solver.validate() {
-                    let _ = reply.send(Err(format!("{e:#}")));
+                    let _ = reply.send(Err(qos::coded(qos::CODE_BAD_SOLVER, &format!("{e:#}"))));
                     return false;
                 }
                 let (mi, pi) = match self.registry.resolve_pool(&req.model, &req.solver) {
@@ -643,6 +646,10 @@ impl<'rt> EngineState<'rt> {
         let lane_cap = qos.quotas[mi].max_active_lanes;
         let mut model_active: usize = e.pools.iter().map(|p| p.active()).sum();
         let prior_std = e.process.prior_std() as f32;
+        // copied out so the pool borrow below doesn't pin `e`; programs
+        // need it to resolve process-dependent lane state (the PC
+        // default SNR)
+        let process = e.process;
         let ProgramPool { program, slots, x, xprev, fifo, .. } = &mut e.pools[pi];
         let mut fi = 0;
         for si in 0..slots.len() {
@@ -697,7 +704,7 @@ impl<'rt> EngineState<'rt> {
                 sample_idx,
                 nfe: 0,
                 rng,
-                state: program.init_lane(cfg, &p.req),
+                state: program.init_lane(cfg, &process, &p.req),
             };
         }
         // drop fully-admitted-and-finished request ids from fifo head

@@ -5,7 +5,8 @@
 //! side path: the job is cut into fid-bucket-sized chunks, each admitted
 //! as an internal sample request through the same FIFO / scheduler /
 //! registry route client traffic takes — onto the lane-program pool of
-//! whichever solver the request names (adaptive, em:<n>, ddim:<n>), so
+//! whichever solver the request names (adaptive, em:<n>, ddim:<n>,
+//! pc:<n>[@<snr>]), so
 //! solver or scheduler regressions move the reported FID*. Completed
 //! chunks are pushed through the model's feature net into per-chunk
 //! `EvalAccumulator`s and Chan-merged **in chunk order** — completion
@@ -33,9 +34,9 @@ use std::time::Instant;
 pub(crate) const MAX_INFLIGHT_CHUNKS: usize = 2;
 
 /// An evaluation request as accepted by the engine. Any solver the
-/// model has a lane-program pool for (adaptive, em:<n>, ddim:<n>) can
-/// be evaluated through the serving path; parse specs with
-/// `solvers::spec::parse`.
+/// model has a lane-program pool for (adaptive, em:<n>, ddim:<n>,
+/// pc:<n>[@<snr>]) can be evaluated through the serving path; parse
+/// specs with `solvers::spec::parse`.
 #[derive(Clone, Debug)]
 pub struct EvalRequest {
     /// Model variant ("" = the engine's default model).
@@ -59,7 +60,7 @@ pub struct EvalResult {
     /// Model that served the run (resolved default).
     pub model: String,
     /// Canonical spec string of the solver that ran ("adaptive",
-    /// "em:<n>", "ddim:<n>").
+    /// "em:<n>", "ddim:<n>", "pc:<n>[@<snr>]").
     pub solver: String,
     pub samples: usize,
     pub fid: f64,

@@ -13,8 +13,10 @@
 //! Five sub-layers (bottom up):
 //! * `programs` — solver-program abstraction: a `LaneProgram` advances
 //!   a pool of lanes under one compiled step artifact (`adaptive_step`,
-//!   `em_step`, `ddim_step`), owning per-lane state, device args and
-//!   the completion predicate;
+//!   `em_step`, `ddim_step`, `pc_step`), owning per-lane state, device
+//!   args and the completion predicate; every fixed-step solver is one
+//!   descriptor-driven `FixedProgram` over the `StepKernel` table in
+//!   `solvers::spec`;
 //! * `scheduler` — occupancy-aware bucket selection: each iteration a
 //!   pool runs at the smallest compiled width that fits its live +
 //!   queued lanes, migrating lane state between widths so low-occupancy

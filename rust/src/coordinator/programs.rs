@@ -4,10 +4,14 @@
 //! The engine's step loop used to *be* Algorithm 1: the only thing a
 //! pool could do was advance `adaptive_step`. This module abstracts "a
 //! pool of lanes advancing under a compiled step program" behind the
-//! [`LaneProgram`] trait, so the paper's fixed-step baselines (EM,
-//! DDIM) are first-class serving workloads instead of offline bypasses
-//! — the fixed-vs-adaptive comparison of the paper's Table 1 becomes a
-//! pure serving-path measurement.
+//! [`LaneProgram`] trait — and every *fixed-step* solver (EM, DDIM, the
+//! Reverse-Diffusion + Langevin predictor–corrector) is served by the
+//! **one** descriptor-driven [`FixedProgram`], parameterised by its
+//! [`StepKernel`] row (`solvers::spec::STEP_KERNELS`): artifact tag,
+//! per-step NFE cost, the second time input's shape, how many fresh
+//! noise tensors to draw, and whether a per-lane Langevin `snr` vector
+//! trails the inputs. Adding a served fixed-step solver is a table row
+//! plus an offline twin, not another hand-rolled program impl.
 //!
 //! A program owns three things:
 //! * the per-lane integration state it threads through [`Slot::Running`]
@@ -19,18 +23,20 @@
 //! * its cost model (`score_evals_per_step`, the paper's NFE metric).
 //!
 //! Free lanes ride through every program's step as exact no-ops
-//! (`h = 0` for adaptive/EM, `t == t_next` for DDIM), which is what
-//! makes the pools continuously batchable. Because no lane's update
-//! reads another lane's state (§3.1.5), a lane's trajectory is
-//! bit-identical to its offline twin (`solvers::spec::run_lanes`)
-//! regardless of pool width, migration, or co-batched traffic — for
-//! fixed-step programs exactly as for the adaptive solver.
+//! (`h = 0` + zero noise for adaptive/EM/PC, `t == t_next` for DDIM),
+//! which is what makes the pools continuously batchable. Because no
+//! lane's update reads another lane's state (§3.1.5), a lane's
+//! trajectory is bit-identical to its offline twin
+//! (`solvers::spec::run_lanes`) regardless of pool width, migration, or
+//! co-batched traffic — for fixed-step programs exactly as for the
+//! adaptive solver.
 
 use super::engine::EngineConfig;
 use super::{SampleRequest, Slot};
 use crate::runtime::{ExecArg, Model};
 use crate::sde::Process;
-use crate::solvers::uniform_t;
+use crate::solvers::spec::{StepKernel, TimeArg};
+use crate::solvers::{rdl, uniform_t};
 use crate::tensor::Tensor;
 use crate::{bail, Result};
 
@@ -43,7 +49,10 @@ pub(crate) enum LaneState {
     /// Fixed uniform schedule: `done` of `total` steps taken; the lane's
     /// position is `uniform_t(t_eps, total, done)`. Per-lane `total`
     /// lets requests with different step budgets co-batch in one pool.
-    Fixed { done: usize, total: usize },
+    /// `snr` is the lane's Langevin corrector target (PC pools; kernels
+    /// without an snr input carry 0.0) — per-lane, so PC requests with
+    /// different SNR targets co-batch too.
+    Fixed { done: usize, total: usize, snr: f64 },
 }
 
 /// Everything a program needs to advance one pool by one fused step.
@@ -69,25 +78,31 @@ pub(crate) struct StepOutcome {
 
 /// A compiled step program driving a pool of lanes.
 pub(crate) trait LaneProgram {
-    /// Solver-spec name requests route by ("adaptive" | "em" | "ddim").
+    /// Solver-spec name requests route by ("adaptive" | "em" | "ddim" |
+    /// "pc").
     fn solver_name(&self) -> &'static str;
     /// Compiled artifact advancing the pool ("adaptive_step", ...).
     fn step_artifact(&self) -> &'static str;
     /// Score-network evaluations one fused step costs each live lane.
     fn score_evals_per_step(&self) -> u64;
+    /// Whether the program's kernel is VP-only (paper §4; the registry
+    /// refuses to build such a pool for non-VP models).
+    fn vp_only(&self) -> bool;
     /// Fresh per-lane integration state for an admitted sample.
-    fn init_lane(&self, cfg: &EngineConfig, req: &SampleRequest) -> LaneState;
+    fn init_lane(&self, cfg: &EngineConfig, process: &Process, req: &SampleRequest) -> LaneState;
     /// Advance the pool one fused step at its current width.
     fn step(&self, io: StepIo<'_, '_>) -> Result<StepOutcome>;
 }
 
-/// Program for a solver-spec name, if one exists.
+/// Program for a solver-spec name, if one exists: the adaptive solver's
+/// bespoke controller program, or the descriptor-driven [`FixedProgram`]
+/// for any fixed-step row of the kernel table.
 pub(crate) fn for_solver(name: &str) -> Option<Box<dyn LaneProgram>> {
-    match name {
-        "adaptive" => Some(Box::new(AdaptiveProgram)),
-        "em" => Some(Box::new(EmProgram)),
-        "ddim" => Some(Box::new(DdimProgram)),
-        _ => None,
+    let kernel = crate::solvers::spec::kernel(name)?;
+    if kernel.adaptive {
+        Some(Box::new(AdaptiveProgram))
+    } else {
+        Some(Box::new(FixedProgram { kernel }))
     }
 }
 
@@ -95,48 +110,38 @@ fn fixed_total(req: &SampleRequest) -> usize {
     req.solver.steps().unwrap_or(crate::solvers::spec::DEFAULT_FIXED_STEPS)
 }
 
-/// Fold a fixed-step kernel's output back into the pool — shared by
-/// every `LaneState::Fixed` program so the completion predicate and
-/// NFE accounting cannot diverge between EM and DDIM: each live lane
-/// advances one grid node (+1 NFE), takes its output row, and is
-/// reported converged once its schedule is exhausted.
-fn fold_fixed_step(slots: &mut [Slot], x: &mut Tensor, xn: &Tensor) -> Vec<usize> {
-    let mut converged = Vec::new();
-    for i in 0..slots.len() {
-        let Slot::Running { nfe, state: LaneState::Fixed { done, total }, .. } = &mut slots[i]
-        else {
-            continue;
-        };
-        *nfe += 1;
-        x.row_mut(i).copy_from_slice(xn.row(i));
-        *done += 1;
-        if *done == *total {
-            converged.push(i);
-        }
-    }
-    converged
-}
-
 // --- Algorithm 1 ---------------------------------------------------------------
 
 /// The paper's adaptive solver: 2 score evaluations per step, per-lane
-/// step-size control, accept/reject on the host.
+/// step-size control, accept/reject on the host. The only program whose
+/// control flow lives outside the [`StepKernel`] descriptor — it still
+/// sources its table row for the shared facts.
 pub(crate) struct AdaptiveProgram;
+
+impl AdaptiveProgram {
+    fn kernel() -> &'static StepKernel {
+        crate::solvers::spec::kernel("adaptive").expect("adaptive row in STEP_KERNELS")
+    }
+}
 
 impl LaneProgram for AdaptiveProgram {
     fn solver_name(&self) -> &'static str {
-        "adaptive"
+        Self::kernel().solver
     }
 
     fn step_artifact(&self) -> &'static str {
-        "adaptive_step"
+        Self::kernel().artifact
     }
 
     fn score_evals_per_step(&self) -> u64 {
-        2
+        Self::kernel().score_evals_per_step
     }
 
-    fn init_lane(&self, cfg: &EngineConfig, req: &SampleRequest) -> LaneState {
+    fn vp_only(&self) -> bool {
+        Self::kernel().vp_only
+    }
+
+    fn init_lane(&self, cfg: &EngineConfig, _process: &Process, req: &SampleRequest) -> LaneState {
         LaneState::Adaptive { t: 1.0, h: cfg.h_init, eps_rel: req.eps_rel }
     }
 
@@ -210,154 +215,208 @@ impl LaneProgram for AdaptiveProgram {
     }
 }
 
-// --- Euler–Maruyama ------------------------------------------------------------
+// --- descriptor-driven fixed-step programs -------------------------------------
 
-/// Fixed uniform-schedule EM: 1 score evaluation per step, fresh noise
-/// each step, per-lane step counts.
-pub(crate) struct EmProgram;
+/// One program for *every* fixed-step solver: the [`StepKernel`] row
+/// says which artifact to run and which device args to build — `x`, the
+/// per-lane grid time `t`, the second time input (`h` or `t_next`),
+/// `noise_inputs` fresh per-lane noise tensors drawn in order from the
+/// lane's RNG stream, and optionally the trailing per-lane `snr`
+/// vector. Free lanes get exact no-op inputs (`t = 1`, `h = 0` /
+/// `t_next = t`, zero noise, `snr = 0`). Completion and NFE accounting
+/// are shared, so they cannot diverge between solvers: each live lane
+/// advances one grid node (+`score_evals_per_step` NFE), takes its
+/// output row, and is reported converged once its schedule is
+/// exhausted.
+pub(crate) struct FixedProgram {
+    pub kernel: &'static StepKernel,
+}
 
-impl LaneProgram for EmProgram {
+impl LaneProgram for FixedProgram {
     fn solver_name(&self) -> &'static str {
-        "em"
+        self.kernel.solver
     }
 
     fn step_artifact(&self) -> &'static str {
-        "em_step"
+        self.kernel.artifact
     }
 
     fn score_evals_per_step(&self) -> u64 {
-        1
+        self.kernel.score_evals_per_step
     }
 
-    fn init_lane(&self, _cfg: &EngineConfig, req: &SampleRequest) -> LaneState {
-        LaneState::Fixed { done: 0, total: fixed_total(req) }
+    fn vp_only(&self) -> bool {
+        self.kernel.vp_only
+    }
+
+    fn init_lane(&self, _cfg: &EngineConfig, process: &Process, req: &SampleRequest) -> LaneState {
+        // kernels without an snr input carry 0.0; a PC spec without an
+        // explicit snr resolves the serving process's default here, so
+        // the lane state (and migration) always holds the concrete value
+        let snr = if self.kernel.snr_input {
+            req.solver.snr().unwrap_or_else(|| rdl::default_snr(process))
+        } else {
+            0.0
+        };
+        LaneState::Fixed { done: 0, total: fixed_total(req), snr }
     }
 
     fn step(&self, io: StepIo<'_, '_>) -> Result<StepOutcome> {
+        if self.kernel.vp_only && io.process.kind() != "vp" {
+            // the registry refuses to build VP-only pools for non-VP
+            // models, so this is a defence-in-depth invariant, not a
+            // reachable serving path
+            bail!("{} pool on a non-VP model", self.kernel.artifact);
+        }
         let b = io.slots.len();
         let dim = io.model.meta.dim;
         let t_eps = io.process.t_eps();
         let mut t_in = vec![1.0f32; b];
-        let mut h_in = vec![0.0f32; b];
-        let mut z = Tensor::zeros(&[b, dim]);
+        // free-lane no-op value: h = 0, or t_next = t = 1
+        let free_t2 = match self.kernel.time {
+            TimeArg::StepSize => 0.0f32,
+            TimeArg::NextTime => 1.0f32,
+        };
+        let mut t2_in = vec![free_t2; b];
+        let mut snr_in = vec![0.0f32; b];
+        let mut noise: Vec<Tensor> =
+            (0..self.kernel.noise_inputs).map(|_| Tensor::zeros(&[b, dim])).collect();
         let mut occupied = 0usize;
         for (i, slot) in io.slots.iter_mut().enumerate() {
-            if let Slot::Running { rng, state: LaneState::Fixed { done, total }, .. } = slot {
+            if let Slot::Running { rng, state: LaneState::Fixed { done, total, snr }, .. } = slot
+            {
                 occupied += 1;
                 let t = uniform_t(t_eps, *total, *done);
                 let tn = uniform_t(t_eps, *total, *done + 1);
                 t_in[i] = t as f32;
-                h_in[i] = (t - tn) as f32;
-                rng.fill_normal(z.row_mut(i));
+                t2_in[i] = match self.kernel.time {
+                    TimeArg::StepSize => (t - tn) as f32,
+                    TimeArg::NextTime => tn as f32,
+                };
+                snr_in[i] = *snr as f32;
+                // z1 then z2 from the lane's stream — the draw order the
+                // offline twins replay
+                for z in noise.iter_mut() {
+                    rng.fill_normal(z.row_mut(i));
+                }
             }
         }
         let t_t = Tensor { shape: vec![b], data: t_in };
-        let h_t = Tensor { shape: vec![b], data: h_in };
-        let out = io.model.exec_args(
-            "em_step",
-            b,
-            &[ExecArg::Host(io.x), ExecArg::Host(&t_t), ExecArg::Host(&h_t), ExecArg::Host(&z)],
-            io.cfg.fused_buffers,
-        )?;
-        let converged = fold_fixed_step(io.slots, io.x, &out[0]);
+        let t2_t = Tensor { shape: vec![b], data: t2_in };
+        let snr_t = Tensor { shape: vec![b], data: snr_in };
+        let mut args: Vec<ExecArg<'_>> =
+            vec![ExecArg::Host(io.x), ExecArg::Host(&t_t), ExecArg::Host(&t2_t)];
+        for z in &noise {
+            args.push(ExecArg::Host(z));
+        }
+        if self.kernel.snr_input {
+            args.push(ExecArg::Host(&snr_t));
+        }
+        let out = io.model.exec_args(self.kernel.artifact, b, &args, io.cfg.fused_buffers)?;
+        let converged =
+            fold_fixed_step(io.slots, io.x, &out[0], self.kernel.score_evals_per_step);
         Ok(StepOutcome { occupied, rejections: 0, converged })
     }
 }
 
-// --- DDIM ----------------------------------------------------------------------
-
-/// Deterministic DDIM (VP only): 1 score evaluation per step, no noise
-/// after the prior draw, per-lane step counts.
-pub(crate) struct DdimProgram;
-
-impl LaneProgram for DdimProgram {
-    fn solver_name(&self) -> &'static str {
-        "ddim"
-    }
-
-    fn step_artifact(&self) -> &'static str {
-        "ddim_step"
-    }
-
-    fn score_evals_per_step(&self) -> u64 {
-        1
-    }
-
-    fn init_lane(&self, _cfg: &EngineConfig, req: &SampleRequest) -> LaneState {
-        LaneState::Fixed { done: 0, total: fixed_total(req) }
-    }
-
-    fn step(&self, io: StepIo<'_, '_>) -> Result<StepOutcome> {
-        if io.process.kind() != "vp" {
-            // the registry refuses to build a ddim pool for non-VP
-            // models, so this is a defence-in-depth invariant, not a
-            // reachable serving path
-            bail!("ddim_step pool on a non-VP model");
+/// Fold a fixed-step kernel's output back into the pool — shared by
+/// every `LaneState::Fixed` lane so the completion predicate and NFE
+/// accounting cannot diverge between solvers: each live lane advances
+/// one grid node (+`evals` NFE), takes its output row, and is reported
+/// converged once its schedule is exhausted.
+fn fold_fixed_step(slots: &mut [Slot], x: &mut Tensor, xn: &Tensor, evals: u64) -> Vec<usize> {
+    let mut converged = Vec::new();
+    for i in 0..slots.len() {
+        let Slot::Running { nfe, state: LaneState::Fixed { done, total, .. }, .. } =
+            &mut slots[i]
+        else {
+            continue;
+        };
+        *nfe += evals;
+        x.row_mut(i).copy_from_slice(xn.row(i));
+        *done += 1;
+        if *done == *total {
+            converged.push(i);
         }
-        let b = io.slots.len();
-        let t_eps = io.process.t_eps();
-        let mut t_in = vec![1.0f32; b];
-        let mut tn_in = vec![1.0f32; b];
-        let mut occupied = 0usize;
-        for (i, slot) in io.slots.iter_mut().enumerate() {
-            if let Slot::Running { state: LaneState::Fixed { done, total }, .. } = slot {
-                occupied += 1;
-                t_in[i] = uniform_t(t_eps, *total, *done) as f32;
-                tn_in[i] = uniform_t(t_eps, *total, *done + 1) as f32;
-            }
-        }
-        let t_t = Tensor { shape: vec![b], data: t_in };
-        let tn_t = Tensor { shape: vec![b], data: tn_in };
-        let out = io.model.exec_args(
-            "ddim_step",
-            b,
-            &[ExecArg::Host(io.x), ExecArg::Host(&t_t), ExecArg::Host(&tn_t)],
-            io.cfg.fused_buffers,
-        )?;
-        let converged = fold_fixed_step(io.slots, io.x, &out[0]);
-        Ok(StepOutcome { occupied, rejections: 0, converged })
     }
+    converged
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::solvers::ServingSolver;
 
     #[test]
-    fn for_solver_covers_the_served_trio() {
+    fn for_solver_covers_the_served_set() {
         for (name, artifact, evals) in [
             ("adaptive", "adaptive_step", 2),
             ("em", "em_step", 1),
             ("ddim", "ddim_step", 1),
+            ("pc", "pc_step", 2),
         ] {
             let p = for_solver(name).expect(name);
             assert_eq!(p.solver_name(), name);
             assert_eq!(p.step_artifact(), artifact);
             assert_eq!(p.score_evals_per_step(), evals);
         }
+        assert!(for_solver("ddim").unwrap().vp_only());
+        assert!(!for_solver("pc").unwrap().vp_only());
         assert!(for_solver("ode").is_none());
     }
 
-    #[test]
-    fn init_lane_seeds_program_state_from_the_request() {
-        let cfg = EngineConfig::new("artifacts", "vp");
-        let req = SampleRequest {
+    fn req(solver: ServingSolver) -> SampleRequest {
+        SampleRequest {
             model: String::new(),
-            solver: crate::solvers::ServingSolver::Em { steps: 12 },
+            solver,
             n: 1,
             eps_rel: 0.07,
             seed: 0,
             sample_base: 0,
             priority: None,
             deadline_ms: None,
-        };
+        }
+    }
+
+    #[test]
+    fn init_lane_seeds_program_state_from_the_request() {
+        let cfg = EngineConfig::new("artifacts", "vp");
+        let vp = Process::vp();
+        let em = for_solver("em").unwrap();
         assert_eq!(
-            EmProgram.init_lane(&cfg, &req),
-            LaneState::Fixed { done: 0, total: 12 }
+            em.init_lane(&cfg, &vp, &req(ServingSolver::Em { steps: 12 })),
+            LaneState::Fixed { done: 0, total: 12, snr: 0.0 }
         );
         assert_eq!(
-            AdaptiveProgram.init_lane(&cfg, &req),
+            AdaptiveProgram.init_lane(&cfg, &vp, &req(ServingSolver::Adaptive)),
             LaneState::Adaptive { t: 1.0, h: cfg.h_init, eps_rel: 0.07 }
+        );
+    }
+
+    #[test]
+    fn pc_lane_resolves_snr_from_the_spec_or_the_process() {
+        let cfg = EngineConfig::new("artifacts", "vp");
+        let pc = for_solver("pc").unwrap();
+        // explicit spec snr wins
+        assert_eq!(
+            pc.init_lane(&cfg, &Process::vp(), &req(ServingSolver::Pc {
+                steps: 8,
+                snr: Some(0.17)
+            })),
+            LaneState::Fixed { done: 0, total: 8, snr: 0.17 }
+        );
+        // bare pc:<n> takes the serving process's default (Song et al.)
+        assert_eq!(
+            pc.init_lane(&cfg, &Process::vp(), &req(ServingSolver::Pc { steps: 8, snr: None })),
+            LaneState::Fixed { done: 0, total: 8, snr: 0.01 }
+        );
+        assert_eq!(
+            pc.init_lane(
+                &cfg,
+                &Process::ve(50.0),
+                &req(ServingSolver::Pc { steps: 8, snr: None })
+            ),
+            LaneState::Fixed { done: 0, total: 8, snr: 0.16 }
         );
     }
 }

@@ -85,6 +85,10 @@ pub const CODE_QUOTA: &str = "quota_exceeded";
 pub const CODE_QUEUE_FULL: &str = "queue_full";
 /// Machine-readable code for a deadline-shed request.
 pub const CODE_DEADLINE: &str = "deadline_exceeded";
+/// Machine-readable code for a malformed or degenerate solver spec
+/// (zero-step fixed schedule, non-positive / non-finite Langevin snr)
+/// rejected at admission or in the wire parser.
+pub const CODE_BAD_SOLVER: &str = "bad_solver";
 
 /// Prefix an error message with a structured code; [`error_code`]
 /// recovers it at the wire layer.
@@ -97,7 +101,7 @@ pub fn coded(code: &str, msg: &str) -> String {
 /// this to emit a `code` field next to `error` without a parallel error
 /// type crossing every channel.
 pub fn error_code(msg: &str) -> Option<&'static str> {
-    for code in [CODE_QUOTA, CODE_QUEUE_FULL, CODE_DEADLINE] {
+    for code in [CODE_QUOTA, CODE_QUEUE_FULL, CODE_DEADLINE, CODE_BAD_SOLVER] {
         if let Some(rest) = msg.strip_prefix(code) {
             if rest.starts_with(':') {
                 return Some(code);
@@ -479,6 +483,7 @@ mod tests {
         assert_eq!(error_code(&msg), Some(CODE_QUOTA));
         assert_eq!(error_code("queue full (8 samples)"), None);
         assert_eq!(error_code(&coded(CODE_DEADLINE, "x")), Some(CODE_DEADLINE));
+        assert_eq!(error_code(&coded(CODE_BAD_SOLVER, "snr must be > 0")), Some(CODE_BAD_SOLVER));
         assert_eq!(error_code("quota_exceeded_extra: x"), None);
     }
 

@@ -3,7 +3,7 @@
 //!
 //! Loads N score-model variants from one artifacts dir, gives each a
 //! continuous-batching lane pool **per served solver program**
-//! (adaptive / em / ddim — see `programs`), and routes requests by the
+//! (adaptive / em / ddim / pc — see `programs`), and routes requests by the
 //! (model name, solver) pair (the first listed model is the default).
 //! Each pool carries its own bucket ladder, scheduler and FIFO, so
 //! mixed traffic — adaptive generates next to EM eval lanes — co-exists
@@ -68,6 +68,34 @@ impl ModelEntry<'_> {
     }
 }
 
+/// Whether the manifest-recorded input shapes of `solver`'s step
+/// artifact at `bucket` match what the descriptor-driven fixed program
+/// will feed it: `theta, x[b,d], t[b], t2[b], noise[b,d] x N, snr[b]?`
+/// (see `solvers::spec::STEP_KERNELS`). Adaptive keeps its own strict
+/// validation; manifests without the entry are accepted (the rung was
+/// already filtered by `has_artifact`).
+fn kernel_abi_matches(model: &Model, solver: &str, bucket: usize) -> bool {
+    let Some(k) = crate::solvers::spec::kernel(solver) else {
+        return true;
+    };
+    if k.adaptive {
+        return true;
+    }
+    let Some(inputs) = model.artifact_inputs(k.artifact, bucket) else {
+        return true;
+    };
+    let d = model.meta.dim;
+    let mut want: Vec<Vec<usize>> =
+        vec![vec![model.meta.n_params], vec![bucket, d], vec![bucket], vec![bucket]];
+    for _ in 0..k.noise_inputs {
+        want.push(vec![bucket, d]);
+    }
+    if k.snr_input {
+        want.push(vec![bucket]);
+    }
+    inputs == want.as_slice()
+}
+
 pub(crate) struct Registry<'rt> {
     entries: Vec<ModelEntry<'rt>>,
     by_name: HashMap<String, usize>,
@@ -105,8 +133,8 @@ impl<'rt> Registry<'rt> {
             for prog_name in programs {
                 let program = programs::for_solver(prog_name)
                     .ok_or_else(|| anyhow!("no lane program for solver '{prog_name}'"))?;
-                if program.solver_name() == "ddim" && process.kind() != "vp" {
-                    continue; // DDIM is VP-only (paper §4)
+                if program.vp_only() && process.kind() != "vp" {
+                    continue; // e.g. DDIM is VP-only (paper §4)
                 }
                 let step = program.step_artifact();
                 if program.solver_name() == "adaptive" {
@@ -127,7 +155,13 @@ impl<'rt> Registry<'rt> {
                 // a rung needs the step program and denoise both listed
                 // in the manifest and present on disk — converged lanes
                 // denoise at pool width, and a lazy compile error
-                // mid-serving would otherwise be the first sign
+                // mid-serving would otherwise be the first sign — and
+                // the artifact's recorded ABI must match what the lane
+                // program will feed it (an artifact set lowered by an
+                // older aot.py, e.g. pc_step with a scalar snr instead
+                // of per-lane snr[B], must leave the pool unserved with
+                // a clean rebuild-artifacts admission error, not fault
+                // every request mid-step on an argument-shape error)
                 let ladder: Vec<usize> = model
                     .buckets(step)
                     .iter()
@@ -136,6 +170,7 @@ impl<'rt> Registry<'rt> {
                         b <= max_bucket
                             && model.has_artifact(step, b)
                             && model.has_artifact("denoise", b)
+                            && kernel_abi_matches(&model, program.solver_name(), b)
                     })
                     .collect();
                 if ladder.is_empty() {
@@ -190,9 +225,10 @@ impl<'rt> Registry<'rt> {
             return Ok((mi, pi));
         }
         let mname = &e.model.meta.name;
-        if name == "ddim" && e.process.kind() != "vp" {
+        let vp_only = crate::solvers::spec::kernel(name).is_some_and(|k| k.vp_only);
+        if vp_only && e.process.kind() != "vp" {
             bail!(
-                "solver 'ddim' requires a VP model (paper §4); '{mname}' is {}",
+                "solver '{name}' requires a VP model (paper §4); '{mname}' is {}",
                 e.process.kind()
             );
         }

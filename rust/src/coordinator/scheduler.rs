@@ -270,8 +270,9 @@ mod tests {
     }
 
     /// Fixed-step lanes migrate like adaptive ones: the grid position
-    /// `(done, total)` and the rng stream survive a bucket switch
-    /// untouched, so a mid-trajectory EM/DDIM sample cannot drift.
+    /// `(done, total)`, the per-lane Langevin `snr` (PC pools) and the
+    /// rng stream survive a bucket switch untouched, so a
+    /// mid-trajectory EM/DDIM/PC sample cannot drift.
     #[test]
     fn migration_preserves_fixed_step_lane_state() {
         let dim = 3;
@@ -284,7 +285,11 @@ mod tests {
                 sample_idx: k,
                 nfe: 7 + k as u64,
                 rng: Rng::new(40 + k as u64),
-                state: LaneState::Fixed { done: 5 + k, total: 20 + k },
+                state: LaneState::Fixed {
+                    done: 5 + k,
+                    total: 20 + k,
+                    snr: 0.16 + k as f64 * 1e-3,
+                },
             };
             for v in x.row_mut(*i).iter_mut() {
                 *v = (k + 1) as f32 * 1.5;
@@ -297,7 +302,11 @@ mod tests {
                 panic!("fixed lane {k} lost in migration");
             };
             assert_eq!(*nfe, 7 + k as u64);
-            assert_eq!(*state, LaneState::Fixed { done: 5 + k, total: 20 + k });
+            let LaneState::Fixed { done, total, snr } = state else {
+                panic!("fixed lane {k} changed program state kind");
+            };
+            assert_eq!((*done, *total), (5 + k, 20 + k));
+            assert_eq!(snr.to_bits(), (0.16 + k as f64 * 1e-3).to_bits());
             assert_eq!(rng.next_u64(), Rng::new(40 + k as u64).next_u64());
             assert!(x.row(k).iter().all(|&v| v == (k + 1) as f32 * 1.5));
         }

@@ -61,7 +61,7 @@ USAGE: gofast <command> [flags]
             [--bucket 16] [--composed] [--no-denoise] [--out grid.ppm]
             [--artifacts artifacts]
   serve     [--config configs/server.toml] [--models vp,ve]
-            [--solvers adaptive,em,ddim] [--max-bucket 16] [--no-migrate]
+            [--solvers adaptive,em,ddim,pc] [--max-bucket 16] [--no-migrate]
             [--weights vp=3,ve=1|vp/em=0.5] [--quota vp=256]
             [--quota-lanes vp=8] [--default-priority interactive|batch]
             [--set k=v ...]
@@ -69,16 +69,20 @@ USAGE: gofast <command> [flags]
              model or model/program; --quota caps queued samples and
              --quota-lanes active lanes per model; requests may carry
              priority/deadline_ms — see rust/src/server/mod.rs)
-  client    [--addr 127.0.0.1:7878] [--model vp] [--solver adaptive|em:<n>|ddim:<n>]
+  client    [--addr 127.0.0.1:7878] [--model vp]
+            [--solver adaptive|em:<n>|ddim:<n>|pc:<n>[@<snr>]]
             [--n 4] [--eps-rel 0.05] [--seed 0] [--priority interactive|batch]
             [--deadline-ms 0] [--stats] [--out grid.ppm]
-  evaluate  --model vp [--solver adaptive|em:<n>|ddim:<n>|...] [--samples 256]
+  evaluate  --model vp [--solver adaptive|em:<n>|ddim:<n>|pc:<n>[@<snr>]|...]
+            [--samples 256]
             [--eps-rel 0.05] [--seed 0] [--addr host:port] [--offline]
             [--check] [...generate flags]
             (default: served through the engine's solver-program lane
              pools; --offline bypasses the coordinator; --check runs both
-             and asserts agreement. Non-served solvers — ode, rdl, ... —
-             are --offline only.)
+             and asserts agreement. pc:<n> is the served predictor-
+             corrector — 2 score evals per step, @<snr> overrides the
+             process-default Langevin SNR. Non-served solvers — ode,
+             lamba, ... — are --offline only.)
   inspect   [--artifacts artifacts]
 ";
 
@@ -217,13 +221,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // validated by the same spec parser the wire layer uses, so serve
     // and the protocol cannot drift in accepted solvers
     let mut programs = Vec::new();
-    for name in args.str_list_or("solvers", &["adaptive", "em", "ddim"]) {
-        if name.contains(':') {
-            // a silently-dropped step count would misconfigure every
-            // bare-name request, so refuse it outright
+    for name in args.str_list_or("solvers", &["adaptive", "em", "ddim", "pc"]) {
+        if name.contains(':') || name.contains('@') {
+            // a silently-dropped step count (or snr) would misconfigure
+            // every bare-name request, so refuse it outright
             bail!(
                 "--solvers takes bare program names (got '{name}'); step counts \
-                 travel per request, e.g. solver=em:128"
+                 and snr travel per request, e.g. solver=em:128 or pc:64@0.17"
             );
         }
         let prog = spec::parse(&name)?.name().to_string();
@@ -428,10 +432,11 @@ fn evaluate_served(args: &Args, solver: solvers::ServingSolver) -> Result<EvalSu
 }
 
 /// The engine bypass: generate and score locally, no coordinator.
-/// Served solvers (adaptive, em:<n>, ddim:<n>) run engine-equivalent
-/// per-sample lanes (`spec::run_lanes`), so their FID*/IS* match the
-/// served path on the same seed; other solvers (ode, rdl, ...) use
-/// their batch RNG scheme and are only available here.
+/// Served solvers (adaptive, em:<n>, ddim:<n>, pc:<n>[@<snr>]) run
+/// engine-equivalent per-sample lanes (`spec::run_lanes`), so their
+/// FID*/IS* match the served path on the same seed; other solvers
+/// (ode, lamba, legacy batch rdl, ...) use their batch RNG scheme and
+/// are only available here.
 fn evaluate_offline(args: &Args) -> Result<EvalSummary> {
     let dir = artifacts_dir(args);
     let rt = Runtime::new(&dir)?;

@@ -83,11 +83,16 @@ pub fn manifest_engine_bucket(artifacts_dir: &Path, variant: &str, cap: usize) -
 }
 
 /// Number of score-network evaluations a single call of each program
-/// performs — the paper's cost metric (NFE).
+/// performs — the paper's cost metric (NFE). Step programs source their
+/// per-call cost from the one `StepKernel` table
+/// (`solvers::spec::STEP_KERNELS`), so the runtime's accounting cannot
+/// drift from the lane programs'.
 pub fn score_evals_per_call(program: &str) -> u64 {
+    if let Some(k) = crate::solvers::spec::kernel_for_artifact(program) {
+        return k.score_evals_per_step;
+    }
     match program {
-        "adaptive_step" | "pc_step" => 2,
-        "score" | "em_step" | "ddim_step" | "ode_drift" | "denoise" => 1,
+        "score" | "ode_drift" | "denoise" => 1,
         _ => 0,
     }
 }
@@ -210,10 +215,21 @@ impl Runtime {
         let meta_v = v.req("meta")?;
         let mut buckets: HashMap<String, Vec<usize>> = HashMap::new();
         let mut files: HashMap<(String, usize), String> = HashMap::new();
+        let mut input_shapes: HashMap<(String, usize), Vec<Vec<usize>>> = HashMap::new();
         for p in v.req("programs")?.as_arr()? {
             let program = p.req("program")?.as_str()?.to_string();
             let bucket = p.req("bucket")?.as_usize()?;
             buckets.entry(program.clone()).or_default().push(bucket);
+            // the manifest records each artifact's input shapes (the
+            // compiled ABI) — kept so callers can validate an artifact
+            // set built by an older aot.py before feeding it tensors
+            let shapes = p
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|shape| shape.as_arr()?.iter().map(|d| d.as_usize()).collect())
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            input_shapes.insert((program.clone(), bucket), shapes);
             files.insert((program, bucket), p.req("file")?.as_str()?.to_string());
         }
         for b in buckets.values_mut() {
@@ -243,6 +259,7 @@ impl Runtime {
             theta_buf: RefCell::new(None),
             const_bufs: RefCell::new(HashMap::new()),
             files,
+            input_shapes,
             meta,
         })
     }
@@ -300,6 +317,9 @@ pub struct Model<'rt> {
     /// Device-resident step constants keyed by (tag, bucket).
     const_bufs: RefCell<HashMap<(String, usize), Rc<PjRtBuffer>>>,
     files: HashMap<(String, usize), String>,
+    /// Manifest-recorded input shapes (the compiled ABI) per
+    /// (program, bucket).
+    input_shapes: HashMap<(String, usize), Vec<Vec<usize>>>,
 }
 
 impl<'rt> Model<'rt> {
@@ -329,6 +349,14 @@ impl<'rt> Model<'rt> {
         self.files
             .get(&(program.to_string(), bucket))
             .is_some_and(|rel| self.rt.root.join(rel).exists())
+    }
+
+    /// Manifest-recorded input shapes of the compiled (program, bucket)
+    /// artifact — the ABI aot.py lowered, so callers can refuse an
+    /// artifact built by an incompatible pipeline version up front
+    /// instead of faulting mid-execution on an argument-shape error.
+    pub fn artifact_inputs(&self, program: &str, bucket: usize) -> Option<&[Vec<usize>]> {
+        self.input_shapes.get(&(program.to_string(), bucket)).map(|v| v.as_slice())
     }
 
     fn exe(&self, program: &str, bucket: usize) -> Result<Rc<PjRtLoadedExecutable>> {
@@ -550,5 +578,19 @@ mod tests {
     fn pick_bucket_empty_is_none() {
         assert_eq!(pick_bucket(&[], 1), None);
         assert_eq!(pick_bucket(&[], 0), None);
+    }
+
+    #[test]
+    fn score_evals_per_call_reads_the_kernel_table() {
+        use super::score_evals_per_call;
+        // step programs come from solvers::spec::STEP_KERNELS — the one
+        // definition the lane programs also read
+        for k in crate::solvers::spec::STEP_KERNELS {
+            assert_eq!(score_evals_per_call(k.artifact), k.score_evals_per_step, "{}", k.artifact);
+        }
+        assert_eq!(score_evals_per_call("pc_step"), 2);
+        assert_eq!(score_evals_per_call("score"), 1);
+        assert_eq!(score_evals_per_call("denoise"), 1);
+        assert_eq!(score_evals_per_call("fid_features"), 0);
     }
 }

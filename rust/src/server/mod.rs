@@ -38,7 +38,9 @@
 //! rejections additionally carry a machine-readable `"code"`:
 //! `"queue_full"` (global cap), `"quota_exceeded"` (per-model admission
 //! quota), `"deadline_exceeded"` (request shed after its `deadline_ms`
-//! expired while still queued).
+//! expired while still queued), `"bad_solver"` (malformed or degenerate
+//! solver spec: unknown name, zero-step fixed schedule, non-positive or
+//! non-finite Langevin `snr`).
 //!
 //! QoS fields (docs/ARCHITECTURE.md §Admission & QoS):
 //! * `priority` (optional on `generate` and `evaluate`; `"interactive"`
@@ -63,10 +65,17 @@
 //! same parser `gofast evaluate` and `gofast serve --solvers` use, so
 //! the accepted names and defaults cannot drift between the CLI and the
 //! wire: `"adaptive"` (Algorithm 1, per-lane step sizes; `eps_rel` is
-//! its tolerance knob), `"em[:<steps>]"` and `"ddim[:<steps>]"` (fixed
-//! uniform schedules, default 256 steps; `ddim` is VP-only and a
-//! request against a non-VP model gets a clean `ok:false` protocol
-//! error at admission). Each (model, solver) pair is served by its own
+//! its tolerance knob), `"em[:<steps>]"`, `"ddim[:<steps>]"` and
+//! `"pc[:<steps>[@<snr>]]"` (fixed uniform schedules, default 256
+//! steps; `ddim` is VP-only and a request against a non-VP model gets a
+//! clean `ok:false` protocol error at admission). `pc` is Song et
+//! al.'s Reverse-Diffusion + Langevin predictor–corrector: `<steps>`
+//! predictor steps at 2 score evals each (reported NFE = 2 x steps +
+//! the denoise call), with the Langevin corrector targeting the
+//! optional `@<snr>` signal-to-noise ratio — omitted, the serving
+//! process's default applies (0.16 VE / 0.01 VP, Song et al.). A spec
+//! with `snr <= 0`, a non-finite snr, or zero steps is rejected with
+//! `code:"bad_solver"`. Each (model, solver) pair is served by its own
 //! lane-program pool behind the bucket scheduler (docs/ARCHITECTURE.md
 //! §Solver-program pools), so mixed solver traffic co-batches on one
 //! engine thread. The response echoes the canonical spec string.
@@ -173,6 +182,13 @@ fn parse_priority(req: &Value) -> Result<Option<qos::Priority>> {
         .transpose()
 }
 
+/// Wire-layer solver-spec parse: a malformed spec (unknown name,
+/// `em:0`, `pc:64@0`, ...) is a structured `bad_solver` rejection, so
+/// clients can distinguish it from load-dependent errors.
+fn parse_solver(s: &str) -> Result<crate::solvers::ServingSolver> {
+    spec::parse(s).map_err(|e| anyhow!("{}", qos::coded(qos::CODE_BAD_SOLVER, &format!("{e:#}"))))
+}
+
 fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Result<Value> {
     let req = json::parse(line).context("parsing request json")?;
     match req.req("op")?.as_str()? {
@@ -192,7 +208,7 @@ fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Resu
             let model =
                 req.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("").to_string();
             let solver =
-                spec::parse(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
+                parse_solver(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
             let want_images =
                 req.get("images").map(|v| v.as_bool()).transpose()?.unwrap_or(true);
             let priority = parse_priority(&req)?;
@@ -247,7 +263,7 @@ fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Resu
             let model =
                 req.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("").to_string();
             let solver =
-                spec::parse(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
+                parse_solver(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
             let priority = parse_priority(&req)?;
             if req.get("deadline_ms").is_some() {
                 bail!(
@@ -481,7 +497,7 @@ impl Client {
     }
 
     /// Generate with an explicit solver spec ("adaptive", "em:<n>",
-    /// "ddim:<n>"; "" = the server default, adaptive).
+    /// "ddim:<n>", "pc:<n>[@<snr>]"; "" = the server default, adaptive).
     pub fn generate_spec(
         &mut self,
         model: &str,
@@ -557,7 +573,7 @@ impl Client {
 
     /// FID*/IS* evaluation served through the engine ("" model/solver =
     /// the server defaults; solver specs: "adaptive", "em:<n>",
-    /// "ddim:<n>").
+    /// "ddim:<n>", "pc:<n>[@<snr>]").
     pub fn evaluate(
         &mut self,
         model: &str,

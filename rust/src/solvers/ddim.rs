@@ -49,7 +49,8 @@ pub fn run_lanes(
     if ctx.process.kind() != "vp" {
         bail!("DDIM is only defined for VP models (paper §4)");
     }
-    super::run_fixed_lanes(ctx, seed, base, count, n_steps, |x, t, tn, rngs| {
+    let evals = super::spec::kernel("ddim").unwrap().score_evals_per_step;
+    super::run_fixed_lanes(ctx, seed, base, count, n_steps, evals, |x, t, tn, rngs| {
         let b = x.shape[0];
         // padding lanes ride along like the engine's free lanes:
         // t == tn makes the update an exact no-op

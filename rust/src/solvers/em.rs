@@ -56,7 +56,8 @@ pub fn run_lanes(
     n_steps: usize,
 ) -> Result<SolveResult> {
     let mut z = Tensor::zeros(&[ctx.bucket, ctx.dim()]);
-    super::run_fixed_lanes(ctx, seed, base, count, n_steps, |x, t, tn, rngs| {
+    let evals = super::spec::kernel("em").unwrap().score_evals_per_step;
+    super::run_fixed_lanes(ctx, seed, base, count, n_steps, evals, |x, t, tn, rngs| {
         let b = x.shape[0];
         // padding lanes ride along exactly like the engine's free lanes:
         // t = 1, h = 0 (an exact no-op in the kernel), zero noise

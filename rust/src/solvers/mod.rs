@@ -149,9 +149,11 @@ pub fn fill_noise(rng: &mut Rng, z: &mut Tensor) {
     rng.fill_normal(&mut z.data);
 }
 
-/// Shared scaffold for the fixed-step per-lane offline runs (EM, DDIM):
-/// guards, per-lane RNG/prior setup mirroring the engine's admission,
-/// the uniform-grid walk, denoising, and trimming to `count` rows.
+/// Shared scaffold for the fixed-step per-lane offline runs (EM, DDIM,
+/// PC): guards, per-lane RNG/prior setup mirroring the engine's
+/// admission, the uniform-grid walk, denoising, and trimming to `count`
+/// rows. `evals_per_step` is the kernel's per-step NFE cost (its
+/// `StepKernel` row — 1 for EM/DDIM, 2 for PC's predictor+corrector).
 /// `step` advances the whole pool one grid node — it receives the pool
 /// state `x`, the grid pair `(t, t_next)` and the live lanes' RNG
 /// streams (`rngs.len() == count`; padding lanes must be filled
@@ -163,6 +165,7 @@ pub(crate) fn run_fixed_lanes(
     base: u64,
     count: usize,
     n_steps: usize,
+    evals_per_step: u64,
     mut step: impl FnMut(&Tensor, f64, f64, &mut [Rng]) -> Result<Tensor>,
 ) -> Result<SolveResult> {
     let b = ctx.bucket;
@@ -190,7 +193,7 @@ pub(crate) fn run_fixed_lanes(
             x.row_mut(i).copy_from_slice(xn.row(i));
         }
     }
-    let mut nfe = vec![n_steps as u64; count];
+    let mut nfe = vec![n_steps as u64 * evals_per_step; count];
     if ctx.opts.denoise {
         x = ctx.denoise(&x, &t_vec(b, t_eps))?;
         nfe.iter_mut().for_each(|n| *n += 1);

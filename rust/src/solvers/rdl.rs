@@ -2,7 +2,11 @@
 //! Predictor–Corrector sampler, the paper's "baseline" for VE models).
 //! 2 NFE per step: one predictor score eval + one corrector score eval,
 //! with the corrector step size set from the target signal-to-noise
-//! ratio (0.16 for VE, 0.01 for VP, following Song et al.).
+//! ratio (0.16 for VE, 0.01 for VP, following Song et al.). The fused
+//! `pc_step` kernel takes `snr` as a per-lane vector (§3.1.5 style), so
+//! requests with different SNR targets co-batch in one serving pool and
+//! free lanes ride through with `h = 0`, zero noise, `snr = 0` — an
+//! exact no-op.
 
 use super::{fill_noise, t_vec, time_grid, Ctx, SolveResult};
 use crate::rng::Rng;
@@ -24,7 +28,7 @@ pub fn run(ctx: &Ctx, rng: &mut Rng, n_steps: usize, snr: Option<f64>) -> Result
     let mut x = ctx.sample_prior(rng);
     let mut z1 = Tensor::zeros(&[b, ctx.dim()]);
     let mut z2 = Tensor::zeros(&[b, ctx.dim()]);
-    let snr_t = Tensor::scalar(snr as f32);
+    let snr_t = t_vec(b, snr);
     for w in grid.windows(2) {
         let (t, t_next) = (w[0], w[1]);
         let h = t - t_next;
@@ -46,4 +50,50 @@ pub fn run(ctx: &Ctx, rng: &mut Rng, n_steps: usize, snr: Option<f64>) -> Result
         nfe.iter_mut().for_each(|n| *n += 1);
     }
     Ok(SolveResult { x, nfe_per_sample: nfe, steps: n_steps as u64, rejections: 0 })
+}
+
+/// PC with *per-lane* RNG streams matching the serving engine's lane
+/// semantics exactly: lane `i` owns `Rng::new(seed).fork(base + i)`,
+/// draws its prior and — each grid step — first the predictor noise
+/// `z1` then the corrector noise `z2` from that stream, and walks the
+/// uniform grid `uniform_t(t_eps, n_steps, k)` — the same draws and
+/// nodes the engine's `pc_step` lane pool feeds the kernel. Padding
+/// lanes ride along engine-style (`h = 0`, zero noise, `snr = 0`: an
+/// exact no-op). The `--offline` twin the engine-vs-offline agreement
+/// check for served PC evaluation is defined against; see
+/// `em::run_lanes` for the contract.
+pub fn run_lanes(
+    ctx: &Ctx,
+    seed: u64,
+    base: u64,
+    count: usize,
+    n_steps: usize,
+    snr: f64,
+) -> Result<SolveResult> {
+    let mut z1 = Tensor::zeros(&[ctx.bucket, ctx.dim()]);
+    let mut z2 = Tensor::zeros(&[ctx.bucket, ctx.dim()]);
+    let evals = super::spec::kernel("pc").unwrap().score_evals_per_step;
+    super::run_fixed_lanes(ctx, seed, base, count, n_steps, evals, |x, t, tn, rngs| {
+        let b = x.shape[0];
+        let mut t_in = vec![1.0f32; b];
+        let mut h_in = vec![0.0f32; b];
+        let mut snr_in = vec![0.0f32; b];
+        for (i, rng) in rngs.iter_mut().enumerate() {
+            t_in[i] = t as f32;
+            h_in[i] = (t - tn) as f32;
+            snr_in[i] = snr as f32;
+            rng.fill_normal(z1.row_mut(i));
+            rng.fill_normal(z2.row_mut(i));
+        }
+        let t_t = Tensor { shape: vec![b], data: t_in };
+        let h_t = Tensor { shape: vec![b], data: h_in };
+        let snr_t = Tensor { shape: vec![b], data: snr_in };
+        let mut out = ctx.model.exec(
+            "pc_step",
+            b,
+            &[x, &t_t, &h_t, &z1, &z2, &snr_t],
+            ctx.opts.fused_buffers,
+        )?;
+        Ok(out.pop().unwrap())
+    })
 }

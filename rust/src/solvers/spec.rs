@@ -1,6 +1,13 @@
 //! Unified solver specification.
 //!
-//! Two layers:
+//! Three layers:
+//! * [`StepKernel`] — the **single table** of per-solver serving facts
+//!   (compiled artifact, score evals per step, fixed-vs-adaptive
+//!   stepping, auxiliary kernel inputs such as the second noise tensor
+//!   `z2` and the Langevin `snr` vector, VP-only restrictions). The
+//!   coordinator's descriptor-driven lane programs, the runtime's NFE
+//!   accounting and [`ServingSolver`] all read this table, so a new
+//!   fixed-step solver is one table row plus an offline twin;
 //! * [`ServingSolver`] — the solvers the engine's lane-program pools
 //!   serve (`coordinator::programs`), with the **single** spec parser
 //!   ([`parse`]) shared by `gofast evaluate` (served and `--offline`),
@@ -17,8 +24,105 @@ use crate::{anyhow, bail, Result};
 /// (`em:<n>`) nor the caller supplies one.
 pub const DEFAULT_FIXED_STEPS: usize = 256;
 
-/// A solver the serving engine can run as a lane-program pool.
+/// The second per-lane time input a fixed-step kernel takes alongside
+/// `t` (the two shapes the compiled step artifacts use).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeArg {
+    /// Step size `h = t - t_next` (em_step, pc_step); a free lane rides
+    /// through with `h = 0` as an exact no-op.
+    StepSize,
+    /// The next grid node `t_next` itself (ddim_step); a free lane rides
+    /// through with `t_next == t`.
+    NextTime,
+}
+
+/// Everything the serving stack needs to know about one solver's
+/// compiled step kernel — the per-solver facts that used to be
+/// duplicated across the lane-program impls, `ServingSolver` and the
+/// runtime's `score_evals_per_call`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepKernel {
+    /// Routing / spec name ("adaptive" | "em" | "ddim" | "pc").
+    pub solver: &'static str,
+    /// Compiled artifact advancing a pool of this solver's lanes.
+    pub artifact: &'static str,
+    /// Score-network evaluations one kernel call costs each live lane —
+    /// the paper's NFE metric (2 for the predictor+corrector pair).
+    pub score_evals_per_step: u64,
+    /// Adaptive stepping (per-lane controller state, host accept/reject)
+    /// vs a fixed uniform schedule driven purely by this descriptor.
+    pub adaptive: bool,
+    /// Shape of the second time input (fixed-step kernels).
+    pub time: TimeArg,
+    /// Fresh per-lane noise tensors drawn each step, in kernel input
+    /// order (`z1`, `z2`): 1 for EM, 2 for PC's predictor + corrector
+    /// draws, 0 for deterministic DDIM.
+    pub noise_inputs: usize,
+    /// Trailing per-lane Langevin signal-to-noise input (`snr[B]`).
+    pub snr_input: bool,
+    /// Kernel is only defined for VP processes (paper §4).
+    pub vp_only: bool,
+}
+
+/// The solver table: one row per served step kernel. Adding a served
+/// fixed-step solver means adding a row here (+ its aot.py graph and
+/// offline `run_lanes` twin) — not a new `LaneProgram` impl.
+pub const STEP_KERNELS: &[StepKernel] = &[
+    StepKernel {
+        solver: "adaptive",
+        artifact: "adaptive_step",
+        score_evals_per_step: 2,
+        adaptive: true,
+        time: TimeArg::StepSize,
+        noise_inputs: 1,
+        snr_input: false,
+        vp_only: false,
+    },
+    StepKernel {
+        solver: "em",
+        artifact: "em_step",
+        score_evals_per_step: 1,
+        adaptive: false,
+        time: TimeArg::StepSize,
+        noise_inputs: 1,
+        snr_input: false,
+        vp_only: false,
+    },
+    StepKernel {
+        solver: "ddim",
+        artifact: "ddim_step",
+        score_evals_per_step: 1,
+        adaptive: false,
+        time: TimeArg::NextTime,
+        noise_inputs: 0,
+        snr_input: false,
+        vp_only: true,
+    },
+    StepKernel {
+        solver: "pc",
+        artifact: "pc_step",
+        score_evals_per_step: 2,
+        adaptive: false,
+        time: TimeArg::StepSize,
+        noise_inputs: 2,
+        snr_input: true,
+        vp_only: false,
+    },
+];
+
+/// Kernel descriptor for a solver name, if the table has one.
+pub fn kernel(solver: &str) -> Option<&'static StepKernel> {
+    STEP_KERNELS.iter().find(|k| k.solver == solver)
+}
+
+/// Kernel descriptor for a compiled step-artifact name — how the
+/// runtime's per-call NFE accounting reads the table.
+pub fn kernel_for_artifact(artifact: &str) -> Option<&'static StepKernel> {
+    STEP_KERNELS.iter().find(|k| k.artifact == artifact)
+}
+
+/// A solver the serving engine can run as a lane-program pool.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ServingSolver {
     /// Algorithm 1 (the paper's adaptive solver); per-lane step sizes.
     Adaptive,
@@ -26,59 +130,87 @@ pub enum ServingSolver {
     Em { steps: usize },
     /// DDIM (deterministic, VP only), `steps` uniform steps per lane.
     Ddim { steps: usize },
+    /// Reverse-Diffusion + Langevin predictor–corrector (Song et al.
+    /// 2021), `steps` predictor steps per lane (2 score evals each).
+    /// `snr` is the Langevin corrector's target signal-to-noise ratio;
+    /// `None` defers to the serving process default
+    /// (`rdl::default_snr`: 0.16 VE, 0.01 VP).
+    Pc { steps: usize, snr: Option<f64> },
 }
 
 impl ServingSolver {
-    /// Routing name ("adaptive" | "em" | "ddim").
-    pub fn name(&self) -> &'static str {
-        match self {
+    /// This solver's row of the [`STEP_KERNELS`] table.
+    pub fn kernel(&self) -> &'static StepKernel {
+        let name = match self {
             ServingSolver::Adaptive => "adaptive",
             ServingSolver::Em { .. } => "em",
             ServingSolver::Ddim { .. } => "ddim",
-        }
+            ServingSolver::Pc { .. } => "pc",
+        };
+        kernel(name).expect("every ServingSolver has a STEP_KERNELS row")
+    }
+
+    /// Routing name ("adaptive" | "em" | "ddim" | "pc").
+    pub fn name(&self) -> &'static str {
+        self.kernel().solver
     }
 
     /// Compiled step artifact that advances a pool of this solver's lanes.
     pub fn step_artifact(&self) -> &'static str {
-        match self {
-            ServingSolver::Adaptive => "adaptive_step",
-            ServingSolver::Em { .. } => "em_step",
-            ServingSolver::Ddim { .. } => "ddim_step",
-        }
+        self.kernel().artifact
     }
 
     /// Fixed step count (None for the adaptive solver).
     pub fn steps(&self) -> Option<usize> {
         match self {
             ServingSolver::Adaptive => None,
-            ServingSolver::Em { steps } | ServingSolver::Ddim { steps } => Some(*steps),
+            ServingSolver::Em { steps }
+            | ServingSolver::Ddim { steps }
+            | ServingSolver::Pc { steps, .. } => Some(*steps),
         }
     }
 
-    /// Canonical spec string (`adaptive`, `em:<n>`, `ddim:<n>`) —
-    /// round-trips through [`parse`].
+    /// Explicit Langevin SNR (PC only; `None` = the process default).
+    pub fn snr(&self) -> Option<f64> {
+        match self {
+            ServingSolver::Pc { snr, .. } => *snr,
+            _ => None,
+        }
+    }
+
+    /// Canonical spec string (`adaptive`, `em:<n>`, `ddim:<n>`,
+    /// `pc:<n>[@<snr>]`) — round-trips through [`parse`].
     pub fn spec_string(&self) -> String {
-        match self.steps() {
-            None => self.name().to_string(),
-            Some(n) => format!("{}:{n}", self.name()),
+        match (self.steps(), self.snr()) {
+            (None, _) => self.name().to_string(),
+            (Some(n), None) => format!("{}:{n}", self.name()),
+            (Some(n), Some(snr)) => format!("{}:{n}@{snr}", self.name()),
         }
     }
 
-    /// Admission-time validation. [`parse`] already rejects `em:0` on
-    /// the wire/CLI, but a spec constructed directly through the Rust
-    /// API must not reach a lane pool: a zero-step fixed lane has no
-    /// grid and would never converge.
+    /// Admission-time validation. [`parse`] already rejects `em:0` and
+    /// `pc:64@0` on the wire/CLI, but a spec constructed directly
+    /// through the Rust API must not reach a lane pool: a zero-step
+    /// fixed lane has no grid and would never converge, and a
+    /// non-positive or non-finite SNR makes the Langevin corrector
+    /// degenerate (or NaN).
     pub fn validate(&self) -> Result<()> {
         if self.steps() == Some(0) {
             bail!("solver '{}' needs at least 1 step", self.name());
+        }
+        if let Some(snr) = self.snr() {
+            if !(snr.is_finite() && snr > 0.0) {
+                bail!("solver '{}' needs a finite snr > 0 (got {snr})", self.name());
+            }
         }
         Ok(())
     }
 }
 
 /// Parse a serving solver spec: `""`/`"adaptive"`, `"em[:<steps>]"`,
-/// `"ddim[:<steps>]"` (bare fixed-step names default to
-/// [`DEFAULT_FIXED_STEPS`]).
+/// `"ddim[:<steps>]"`, `"pc[:<steps>[@<snr>]]"` (bare fixed-step names
+/// default to [`DEFAULT_FIXED_STEPS`]; a `pc` spec without `@<snr>`
+/// uses the serving process's default SNR).
 pub fn parse(s: &str) -> Result<ServingSolver> {
     parse_with_steps(s, None)
 }
@@ -91,8 +223,13 @@ pub fn parse_with_steps(s: &str, default_steps: Option<usize>) -> Result<Serving
         Some((n, a)) => (n.trim(), Some(a.trim())),
         None => (s, None),
     };
+    // `pc:<steps>@<snr>`: split the optional snr suffix off the count
+    let (count_arg, snr_arg) = match arg.and_then(|a| a.split_once('@')) {
+        Some((c, v)) => (Some(c.trim()), Some(v.trim())),
+        None => (arg, None),
+    };
     let fixed_steps = || -> Result<usize> {
-        let steps = match arg {
+        let steps = match count_arg {
             Some(a) => a
                 .parse::<usize>()
                 .map_err(|_| anyhow!("bad step count '{a}' in solver spec '{s}'"))?,
@@ -103,6 +240,9 @@ pub fn parse_with_steps(s: &str, default_steps: Option<usize>) -> Result<Serving
         }
         Ok(steps)
     };
+    if snr_arg.is_some() && name != "pc" {
+        bail!("only pc specs take an @<snr> suffix (got '{s}')");
+    }
     match name {
         "" | "adaptive" => {
             if arg.is_some() {
@@ -112,8 +252,24 @@ pub fn parse_with_steps(s: &str, default_steps: Option<usize>) -> Result<Serving
         }
         "em" | "euler-maruyama" => Ok(ServingSolver::Em { steps: fixed_steps()? }),
         "ddim" => Ok(ServingSolver::Ddim { steps: fixed_steps()? }),
+        "pc" => {
+            let steps = fixed_steps()?;
+            let snr = snr_arg
+                .map(|v| -> Result<f64> {
+                    let snr = v
+                        .parse::<f64>()
+                        .map_err(|_| anyhow!("bad snr '{v}' in solver spec '{s}'"))?;
+                    if !(snr.is_finite() && snr > 0.0) {
+                        bail!("solver spec '{s}' needs a finite snr > 0");
+                    }
+                    Ok(snr)
+                })
+                .transpose()?;
+            Ok(ServingSolver::Pc { steps, snr })
+        }
         other => bail!(
-            "unknown solver '{other}' (serving specs: adaptive, em[:<steps>], ddim[:<steps>])"
+            "unknown solver '{other}' (serving specs: adaptive, em[:<steps>], \
+             ddim[:<steps>], pc[:<steps>[@<snr>]])"
         ),
     }
 }
@@ -136,6 +292,10 @@ pub fn run_lanes(
         ServingSolver::Adaptive => adaptive::run_lanes(ctx, seed, base, count, aopts),
         ServingSolver::Em { steps } => em::run_lanes(ctx, seed, base, count, steps),
         ServingSolver::Ddim { steps } => ddim::run_lanes(ctx, seed, base, count, steps),
+        ServingSolver::Pc { steps, snr } => {
+            let snr = snr.unwrap_or_else(|| rdl::default_snr(&ctx.process));
+            rdl::run_lanes(ctx, seed, base, count, steps, snr)
+        }
     }
 }
 
@@ -274,6 +434,58 @@ mod tests {
         assert_eq!(parse(" ddim : 32 ").unwrap(), ServingSolver::Ddim { steps: 32 });
         assert_eq!(parse("em").unwrap(), ServingSolver::Em { steps: DEFAULT_FIXED_STEPS });
         assert_eq!(parse("euler-maruyama:8").unwrap(), ServingSolver::Em { steps: 8 });
+        assert_eq!(parse("pc").unwrap(), ServingSolver::Pc {
+            steps: DEFAULT_FIXED_STEPS,
+            snr: None
+        });
+        assert_eq!(parse("pc:64").unwrap(), ServingSolver::Pc { steps: 64, snr: None });
+        assert_eq!(
+            parse("pc:64@0.17").unwrap(),
+            ServingSolver::Pc { steps: 64, snr: Some(0.17) }
+        );
+        assert_eq!(
+            parse(" pc : 8 @ 0.01 ").unwrap(),
+            ServingSolver::Pc { steps: 8, snr: Some(0.01) }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_pc_snr() {
+        // zero steps, zero / negative / non-finite / malformed snr, and
+        // @<snr> on a non-pc solver are all wire-parser rejections
+        for bad in ["pc:0", "pc:64@0", "pc:64@-1", "pc:64@nope", "pc:64@inf", "em:8@0.1"] {
+            assert!(parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        let err = parse("pc:64@0").unwrap_err().to_string();
+        assert!(err.contains("snr > 0"), "{err}");
+        // the Rust-API path is guarded too
+        assert!(ServingSolver::Pc { steps: 4, snr: Some(0.0) }.validate().is_err());
+        assert!(ServingSolver::Pc { steps: 4, snr: Some(f64::NAN) }.validate().is_err());
+        assert!(ServingSolver::Pc { steps: 0, snr: None }.validate().is_err());
+        assert!(ServingSolver::Pc { steps: 4, snr: Some(0.17) }.validate().is_ok());
+    }
+
+    #[test]
+    fn kernel_table_is_the_single_source_of_solver_facts() {
+        for (solver, artifact, evals, adaptive) in [
+            (ServingSolver::Adaptive, "adaptive_step", 2, true),
+            (ServingSolver::Em { steps: 4 }, "em_step", 1, false),
+            (ServingSolver::Ddim { steps: 4 }, "ddim_step", 1, false),
+            (ServingSolver::Pc { steps: 4, snr: None }, "pc_step", 2, false),
+        ] {
+            let k = solver.kernel();
+            assert_eq!(solver.step_artifact(), artifact);
+            assert_eq!(k.score_evals_per_step, evals);
+            assert_eq!(k.adaptive, adaptive);
+            assert_eq!(kernel_for_artifact(artifact), Some(k));
+            assert_eq!(kernel(solver.name()), Some(k));
+        }
+        // the PC row carries the aux-input facts the lane program builds
+        // its device args from
+        let pc = kernel("pc").unwrap();
+        assert_eq!((pc.noise_inputs, pc.snr_input, pc.vp_only), (2, true, false));
+        assert!(kernel("ode").is_none());
+        assert!(kernel_for_artifact("score").is_none());
     }
 
     #[test]
@@ -304,8 +516,11 @@ mod tests {
             ServingSolver::Adaptive,
             ServingSolver::Em { steps: 12 },
             ServingSolver::Ddim { steps: 7 },
+            ServingSolver::Pc { steps: 20, snr: None },
+            ServingSolver::Pc { steps: 20, snr: Some(0.17) },
         ] {
             assert_eq!(parse(&s.spec_string()).unwrap(), s);
         }
+        assert_eq!(ServingSolver::Pc { steps: 20, snr: Some(0.17) }.spec_string(), "pc:20@0.17");
     }
 }

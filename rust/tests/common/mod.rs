@@ -29,6 +29,19 @@ pub fn step_buckets(dir: &Path) -> Vec<usize> {
     gofast::runtime::manifest_buckets(dir, "vp", "adaptive_step").unwrap_or_default()
 }
 
+/// Compiled rungs of any step `program` ("pc_step", "ddim_step", ...)
+/// for `vp` at or below the engine bucket — the shared gate for
+/// artifact-dependent fixed-step solver tests (a pool exists only when
+/// this is non-empty; migration tests need two rungs).
+pub fn program_rungs(dir: &Path, program: &str) -> Vec<usize> {
+    let cap = engine_bucket(dir);
+    gofast::runtime::manifest_buckets(dir, "vp", program)
+        .unwrap_or_default()
+        .into_iter()
+        .filter(|&b| b <= cap)
+        .collect()
+}
+
 #[macro_export]
 macro_rules! require_artifacts {
     () => {

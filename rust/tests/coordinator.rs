@@ -346,16 +346,24 @@ fn fixed_step_same_seed_same_images_under_load() {
 }
 
 /// The migration-determinism contract extends to fixed-step lanes: a
-/// migrating em pool must produce the same images as a pinned one while
+/// migrating pool must produce the same images as a pinned one while
 /// lanes move buckets mid-trajectory. A long-running lane is admitted
 /// alone (the pool shrinks around it), then a second request grows the
-/// pool back — so a live lane crosses bucket widths both ways.
-#[test]
-fn fixed_step_migration_matches_pinned_pool() {
+/// pool back — so a live lane crosses bucket widths both ways. Run for
+/// the em pool and (artifacts permitting) the pc pool: a live pc lane
+/// must carry `(t, h, rng, x, xprev, snr)` across widths bit-identically
+/// — the short request uses an explicit non-default snr so the per-lane
+/// snr is actually on the line.
+fn fixed_step_migration_case(long_solver: ServingSolver, short_solver: ServingSolver) {
     let Some(dir) = common::artifacts() else { return };
     let bucket = common::engine_bucket(&dir);
     if common::step_buckets(&dir).iter().filter(|&&b| b <= bucket).count() < 2 {
         eprintln!("skipping: needs a multi-rung bucket ladder");
+        return;
+    }
+    let program = long_solver.name();
+    if common::program_rungs(&dir, long_solver.step_artifact()).len() < 2 {
+        eprintln!("skipping: needs >= 2 {program} rungs at or below the engine bucket");
         return;
     }
     let run = |migrate: bool| {
@@ -365,7 +373,7 @@ fn fixed_step_migration_matches_pinned_pool() {
         let engine = Engine::start(cfg).unwrap();
         let c_bg = engine.client();
         let long = std::thread::spawn(move || {
-            c_bg.generate_with("", ServingSolver::Em { steps: 400 }, 1, 0.5, 41).unwrap()
+            c_bg.generate_with("", long_solver, 1, 0.5, 41).unwrap()
         });
         // wait until the long lane is live so the short request
         // co-batches with (and then outlives-into) a width change
@@ -373,27 +381,85 @@ fn fixed_step_migration_matches_pinned_pool() {
         while c.stats().unwrap().active_slots == 0 {
             std::thread::yield_now();
         }
-        let short = c.generate_with("", ServingSolver::Em { steps: 4 }, 2, 0.5, 77).unwrap();
+        let short = c.generate_with("", short_solver, 2, 0.5, 77).unwrap();
         let long = long.join().unwrap();
         let stats = c.stats().unwrap();
         (long, short, stats)
     };
     let (long_m, short_m, stats_m) = run(true);
     let (long_f, short_f, _) = run(false);
-    assert_eq!(long_m.images, long_f.images, "em migration altered the long lane's trajectory");
-    assert_eq!(long_m.nfe, long_f.nfe);
-    assert_eq!(short_m.images, short_f.images, "em migration altered the short lanes");
-    assert_eq!(short_m.nfe, short_f.nfe);
-    // the migrating em pool must actually have moved: steps below the
-    // max rung and at least one width switch
-    let em = stats_m.programs.iter().find(|p| p.solver == "em").expect("em stats");
-    let narrow: u64 =
-        em.steps_per_bucket.iter().filter(|(b, _)| *b < bucket).map(|(_, s)| *s).sum();
-    assert!(narrow > 0, "no em steps below max bucket: {:?}", em.steps_per_bucket);
-    assert!(
-        em.migrations_up + em.migrations_down > 0,
-        "em pool never switched width"
+    assert_eq!(
+        long_m.images, long_f.images,
+        "{program} migration altered the long lane's trajectory"
     );
+    assert_eq!(long_m.nfe, long_f.nfe);
+    assert_eq!(short_m.images, short_f.images, "{program} migration altered the short lanes");
+    assert_eq!(short_m.nfe, short_f.nfe);
+    // the migrating pool must actually have moved: steps below the
+    // max rung and at least one width switch
+    let ps = stats_m.programs.iter().find(|p| p.solver == program).expect("program stats");
+    let narrow: u64 =
+        ps.steps_per_bucket.iter().filter(|(b, _)| *b < bucket).map(|(_, s)| *s).sum();
+    assert!(narrow > 0, "no {program} steps below max bucket: {:?}", ps.steps_per_bucket);
+    assert!(
+        ps.migrations_up + ps.migrations_down > 0,
+        "{program} pool never switched width"
+    );
+}
+
+#[test]
+fn fixed_step_migration_matches_pinned_pool() {
+    fixed_step_migration_case(
+        ServingSolver::Em { steps: 400 },
+        ServingSolver::Em { steps: 4 },
+    );
+}
+
+#[test]
+fn pc_migration_matches_pinned_pool() {
+    fixed_step_migration_case(
+        ServingSolver::Pc { steps: 200, snr: None },
+        ServingSolver::Pc { steps: 4, snr: Some(0.17) },
+    );
+}
+
+/// PC lanes are first-class serving workloads: correct image range,
+/// exact per-sample NFE (2 x predictor steps + denoise), per-program
+/// stats with the 2x score-eval cost, and per-lane snr co-batching in
+/// one pool.
+#[test]
+fn pc_generate_roundtrip_counts_two_evals_per_step() {
+    let Some(dir) = common::artifacts() else { return };
+    if common::program_rungs(&dir, "pc_step").is_empty() {
+        eprintln!("skipping: no pc_step artifacts at or below the engine bucket");
+        return;
+    }
+    let Some(engine) = engine() else { return };
+    let c = engine.client();
+    let a = c.generate_with("", ServingSolver::Pc { steps: 6, snr: None }, 3, 0.5, 42).unwrap();
+    assert_eq!(a.images.shape, vec![3, 768]);
+    assert!(a.images.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    assert!(a.nfe.iter().all(|&n| n == 13), "pc nfe {:?}", a.nfe);
+    // a different snr (and step budget) co-batches in the same pool
+    let b = c
+        .generate_with("", ServingSolver::Pc { steps: 4, snr: Some(0.17) }, 2, 0.5, 42)
+        .unwrap();
+    assert!(b.nfe.iter().all(|&n| n == 9), "pc nfe {:?}", b.nfe);
+    let stats = c.stats().unwrap();
+    let pc = stats.programs.iter().find(|p| p.solver == "pc").expect("pc stats");
+    assert!(pc.steps >= 6, "pc steps {}", pc.steps);
+    assert_eq!(
+        pc.score_evals,
+        2 * pc.occupied_lane_steps,
+        "stats.programs.pc must report score_evals = 2 x occupied lane-steps"
+    );
+    // an invalid snr built via the Rust API is a coded admission error
+    let err = c
+        .generate_with("", ServingSolver::Pc { steps: 4, snr: Some(0.0) }, 1, 0.5, 0)
+        .unwrap_err()
+        .to_string();
+    assert!(err.starts_with(qos::CODE_BAD_SOLVER), "{err}");
+    assert!(err.contains("snr"), "{err}");
 }
 
 /// Requesting a solver the model has no pool for is a clean protocol

@@ -144,10 +144,7 @@ fn engine_evaluate_em_matches_offline_bypass() {
 #[test]
 fn engine_evaluate_ddim_matches_offline_bypass() {
     let Some(dir) = eval_artifacts() else { return };
-    let pool_rung = gofast::runtime::manifest_buckets(&dir, "vp", "ddim_step")
-        .map(|b| b.iter().any(|&x| x <= common::engine_bucket(&dir)))
-        .unwrap_or(false);
-    if !pool_rung {
+    if common::program_rungs(&dir, "ddim_step").is_empty() {
         eprintln!("skipping: no ddim_step artifacts at or below the engine bucket");
         return;
     }
@@ -167,6 +164,46 @@ fn engine_evaluate_ddim_matches_offline_bypass() {
         fid
     );
     assert!(rel(served.is, is) <= 1e-6, "DDIM IS* disagrees");
+    assert_eq!(served.mean_nfe, mean_nfe);
+}
+
+/// Same agreement contract for the Reverse-Diffusion + Langevin
+/// predictor–corrector pool: served `pc:<n>` must match
+/// `rdl::run_lanes` (via the shared offline dispatcher) to <= 1e-6 and
+/// report NFE = 2 x predictor steps + denoise — the acceptance
+/// criterion of the pc_step lane program.
+#[test]
+fn engine_evaluate_pc_matches_offline_bypass() {
+    let Some(dir) = eval_artifacts() else { return };
+    if common::program_rungs(&dir, "pc_step").is_empty() {
+        eprintln!("skipping: no pc_step artifacts at or below the engine bucket");
+        return;
+    }
+    let solver = ServingSolver::Pc { steps: 7, snr: Some(0.17) };
+    let (samples, seed) = (6usize, 13u64);
+    let engine = start_engine(&dir);
+    let served = engine.client().evaluate(eval_req(solver, samples, 0.5, seed)).unwrap();
+    assert_eq!(served.solver, "pc:7@0.17");
+    // two score evals per predictor step, plus the denoise call
+    assert_eq!(served.mean_nfe, 15.0);
+    let stats = engine.client().stats().unwrap();
+    let pc = stats.programs.iter().find(|p| p.solver == "pc").expect("pc program stats");
+    assert!(pc.steps > 0, "pc pool ran no steps");
+    assert_eq!(
+        pc.score_evals,
+        2 * pc.occupied_lane_steps,
+        "pc score-eval accounting must be 2x per lane-step"
+    );
+    drop(engine);
+
+    let (fid, is, mean_nfe) = offline_eval(&dir, solver, samples, 0.5, seed);
+    assert!(
+        rel(served.fid, fid) <= 1e-6,
+        "PC FID* disagrees: served {} vs offline {}",
+        served.fid,
+        fid
+    );
+    assert!(rel(served.is, is) <= 1e-6, "PC IS* disagrees: served {} vs offline {}", served.is, is);
     assert_eq!(served.mean_nfe, mean_nfe);
 }
 
@@ -236,6 +273,14 @@ fn evaluate_validates_request() {
         .unwrap_err()
         .to_string();
     assert!(err.contains("at least 1 step"), "{err}");
+    // a degenerate Langevin snr is the same class of admission error,
+    // carried with the structured bad_solver code
+    let err = engine
+        .client()
+        .evaluate(eval_req(ServingSolver::Pc { steps: 4, snr: Some(-1.0) }, 2, 0.5, 0))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("bad_solver") && err.contains("snr"), "{err}");
     let err = engine
         .client()
         .evaluate(EvalRequest {

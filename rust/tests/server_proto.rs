@@ -178,15 +178,79 @@ fn ddim_on_non_vp_model_is_clean_protocol_error() {
 }
 
 /// Unknown or malformed solver specs die in the wire parser with the
-/// accepted-spec list.
+/// accepted-spec list and the structured `bad_solver` code.
 #[test]
 fn evaluate_rejects_unknown_solver() {
     let Some((_engine, addr)) = spawn_server() else { return };
     let mut c = Client::connect(&addr.to_string()).unwrap();
     let err = c.evaluate("", "ode", 2, 0.5, 0).unwrap_err().to_string();
     assert!(err.contains("adaptive, em[:<steps>], ddim[:<steps>]"), "{err}");
+    assert!(err.contains("pc[:<steps>[@<snr>]]"), "{err}");
+    assert!(err.contains("[bad_solver]"), "{err}");
     let err = c.evaluate("", "em:nope", 2, 0.5, 0).unwrap_err().to_string();
     assert!(err.contains("bad step count"), "{err}");
+}
+
+/// Satellite guard: a degenerate pc spec (`snr <= 0`, zero steps) is a
+/// structured wire error — `ok:false` plus `code:"bad_solver"` —
+/// mirroring the zero-step fixed-spec guard, and the connection stays
+/// usable.
+#[test]
+fn bad_pc_spec_error_shape_on_the_wire() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    for (spec, needle) in
+        [("pc:64@0", "snr > 0"), ("pc:0", "at least 1 step"), ("pc:64@nope", "bad snr")]
+    {
+        writeln!(writer, "{{\"op\":\"generate\",\"n\":1,\"solver\":\"{spec}\"}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false"), "{spec}: {line}");
+        assert!(line.contains("\"code\":\"bad_solver\""), "{spec}: {line}");
+        assert!(line.contains(needle), "{spec}: {line}");
+    }
+    // the connection survived the rejections
+    writeln!(writer, "{{\"op\":\"ping\"}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+}
+
+/// PC specs ride the wire end to end: `pc:<n>[@<snr>]` routes to the pc
+/// lane pool, the canonical spec string echoes back, and NFE reports
+/// the 2x predictor-corrector cost plus the denoise call.
+#[test]
+fn pc_specs_ride_the_wire() {
+    let Some(dir) = common::artifacts() else { return };
+    if common::program_rungs(&dir, "pc_step").is_empty() {
+        eprintln!("skipping: no pc_step artifacts at or below the engine bucket");
+        return;
+    }
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let r = c.generate_spec("", "pc:4", 2, 0.5, 3, false).unwrap();
+    assert_eq!(r.nfe, vec![9, 9], "pc nfe is 2 x steps + denoise");
+    let r = c.generate_spec("", "pc:4@0.17", 1, 0.5, 3, false).unwrap();
+    assert_eq!(r.nfe, vec![9]);
+    let stats = c.stats().unwrap();
+    let pc = stats.get("programs").unwrap().get("pc").expect("programs.pc");
+    assert!(pc.get("steps").unwrap().as_f64().unwrap() >= 4.0);
+    let evals = pc.get("score_evals").unwrap().as_f64().unwrap();
+    let occupied = pc.get("occupied_lane_steps").unwrap().as_f64().unwrap();
+    assert_eq!(evals, 2.0 * occupied, "stats.programs.pc score-eval accounting");
+    // evaluate over the wire too (needs the fid net + reference split)
+    for need in ["artifacts/params/fid16.bin", "artifacts/data/synth-cifar.bin"] {
+        if !std::path::Path::new(need).exists() {
+            eprintln!("skipping evaluate half: {need} not built");
+            return;
+        }
+    }
+    let r = c.evaluate("", "pc:4@0.17", 3, 0.5, 7).unwrap();
+    assert_eq!(r.solver, "pc:4@0.17");
+    assert_eq!(r.mean_nfe, 9.0);
+    assert!(r.fid.is_finite() && r.fid >= 0.0, "fid {}", r.fid);
 }
 
 /// The QoS wire fields ride generate end to end: `priority` and

@@ -2,18 +2,25 @@
 """FID*-vs-NFE regression thresholds for benches/eval.rs output.
 
 The eval bench (benches/eval.rs) runs every served solver (adaptive /
-em / ddim) through the engine's lane-program pools AND through the
+em / ddim / pc) through the engine's lane-program pools AND through the
 offline per-lane bypass, and records the served-vs-offline deltas in
 bench_out/eval.json. This script turns that upload-only artifact into a
 CI gate:
 
-  * parity: for every served row, |d_nfe| must be 0 (the per-lane RNG
-    contract makes NFE exactly equal) and |d_fid| / |d_is| within 1e-6
-    relative — the engine-vs-offline agreement criterion;
+  * parity: for every served row — the predictor–corrector rows exactly
+    like em/ddim — |d_nfe| must be 0 (the per-lane RNG contract makes
+    NFE exactly equal) and |d_fid| / |d_is| within 1e-6 relative — the
+    engine-vs-offline agreement criterion;
+  * NFE accounting: every served pc row's mean NFE must equal
+    2 x predictor steps + 1 (two score evals per PC step, one denoise)
+    — a drifted StepKernel cost table fails here;
   * sanity: every FID*/IS* finite, FID* >= 0, IS* >= 1 - 1e-9;
   * regression ceiling: served FID* must stay below EVAL_FID_MAX
     (env, default 5000 — generous enough for the miniature CI models,
-    tight enough to catch a diverged solver or a broken feature net).
+    tight enough to catch a diverged solver or a broken feature net);
+  * coverage: EVAL_REQUIRE_SOLVERS (env, comma list, default empty)
+    names solvers that MUST contribute parity rows — CI sets
+    adaptive,em,ddim,pc so a silently skipped pool cannot pass.
 
 Usage: python3 tools/check_eval.py bench_out/eval.json
 Exits non-zero with a per-violation report on failure.
@@ -32,6 +39,11 @@ def rel(delta: float, base: float) -> float:
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "bench_out/eval.json"
     fid_max = float(os.environ.get("EVAL_FID_MAX", "5000"))
+    require = [
+        s.strip()
+        for s in os.environ.get("EVAL_REQUIRE_SOLVERS", "").split(",")
+        if s.strip()
+    ]
     with open(path) as f:
         doc = json.load(f)
     rows = doc.get("rows", [])
@@ -41,6 +53,12 @@ def main() -> int:
         errors.append("no rows in eval output")
     if not parity:
         errors.append("no parity entries in eval output (served rows missing?)")
+    for want in require:
+        if not any(p.get("solver") == want for p in parity):
+            errors.append(
+                f"required solver '{want}' has no parity rows "
+                "(pool skipped or artifacts missing?)"
+            )
 
     for r in rows:
         tag = f"{r.get('path')}/{r.get('solver')}/{r.get('knob')}"
@@ -54,6 +72,18 @@ def main() -> int:
             if r["fid"] > fid_max:
                 errors.append(
                     f"{tag}: FID* {r['fid']:.3f} exceeds EVAL_FID_MAX={fid_max}"
+                )
+        if r.get("path") == "served" and r.get("solver") == "pc":
+            # pc knobs are "steps=<n>"; NFE must be 2*steps + 1 exactly
+            # (predictor + corrector score evals, then the denoise call)
+            knob = str(r.get("knob", ""))
+            steps = int(knob.split("=", 1)[1]) if knob.startswith("steps=") else None
+            nfe = r.get("mean_nfe", math.nan)
+            if steps is None:
+                errors.append(f"{tag}: pc row has no steps=<n> knob ({knob!r})")
+            elif not (math.isfinite(nfe) and abs(nfe - (2 * steps + 1)) < 1e-9):
+                errors.append(
+                    f"{tag}: pc NFE {nfe} != 2 x {steps} steps + 1 denoise"
                 )
 
     for p in parity:
@@ -73,7 +103,7 @@ def main() -> int:
     solvers = sorted({p.get("solver") for p in parity})
     print(
         f"[check_eval] {path}: {len(rows)} rows, parity over solvers {solvers}, "
-        f"EVAL_FID_MAX={fid_max}"
+        f"EVAL_FID_MAX={fid_max}, required={require or '-'}"
     )
     if errors:
         for e in errors:

@@ -20,8 +20,10 @@ cargo fmt --check
 
 # FID*-vs-NFE regression thresholds: when the eval bench has produced
 # its JSON (the CI artifacts job runs `cargo bench --bench eval` first),
-# enforce served-vs-offline parity and the FID* ceiling instead of
-# merely uploading the curve.
+# enforce served-vs-offline parity (adaptive/em/ddim and the pc rows,
+# whose NFE must also equal 2 x predictor steps + 1) and the FID*
+# ceiling instead of merely uploading the curve. The CI artifacts job
+# additionally sets EVAL_REQUIRE_SOLVERS so no pool silently skips.
 if [ -f bench_out/eval.json ]; then
   python3 tools/check_eval.py bench_out/eval.json
 fi
