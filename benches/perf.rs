@@ -4,18 +4,26 @@
 //!     (device-resident theta) — the L3 execution-mode lever;
 //!   * fused adaptive_step vs composed (2x score + host math) — the L2
 //!     graph-granularity lever;
-//!   * host-side overhead of one engine iteration (noise gen + copies).
+//!   * host-side overhead of one engine iteration (noise gen + copies);
+//!   * dispatch amortisation: the same em run at steps-per-dispatch
+//!     k in {1, 4, 8} — dispatch count, host<->device bytes per sample,
+//!     and a bitwise output comparison against k = 1. Results land in
+//!     bench_out/perf_dispatch.json, gated in CI by
+//!     tools/check_perf.py.
 //!
 //!   cargo bench --offline --bench perf -- [--iters 20] [--model vp]
+//!       [--dispatch-steps 1000] [--dispatch-samples 4]
 
 #[path = "common.rs"]
 mod common;
 
 use common::*;
 use gofast::bench::{summarize, time_iters, Table};
+use gofast::coordinator::{Engine, EngineConfig};
+use gofast::json::Value;
 use gofast::rng::Rng;
 use gofast::runtime::Runtime;
-use gofast::solvers::{adaptive, Ctx, SolveOpts};
+use gofast::solvers::{adaptive, Ctx, ServingSolver, SolveOpts};
 use gofast::tensor::Tensor;
 use gofast::Result;
 
@@ -100,5 +108,96 @@ fn main() -> Result<()> {
 
     println!("\n=== perf microbenchmarks (model {model_name}) ===\n");
     print!("{}", table.render());
-    write_outputs("perf", &table)
+    write_outputs("perf", &table)?;
+
+    // --- dispatch amortisation: em at steps-per-dispatch 1 / 4 / 8 ----------
+    // The same request (model, solver, n, seed) through three engines
+    // that differ only in k. Bit-identical outputs are part of the
+    // contract (the fused kernels consume pre-drawn noise on the same
+    // streams), so the sweep both measures the dispatch/byte savings
+    // and asserts the equivalence tools/check_perf.py gates on.
+    let em_steps = args.usize_or("dispatch-steps", 1000)?;
+    let n = args.usize_or("dispatch-samples", 4)?;
+    let ebucket = engine_bucket(&model, args.usize_or("bucket", 16)?);
+    let mut disp_table = Table::new(&[
+        "k", "dispatches", "score_evals", "nfe_total", "h2d_bytes", "d2h_bytes",
+        "bytes/sample", "wall", "match_k1",
+    ]);
+    let mut sweep = Vec::new();
+    let mut baseline: Option<(Vec<f32>, u64)> = None; // k=1 images + total nfe
+    println!("\n== dispatch amortisation: em:{em_steps}, n={n}, bucket {ebucket} ==");
+    for k in [1usize, 4, 8] {
+        let mut cfg = EngineConfig::new("artifacts", &model_name);
+        cfg.bucket = ebucket;
+        cfg.programs = vec!["em".to_string()];
+        cfg.steps_per_dispatch = k;
+        let engine = Engine::start(cfg)?;
+        let client = engine.client();
+        let t0 = std::time::Instant::now();
+        let r = match client.generate_with("", ServingSolver::Em { steps: em_steps }, n, 0.05, 11)
+        {
+            Ok(r) => r,
+            Err(e) => {
+                // pre-fused artifact sets un-serve the pool at k > 1;
+                // skip the gate file rather than write a partial sweep
+                println!("  k={k}: not served ({e:#}); skipping perf_dispatch.json");
+                println!("  (rebuild artifacts with fused k-step variants: make artifacts)");
+                return Ok(());
+            }
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = client.stats()?;
+        drop(engine);
+        let nfe_total: u64 = r.nfe.iter().sum();
+        let matches = match &baseline {
+            None => {
+                baseline = Some((r.images.data.clone(), nfe_total));
+                true
+            }
+            Some((img1, _)) => img1[..] == r.images.data[..],
+        };
+        let bytes_per_sample = (stats.bytes_h2d + stats.bytes_d2h) as f64 / n as f64;
+        println!(
+            "  k={k}: dispatches {} score_evals {} nfe {} h2d {} d2h {} ({:.0} B/sample) \
+             wall {wall:.2}s match {matches}",
+            stats.dispatches, stats.score_evals, nfe_total, stats.bytes_h2d, stats.bytes_d2h,
+            bytes_per_sample,
+        );
+        disp_table.row(vec![
+            format!("{k}"),
+            format!("{}", stats.dispatches),
+            format!("{}", stats.score_evals),
+            format!("{nfe_total}"),
+            format!("{}", stats.bytes_h2d),
+            format!("{}", stats.bytes_d2h),
+            format!("{bytes_per_sample:.0}"),
+            format!("{wall:.2}s"),
+            format!("{matches}"),
+        ]);
+        sweep.push(Value::obj(vec![
+            ("k", Value::num(k as f64)),
+            ("dispatches", Value::num(stats.dispatches as f64)),
+            ("score_evals", Value::num(stats.score_evals as f64)),
+            ("nfe_total", Value::num(nfe_total as f64)),
+            ("bytes_h2d", Value::num(stats.bytes_h2d as f64)),
+            ("bytes_d2h", Value::num(stats.bytes_d2h as f64)),
+            ("bytes_per_sample", Value::num(bytes_per_sample)),
+            ("wall_s", Value::num(wall)),
+            ("outputs_match", Value::Bool(matches)),
+        ]));
+    }
+    println!("\n=== perf: dispatch amortisation ===\n");
+    print!("{}", disp_table.render());
+    write_outputs("perf_dispatch", &disp_table)?;
+    let doc = Value::obj(vec![
+        ("model", Value::str(&model_name)),
+        ("solver", Value::str(format!("em:{em_steps}"))),
+        ("samples", Value::num(n as f64)),
+        ("bucket", Value::num(ebucket as f64)),
+        ("sweep", Value::Arr(sweep)),
+    ]);
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/perf_dispatch.json", format!("{doc}"))?;
+    println!("[perf_dispatch] json -> bench_out/perf_dispatch.json");
+    Ok(())
 }

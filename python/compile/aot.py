@@ -8,6 +8,12 @@ One artifact per (model variant, program, batch bucket):
   em_step        (theta, x, t[B], h[B], z[B,D])                 -> x_next
   pc_step        (theta, x, t[B], h[B], z1, z2, snr[B])         -> x_next
   ddim_step      (theta, x, t[B], tn[B])        [VP only]       -> x_next
+  <base>k<k>     (theta, x, t[k,B], t2[k,B], z[k,B,D]..., snr?) -> x_next
+                 fused k-grid-nodes-per-dispatch variant of each
+                 fixed-step kernel (em_stepk8 etc.), lowered with an
+                 UNTUPLED root so the runtime can keep x device-resident
+                 across dispatches; pad rows (h=0 / t_next==t) are exact
+                 no-ops via a per-lane select
   ode_drift      (theta, x, t[B])                               -> dx/dt
   denoise        (theta, x, t[B])                               -> x0_hat
   fid_features   (theta_c, x[B,D])                              -> (feat, logits)
@@ -52,6 +58,26 @@ SCORE_BUCKETS = (1, 16, 64)
 STEP_BUCKETS = (1, 2, 4, 8, 16, 64)
 AUX_BUCKETS = (16, 64)
 FID_BUCKETS = (64,)
+# k values the fused k-steps-per-dispatch variants are lowered at, for
+# every fixed-step kernel and step bucket. Must mirror (or stay within)
+# max_steps_per_dispatch in rust/src/solvers/spec.rs — the registry
+# clamps serving k to both.
+FUSED_STEPS = (4, 8)
+
+# Fixed-step bases that get fused variants: name -> (stacked noise
+# tensors, trailing per-lane snr input). The [k,B] t/t2 stacks are
+# common to all three.
+FUSED_BASES = {
+    "em_step": (1, False),
+    "pc_step": (2, True),
+    "ddim_step": (0, False),
+}
+
+
+def fused_name(base: str, k: int) -> str:
+    """Fused-variant artifact name (em_step, 8 -> "em_stepk8"); the
+    naming contract is shared with solvers/spec.rs::fused_artifact."""
+    return f"{base}k{k}"
 
 # CLI-overridable (see main): CI builds a miniature artifact set with
 # --step-buckets 1,2 so the artifact-gated serving tests run in minutes.
@@ -62,10 +88,14 @@ def _buckets(kind: str, default: tuple[int, ...]) -> tuple[int, ...]:
     return BUCKET_OVERRIDES.get(kind, default)
 
 
-def to_hlo_text(lowered) -> str:
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    # return_tuple=False lowers a bare-array root instead of a 1-tuple:
+    # the fused step artifacts use it so the runtime can feed the output
+    # buffer straight back in as the next dispatch's x (a PjRT tuple
+    # output cannot be reused as an input without a host round-trip).
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
     )
     return comp.as_hlo_text()
 
@@ -138,6 +168,48 @@ def make_programs(cfg: model.ModelCfg):
     }
 
 
+def _fused_driver(step_fn, is_noop):
+    """k-grid-nodes-per-dispatch wrapper around a single-step kernel.
+
+    t/t2 and the noise tensors arrive stacked [k, ...]; iteration j runs
+    the single-step body on row j and then selects the old x for lanes
+    whose row is a no-op pad (a lane with fewer than k nodes left rides
+    the tail with h=0 / t_next==t and draws no noise). The select makes
+    pad rows bit-exact even for kernels whose no-op arithmetic is only
+    approximately the identity (ddim divides and re-multiplies by
+    alpha(t)); live rows run arithmetic identical to the k=1 kernel, so
+    fused outputs match k sequential single-step dispatches bitwise.
+    """
+
+    def run(flat, x, t, t2, *rest):
+        def body(j, xc):
+            xn = step_fn(flat, xc, t[j], t2[j], *[r[j] if r.ndim == 3 else r for r in rest])
+            return jnp.where(is_noop(t[j], t2[j])[:, None], xc, xn)
+
+        return jax.lax.fori_loop(0, t.shape[0], body, x)
+
+    return run
+
+
+def make_fused_programs(cfg: model.ModelCfg):
+    """Fused k-step drivers, one per FUSED_BASES entry. Each driver is
+    k-agnostic (k comes from the stacked input shapes), so one function
+    lowers at every (k, bucket) pair."""
+    progs = make_programs(cfg)
+
+    def noop_h(t, h):
+        return h == 0.0
+
+    def noop_tn(t, tn):
+        return tn == t
+
+    return {
+        "em_step": _fused_driver(progs["em_step"], noop_h),
+        "pc_step": _fused_driver(progs["pc_step"], noop_h),
+        "ddim_step": _fused_driver(progs["ddim_step"], noop_tn),
+    }
+
+
 def program_specs(cfg: model.ModelCfg, n_theta: int):
     """(program -> (buckets, arg-spec builder)). Shapes are the runtime ABI."""
     d = cfg.dim
@@ -158,6 +230,13 @@ def program_specs(cfg: model.ModelCfg, n_theta: int):
             return (theta, f32(b, d), f32(b), f32(b), f32(b, d), f32(b, d), f32(b))
         if program == "ddim_step":
             return (theta, f32(b, d), f32(b), f32(b))
+        base, _, kk = program.rpartition("k")
+        if base in FUSED_BASES and kk.isdigit():
+            k = int(kk)
+            nz, snr = FUSED_BASES[base]
+            sig = (theta, f32(b, d), f32(k, b), f32(k, b))
+            sig += tuple(f32(k, b, d) for _ in range(nz))
+            return sig + ((f32(b),) if snr else ())
         raise KeyError(program)
 
     score_b = _buckets("score", SCORE_BUCKETS)
@@ -209,6 +288,31 @@ def lower_variant(name: str, art_dir: str, manifest: dict):
                 "n_outputs": 3 if program == "adaptive_step" else 1,
             })
             print(f"[aot] {name}/{fname} ({len(text)//1024} KiB)", flush=True)
+    # fused k-step variants ride the same step-bucket ladder; their
+    # manifest entries carry steps_per_dispatch + untupled so the
+    # runtime dispatches them through the device-resident path
+    fused = make_fused_programs(cfg)
+    for base, fn in fused.items():
+        if base == "ddim_step" and cfg.sde_kind != "vp":
+            continue
+        for k in _buckets("fused", FUSED_STEPS):
+            program = fused_name(base, k)
+            for b in buckets[base]:
+                spec = args(b, program)
+                text = to_hlo_text(jax.jit(fn).lower(*spec), return_tuple=False)
+                fname = f"{program}_b{b}.hlo.txt"
+                with open(os.path.join(vdir, fname), "w") as f:
+                    f.write(text)
+                entries.append({
+                    "program": program,
+                    "bucket": b,
+                    "file": f"{name}/{fname}",
+                    "inputs": [list(s.shape) for s in spec],
+                    "n_outputs": 1,
+                    "steps_per_dispatch": k,
+                    "untupled": True,
+                })
+                print(f"[aot] {name}/{fname} ({len(text)//1024} KiB)", flush=True)
     manifest["variants"][name] = {"meta": meta, "programs": entries}
 
 
@@ -261,11 +365,23 @@ def main():
             help=f"comma-separated bucket override (default {default}); "
             "e.g. --step-buckets 1,2 for a miniature CI artifact set",
         )
+    ap.add_argument(
+        "--fused-steps",
+        default=None,
+        help="comma-separated k values to lower fused k-steps-per-dispatch "
+        f"step variants at (default {FUSED_STEPS}; each k must be >= 2); "
+        "an empty string disables fused lowering",
+    )
     args = ap.parse_args()
     for kind in ("score", "step", "aux", "fid"):
         spec = getattr(args, f"{kind}_buckets")
         if spec is not None:
             BUCKET_OVERRIDES[kind] = _bucket_list(spec)
+    if args.fused_steps is not None:
+        ks = _bucket_list(args.fused_steps)
+        if any(k < 2 for k in ks):
+            ap.error("--fused-steps values must be >= 2")
+        BUCKET_OVERRIDES["fused"] = ks
     art = args.out
     manifest = {"variants": {}, "fidnets": {}}
     mpath = os.path.join(art, "manifest.json")

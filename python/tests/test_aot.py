@@ -11,7 +11,14 @@ import numpy as np
 import pytest
 
 from compile import model
-from compile.aot import make_programs, program_specs, to_hlo_text
+from compile.aot import (
+    FUSED_BASES,
+    fused_name,
+    make_fused_programs,
+    make_programs,
+    program_specs,
+    to_hlo_text,
+)
 
 ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
 
@@ -83,6 +90,78 @@ def test_pc_step_is_noop_for_free_lanes(tiny_cfg):
         jnp.zeros((4,), jnp.float32),
     )
     np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_fused_abi(tiny_cfg):
+    """The stacked input ordering Rust's fused dispatch path builds:
+    (theta, x[B,D], t[k,B], t2[k,B], z[k,B,D] x noise_inputs, snr[B]?) —
+    x stays [B,D] (it is the device-resident slab), everything per-node
+    arrives stacked node-major."""
+    n = model.n_params(tiny_cfg)
+    buckets, args = program_specs(tiny_cfg, n)
+    shapes = [s.shape for s in args(4, fused_name("em_step", 8))]
+    assert shapes == [(n,), (4, 128), (8, 4), (8, 4), (8, 4, 128)]
+    shapes = [s.shape for s in args(4, fused_name("pc_step", 4))]
+    assert shapes == [(n,), (4, 128), (4, 4), (4, 4), (4, 4, 128),
+                      (4, 4, 128), (4,)]
+    shapes = [s.shape for s in args(2, fused_name("ddim_step", 8))]
+    assert shapes == [(n,), (2, 128), (8, 2), (8, 2)]
+    with pytest.raises(KeyError):
+        args(4, "em_stepk")  # no bare-k names
+
+
+def _fused_parity_case(cfg, base, k=4, b=3, seed=3):
+    """Fused k-step vs k sequential full-batch single steps with the
+    engine's host-side live-row fold. Lane i runs real[i] real nodes;
+    pad rows carry the no-op defaults the Rust engine sends (t=1, h=0 /
+    tn=t, no noise) and must come back bit-identical."""
+    d = cfg.dim
+    nz, has_snr = FUSED_BASES[base]
+    rng = np.random.default_rng(seed)
+    n = model.n_params(cfg)
+    flat = jnp.asarray(rng.normal(size=(n,), scale=0.05), jnp.float32)
+    x0 = np.asarray(rng.normal(size=(b, d)), np.float32)
+    real = [k, k // 2, 0][:b]  # full lane, short lane, free lane
+    t = np.ones((k, b), np.float32)
+    t2 = np.zeros((k, b), np.float32) if base != "ddim_step" else t.copy()
+    zs = [np.zeros((k, b, d), np.float32) for _ in range(nz)]
+    h = 0.08
+    for i, r in enumerate(real):
+        for j in range(r):
+            t[j, i] = 1.0 - h * j
+            t2[j, i] = h if base != "ddim_step" else t[j, i] - h
+            for z in zs:
+                z[j, i] = rng.normal(size=(d,))
+    snr = (np.full((b,), 0.16, np.float32),) if has_snr else ()
+
+    fused = make_fused_programs(cfg)[base]
+    got = np.asarray(fused(flat, jnp.asarray(x0), jnp.asarray(t),
+                           jnp.asarray(t2), *map(jnp.asarray, zs), *snr))
+
+    step = make_programs(cfg)[base]
+    want = x0.copy()
+    for j in range(k):
+        out = np.asarray(step(flat, jnp.asarray(want), jnp.asarray(t[j]),
+                              jnp.asarray(t2[j]),
+                              *(jnp.asarray(z[j]) for z in zs), *snr))
+        for i, r in enumerate(real):
+            if j < r:  # the k=1 engine folds back live rows only
+                want[i] = out[i]
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(got[-1], x0[-1])  # free lane untouched
+
+
+@pytest.mark.parametrize("base", ["em_step", "pc_step"])
+def test_fused_matches_sequential_single_steps(tiny_cfg, base):
+    _fused_parity_case(tiny_cfg, base)
+
+
+def test_fused_ddim_matches_sequential_on_vp():
+    # ddim is VP-only; its pad rows rely on the select (the divide/
+    # re-multiply by alpha(t) is not the bitwise identity)
+    cfg = model.ModelCfg(dim=128, hidden=128, blocks=1, sde_kind="vp",
+                         sigma_max=10.0)
+    _fused_parity_case(cfg, "ddim_step")
 
 
 needs_artifacts = pytest.mark.skipif(

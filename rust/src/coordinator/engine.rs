@@ -22,7 +22,7 @@ use super::scheduler::migrate_lanes;
 use super::{Msg, Pending, SampleRequest, Sink, Slot};
 use crate::metrics::hist::Histogram;
 use crate::rng::Rng;
-use crate::runtime::{ExecArg, Runtime};
+use crate::runtime::{ExecArg, Model, Runtime};
 use crate::solvers::ServingSolver;
 use crate::tensor::Tensor;
 use crate::{anyhow, Result};
@@ -49,6 +49,13 @@ pub struct EngineConfig {
     /// its widest rung (the pre-scheduler fixed-width behaviour).
     pub migrate: bool,
     pub fused_buffers: bool,
+    /// Grid nodes each fixed-step dispatch advances a lane by (the
+    /// fused k-step kernels + device-resident lane state). 1 preserves
+    /// the single-step host-resident behaviour; higher values are
+    /// clamped per pool to the kernel's `max_steps_per_dispatch` and
+    /// forced to 1 when `fused_buffers` is off (device residency needs
+    /// the buffer path).
+    pub steps_per_dispatch: usize,
     /// Admission control: maximum queued samples before rejecting
     /// (global; per-model quotas live in `qos`).
     pub max_queue_samples: usize,
@@ -71,6 +78,7 @@ impl EngineConfig {
             bucket: 16,
             migrate: true,
             fused_buffers: true,
+            steps_per_dispatch: 1,
             max_queue_samples: 4096,
             qos: QosConfig::default(),
             h_init: 0.01,
@@ -137,10 +145,21 @@ pub struct EngineStats {
     pub steps: u64,
     pub rejections: u64,
     pub score_evals: u64,
+    /// Executable launches, summed over runtimes. At steps-per-dispatch
+    /// k each fixed-step launch advances up to k grid nodes, so this
+    /// falls roughly k-fold while `score_evals` stays put.
+    pub dispatches: u64,
+    /// Host→device bytes copied (lane uploads, staged constants,
+    /// per-call argument transfers).
+    pub bytes_h2d: u64,
+    /// Device→host bytes copied (program outputs, lane downloads).
+    pub bytes_d2h: u64,
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
     pub latency_mean_s: f64,
-    /// Mean occupied slots per step since start (batching efficiency).
+    /// Mean occupied lane-nodes per dispatch since start (batching
+    /// efficiency; equals occupied slots per step at
+    /// steps-per-dispatch 1).
     pub mean_occupancy: f64,
     /// Models served, default first.
     pub models: Vec<String>,
@@ -152,10 +171,12 @@ pub struct EngineStats {
     /// Pool-width switches, summed over models & programs.
     pub migrations_up: u64,
     pub migrations_down: u64,
-    /// Free lanes advanced through steps as exact no-ops — the cost the
-    /// bucket scheduler exists to shrink.
+    /// Lane-nodes spent on exact no-ops: free lanes riding steps (the
+    /// cost the bucket scheduler exists to shrink) plus, at
+    /// steps-per-dispatch > 1, the no-op tail nodes of lanes whose
+    /// remaining schedule was shorter than k.
     pub wasted_lane_steps: u64,
-    /// Occupied lanes advanced through steps.
+    /// Real grid nodes occupied lanes advanced through.
     pub occupied_lane_steps: u64,
     /// Engine-served evaluation runs completed.
     pub evals_done: u64,
@@ -321,8 +342,11 @@ fn engine_main(
             return;
         }
     };
+    // device residency rides the buffer path; with fused buffers off the
+    // engine stays single-step and host-resident regardless of config
+    let steps = if cfg.fused_buffers { cfg.steps_per_dispatch } else { 1 };
     let registry =
-        match Registry::load(&rt, &cfg.models, cfg.bucket, cfg.migrate, &cfg.programs) {
+        match Registry::load(&rt, &cfg.models, cfg.bucket, cfg.migrate, &cfg.programs, steps) {
             Ok(r) => r,
             Err(e) => {
                 let _ = ready.send(Err(format!("{e:#}")));
@@ -387,9 +411,13 @@ fn engine_main(
         if let Some(flat) = next {
             let (mi, pi) = st.registry.pool_at(flat);
             st.shed_expired(mi, pi);
-            st.rebucket(mi, pi);
-            st.admit(mi, pi);
-            if st.registry.entries()[mi].pools[pi].active() > 0 {
+            // rebucket/admit can fail only on a device sync of a
+            // device-resident pool; that is the same fault domain as a
+            // step failure, so it gets the same isolation
+            let prep = st.rebucket(mi, pi).and_then(|()| st.admit(mi, pi));
+            if let Err(e) = prep {
+                st.fail_pool(mi, pi, &format!("engine step failed: {e:#}"));
+            } else if st.registry.entries()[mi].pools[pi].active() > 0 {
                 match st.step(mi, pi) {
                     Ok(eval_chunks) => st.on_eval_chunks(mi, pi, eval_chunks),
                     Err(e) => {
@@ -621,16 +649,21 @@ impl<'rt> EngineState<'rt> {
 
     /// Switch pool `(mi, pi)` to the scheduler's target width, migrating
     /// live lanes. A no-op unless the target differs from the current
-    /// width.
-    fn rebucket(&mut self, mi: usize, pi: usize) {
+    /// width. Device-resident pools download their slab first (the host
+    /// row remap is the migration contract) and re-upload lazily on the
+    /// next fused dispatch.
+    fn rebucket(&mut self, mi: usize, pi: usize) -> Result<()> {
         let demand = self.pool_demand(mi, pi);
-        let pool = &mut self.registry.entry_mut(mi).pools[pi];
+        let ModelEntry { model, pools, .. } = self.registry.entry_mut(mi);
+        let pool = &mut pools[pi];
         let active = pool.active();
         let target = pool.sched.target_width(active, demand);
         if target != pool.sched.width() {
+            sync_pool_host(model, pool)?;
             migrate_lanes(&mut pool.slots, &mut pool.x, &mut pool.xprev, target);
             pool.sched.set_width(target);
         }
+        Ok(())
     }
 
     /// Priority-ordered FIFO admission of queued samples into pool
@@ -640,7 +673,7 @@ impl<'rt> EngineState<'rt> {
     /// pool's program supplies the per-lane integration state. A
     /// per-model `max_active_lanes` quota pauses admission at the cap;
     /// it resumes as lanes free up.
-    fn admit(&mut self, mi: usize, pi: usize) {
+    fn admit(&mut self, mi: usize, pi: usize) -> Result<()> {
         let EngineState { registry, pending, queued_samples, cfg, qos, .. } = self;
         let e = registry.entry_mut(mi);
         let lane_cap = qos.quotas[mi].max_active_lanes;
@@ -650,7 +683,24 @@ impl<'rt> EngineState<'rt> {
         // need it to resolve process-dependent lane state (the PC
         // default SNR)
         let process = e.process;
-        let ProgramPool { program, slots, x, xprev, fifo, .. } = &mut e.pools[pi];
+        let ModelEntry { model, pools, .. } = e;
+        let pool = &mut pools[pi];
+        // admission writes prior draws into host rows, so a
+        // device-resident pool must pull its slab back first — but only
+        // when admission will actually happen (a free slot under the
+        // lane cap and a request with samples left), not on every
+        // service turn of a busy pool
+        if pool.dev_x.is_some()
+            && !lane_cap.is_some_and(|c| model_active >= c)
+            && pool.slots.iter().any(|s| s.is_free())
+            && pool
+                .fifo
+                .iter()
+                .any(|id| pending.get(id).is_some_and(|p| p.next_sample < p.req.n))
+        {
+            sync_pool_host(model, pool)?;
+        }
+        let ProgramPool { program, slots, x, xprev, fifo, .. } = pool;
         let mut fi = 0;
         for si in 0..slots.len() {
             if !slots[si].is_free() {
@@ -709,6 +759,7 @@ impl<'rt> EngineState<'rt> {
         }
         // drop fully-admitted-and-finished request ids from fifo head
         fifo.retain(|id| pending.contains_key(id));
+        Ok(())
     }
 
     /// One fused step of pool `(mi, pi)`'s program at its current width.
@@ -728,7 +779,9 @@ impl<'rt> EngineState<'rt> {
         evals.eval_lane_steps += eval_occupied;
         let outcome = {
             let ModelEntry { model, process, pools } = e;
-            let ProgramPool { program, slots, x, xprev, .. } = &mut pools[pi];
+            let ProgramPool { program, slots, x, xprev, dev_x, steps_per_dispatch, .. } =
+                &mut pools[pi];
+            let k = *steps_per_dispatch;
             program.step(StepIo {
                 model: &*model,
                 process: &*process,
@@ -736,12 +789,15 @@ impl<'rt> EngineState<'rt> {
                 slots: slots.as_mut_slice(),
                 x,
                 xprev,
+                dev_x,
+                steps_per_dispatch: k,
             })?
         };
         metrics.steps += 1;
         metrics.rejections += outcome.rejections;
         let e = registry.entry_mut(mi);
-        e.pools[pi].sched.note_step(outcome.occupied);
+        let k = e.pools[pi].steps_per_dispatch;
+        e.pools[pi].sched.note_step(outcome.lane_nodes, k);
         if outcome.converged.is_empty() {
             return Ok(Vec::new());
         }
@@ -754,6 +810,9 @@ impl<'rt> EngineState<'rt> {
     /// untouched.
     fn fail_pool(&mut self, mi: usize, pi: usize, msg: &str) {
         let pool = &mut self.registry.entry_mut(mi).pools[pi];
+        // lane state is discarded wholesale, so the slab is dropped
+        // without a download
+        pool.dev_x = None;
         let mut ids: Vec<u64> = pool.fifo.drain(..).collect();
         for s in pool.slots.iter_mut() {
             if let Slot::Running { req_id, .. } = *s {
@@ -845,6 +904,7 @@ impl<'rt> EngineState<'rt> {
             }
         }
         steps_per_bucket.sort();
+        let rt = self.registry.entries()[0].model.runtime().stats();
         EngineStats {
             requests_done: self.metrics.requests_done,
             samples_done: self.metrics.samples_done,
@@ -852,7 +912,10 @@ impl<'rt> EngineState<'rt> {
             active_slots,
             steps: self.metrics.steps,
             rejections: self.metrics.rejections,
-            score_evals: self.registry.entries()[0].model.runtime().stats().score_evals,
+            score_evals: rt.score_evals,
+            dispatches: rt.dispatches,
+            bytes_h2d: rt.bytes_h2d,
+            bytes_d2h: rt.bytes_d2h,
             latency_p50_s: self.metrics.latency.quantile(0.5),
             latency_p95_s: self.metrics.latency.quantile(0.95),
             latency_mean_s: self.metrics.latency.mean(),
@@ -896,10 +959,17 @@ fn finish_lanes(
 ) -> Result<Vec<(u64, usize, GenResult)>> {
     let b = e.pools[pi].sched.width();
     let t_end = crate::solvers::t_vec(b, e.process.t_eps());
+    // device-resident pools denoise straight from the slab (the host
+    // rows of live lanes are stale); a slab only exists when the engine
+    // runs fused buffers, so the buffer exec path is guaranteed here
+    let x_arg = match e.pools[pi].dev_x.as_ref() {
+        Some(slab) => ExecArg::Device(slab),
+        None => ExecArg::Host(&e.pools[pi].x),
+    };
     let mut out = e.model.exec_args(
         "denoise",
         b,
-        &[ExecArg::Host(&e.pools[pi].x), ExecArg::Const("t_end", &t_end)],
+        &[x_arg, ExecArg::Const("t_end", &t_end)],
         fused_buffers,
     )?;
     let x0 = out.pop().unwrap();
@@ -956,4 +1026,16 @@ fn finish_lanes(
         e.pools[pi].slots[i] = Slot::Free;
     }
     Ok(eval_done)
+}
+
+/// Pull a device-resident pool's lane state back into its host `x`
+/// (bit-exact) and drop the slab. Anything that touches host rows —
+/// admission of new lanes, bucket migration — must run against current
+/// state; the next fused dispatch re-uploads. No-op for pools without a
+/// live slab (k=1 pools never grow one).
+fn sync_pool_host(model: &Model<'_>, pool: &mut ProgramPool) -> Result<()> {
+    if let Some(slab) = pool.dev_x.take() {
+        pool.x = model.download(&slab)?;
+    }
+    Ok(())
 }

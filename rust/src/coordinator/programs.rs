@@ -33,9 +33,9 @@
 
 use super::engine::EngineConfig;
 use super::{SampleRequest, Slot};
-use crate::runtime::{ExecArg, Model};
+use crate::runtime::{DeviceSlab, ExecArg, Model};
 use crate::sde::Process;
-use crate::solvers::spec::{StepKernel, TimeArg};
+use crate::solvers::spec::{fused_artifact, StepKernel, TimeArg};
 use crate::solvers::{rdl, uniform_t};
 use crate::tensor::Tensor;
 use crate::{bail, Result};
@@ -64,12 +64,26 @@ pub(crate) struct StepIo<'a, 'rt> {
     pub slots: &'a mut [Slot],
     pub x: &'a mut Tensor,
     pub xprev: &'a mut Tensor,
+    /// Device-resident lane state (fixed-step pools at
+    /// `steps_per_dispatch > 1`): `None` means the host `x` is current
+    /// and the next fused dispatch re-uploads it (admission, migration);
+    /// `Some` means the slab is current and the host `x` is stale. Pools
+    /// at k = 1 never touch it.
+    pub dev_x: &'a mut Option<DeviceSlab>,
+    /// Grid nodes each fused dispatch advances a live lane by (the
+    /// pool's resolved `k`; 1 = today's single-step host path).
+    pub steps_per_dispatch: usize,
 }
 
 /// Outcome of one fused pool step.
 pub(crate) struct StepOutcome {
     /// Lanes that were live during the step (occupancy numerator).
     pub occupied: usize,
+    /// Real grid nodes advanced across all live lanes this dispatch
+    /// (no-op tail padding excluded) — `occupied` x k for a full fused
+    /// dispatch, less when lanes ride the tail. Equals `occupied` at
+    /// k = 1.
+    pub lane_nodes: u64,
     /// Rejected proposals (adaptive programs only).
     pub rejections: u64,
     /// Lanes that completed their trajectory this step (to denoise).
@@ -211,7 +225,7 @@ impl LaneProgram for AdaptiveProgram {
             let grow = io.cfg.safety * err.max(1e-12).powf(-io.cfg.r);
             *h = (*h * grow).min((*t - t_eps).max(0.0));
         }
-        Ok(StepOutcome { occupied, rejections, converged })
+        Ok(StepOutcome { occupied, lane_nodes: occupied as u64, rejections, converged })
     }
 }
 
@@ -268,6 +282,9 @@ impl LaneProgram for FixedProgram {
             // reachable serving path
             bail!("{} pool on a non-VP model", self.kernel.artifact);
         }
+        if io.steps_per_dispatch > 1 {
+            return self.step_fused(io);
+        }
         let b = io.slots.len();
         let dim = io.model.meta.dim;
         let t_eps = io.process.t_eps();
@@ -315,7 +332,99 @@ impl LaneProgram for FixedProgram {
         let out = io.model.exec_args(self.kernel.artifact, b, &args, io.cfg.fused_buffers)?;
         let converged =
             fold_fixed_step(io.slots, io.x, &out[0], self.kernel.score_evals_per_step);
-        Ok(StepOutcome { occupied, rejections: 0, converged })
+        Ok(StepOutcome { occupied, lane_nodes: occupied as u64, rejections: 0, converged })
+    }
+}
+
+impl FixedProgram {
+    /// Device-resident fused path: one dispatch of the k-step artifact
+    /// advances every live lane by up to k grid nodes, with `x` staying
+    /// on device between dispatches. The per-step inputs are stacked
+    /// `t/t2[k, B]` and noise `[k, B, dim]`; a lane with fewer than k
+    /// nodes left rides the tail rows as exact no-ops (`h = 0` /
+    /// `t_next = t = 1`, no noise drawn), so its RNG stream and output
+    /// bits match the k = 1 path exactly. Host-side bookkeeping (done,
+    /// nfe) folds only the real nodes; `x` rows are NOT copied back —
+    /// the output slab becomes the next dispatch's input, and the
+    /// engine downloads it only at admission, migration, or completion.
+    fn step_fused(&self, io: StepIo<'_, '_>) -> Result<StepOutcome> {
+        let b = io.slots.len();
+        let dim = io.model.meta.dim;
+        let k = io.steps_per_dispatch;
+        let t_eps = io.process.t_eps();
+        let free_t2 = match self.kernel.time {
+            TimeArg::StepSize => 0.0f32,
+            TimeArg::NextTime => 1.0f32,
+        };
+        // defaults are the no-op row (t = 1, h = 0 / t_next = 1): free
+        // lanes and live-lane tail rows both keep them
+        let mut t_in = vec![1.0f32; k * b];
+        let mut t2_in = vec![free_t2; k * b];
+        let mut snr_in = vec![0.0f32; b];
+        let mut noise: Vec<Tensor> =
+            (0..self.kernel.noise_inputs).map(|_| Tensor::zeros(&[k, b, dim])).collect();
+        let mut occupied = 0usize;
+        let mut lane_nodes = 0u64;
+        let mut real = vec![0usize; b];
+        for (i, slot) in io.slots.iter_mut().enumerate() {
+            if let Slot::Running { rng, state: LaneState::Fixed { done, total, snr }, .. } = slot
+            {
+                occupied += 1;
+                let r = k.min(*total - *done);
+                real[i] = r;
+                lane_nodes += r as u64;
+                snr_in[i] = *snr as f32;
+                for j in 0..r {
+                    let t = uniform_t(t_eps, *total, *done + j);
+                    let tn = uniform_t(t_eps, *total, *done + j + 1);
+                    t_in[j * b + i] = t as f32;
+                    t2_in[j * b + i] = match self.kernel.time {
+                        TimeArg::StepSize => (t - tn) as f32,
+                        TimeArg::NextTime => tn as f32,
+                    };
+                    // z1 then z2 per node, node-major — the exact draw
+                    // order k sequential single steps would consume
+                    for z in noise.iter_mut() {
+                        rng.fill_normal(z.row_mut(j * b + i));
+                    }
+                }
+            }
+        }
+        let t_t = Tensor { shape: vec![k, b], data: t_in };
+        let t2_t = Tensor { shape: vec![k, b], data: t2_in };
+        let snr_t = Tensor { shape: vec![b], data: snr_in };
+        if io.dev_x.is_none() {
+            // first fused dispatch after admission/migration: the host
+            // x is current, stage it device-resident
+            *io.dev_x = Some(io.model.upload(io.x)?);
+        }
+        let artifact = fused_artifact(self.kernel.artifact, k);
+        let out = {
+            let slab = io.dev_x.as_ref().expect("uploaded above");
+            let mut args: Vec<ExecArg<'_>> =
+                vec![ExecArg::Device(slab), ExecArg::Host(&t_t), ExecArg::Host(&t2_t)];
+            for z in &noise {
+                args.push(ExecArg::Host(z));
+            }
+            if self.kernel.snr_input {
+                args.push(ExecArg::Host(&snr_t));
+            }
+            io.model.exec_device(&artifact, b, &args)?
+        };
+        *io.dev_x = Some(out);
+        let mut converged = Vec::new();
+        for (i, slot) in io.slots.iter_mut().enumerate() {
+            let Slot::Running { nfe, state: LaneState::Fixed { done, total, .. }, .. } = slot
+            else {
+                continue;
+            };
+            *nfe += self.kernel.score_evals_per_step * real[i] as u64;
+            *done += real[i];
+            if *done == *total {
+                converged.push(i);
+            }
+        }
+        Ok(StepOutcome { occupied, lane_nodes, rejections: 0, converged })
     }
 }
 

@@ -24,8 +24,9 @@
 use super::programs::{self, LaneProgram};
 use super::scheduler::BucketScheduler;
 use super::Slot;
-use crate::runtime::{Model, Runtime};
+use crate::runtime::{DeviceSlab, Model, Runtime};
 use crate::sde::Process;
+use crate::solvers::spec::fused_artifact;
 use crate::solvers::ServingSolver;
 use crate::tensor::Tensor;
 use crate::{anyhow, bail, Result};
@@ -40,6 +41,15 @@ pub(crate) struct ProgramPool {
     /// migrated with `x` for every program (fixed-step programs simply
     /// never read it).
     pub xprev: Tensor,
+    /// Device-resident lane state for fused pools (k > 1): when `Some`,
+    /// the slab is current and the host `x` is stale; the engine
+    /// downloads it back into `x` (and drops it) before anything reads
+    /// or writes host rows — admission, migration, pool failure. The
+    /// `xprev` companion stays host-only: no fixed-step kernel reads or
+    /// writes it, so keeping a device copy would only widen transfers.
+    pub dev_x: Option<DeviceSlab>,
+    /// Grid nodes per dispatch this pool runs at (1 = single-step).
+    pub steps_per_dispatch: usize,
     /// Request ids (into the engine's pending map) in arrival order.
     pub fifo: Vec<u64>,
     pub sched: BucketScheduler,
@@ -71,20 +81,44 @@ impl ModelEntry<'_> {
 /// Whether the manifest-recorded input shapes of `solver`'s step
 /// artifact at `bucket` match what the descriptor-driven fixed program
 /// will feed it: `theta, x[b,d], t[b], t2[b], noise[b,d] x N, snr[b]?`
-/// (see `solvers::spec::STEP_KERNELS`). Adaptive keeps its own strict
-/// validation; manifests without the entry are accepted (the rung was
-/// already filtered by `has_artifact`).
-fn kernel_abi_matches(model: &Model, solver: &str, bucket: usize) -> bool {
+/// at `steps = 1`, or the fused-variant stacking `theta, x[b,d],
+/// t[k,b], t2[k,b], noise[k,b,d] x N, snr[b]?` at `steps = k > 1` (see
+/// `solvers::spec::STEP_KERNELS` / aot.py). Adaptive keeps its own
+/// strict validation; manifests without the single-step entry are
+/// accepted (the rung was already filtered by `has_artifact`) — but a
+/// fused rung whose manifest lacks the k-step entry is rejected, which
+/// is what cleanly un-serves a pre-fused artifact set instead of
+/// faulting mid-step.
+fn kernel_abi_matches(model: &Model, solver: &str, bucket: usize, steps: usize) -> bool {
     let Some(k) = crate::solvers::spec::kernel(solver) else {
         return true;
     };
     if k.adaptive {
         return true;
     }
+    let d = model.meta.dim;
+    if steps > 1 {
+        let fused = fused_artifact(k.artifact, steps);
+        let Some(inputs) = model.artifact_inputs(&fused, bucket) else {
+            return false;
+        };
+        let mut want: Vec<Vec<usize>> = vec![
+            vec![model.meta.n_params],
+            vec![bucket, d],
+            vec![steps, bucket],
+            vec![steps, bucket],
+        ];
+        for _ in 0..k.noise_inputs {
+            want.push(vec![steps, bucket, d]);
+        }
+        if k.snr_input {
+            want.push(vec![bucket]);
+        }
+        return inputs == want.as_slice();
+    }
     let Some(inputs) = model.artifact_inputs(k.artifact, bucket) else {
         return true;
     };
-    let d = model.meta.dim;
     let mut want: Vec<Vec<usize>> =
         vec![vec![model.meta.n_params], vec![bucket, d], vec![bucket], vec![bucket]];
     for _ in 0..k.noise_inputs {
@@ -108,12 +142,17 @@ impl<'rt> Registry<'rt> {
     /// across every compiled rung <= `max_bucket`; fixed-step pools use
     /// the widest rung their own artifacts provide under the same cap.
     /// With `migrate` off every pool is pinned at its widest rung.
+    /// `steps_per_dispatch` is the requested fused k; each fixed-step
+    /// pool clamps it to its kernel's `max_steps_per_dispatch` (adaptive
+    /// pools always run at 1), and a pool whose artifacts lack the
+    /// fused k-step variant is left unserved rather than built broken.
     pub fn load(
         rt: &'rt Runtime,
         names: &[String],
         max_bucket: usize,
         migrate: bool,
         programs: &[String],
+        steps_per_dispatch: usize,
     ) -> Result<Registry<'rt>> {
         if names.is_empty() {
             bail!("registry needs at least one model");
@@ -162,6 +201,12 @@ impl<'rt> Registry<'rt> {
                 // of per-lane snr[B], must leave the pool unserved with
                 // a clean rebuild-artifacts admission error, not fault
                 // every request mid-step on an argument-shape error)
+                // resolved fused k for this pool: the serve request
+                // clamped to the kernel's table row (adaptive stays 1)
+                let kernel = crate::solvers::spec::kernel(program.solver_name())
+                    .expect("for_solver implies a table row");
+                let k = steps_per_dispatch.clamp(1, kernel.max_steps_per_dispatch);
+                let fused_step = fused_artifact(step, k);
                 let ladder: Vec<usize> = model
                     .buckets(step)
                     .iter()
@@ -169,12 +214,14 @@ impl<'rt> Registry<'rt> {
                     .filter(|&b| {
                         b <= max_bucket
                             && model.has_artifact(step, b)
+                            && (k == 1 || model.has_artifact(&fused_step, b))
                             && model.has_artifact("denoise", b)
-                            && kernel_abi_matches(&model, program.solver_name(), b)
+                            && kernel_abi_matches(&model, program.solver_name(), b, k)
                     })
                     .collect();
                 if ladder.is_empty() {
-                    continue; // fixed-step pool absent: clean error at admit
+                    continue; // pool absent (incl. pre-fused artifact
+                              // sets at k > 1): clean error at admit
                 }
                 let ladder = if migrate { ladder } else { vec![*ladder.last().unwrap()] };
                 let dim = model.meta.dim;
@@ -185,6 +232,8 @@ impl<'rt> Registry<'rt> {
                     slots: vec![Slot::Free; width],
                     x: Tensor::zeros(&[width, dim]),
                     xprev: Tensor::zeros(&[width, dim]),
+                    dev_x: None,
+                    steps_per_dispatch: k,
                     fifo: Vec::new(),
                     sched,
                 });

@@ -92,13 +92,16 @@ impl BucketScheduler {
         self.width = new_width;
     }
 
-    /// Account one executed step at the current width with `occupied`
-    /// live lanes.
-    pub fn note_step(&mut self, occupied: usize) {
+    /// Account one executed dispatch at the current width advancing
+    /// `lane_nodes` real lane-grid-nodes. A dispatch covers `k` nodes
+    /// per lane slot (k = 1 for single-step pools), so the waste metric
+    /// counts the `width * k` node capacity not spent on live work —
+    /// free lanes and fused no-op tail rows alike.
+    pub fn note_step(&mut self, lane_nodes: u64, k: usize) {
         let i = self.ladder.iter().position(|&b| b == self.width).expect("width on ladder");
         self.steps[i] += 1;
-        self.occupied_lane_steps += occupied as u64;
-        self.wasted_lane_steps += (self.width - occupied) as u64;
+        self.occupied_lane_steps += lane_nodes;
+        self.wasted_lane_steps += (self.width * k) as u64 - lane_nodes;
     }
 
     /// `(bucket, steps run at it)` ascending, zero entries included.
@@ -191,16 +194,29 @@ mod tests {
     #[test]
     fn step_accounting_splits_waste_and_work() {
         let mut s = sched();
-        s.note_step(10); // width 16
+        s.note_step(10, 1); // width 16
         s.set_width(4);
-        s.note_step(3);
-        s.note_step(3);
+        s.note_step(3, 1);
+        s.note_step(3, 1);
         assert_eq!(s.occupied_lane_steps, 16);
         assert_eq!(s.wasted_lane_steps, 6 + 1 + 1);
         assert_eq!(s.migrations_down, 1);
         assert_eq!(s.migrations_up, 0);
         let per = s.steps_per_bucket();
         assert_eq!(per, vec![(1, 0), (2, 0), (4, 2), (8, 0), (16, 1)]);
+    }
+
+    /// A fused dispatch covers `width * k` node capacity: real lane
+    /// nodes count as work, no-op tail rows and free lanes as waste.
+    #[test]
+    fn fused_dispatch_accounting_charges_tail_noops_as_waste() {
+        let mut s = sched();
+        s.set_width(4);
+        // 3 live lanes, k = 8, one lane with only 2 nodes left:
+        // 8 + 8 + 2 = 18 real nodes of 32 capacity
+        s.note_step(18, 8);
+        assert_eq!(s.occupied_lane_steps, 18);
+        assert_eq!(s.wasted_lane_steps, 32 - 18);
     }
 
     fn lane(req_id: u64, seed: u64) -> Slot {

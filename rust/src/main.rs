@@ -62,9 +62,14 @@ USAGE: gofast <command> [flags]
             [--artifacts artifacts]
   serve     [--config configs/server.toml] [--models vp,ve]
             [--solvers adaptive,em,ddim,pc] [--max-bucket 16] [--no-migrate]
-            [--weights vp=3,ve=1|vp/em=0.5] [--quota vp=256]
-            [--quota-lanes vp=8] [--default-priority interactive|batch]
-            [--set k=v ...]
+            [--steps-per-dispatch 1] [--weights vp=3,ve=1|vp/em=0.5]
+            [--quota vp=256] [--quota-lanes vp=8]
+            [--default-priority interactive|batch] [--set k=v ...]
+            (--steps-per-dispatch k>1 keeps fixed-step lane state
+             device-resident and advances k grid nodes per kernel
+             launch via the fused k-step artifacts — bit-identical
+             samples, ~k-fold fewer dispatches; pools whose artifacts
+             lack the fused variants are left unserved)
             (QoS: --weights sets deficit-round-robin pool weights keyed
              model or model/program; --quota caps queued samples and
              --quota-lanes active lanes per model; requests may carry
@@ -257,6 +262,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     ecfg.bucket = bucket;
     ecfg.migrate = migrate;
     ecfg.fused_buffers = cfg.bool_or("server.fused_buffers", true)?;
+    ecfg.steps_per_dispatch = args.usize_or(
+        "steps-per-dispatch",
+        cfg.usize_or("server.steps_per_dispatch", 1)?,
+    )?;
+    if ecfg.steps_per_dispatch == 0 {
+        bail!("--steps-per-dispatch must be >= 1");
+    }
     ecfg.max_queue_samples = cfg.usize_or("server.max_queue_samples", 4096)?;
     ecfg.qos = qcfg;
 

@@ -91,6 +91,14 @@ pub fn score_evals_per_call(program: &str) -> u64 {
     if let Some(k) = crate::solvers::spec::kernel_for_artifact(program) {
         return k.score_evals_per_step;
     }
+    // a fused k-step dispatch runs the single-step body k times (no-op
+    // tail rows still execute the score net — the select only fixes the
+    // lane state, not the device work, so the raw counter is honest
+    // about computation; per-sample NFE is accounted separately by the
+    // engine from real, non-pad steps)
+    if let Some((k, steps)) = crate::solvers::spec::kernel_for_fused_artifact(program) {
+        return k.score_evals_per_step * steps as u64;
+    }
     match program {
         "score" | "ode_drift" | "denoise" => 1,
         _ => 0,
@@ -138,6 +146,15 @@ pub struct FidMeta {
 pub struct RuntimeStats {
     pub calls: Vec<(String, u64)>,
     pub score_evals: u64,
+    /// Executable launches (every program call, fused or not) — the
+    /// host↔device synchronization count the k-step path amortises.
+    pub dispatches: u64,
+    /// Host→device bytes staged (theta/const first fills, per-call Host
+    /// tensors, lane-state uploads; literal-path argument uploads too).
+    pub bytes_h2d: u64,
+    /// Device→host bytes pulled back (program outputs, lane-state
+    /// downloads).
+    pub bytes_d2h: u64,
 }
 
 pub struct Runtime {
@@ -147,6 +164,9 @@ pub struct Runtime {
     exes: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
     calls: RefCell<HashMap<String, u64>>,
     score_evals: Cell<u64>,
+    dispatches: Cell<u64>,
+    bytes_h2d: Cell<u64>,
+    bytes_d2h: Cell<u64>,
 }
 
 impl Runtime {
@@ -160,6 +180,9 @@ impl Runtime {
             exes: RefCell::new(HashMap::new()),
             calls: RefCell::new(HashMap::new()),
             score_evals: Cell::new(0),
+            dispatches: Cell::new(0),
+            bytes_h2d: Cell::new(0),
+            bytes_d2h: Cell::new(0),
         })
     }
 
@@ -191,18 +214,36 @@ impl Runtime {
     fn note_call(&self, program: &str) {
         *self.calls.borrow_mut().entry(program.to_string()).or_insert(0) += 1;
         self.score_evals.set(self.score_evals.get() + score_evals_per_call(program));
+        self.dispatches.set(self.dispatches.get() + 1);
+    }
+
+    fn note_h2d(&self, bytes: u64) {
+        self.bytes_h2d.set(self.bytes_h2d.get() + bytes);
+    }
+
+    fn note_d2h(&self, bytes: u64) {
+        self.bytes_d2h.set(self.bytes_d2h.get() + bytes);
     }
 
     pub fn stats(&self) -> RuntimeStats {
         let mut calls: Vec<(String, u64)> =
             self.calls.borrow().iter().map(|(k, v)| (k.clone(), *v)).collect();
         calls.sort();
-        RuntimeStats { calls, score_evals: self.score_evals.get() }
+        RuntimeStats {
+            calls,
+            score_evals: self.score_evals.get(),
+            dispatches: self.dispatches.get(),
+            bytes_h2d: self.bytes_h2d.get(),
+            bytes_d2h: self.bytes_d2h.get(),
+        }
     }
 
     pub fn reset_stats(&self) {
         self.calls.borrow_mut().clear();
         self.score_evals.set(0);
+        self.dispatches.set(0);
+        self.bytes_h2d.set(0);
+        self.bytes_d2h.set(0);
     }
 
     /// Load a score-model variant: metadata, flat params, artifact set.
@@ -258,6 +299,8 @@ impl Runtime {
             theta_host: theta,
             theta_buf: RefCell::new(None),
             const_bufs: RefCell::new(HashMap::new()),
+            exes: RefCell::new(HashMap::new()),
+            exe_misses: Cell::new(0),
             files,
             input_shapes,
             meta,
@@ -296,6 +339,26 @@ impl Runtime {
     }
 }
 
+/// A device-resident tensor the engine keeps alive between dispatches
+/// (the lane-state slab `x` of a fused k-step pool). Holding the `Rc`
+/// keeps the PJRT buffer alive; the shape is tracked host-side for byte
+/// accounting and output-shape derivation.
+#[derive(Clone)]
+pub struct DeviceSlab {
+    buf: Rc<PjRtBuffer>,
+    shape: Vec<usize>,
+}
+
+impl DeviceSlab {
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    fn bytes(&self) -> u64 {
+        self.shape.iter().product::<usize>() as u64 * 4
+    }
+}
+
 /// An input to `Model::exec_args`.
 pub enum ExecArg<'a> {
     /// Per-call tensor, uploaded fresh on the buffer path.
@@ -304,6 +367,10 @@ pub enum ExecArg<'a> {
     /// bucket) and reused across calls; the value fills the cache on
     /// first use (and is sent directly on the literal path).
     Const(&'a str, &'a Tensor),
+    /// Already-device-resident tensor ([`Model::upload`] or a previous
+    /// [`Model::exec_device`] output) — no staging cost at all. Only
+    /// valid on the buffer path; the literal path has no device state.
+    Device(&'a DeviceSlab),
 }
 
 /// A loaded score-model variant: metadata + device-ready parameters +
@@ -316,6 +383,12 @@ pub struct Model<'rt> {
     theta_buf: RefCell<Option<Rc<PjRtBuffer>>>,
     /// Device-resident step constants keyed by (tag, bucket).
     const_bufs: RefCell<HashMap<(String, usize), Rc<PjRtBuffer>>>,
+    /// Per-(program, bucket) executables, resolved through the runtime
+    /// once and then served from this model-level map — the same cache
+    /// path the `Const` staging uses, so steady-state dispatch does one
+    /// map hit instead of a string format + runtime lookup per call.
+    exes: RefCell<HashMap<(String, usize), Rc<PjRtLoadedExecutable>>>,
+    exe_misses: Cell<u64>,
     files: HashMap<(String, usize), String>,
     /// Manifest-recorded input shapes (the compiled ABI) per
     /// (program, bucket).
@@ -360,11 +433,24 @@ impl<'rt> Model<'rt> {
     }
 
     fn exe(&self, program: &str, bucket: usize) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(&(program.to_string(), bucket)) {
+            return Ok(exe.clone());
+        }
+        self.exe_misses.set(self.exe_misses.get() + 1);
         let rel = self
             .files
             .get(&(program.to_string(), bucket))
             .ok_or_else(|| anyhow!("{}: no artifact {program}_b{bucket}", self.meta.name))?;
-        self.rt.executable(&format!("{}/{program}_b{bucket}", self.meta.name), rel)
+        let exe = self.rt.executable(&format!("{}/{program}_b{bucket}", self.meta.name), rel)?;
+        self.exes.borrow_mut().insert((program.to_string(), bucket), exe.clone());
+        Ok(exe)
+    }
+
+    /// Times `exe` fell through this model's (program, bucket) map to
+    /// the runtime lookup — steady-state dispatch must not grow this
+    /// (pinned by the cache-reuse integration test).
+    pub fn exe_cache_misses(&self) -> u64 {
+        self.exe_misses.get()
     }
 
     /// Baseline path: all args as literals (theta re-uploaded every call).
@@ -377,11 +463,16 @@ impl<'rt> Model<'rt> {
         let exe = self.exe(program, bucket)?;
         let mut args: Vec<Literal> = Vec::with_capacity(inputs.len() + 1);
         args.push(self.theta_lit.clone_literal()?);
+        let mut up = self.theta_host.data.len() as u64 * 4;
         for t in inputs {
+            up += t.data.len() as u64 * 4;
             args.push(tensor_to_literal(t)?);
         }
         self.rt.note_call(program);
-        run(&exe, ExecArgs::Literals(&args))
+        self.rt.note_h2d(up);
+        let out = run(&exe, ExecArgs::Literals(&args))?;
+        self.rt.note_d2h(out.iter().map(|t| t.data.len() as u64 * 4).sum());
+        Ok(out)
     }
 
     /// theta staged once per model, device-resident for the model's
@@ -395,6 +486,7 @@ impl<'rt> Model<'rt> {
                 &self.theta_host.shape,
                 None,
             )?));
+            self.rt.note_h2d(self.theta_host.data.len() as u64 * 4);
         }
         Ok(slot.as_ref().unwrap().clone())
     }
@@ -407,8 +499,29 @@ impl<'rt> Model<'rt> {
         }
         let buf =
             Rc::new(self.rt.client.buffer_from_host_buffer(&value.data, &value.shape, None)?);
+        self.rt.note_h2d(value.data.len() as u64 * 4);
         self.const_bufs.borrow_mut().insert((tag.to_string(), bucket), buf.clone());
         Ok(buf)
+    }
+
+    /// Upload a tensor to a device-resident slab the caller owns — the
+    /// explicit entry point of the device-resident lane-state lifecycle
+    /// (admission and post-migration re-upload).
+    pub fn upload(&self, value: &Tensor) -> Result<DeviceSlab> {
+        let buf =
+            Rc::new(self.rt.client.buffer_from_host_buffer(&value.data, &value.shape, None)?);
+        let slab = DeviceSlab { buf, shape: value.shape.clone() };
+        self.rt.note_h2d(slab.bytes());
+        Ok(slab)
+    }
+
+    /// Pull a device-resident slab back to a host tensor — the explicit
+    /// exit point (lane completion without a fused denoise, and bucket
+    /// migration, which remaps rows host-side then re-uploads).
+    pub fn download(&self, slab: &DeviceSlab) -> Result<Tensor> {
+        let t = literal_to_tensor(&slab.buf.to_literal_sync()?)?;
+        self.rt.note_d2h(slab.bytes());
+        Ok(t)
     }
 
     /// Optimised path: theta resident on device, inputs staged as buffers.
@@ -452,43 +565,85 @@ impl<'rt> Model<'rt> {
             let tensors: Vec<&Tensor> = inputs
                 .iter()
                 .map(|a| match a {
-                    ExecArg::Host(t) | ExecArg::Const(_, t) => *t,
+                    ExecArg::Host(t) | ExecArg::Const(_, t) => Ok(*t),
+                    ExecArg::Device(_) => Err(anyhow!(
+                        "{program}: ExecArg::Device needs the buffer path \
+                         (literal execution has no device state)"
+                    )),
                 })
-                .collect();
+                .collect::<Result<_>>()?;
             return self.exec_literals(program, bucket, &tensors);
         }
+        let (exe, staged) = self.stage(program, bucket, inputs)?;
+        let args = staged.arg_refs();
+        self.rt.note_call(program);
+        let out = run(&exe, ExecArgs::Buffers(&args))?;
+        self.rt.note_d2h(out.iter().map(|t| t.data.len() as u64 * 4).sum());
+        Ok(out)
+    }
+
+    /// Stage `inputs` as device buffers (theta first), reusing cached
+    /// constants and passing `Device` slabs through untouched.
+    fn stage(
+        &self,
+        program: &str,
+        bucket: usize,
+        inputs: &[ExecArg<'_>],
+    ) -> Result<(Rc<PjRtLoadedExecutable>, StagedArgs)> {
         let theta = self.theta_buffer()?;
         let exe = self.exe(program, bucket)?;
-        // fresh per-call buffers and staged constants, in input order
-        enum Staged {
-            Fresh(usize),
-            Cached(usize),
-        }
         let mut fresh: Vec<PjRtBuffer> = Vec::new();
         let mut cached: Vec<Rc<PjRtBuffer>> = Vec::new();
         let mut order: Vec<Staged> = Vec::with_capacity(inputs.len());
+        let mut up = 0u64;
         for a in inputs {
             match a {
                 ExecArg::Host(t) => {
                     fresh.push(self.rt.client.buffer_from_host_buffer(&t.data, &t.shape, None)?);
+                    up += t.data.len() as u64 * 4;
                     order.push(Staged::Fresh(fresh.len() - 1));
                 }
                 ExecArg::Const(tag, t) => {
                     cached.push(self.const_buffer(tag, bucket, t)?);
                     order.push(Staged::Cached(cached.len() - 1));
                 }
+                ExecArg::Device(slab) => {
+                    cached.push(slab.buf.clone());
+                    order.push(Staged::Cached(cached.len() - 1));
+                }
             }
         }
-        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(inputs.len() + 1);
-        args.push(theta.as_ref());
-        for s in &order {
-            match s {
-                Staged::Fresh(i) => args.push(&fresh[*i]),
-                Staged::Cached(i) => args.push(cached[*i].as_ref()),
-            }
-        }
+        self.rt.note_h2d(up);
+        Ok((exe, StagedArgs { theta, fresh, cached, order }))
+    }
+
+    /// Buffer-path execution of an **untupled single-output** artifact
+    /// (the fused k-step kernels, lowered with `return_tuple=False`),
+    /// leaving the result on device: the returned slab is the next
+    /// dispatch's `ExecArg::Device` input, so a lane pool's state never
+    /// crosses the host boundary between grid nodes. The output shape is
+    /// that of the first input (fused step kernels map x -> x_next).
+    pub fn exec_device(
+        &self,
+        program: &str,
+        bucket: usize,
+        inputs: &[ExecArg<'_>],
+    ) -> Result<DeviceSlab> {
+        let out_shape = match inputs.first() {
+            Some(ExecArg::Host(t)) | Some(ExecArg::Const(_, t)) => t.shape.clone(),
+            Some(ExecArg::Device(slab)) => slab.shape.clone(),
+            None => bail!("{program}: exec_device needs at least the x input"),
+        };
+        let (exe, staged) = self.stage(program, bucket, inputs)?;
+        let args = staged.arg_refs();
         self.rt.note_call(program);
-        run(&exe, ExecArgs::Buffers(&args))
+        let buf = exe
+            .execute_b(&args)?
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("{program}: executable returned no outputs"))?;
+        Ok(DeviceSlab { buf: Rc::new(buf), shape: out_shape })
     }
 }
 
@@ -524,6 +679,37 @@ enum ExecArgs<'a> {
     Buffers(&'a [&'a PjRtBuffer]),
 }
 
+/// Where each staged input lives (index into `StagedArgs::fresh` or
+/// `::cached`), preserving kernel input order.
+enum Staged {
+    Fresh(usize),
+    Cached(usize),
+}
+
+/// Device-staged argument list for one dispatch: theta + inputs in
+/// kernel order, owning the fresh per-call buffers so the borrowed
+/// argument slice stays valid for the launch.
+struct StagedArgs {
+    theta: Rc<PjRtBuffer>,
+    fresh: Vec<PjRtBuffer>,
+    cached: Vec<Rc<PjRtBuffer>>,
+    order: Vec<Staged>,
+}
+
+impl StagedArgs {
+    fn arg_refs(&self) -> Vec<&PjRtBuffer> {
+        let mut args = Vec::with_capacity(self.order.len() + 1);
+        args.push(self.theta.as_ref());
+        for s in &self.order {
+            match s {
+                Staged::Fresh(i) => args.push(&self.fresh[*i]),
+                Staged::Cached(i) => args.push(self.cached[*i].as_ref()),
+            }
+        }
+        args
+    }
+}
+
 /// Execute and pull every tuple element back to host tensors.
 fn run(exe: &PjRtLoadedExecutable, args: ExecArgs<'_>) -> Result<Vec<Tensor>> {
     let result = match args {
@@ -535,7 +721,9 @@ fn run(exe: &PjRtLoadedExecutable, args: ExecArgs<'_>) -> Result<Vec<Tensor>> {
         .and_then(|r| r.first())
         .ok_or_else(|| anyhow!("executable returned no outputs"))?
         .to_literal_sync()?;
-    // aot.py lowers with return_tuple=True: output is always a tuple
+    // aot.py lowers the programs served through this path with
+    // return_tuple=True: the output is always a tuple (the untupled
+    // fused step artifacts go through `Model::exec_device` instead)
     let parts = lit.to_tuple()?;
     parts.iter().map(literal_to_tensor).collect()
 }
@@ -592,5 +780,11 @@ mod tests {
         assert_eq!(score_evals_per_call("score"), 1);
         assert_eq!(score_evals_per_call("denoise"), 1);
         assert_eq!(score_evals_per_call("fid_features"), 0);
+        // fused k-step dispatches cost k x the single-step call (pad
+        // rows still run the score net; only lane state is selected)
+        assert_eq!(score_evals_per_call("em_stepk8"), 8);
+        assert_eq!(score_evals_per_call("pc_stepk4"), 8);
+        assert_eq!(score_evals_per_call("ddim_stepk8"), 8);
+        assert_eq!(score_evals_per_call("em_stepk1"), 0);
     }
 }

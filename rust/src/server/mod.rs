@@ -21,6 +21,7 @@
 //!       "steps_per_bucket":{"<bucket>":steps,...},
 //!       "migrations_up":...,"migrations_down":...,
 //!       "wasted_lane_steps":...,"occupied_lane_steps":...,
+//!       "dispatches":...,"bytes_h2d":...,"bytes_d2h":...,
 //!       "evals_done":...,"eval_active":...,"eval_samples_done":...,
 //!       "eval_lane_steps":...,
 //!       "queue_depth":...,
@@ -55,6 +56,15 @@
 //! * `queue_depth` in `stats` is the QoS-standard alias of
 //!   `queued_samples` (kept for compatibility); the per-pool and
 //!   per-program splits exist only under the new names.
+//!
+//! Dispatch/transfer counters in `stats` — `dispatches` (executable
+//! launches), `bytes_h2d`, `bytes_d2h` — expose the host↔device traffic
+//! the fused k-step path amortises (serve `--steps-per-dispatch`,
+//! docs/ARCHITECTURE.md §Device-resident lane state): at k > 1 the
+//! fixed-step pools keep lane state device-resident and launch one
+//! executable per k grid nodes, so `dispatches` and per-sample bytes
+//! fall roughly k-fold while `score_evals` and the sample bits stay
+//! identical to k = 1.
 //!
 //! `model` is optional and defaults to the engine's first configured
 //! model; the response `h`/`w` are the geometry of the model that
@@ -303,6 +313,9 @@ fn stats_to_json(s: &EngineStats) -> Value {
         ("steps", Value::num(s.steps as f64)),
         ("rejections", Value::num(s.rejections as f64)),
         ("score_evals", Value::num(s.score_evals as f64)),
+        ("dispatches", Value::num(s.dispatches as f64)),
+        ("bytes_h2d", Value::num(s.bytes_h2d as f64)),
+        ("bytes_d2h", Value::num(s.bytes_d2h as f64)),
         ("latency_p50_s", Value::num(s.latency_p50_s)),
         ("latency_p95_s", Value::num(s.latency_p95_s)),
         ("latency_mean_s", Value::num(s.latency_mean_s)),

@@ -62,6 +62,11 @@ pub struct StepKernel {
     pub snr_input: bool,
     /// Kernel is only defined for VP processes (paper §4).
     pub vp_only: bool,
+    /// Largest `k` for which aot.py lowers a fused `k`-grid-nodes-per-
+    /// dispatch variant of this artifact ([`fused_artifact`]); 1 means
+    /// only the single-step kernel exists (adaptive stepping needs the
+    /// host accept/reject loop between nodes, so it stays at 1).
+    pub max_steps_per_dispatch: usize,
 }
 
 /// The solver table: one row per served step kernel. Adding a served
@@ -77,6 +82,7 @@ pub const STEP_KERNELS: &[StepKernel] = &[
         noise_inputs: 1,
         snr_input: false,
         vp_only: false,
+        max_steps_per_dispatch: 1,
     },
     StepKernel {
         solver: "em",
@@ -87,6 +93,7 @@ pub const STEP_KERNELS: &[StepKernel] = &[
         noise_inputs: 1,
         snr_input: false,
         vp_only: false,
+        max_steps_per_dispatch: 8,
     },
     StepKernel {
         solver: "ddim",
@@ -97,6 +104,7 @@ pub const STEP_KERNELS: &[StepKernel] = &[
         noise_inputs: 0,
         snr_input: false,
         vp_only: true,
+        max_steps_per_dispatch: 8,
     },
     StepKernel {
         solver: "pc",
@@ -107,6 +115,7 @@ pub const STEP_KERNELS: &[StepKernel] = &[
         noise_inputs: 2,
         snr_input: true,
         vp_only: false,
+        max_steps_per_dispatch: 8,
     },
 ];
 
@@ -119,6 +128,23 @@ pub fn kernel(solver: &str) -> Option<&'static StepKernel> {
 /// runtime's per-call NFE accounting reads the table.
 pub fn kernel_for_artifact(artifact: &str) -> Option<&'static StepKernel> {
     STEP_KERNELS.iter().find(|k| k.artifact == artifact)
+}
+
+/// Name of the fused `k`-grid-nodes-per-dispatch variant of a step
+/// artifact (`em_step` at k=8 → `em_stepk8`). The naming contract is
+/// shared with aot.py's fused lowering and parsed back by
+/// [`kernel_for_fused_artifact`].
+pub fn fused_artifact(artifact: &str, k: usize) -> String {
+    format!("{artifact}k{k}")
+}
+
+/// Inverse of [`fused_artifact`]: descriptor + `k` for a fused artifact
+/// name, or `None` if it is not a `<step_artifact>k<k≥2>` name from the
+/// table (single-step names and non-step programs fall through).
+pub fn kernel_for_fused_artifact(artifact: &str) -> Option<(&'static StepKernel, usize)> {
+    let (base, k) = artifact.rsplit_once('k')?;
+    let k = k.parse::<usize>().ok().filter(|&k| k >= 2)?;
+    kernel_for_artifact(base).map(|kernel| (kernel, k))
 }
 
 /// A solver the serving engine can run as a lane-program pool.
@@ -486,6 +512,21 @@ mod tests {
         assert_eq!((pc.noise_inputs, pc.snr_input, pc.vp_only), (2, true, false));
         assert!(kernel("ode").is_none());
         assert!(kernel_for_artifact("score").is_none());
+        // fused-dispatch facts: adaptive stays single-step, fixed-step
+        // kernels fuse, and the name round-trips through the helpers
+        assert_eq!(kernel("adaptive").unwrap().max_steps_per_dispatch, 1);
+        for name in ["em", "ddim", "pc"] {
+            let k = kernel(name).unwrap();
+            assert!(k.max_steps_per_dispatch >= 8, "{name}");
+            let fused = fused_artifact(k.artifact, 8);
+            assert_eq!(kernel_for_fused_artifact(&fused), Some((k, 8)));
+        }
+        assert_eq!(fused_artifact("em_step", 8), "em_stepk8");
+        // non-fused names fall through: the base single-step artifact,
+        // k<2 and non-table bases are all None
+        assert!(kernel_for_fused_artifact("em_step").is_none());
+        assert!(kernel_for_fused_artifact("em_stepk1").is_none());
+        assert!(kernel_for_fused_artifact("scorek8").is_none());
     }
 
     #[test]

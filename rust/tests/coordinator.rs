@@ -355,6 +355,21 @@ fn fixed_step_same_seed_same_images_under_load() {
 /// — the short request uses an explicit non-default snr so the per-lane
 /// snr is actually on the line.
 fn fixed_step_migration_case(long_solver: ServingSolver, short_solver: ServingSolver) {
+    fixed_step_migration_case_k(long_solver, short_solver, 1)
+}
+
+/// Like [`fixed_step_migration_case`], at `k` steps per dispatch: the
+/// migrating engine runs device-resident fused dispatches while the
+/// pinned baseline stays at k = 1, so for k > 1 a live lane's full
+/// tuple `(t, h, nfe, rng, x, xprev, snr)` must survive the slab
+/// download -> host row remap -> lazy re-upload around every width
+/// switch (and the admission syncs the short request forces) to come
+/// out bit-identical.
+fn fixed_step_migration_case_k(
+    long_solver: ServingSolver,
+    short_solver: ServingSolver,
+    k: usize,
+) {
     let Some(dir) = common::artifacts() else { return };
     let bucket = common::engine_bucket(&dir);
     if common::step_buckets(&dir).iter().filter(|&&b| b <= bucket).count() < 2 {
@@ -366,10 +381,18 @@ fn fixed_step_migration_case(long_solver: ServingSolver, short_solver: ServingSo
         eprintln!("skipping: needs >= 2 {program} rungs at or below the engine bucket");
         return;
     }
-    let run = |migrate: bool| {
+    if k > 1 {
+        let fused = format!("{}k{k}", long_solver.step_artifact());
+        if common::program_rungs(&dir, &fused).len() < 2 {
+            eprintln!("skipping: needs >= 2 {fused} rungs (rebuild artifacts)");
+            return;
+        }
+    }
+    let run = |migrate: bool, k: usize| {
         let mut cfg = EngineConfig::new(dir.clone(), "vp");
         cfg.bucket = bucket;
         cfg.migrate = migrate;
+        cfg.steps_per_dispatch = k;
         let engine = Engine::start(cfg).unwrap();
         let c_bg = engine.client();
         let long = std::thread::spawn(move || {
@@ -386,8 +409,8 @@ fn fixed_step_migration_case(long_solver: ServingSolver, short_solver: ServingSo
         let stats = c.stats().unwrap();
         (long, short, stats)
     };
-    let (long_m, short_m, stats_m) = run(true);
-    let (long_f, short_f, _) = run(false);
+    let (long_m, short_m, stats_m) = run(true, k);
+    let (long_f, short_f, _) = run(false, 1);
     assert_eq!(
         long_m.images, long_f.images,
         "{program} migration altered the long lane's trajectory"
@@ -421,6 +444,81 @@ fn pc_migration_matches_pinned_pool() {
         ServingSolver::Pc { steps: 200, snr: None },
         ServingSolver::Pc { steps: 4, snr: Some(0.17) },
     );
+}
+
+/// Device-resident migration: a fused k=8 migrating pool must match the
+/// host-side k=1 pinned pool bit-for-bit — live-lane state round-trips
+/// through the device slab across every width change.
+#[test]
+fn fused_em_migration_matches_pinned_pool() {
+    fixed_step_migration_case_k(
+        ServingSolver::Em { steps: 400 },
+        ServingSolver::Em { steps: 4 },
+        8,
+    );
+}
+
+#[test]
+fn fused_pc_migration_matches_pinned_pool() {
+    fixed_step_migration_case_k(
+        ServingSolver::Pc { steps: 200, snr: None },
+        ServingSolver::Pc { steps: 4, snr: Some(0.17) },
+        8,
+    );
+}
+
+/// The fused-dispatch acceptance criterion: k steps per dispatch is a
+/// pure amortisation — images and NFE are bit-identical to k = 1, while
+/// dispatches and device->host traffic drop. Step budgets deliberately
+/// not divisible by 8 so the last dispatch rides no-op tail nodes.
+fn fused_dispatch_case(solver: ServingSolver, n: usize, seed: u64) {
+    let Some(dir) = common::artifacts() else { return };
+    let fused = format!("{}k8", solver.step_artifact());
+    if common::program_rungs(&dir, &fused).is_empty() {
+        eprintln!("skipping: no {fused} artifacts at or below the engine bucket");
+        return;
+    }
+    let run = |k: usize| {
+        let mut cfg = EngineConfig::new(dir.clone(), "vp");
+        cfg.bucket = common::engine_bucket(&dir);
+        cfg.steps_per_dispatch = k;
+        let engine = Engine::start(cfg).unwrap();
+        let c = engine.client();
+        let r = c.generate_with("", solver, n, 0.5, seed).unwrap();
+        (r, c.stats().unwrap())
+    };
+    let (r1, s1) = run(1);
+    let (r8, s8) = run(8);
+    assert_eq!(r8.images, r1.images, "{solver:?}: fused dispatch altered samples");
+    assert_eq!(r8.nfe, r1.nfe, "{solver:?}: fused dispatch altered NFE");
+    assert_eq!(s8.score_evals, s1.score_evals, "{solver:?}: NFE accounting drifted");
+    assert!(
+        s8.dispatches < s1.dispatches,
+        "{solver:?}: k=8 did not amortise dispatches ({} vs {})",
+        s8.dispatches,
+        s1.dispatches
+    );
+    assert!(
+        s8.bytes_d2h < s1.bytes_d2h,
+        "{solver:?}: k=8 did not keep state device-resident ({} vs {} bytes d2h)",
+        s8.bytes_d2h,
+        s1.bytes_d2h
+    );
+}
+
+#[test]
+fn fused_em_dispatch_is_bit_identical() {
+    fused_dispatch_case(ServingSolver::Em { steps: 37 }, 3, 42);
+}
+
+#[test]
+fn fused_ddim_dispatch_is_bit_identical() {
+    fused_dispatch_case(ServingSolver::Ddim { steps: 21 }, 2, 7);
+}
+
+#[test]
+fn fused_pc_dispatch_is_bit_identical() {
+    fused_dispatch_case(ServingSolver::Pc { steps: 19, snr: Some(0.17) }, 2, 11);
 }
 
 /// PC lanes are first-class serving workloads: correct image range,

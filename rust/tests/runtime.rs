@@ -130,6 +130,34 @@ fn nfe_accounting_matches_program_semantics() {
     assert_eq!(stats.calls, vec![("score".to_string(), 2)]);
 }
 
+/// The hoisted executable cache: steady-state dispatch of the same
+/// (program, bucket) resolves through the model-level map, not the
+/// string-keyed runtime lookup — repeated calls must not add misses.
+#[test]
+fn executable_cache_reused_across_dispatches() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model("vp").unwrap();
+    let b = m.buckets("score")[0];
+    let x = Tensor::zeros(&[b, m.meta.dim]);
+    let t = Tensor { shape: vec![b], data: vec![0.5; b] };
+    assert_eq!(m.exe_cache_misses(), 0);
+    m.exec_buffers("score", b, &[&x, &t]).unwrap();
+    assert_eq!(m.exe_cache_misses(), 1, "first dispatch populates the cache");
+    for _ in 0..3 {
+        m.exec_buffers("score", b, &[&x, &t]).unwrap();
+    }
+    assert_eq!(m.exe_cache_misses(), 1, "steady-state dispatch must hit the cache");
+    // a different bucket is a different executable: exactly one new miss
+    if let Some(&b2) = m.buckets("score").iter().find(|&&bb| bb != b) {
+        let x2 = Tensor::zeros(&[b2, m.meta.dim]);
+        let t2 = Tensor { shape: vec![b2], data: vec![0.5; b2] };
+        m.exec_buffers("score", b2, &[&x2, &t2]).unwrap();
+        m.exec_buffers("score", b2, &[&x2, &t2]).unwrap();
+        assert_eq!(m.exe_cache_misses(), 2);
+    }
+}
+
 #[test]
 fn bucket_for_picks_smallest_fitting() {
     let dir = require_artifacts!();

@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Dispatch-amortisation regression gates for benches/perf.rs part 4.
+
+The perf bench's dispatch part (`cargo bench --bench perf`) runs the same
+em request through engines at steps-per-dispatch k in {1, 4, 8} and
+writes bench_out/perf_dispatch.json; this script turns it into a CI gate
+(mirroring tools/check_qos.py):
+
+  * equivalence: every k must produce bit-identical samples to k = 1
+    (outputs_match) and the identical per-sample NFE / total score-eval
+    budget — fusing amortises launches, it must never change the math.
+  * amortisation: at k > 1 dispatches must fall roughly k-fold —
+    dispatches(k) <= dispatches(1) / k * (1 + PERF_DISPATCH_TOL, env,
+    default 0.10) + PERF_DISPATCH_SLACK (env, default 16: denoise calls
+    and no-op tail dispatches of lanes whose schedule is not a multiple
+    of k) — and must never increase.
+  * transfers: device-resident lane state must shrink both transfer
+    directions — bytes_h2d(k) < bytes_h2d(1) and
+    bytes_d2h(k) < bytes_d2h(1) (the per-step x round-trip is the bulk
+    of k = 1 traffic).
+
+Usage: python3 tools/check_perf.py bench_out/perf_dispatch.json
+Exits non-zero with a per-violation report on failure.
+"""
+
+import json
+import os
+import sys
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench_out/perf_dispatch.json"
+    tol = float(os.environ.get("PERF_DISPATCH_TOL", "0.10"))
+    slack = float(os.environ.get("PERF_DISPATCH_SLACK", "16"))
+    with open(path) as f:
+        doc = json.load(f)
+    errors = []
+
+    sweep = {int(e.get("k", 0)): e for e in doc.get("sweep", [])}
+    base = sweep.get(1)
+    if base is None:
+        errors.append("sweep: missing the k=1 baseline entry")
+    fused = sorted(k for k in sweep if k > 1)
+    if not fused:
+        errors.append(f"sweep: no fused entries (got k={sorted(sweep)})")
+
+    if base is not None:
+        for k in fused:
+            e = sweep[k]
+            tag = f"k={k}"
+            if not e.get("outputs_match", False):
+                errors.append(f"{tag}: samples not bit-identical to k=1")
+            for key in ["nfe_total", "score_evals"]:
+                if e.get(key) != base.get(key):
+                    errors.append(
+                        f"{tag}: {key} changed ({base.get(key)} -> {e.get(key)}); "
+                        f"fusing must not change the NFE budget"
+                    )
+            d1, dk = base.get("dispatches", 0), e.get("dispatches", 0)
+            bound = d1 / k * (1 + tol) + slack
+            if dk > bound:
+                errors.append(
+                    f"{tag}: dispatches {dk} > {bound:.1f} "
+                    f"(= {d1}/{k} * (1+{tol}) + {slack}); launches not amortised"
+                )
+            if dk > d1:
+                errors.append(f"{tag}: dispatches increased ({d1} -> {dk})")
+            for key in ["bytes_h2d", "bytes_d2h"]:
+                if e.get(key, 0) >= base.get(key, 0):
+                    errors.append(
+                        f"{tag}: {key} not reduced "
+                        f"({base.get(key)} -> {e.get(key)}); lane state is "
+                        f"round-tripping instead of staying device-resident"
+                    )
+
+    print(
+        f"[check_perf] {path}: solver {doc.get('solver')} x "
+        f"{doc.get('samples')} samples, k={sorted(sweep)}, "
+        f"tol={tol}, slack={slack}"
+    )
+    if base is not None:
+        for k in fused:
+            e = sweep[k]
+            d1 = max(base.get("dispatches", 0), 1)
+            print(
+                f"[check_perf] k={k}: dispatches {base.get('dispatches')} -> "
+                f"{e.get('dispatches')} ({d1 / max(e.get('dispatches', 0), 1):.1f}x), "
+                f"bytes/sample {base.get('bytes_per_sample', 0):.0f} -> "
+                f"{e.get('bytes_per_sample', 0):.0f}"
+            )
+    if errors:
+        for e in errors:
+            print(f"[check_perf] FAIL: {e}", file=sys.stderr)
+        return 1
+    print("[check_perf] ok: bit-identical samples at k-fold fewer dispatches")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,3 +35,12 @@ fi
 if [ -f bench_out/serving_qos.json ]; then
   python3 tools/check_qos.py bench_out/serving_qos.json
 fi
+
+# Dispatch-amortisation gates: when the perf bench's k-sweep has run
+# (`cargo bench --bench perf` in the CI artifacts job), enforce
+# bit-identical samples and unchanged NFE across steps-per-dispatch
+# k in {1,4,8}, roughly k-fold fewer dispatches, and reduced
+# host<->device bytes on its JSON.
+if [ -f bench_out/perf_dispatch.json ]; then
+  python3 tools/check_perf.py bench_out/perf_dispatch.json
+fi
