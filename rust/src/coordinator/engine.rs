@@ -15,7 +15,7 @@
 //! deadlines, weights) lives in `coordinator/qos.rs`.
 
 use super::eval::{ChunkSpec, EvalManager, EvalRequest, EvalResult};
-use super::programs::StepIo;
+use super::programs::{LaneState, StepIo};
 use super::qos::{self, ClassLatencyStats, PoolQosStats, QosConfig, QosState};
 use super::registry::{ModelEntry, ProgramPool, Registry};
 use super::scheduler::migrate_lanes;
@@ -185,8 +185,9 @@ pub struct EngineStats {
     /// Samples generated for evaluation jobs (disjoint from client
     /// traffic; both are included in `samples_done`).
     pub eval_samples_done: u64,
-    /// Occupied lanes owned by eval jobs, summed over steps — the eval
-    /// share of `occupied_lane_steps`.
+    /// Real grid nodes advanced by lanes owned by eval jobs — the eval
+    /// share of `occupied_lane_steps` (at steps-per-dispatch k a fused
+    /// dispatch contributes up to k nodes per eval lane).
     pub eval_lane_steps: u64,
     /// Per-(model, program) pool QoS view: configured weight, service
     /// turns, steps, queue depth, active lanes.
@@ -767,16 +768,22 @@ impl<'rt> EngineState<'rt> {
     fn step(&mut self, mi: usize, pi: usize) -> Result<Vec<(u64, usize, GenResult)>> {
         let EngineState { registry, pending, cfg, metrics, evals, qos, .. } = self;
         let e = registry.entry_mut(mi);
-        // eval-lane share of this step's occupancy
-        let mut eval_occupied = 0u64;
+        // eval-lane share of this dispatch's real lane-nodes (the same
+        // unit as occupied_lane_steps): a fused dispatch advances a
+        // fixed lane by up to k nodes, an adaptive lane by one proposal
+        let k = e.pools[pi].steps_per_dispatch;
+        let mut eval_nodes = 0u64;
         for s in e.pools[pi].slots.iter() {
-            if let Slot::Running { req_id, .. } = s {
+            if let Slot::Running { req_id, state, .. } = s {
                 if pending.get(req_id).is_some_and(|p| EvalManager::is_eval_sink(&p.sink)) {
-                    eval_occupied += 1;
+                    eval_nodes += match state {
+                        LaneState::Fixed { done, total, .. } => k.min(total - done) as u64,
+                        LaneState::Adaptive { .. } => 1,
+                    };
                 }
             }
         }
-        evals.eval_lane_steps += eval_occupied;
+        evals.eval_lane_steps += eval_nodes;
         let outcome = {
             let ModelEntry { model, process, pools } = e;
             let ProgramPool { program, slots, x, xprev, dev_x, steps_per_dispatch, .. } =

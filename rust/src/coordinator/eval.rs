@@ -121,8 +121,9 @@ pub(crate) struct EvalManager<'rt> {
     next_id: u64,
     pub evals_done: u64,
     pub eval_samples_done: u64,
-    /// Occupied lanes owned by eval jobs, summed over steps (the eval
-    /// share of `occupied_lane_steps`).
+    /// Real grid nodes advanced by lanes owned by eval jobs (the eval
+    /// share of `occupied_lane_steps`; up to k nodes per lane per fused
+    /// dispatch).
     pub eval_lane_steps: u64,
 }
 

@@ -399,6 +399,15 @@ impl FixedProgram {
             *io.dev_x = Some(io.model.upload(io.x)?);
         }
         let artifact = fused_artifact(self.kernel.artifact, k);
+        // score_evals parity with k = 1: a single-step dispatch bills
+        // score_evals_per_step once per *batched call*, however many
+        // lanes ride it — so a fused dispatch bills one batched step per
+        // stacked node that advances at least one live lane (max real
+        // over lanes), never the no-op tail beyond every lane's
+        // schedule. Summed over dispatches this equals the k = 1
+        // dispatch count exactly, which is the invariant the parity
+        // tests and tools/check_perf.py assert.
+        let real_steps = real.iter().copied().max().unwrap_or(0) as u64;
         let out = {
             let slab = io.dev_x.as_ref().expect("uploaded above");
             let mut args: Vec<ExecArg<'_>> =
@@ -409,7 +418,8 @@ impl FixedProgram {
             if self.kernel.snr_input {
                 args.push(ExecArg::Host(&snr_t));
             }
-            io.model.exec_device(&artifact, b, &args)?
+            let evals = real_steps * self.kernel.score_evals_per_step;
+            io.model.exec_device(&artifact, b, &args, evals)?
         };
         *io.dev_x = Some(out);
         let mut converged = Vec::new();

@@ -87,8 +87,8 @@ impl ModelEntry<'_> {
 /// strict validation; manifests without the single-step entry are
 /// accepted (the rung was already filtered by `has_artifact`) — but a
 /// fused rung whose manifest lacks the k-step entry is rejected, which
-/// is what cleanly un-serves a pre-fused artifact set instead of
-/// faulting mid-step.
+/// is what makes a pre-fused artifact set fall back to a lower k (or
+/// single-step) instead of faulting mid-step.
 fn kernel_abi_matches(model: &Model, solver: &str, bucket: usize, steps: usize) -> bool {
     let Some(k) = crate::solvers::spec::kernel(solver) else {
         return true;
@@ -144,8 +144,9 @@ impl<'rt> Registry<'rt> {
     /// With `migrate` off every pool is pinned at its widest rung.
     /// `steps_per_dispatch` is the requested fused k; each fixed-step
     /// pool clamps it to its kernel's `max_steps_per_dispatch` (adaptive
-    /// pools always run at 1), and a pool whose artifacts lack the
-    /// fused k-step variant is left unserved rather than built broken.
+    /// pools always run at 1) and then resolves it down to the largest
+    /// fused variant its artifact set provides (a pre-fused set degrades
+    /// to single-step rather than un-serving the pool).
     pub fn load(
         rt: &'rt Runtime,
         names: &[String],
@@ -202,26 +203,37 @@ impl<'rt> Registry<'rt> {
                 // a clean rebuild-artifacts admission error, not fault
                 // every request mid-step on an argument-shape error)
                 // resolved fused k for this pool: the serve request
-                // clamped to the kernel's table row (adaptive stays 1)
+                // clamped to the kernel's table row (adaptive stays 1),
+                // then lowered to the largest k whose fused variant the
+                // manifest actually provides — aot.py lowers a fixed set
+                // of fused steps (default 4,8), so e.g. a requested k=5
+                // serves at k=4 instead of silently emptying the ladder
+                // and un-serving the pool
                 let kernel = crate::solvers::spec::kernel(program.solver_name())
                     .expect("for_solver implies a table row");
-                let k = steps_per_dispatch.clamp(1, kernel.max_steps_per_dispatch);
-                let fused_step = fused_artifact(step, k);
-                let ladder: Vec<usize> = model
-                    .buckets(step)
-                    .iter()
-                    .copied()
-                    .filter(|&b| {
-                        b <= max_bucket
-                            && model.has_artifact(step, b)
-                            && (k == 1 || model.has_artifact(&fused_step, b))
-                            && model.has_artifact("denoise", b)
-                            && kernel_abi_matches(&model, program.solver_name(), b, k)
-                    })
-                    .collect();
+                let mut k = steps_per_dispatch.clamp(1, kernel.max_steps_per_dispatch);
+                let ladder: Vec<usize> = loop {
+                    let fused_step = fused_artifact(step, k);
+                    let ladder: Vec<usize> = model
+                        .buckets(step)
+                        .iter()
+                        .copied()
+                        .filter(|&b| {
+                            b <= max_bucket
+                                && model.has_artifact(step, b)
+                                && (k == 1 || model.has_artifact(&fused_step, b))
+                                && model.has_artifact("denoise", b)
+                                && kernel_abi_matches(&model, program.solver_name(), b, k)
+                        })
+                        .collect();
+                    if !ladder.is_empty() || k == 1 {
+                        break ladder;
+                    }
+                    k -= 1;
+                };
                 if ladder.is_empty() {
-                    continue; // pool absent (incl. pre-fused artifact
-                              // sets at k > 1): clean error at admit
+                    continue; // pool absent even single-step: clean
+                              // error at admit
                 }
                 let ladder = if migrate { ladder } else { vec![*ladder.last().unwrap()] };
                 let dim = model.meta.dim;

@@ -91,13 +91,13 @@ pub fn score_evals_per_call(program: &str) -> u64 {
     if let Some(k) = crate::solvers::spec::kernel_for_artifact(program) {
         return k.score_evals_per_step;
     }
-    // a fused k-step dispatch runs the single-step body k times (no-op
-    // tail rows still execute the score net — the select only fixes the
-    // lane state, not the device work, so the raw counter is honest
-    // about computation; per-sample NFE is accounted separately by the
-    // engine from real, non-pad steps)
-    if let Some((k, steps)) = crate::solvers::spec::kernel_for_fused_artifact(program) {
-        return k.score_evals_per_step * steps as u64;
+    // fused k-step dispatches carry no static per-call cost: the engine
+    // passes the real (non-pad) eval count to `Model::exec_device`
+    // explicitly, so no-op tail rows are never billed and `score_evals`
+    // stays bit-identical to the k = 1 path — the invariant the wire
+    // docs and tools/check_perf.py gate on
+    if crate::solvers::spec::kernel_for_fused_artifact(program).is_some() {
+        return 0;
     }
     match program {
         "score" | "ode_drift" | "denoise" => 1,
@@ -215,6 +215,10 @@ impl Runtime {
         *self.calls.borrow_mut().entry(program.to_string()).or_insert(0) += 1;
         self.score_evals.set(self.score_evals.get() + score_evals_per_call(program));
         self.dispatches.set(self.dispatches.get() + 1);
+    }
+
+    fn note_score_evals(&self, n: u64) {
+        self.score_evals.set(self.score_evals.get() + n);
     }
 
     fn note_h2d(&self, bytes: u64) {
@@ -623,11 +627,17 @@ impl<'rt> Model<'rt> {
     /// dispatch's `ExecArg::Device` input, so a lane pool's state never
     /// crosses the host boundary between grid nodes. The output shape is
     /// that of the first input (fused step kernels map x -> x_next).
+    /// `score_evals` is the real (non-pad) score-eval count of this
+    /// dispatch, supplied by the caller — only the engine knows how many
+    /// of the k stacked nodes advance a live lane vs ride as no-op tail
+    /// padding, and the `score_evals` counter must stay bit-identical to
+    /// the k = 1 dispatch sequence (which bills per batched call).
     pub fn exec_device(
         &self,
         program: &str,
         bucket: usize,
         inputs: &[ExecArg<'_>],
+        score_evals: u64,
     ) -> Result<DeviceSlab> {
         let out_shape = match inputs.first() {
             Some(ExecArg::Host(t)) | Some(ExecArg::Const(_, t)) => t.shape.clone(),
@@ -637,6 +647,7 @@ impl<'rt> Model<'rt> {
         let (exe, staged) = self.stage(program, bucket, inputs)?;
         let args = staged.arg_refs();
         self.rt.note_call(program);
+        self.rt.note_score_evals(score_evals);
         let buf = exe
             .execute_b(&args)?
             .into_iter()
@@ -780,11 +791,12 @@ mod tests {
         assert_eq!(score_evals_per_call("score"), 1);
         assert_eq!(score_evals_per_call("denoise"), 1);
         assert_eq!(score_evals_per_call("fid_features"), 0);
-        // fused k-step dispatches cost k x the single-step call (pad
-        // rows still run the score net; only lane state is selected)
-        assert_eq!(score_evals_per_call("em_stepk8"), 8);
-        assert_eq!(score_evals_per_call("pc_stepk4"), 8);
-        assert_eq!(score_evals_per_call("ddim_stepk8"), 8);
+        // fused k-step dispatches have no static per-call cost: the
+        // engine bills only real (non-pad) nodes via exec_device, so the
+        // counter matches the k = 1 path bit-for-bit
+        assert_eq!(score_evals_per_call("em_stepk8"), 0);
+        assert_eq!(score_evals_per_call("pc_stepk4"), 0);
+        assert_eq!(score_evals_per_call("ddim_stepk8"), 0);
         assert_eq!(score_evals_per_call("em_stepk1"), 0);
     }
 }

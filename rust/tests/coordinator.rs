@@ -521,6 +521,41 @@ fn fused_pc_dispatch_is_bit_identical() {
     fused_dispatch_case(ServingSolver::Pc { steps: 19, snr: Some(0.17) }, 2, 11);
 }
 
+/// A requested steps-per-dispatch with no lowered fused variant (k = 5;
+/// aot.py lowers FUSED_STEPS = 4, 8) resolves down to the largest
+/// available k instead of silently emptying the ladder and un-serving
+/// the pool: the request is admitted, outputs and score_evals stay
+/// bit-identical to k = 1, and dispatches still amortise (k = 4 under
+/// the hood).
+#[test]
+fn unsupported_steps_per_dispatch_falls_back_to_available_variant() {
+    let Some(dir) = common::artifacts() else { return };
+    if common::program_rungs(&dir, "em_stepk4").is_empty() {
+        eprintln!("skipping: no em_stepk4 artifacts at or below the engine bucket");
+        return;
+    }
+    let run = |k: usize| {
+        let mut cfg = EngineConfig::new(dir.clone(), "vp");
+        cfg.bucket = common::engine_bucket(&dir);
+        cfg.steps_per_dispatch = k;
+        let engine = Engine::start(cfg).unwrap();
+        let c = engine.client();
+        let r = c.generate_with("", ServingSolver::Em { steps: 37 }, 2, 0.5, 5).unwrap();
+        (r, c.stats().unwrap())
+    };
+    let (r1, s1) = run(1);
+    let (r5, s5) = run(5);
+    assert_eq!(r5.images, r1.images, "k=5 fallback altered samples");
+    assert_eq!(r5.nfe, r1.nfe, "k=5 fallback altered NFE");
+    assert_eq!(s5.score_evals, s1.score_evals, "k=5 fallback drifted NFE accounting");
+    assert!(
+        s5.dispatches < s1.dispatches,
+        "k=5 must resolve to the k=4 fused variant and amortise dispatches ({} vs {})",
+        s5.dispatches,
+        s1.dispatches
+    );
+}
+
 /// PC lanes are first-class serving workloads: correct image range,
 /// exact per-sample NFE (2 x predictor steps + denoise), per-program
 /// stats with the 2x score-eval cost, and per-lane snr co-batching in
