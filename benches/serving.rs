@@ -18,9 +18,16 @@
 //!    priority classes: interactive p95 must improve without reducing
 //!    total throughput. Results land in bench_out/serving_qos.json,
 //!    gated in CI by tools/check_qos.py.
+//! 4. async jobs (docs/PROTOCOL.md): a burst of submits drained through
+//!    poll over real TCP vs the same burst run synchronously, with
+//!    exactly-once delivery accounting, plus the base64-vs-binary-frame
+//!    payload overhead for one image batch. Results land in
+//!    bench_out/serving_async.json, gated in CI by
+//!    tools/check_async.py.
 //!
 //!   cargo bench --offline --bench serving -- [--rate 2] [--duration 12]
 //!       [--bucket 16] [--model vp] [--qos-only] [--qos-duration 4]
+//!       [--async-only] [--async-burst 64]
 
 #[path = "common.rs"]
 mod common;
@@ -31,9 +38,13 @@ use gofast::cli::Args;
 use gofast::coordinator::{qos, Engine, EngineConfig, SampleRequest};
 use gofast::json::Value;
 use gofast::rng::Rng;
+use gofast::server::{serve, Client, GenerateRequest, ServerConfig};
 use gofast::solvers::ServingSolver;
 use gofast::workload::{poisson_trace, TraceConfig};
 use gofast::Result;
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -47,6 +58,9 @@ fn main() -> Result<()> {
     let _ = artifacts();
     if args.has("qos-only") {
         return qos_bench(&args, &model);
+    }
+    if args.has("async-only") {
+        return async_bench(&args, &model);
     }
 
     let mut table = Table::new(&[
@@ -196,7 +210,8 @@ fn main() -> Result<()> {
     }
     write_outputs("serving_low_occupancy", &lo_table)?;
 
-    qos_bench(&args, &model)
+    qos_bench(&args, &model)?;
+    async_bench(&args, &model)
 }
 
 /// Part 3: the QoS subsystem under mixed traffic. Writes
@@ -246,6 +261,7 @@ fn qos_bench(args: &Args, model: &str) -> Result<()> {
                     sample_base: 0,
                     priority: None,
                     deadline_ms: None,
+                    cancel_token: None,
                 });
             }));
         }
@@ -328,6 +344,7 @@ fn qos_bench(args: &Args, model: &str) -> Result<()> {
                         sample_base: 0,
                         priority: flood_prio,
                         deadline_ms: None,
+                        cancel_token: None,
                     });
                     k += 1;
                 }
@@ -350,6 +367,7 @@ fn qos_bench(args: &Args, model: &str) -> Result<()> {
                 sample_base: 0,
                 priority: probe_prio,
                 deadline_ms: None,
+                cancel_token: None,
             });
             if r.is_ok() {
                 lat.push(t_req.elapsed().as_secs_f64());
@@ -404,5 +422,136 @@ fn qos_bench(args: &Args, model: &str) -> Result<()> {
     std::fs::create_dir_all("bench_out")?;
     std::fs::write("bench_out/serving_qos.json", format!("{doc}"))?;
     println!("[serving_qos] json -> bench_out/serving_qos.json");
+    Ok(())
+}
+
+/// Part 4: the async job layer over real TCP. A burst of submits is
+/// drained through poll with exactly-once accounting and compared to
+/// the same burst run synchronously; one image batch measures the
+/// base64-vs-binary-frame payload overhead. Writes
+/// bench_out/serving_async.json for tools/check_async.py.
+fn async_bench(args: &Args, model: &str) -> Result<()> {
+    let burst = args.usize_or("async-burst", 64)?;
+    let bucket = {
+        let rt = gofast::runtime::Runtime::new("artifacts")?;
+        engine_bucket(&rt.model(model)?, args.usize_or("bucket", 16)?)
+    };
+    let mut cfg = EngineConfig::new("artifacts", model);
+    cfg.bucket = bucket;
+    cfg.max_queue_samples = 100_000;
+    let engine = Engine::start(cfg)?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    {
+        let c = engine.client();
+        std::thread::spawn(move || {
+            let _ = serve(
+                listener,
+                c,
+                ServerConfig { port: addr.port(), default_eps_rel: 0.05 },
+            );
+        });
+    }
+    println!("\n== async jobs: burst of {burst} submits (n=1 em:8) over TCP ==");
+    let spec = |seed: u64| {
+        GenerateRequest::new(1).solver("em:8").eps_rel(0.5).seed(seed).images(false)
+    };
+
+    // sync baseline: the same burst, one blocking generate at a time
+    let mut c = Client::connect(&addr.to_string())?;
+    let t0 = Instant::now();
+    for i in 0..burst {
+        c.run(&spec(i as u64))?;
+    }
+    let sync_wall = t0.elapsed().as_secs_f64();
+
+    // async: fire the whole burst, then drain; every submitted id must
+    // come back exactly once (the check_async.py acceptance gate)
+    let t0 = Instant::now();
+    let mut expected = HashSet::new();
+    for i in 0..burst {
+        expected.insert(c.submit(&spec(i as u64))?);
+    }
+    let submit_wall = t0.elapsed().as_secs_f64();
+    let mut seen = HashSet::new();
+    let (mut delivered, mut duplicates, mut failures) = (0u64, 0u64, 0u64);
+    while seen.len() < burst && t0.elapsed().as_secs_f64() < 120.0 {
+        for u in c.poll(100, false)? {
+            delivered += 1;
+            if !u.is_ok() {
+                failures += 1;
+            }
+            if !expected.contains(&u.job) || !seen.insert(u.job) {
+                duplicates += 1;
+            }
+        }
+    }
+    let async_wall = t0.elapsed().as_secs_f64();
+    println!(
+        "  sync  : {burst} requests in {sync_wall:.2}s ({:.1} req/s)",
+        burst as f64 / sync_wall
+    );
+    println!(
+        "  async : submitted in {submit_wall:.3}s, drained in {async_wall:.2}s \
+         ({:.1} req/s) delivered {delivered} duplicates {duplicates} failures {failures}",
+        burst as f64 / async_wall
+    );
+
+    // payload overhead: one n=8 image batch, base64 line vs negotiated
+    // binary frame, measured on a raw socket so the byte counts are the
+    // real wire footprint
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let body = format!(
+        "{{\"op\":\"generate\",\"n\":8,\"solver\":\"em:8\",\"eps_rel\":0.5,\"seed\":7,\
+         \"model\":\"{model}\"}}"
+    );
+    writeln!(writer, "{body}")?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let head = gofast::json::parse(line.trim_end())?;
+    let b64_payload = head.req("images_b64")?.as_str()?.len() as u64;
+    let b64_total = line.len() as u64;
+    writeln!(writer, "{}", body.replace("\"seed\":7", "\"seed\":7,\"binary\":true"))?;
+    line.clear();
+    reader.read_line(&mut line)?;
+    let head = gofast::json::parse(line.trim_end())?;
+    let bin_payload = head.req("images_bin")?.as_f64()? as u64;
+    let mut frame = vec![0u8; bin_payload as usize];
+    reader.read_exact(&mut frame)?;
+    let bin_total = line.len() as u64 + bin_payload;
+    println!(
+        "  payload (n=8): base64 {b64_payload} bytes (line {b64_total}) vs \
+         binary {bin_payload} bytes (line+frame {bin_total}, {:.2}x smaller)",
+        b64_total as f64 / bin_total.max(1) as f64
+    );
+
+    let doc = Value::obj(vec![
+        ("model", Value::str(model)),
+        ("bucket", Value::num(bucket as f64)),
+        ("submitted", Value::num(burst as f64)),
+        ("delivered", Value::num(delivered as f64)),
+        ("duplicates", Value::num(duplicates as f64)),
+        ("failures", Value::num(failures as f64)),
+        ("sync_wall_s", Value::num(sync_wall)),
+        ("sync_rps", Value::num(burst as f64 / sync_wall)),
+        ("submit_wall_s", Value::num(submit_wall)),
+        ("async_wall_s", Value::num(async_wall)),
+        ("async_rps", Value::num(burst as f64 / async_wall)),
+        (
+            "payload",
+            Value::obj(vec![
+                ("samples", Value::num(8.0)),
+                ("b64_bytes", Value::num(b64_payload as f64)),
+                ("b64_total_bytes", Value::num(b64_total as f64)),
+                ("bin_bytes", Value::num(bin_payload as f64)),
+                ("bin_total_bytes", Value::num(bin_total as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/serving_async.json", format!("{doc}"))?;
+    println!("[serving_async] json -> bench_out/serving_async.json");
     Ok(())
 }

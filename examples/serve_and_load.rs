@@ -11,7 +11,7 @@ use gofast::bench::{fmt_duration, summarize};
 use gofast::cli::Args;
 use gofast::coordinator::{Engine, EngineConfig};
 use gofast::rng::Rng;
-use gofast::server::{serve, Client, ServerConfig};
+use gofast::server::{serve, Client, GenerateRequest, ServerConfig};
 use gofast::tensor::save_image_grid;
 use gofast::workload::{poisson_trace, TraceConfig};
 use gofast::{Context, Result};
@@ -83,7 +83,11 @@ fn main() -> Result<()> {
                     return;
                 }
             };
-            match c.generate(item.n, item.eps_rel, item.seed, false) {
+            let req = GenerateRequest::new(item.n)
+                .eps_rel(item.eps_rel)
+                .seed(item.seed)
+                .images(false);
+            match c.run(&req) {
                 Ok(r) => {
                     lat.lock().unwrap().push(t_req.elapsed().as_secs_f64());
                     nfes.lock().unwrap().extend(r.nfe);
@@ -132,7 +136,7 @@ fn main() -> Result<()> {
 
     // grab one last batch of images for the record
     let mut c = Client::connect(&addr.to_string())?;
-    let r = c.generate(16, 0.05, 12345, true)?;
+    let r = c.run(&GenerateRequest::new(16).eps_rel(0.05).seed(12345))?;
     save_image_grid(Path::new("serve_and_load.ppm"), &r.images, 16, 16, 4)?;
     println!("wrote serve_and_load.ppm");
     Ok(())

@@ -95,6 +95,17 @@ pub fn default_programs() -> Vec<String> {
     vec!["adaptive".to_string(), "em".to_string(), "ddim".to_string(), "pc".to_string()]
 }
 
+/// What `EngineClient::cancel` found for a cancel token: a still-queued
+/// request (now dequeued through the shed path), a request already
+/// holding lanes (runs to completion, mirroring deadline semantics), or
+/// no pending request at all (never admitted, or already finished).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    Canceled,
+    Running,
+    NotFound,
+}
+
 #[derive(Clone, Debug)]
 pub struct GenResult {
     /// Unit-range images, [n, dim].
@@ -199,6 +210,9 @@ pub struct EngineStats {
     pub shed_deadline: u64,
     /// Requests rejected by per-model admission quotas.
     pub rejected_quota: u64,
+    /// Still-queued requests dequeued by `EngineClient::cancel` (the
+    /// async job API's cancel path).
+    pub canceled: u64,
 }
 
 /// Handle owning the engine thread.
@@ -272,23 +286,58 @@ impl EngineClient {
             sample_base: 0,
             priority: None,
             deadline_ms: None,
+            cancel_token: None,
         })
     }
 
     /// Generate with full request control (priority class, deadline).
     /// Client requests use `sample_base` 0.
     pub fn generate_request(&self, req: SampleRequest) -> Result<GenResult> {
+        let rrx = self.generate_async(req)?;
+        rrx.recv().map_err(|_| anyhow!("engine dropped the request"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Fire-and-poll variant of [`generate_request`]: enqueue the
+    /// request and return the completion channel immediately. The async
+    /// job table holds these receivers; admission rejections (queue cap,
+    /// quota, bad solver) arrive on the channel like any other failure.
+    ///
+    /// [`generate_request`]: EngineClient::generate_request
+    pub fn generate_async(
+        &self,
+        req: SampleRequest,
+    ) -> Result<mpsc::Receiver<Result<GenResult, String>>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx.send(Msg::Generate(req, rtx)).map_err(|_| anyhow!("engine is down"))?;
-        rrx.recv().map_err(|_| anyhow!("engine dropped the request"))?.map_err(|e| anyhow!(e))
+        Ok(rrx)
     }
 
     /// FID*/IS* evaluation served through the engine's scheduler/registry
     /// machinery (blocks until the run completes).
     pub fn evaluate(&self, req: EvalRequest) -> Result<EvalResult> {
+        let rrx = self.evaluate_async(req)?;
+        rrx.recv().map_err(|_| anyhow!("engine dropped the request"))?.map_err(|e| anyhow!(e))
+    }
+
+    /// Fire-and-poll variant of [`EngineClient::evaluate`].
+    pub fn evaluate_async(
+        &self,
+        req: EvalRequest,
+    ) -> Result<mpsc::Receiver<Result<EvalResult, String>>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx.send(Msg::Evaluate(req, rtx)).map_err(|_| anyhow!("engine is down"))?;
-        rrx.recv().map_err(|_| anyhow!("engine dropped the request"))?.map_err(|e| anyhow!(e))
+        Ok(rrx)
+    }
+
+    /// Dequeue the still-queued request carrying `token` (its
+    /// `SampleRequest::cancel_token`) through the shed path: pending
+    /// state removed, queue/quota accounting released, its sink sent a
+    /// terminal error. A request already holding lanes is left to run
+    /// (`CancelOutcome::Running`), mirroring deadline semantics.
+    pub fn cancel(&self, token: u64) -> Result<CancelOutcome> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Cancel(token, rtx)).map_err(|_| anyhow!("engine is down"))?;
+        rrx.recv().map_err(|_| anyhow!("engine dropped the cancel"))
     }
 
     pub fn stats(&self) -> Result<EngineStats> {
@@ -440,6 +489,10 @@ impl<'rt> EngineState<'rt> {
                 let _ = reply.send(self.stats());
                 false
             }
+            Msg::Cancel(token, reply) => {
+                let _ = reply.send(self.cancel_queued(token));
+                false
+            }
             Msg::Generate(req, reply) => {
                 if let Err(e) = req.solver.validate() {
                     // a spec the wire parser would refuse (em:0, pc@0)
@@ -569,7 +622,8 @@ impl<'rt> EngineState<'rt> {
             seed: spec.seed,
             sample_base: spec.sample_base,
             priority: spec.priority,
-            deadline_ms: None, // eval jobs run to completion
+            deadline_ms: None,   // eval jobs run to completion
+            cancel_token: None, // chunks are internal; cancel targets client requests
         };
         let sink = Sink::Eval { job: spec.job, chunk: spec.chunk };
         self.enqueue(spec.model_idx, spec.pool_idx, req, sink);
@@ -614,6 +668,39 @@ impl<'rt> EngineState<'rt> {
             }
             // eval chunks never carry deadlines (see enqueue_eval_chunk)
         }
+    }
+
+    /// Dequeue the still-queued request carrying `token` — the
+    /// client-driven twin of `shed_expired`: identical bookkeeping
+    /// (pending removed, fifo entry dropped, queue/quota accounting
+    /// released, terminal error to the sink), different trigger. A
+    /// request with any sample in a lane keeps running
+    /// (`CancelOutcome::Running`), exactly like an expired deadline.
+    fn cancel_queued(&mut self, token: u64) -> CancelOutcome {
+        let hit = self
+            .pending
+            .iter()
+            .find(|(_, p)| p.req.cancel_token == Some(token))
+            .map(|(id, p)| (*id, p.next_sample));
+        let Some((id, next_sample)) = hit else {
+            return CancelOutcome::NotFound;
+        };
+        if next_sample > 0 {
+            return CancelOutcome::Running;
+        }
+        let p = self.pending.remove(&id).unwrap();
+        // drop it from the pool that enqueued it: resolve succeeds
+        // because admission resolved the same (model, solver) pair
+        if let Ok((mi, pi)) = self.registry.resolve_pool(&p.req.model, &p.req.solver) {
+            self.registry.entry_mut(mi).pools[pi].fifo.retain(|&q| q != id);
+            self.queued_samples -= p.req.n;
+            self.qos.queued_per_model[mi] -= p.req.n;
+        }
+        self.qos.canceled += 1;
+        if let Sink::Client(reply) = p.sink {
+            let _ = reply.send(Err("request canceled by client".to_string()));
+        }
+        CancelOutcome::Canceled
     }
 
     /// Fold completed eval chunks into their jobs, admitting follow-up
@@ -946,6 +1033,7 @@ impl<'rt> EngineState<'rt> {
             classes: self.qos.class_stats(),
             shed_deadline: self.qos.shed_deadline,
             rejected_quota: self.qos.rejected_quota,
+            canceled: self.qos.canceled,
         }
     }
 }

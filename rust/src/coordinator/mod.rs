@@ -41,7 +41,9 @@ pub mod qos;
 pub(crate) mod registry;
 pub mod scheduler;
 
-pub use engine::{Engine, EngineClient, EngineConfig, EngineStats, GenResult, ProgramStats};
+pub use engine::{
+    CancelOutcome, Engine, EngineClient, EngineConfig, EngineStats, GenResult, ProgramStats,
+};
 pub use eval::{EvalRequest, EvalResult};
 pub use qos::{ClassLatencyStats, PoolQosStats, Priority, QosConfig, Quota};
 pub use scheduler::BucketScheduler;
@@ -77,12 +79,20 @@ pub struct SampleRequest {
     /// lane yet) is shed with a `deadline_exceeded` error; once any
     /// sample holds a lane the request runs to completion.
     pub deadline_ms: Option<u64>,
+    /// Opaque caller-chosen token `Msg::Cancel` matches on. The async
+    /// job table stamps the job id here so a still-queued submission can
+    /// be dequeued through the shed path; sync requests leave it `None`
+    /// (uncancellable, as before).
+    pub cancel_token: Option<u64>,
 }
 
 /// Engine mailbox messages.
 pub(crate) enum Msg {
     Generate(SampleRequest, mpsc::Sender<Result<GenResult, String>>),
     Evaluate(EvalRequest, mpsc::Sender<Result<EvalResult, String>>),
+    /// Dequeue the still-queued request carrying this `cancel_token`
+    /// (engine::CancelOutcome reports queued/running/absent).
+    Cancel(u64, mpsc::Sender<engine::CancelOutcome>),
     Stats(mpsc::Sender<EngineStats>),
     Shutdown,
 }

@@ -494,6 +494,7 @@ mod tests {
             sample_base: 0,
             priority: None,
             deadline_ms: None,
+            cancel_token: None,
         }
     }
 

@@ -89,6 +89,20 @@ pub const CODE_DEADLINE: &str = "deadline_exceeded";
 /// (zero-step fixed schedule, non-positive / non-finite Langevin snr)
 /// rejected at admission or in the wire parser.
 pub const CODE_BAD_SOLVER: &str = "bad_solver";
+/// Machine-readable code for a request the wire layer cannot parse:
+/// malformed JSON, a missing/mistyped field, or a value out of range.
+pub const CODE_BAD_REQUEST: &str = "bad_request";
+/// Machine-readable code for an unknown wire op (the error text lists
+/// the supported op names).
+pub const CODE_BAD_OP: &str = "bad_op";
+/// Machine-readable code for a job id the job table does not hold: never
+/// issued, already polled, already canceled, or already completed (a
+/// completed job can no longer be canceled; its result stays pollable).
+pub const CODE_UNKNOWN_JOB: &str = "unknown_job";
+/// Machine-readable fallback code for errors with no structured cause
+/// (engine faults, routing errors surfaced as plain strings). Every
+/// `ok:false` wire response carries *some* code; this is the catch-all.
+pub const CODE_INTERNAL: &str = "internal";
 
 /// Prefix an error message with a structured code; [`error_code`]
 /// recovers it at the wire layer.
@@ -101,7 +115,16 @@ pub fn coded(code: &str, msg: &str) -> String {
 /// this to emit a `code` field next to `error` without a parallel error
 /// type crossing every channel.
 pub fn error_code(msg: &str) -> Option<&'static str> {
-    for code in [CODE_QUOTA, CODE_QUEUE_FULL, CODE_DEADLINE, CODE_BAD_SOLVER] {
+    for code in [
+        CODE_QUOTA,
+        CODE_QUEUE_FULL,
+        CODE_DEADLINE,
+        CODE_BAD_SOLVER,
+        CODE_BAD_REQUEST,
+        CODE_BAD_OP,
+        CODE_UNKNOWN_JOB,
+        CODE_INTERNAL,
+    ] {
         if let Some(rest) = msg.strip_prefix(code) {
             if rest.starts_with(':') {
                 return Some(code);
@@ -366,6 +389,10 @@ pub(crate) struct QosState {
     pub classes: [ClassMetrics; 2],
     pub shed_deadline: u64,
     pub rejected_quota: u64,
+    /// Still-queued requests canceled through the async job API (the
+    /// dequeue twin of `shed_deadline`: same accounting, client-driven
+    /// trigger instead of a deadline).
+    pub canceled: u64,
 }
 
 impl QosState {
@@ -437,6 +464,7 @@ impl QosState {
             classes: Default::default(),
             shed_deadline: 0,
             rejected_quota: 0,
+            canceled: 0,
         })
     }
 
@@ -485,6 +513,11 @@ mod tests {
         assert_eq!(error_code(&coded(CODE_DEADLINE, "x")), Some(CODE_DEADLINE));
         assert_eq!(error_code(&coded(CODE_BAD_SOLVER, "snr must be > 0")), Some(CODE_BAD_SOLVER));
         assert_eq!(error_code("quota_exceeded_extra: x"), None);
+        // the async-protocol codes ride the same prefix scheme
+        assert_eq!(error_code(&coded(CODE_BAD_REQUEST, "no op field")), Some(CODE_BAD_REQUEST));
+        assert_eq!(error_code(&coded(CODE_BAD_OP, "unknown op 'x'")), Some(CODE_BAD_OP));
+        assert_eq!(error_code(&coded(CODE_UNKNOWN_JOB, "job 9")), Some(CODE_UNKNOWN_JOB));
+        assert_eq!(error_code(&coded(CODE_INTERNAL, "engine fault")), Some(CODE_INTERNAL));
     }
 
     #[test]

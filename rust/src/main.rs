@@ -74,10 +74,18 @@ USAGE: gofast <command> [flags]
              model or model/program; --quota caps queued samples and
              --quota-lanes active lanes per model; requests may carry
              priority/deadline_ms — see rust/src/server/mod.rs)
-  client    [--addr 127.0.0.1:7878] [--model vp]
+  client    [generate|submit|poll|cancel|watch|hello]
+            [--addr 127.0.0.1:7878] [--model vp]
             [--solver adaptive|em:<n>|ddim:<n>|pc:<n>[@<snr>]]
             [--n 4] [--eps-rel 0.05] [--seed 0] [--priority interactive|batch]
-            [--deadline-ms 0] [--stats] [--out grid.ppm]
+            [--deadline-ms 0] [--binary] [--stats] [--out grid.ppm]
+            (async job ops — wire spec in docs/PROTOCOL.md:
+             submit fires a generate and prints the job id;
+             poll [--job id] [--timeout-ms 0] drains completed jobs;
+             cancel --job id frees a still-queued job;
+             watch [--rate-ms 1000] [--rounds 0] runs a periodic job and
+             streams its rounds; hello prints server capabilities;
+             --binary asks for raw f32 payload frames instead of base64)
   evaluate  --model vp [--solver adaptive|em:<n>|ddim:<n>|pc:<n>[@<snr>]|...]
             [--samples 256]
             [--eps-rel 0.05] [--seed 0] [--addr host:port] [--offline]
@@ -289,31 +297,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )
 }
 
-fn cmd_client(args: &Args) -> Result<()> {
-    let addr = args.str_or("addr", "127.0.0.1:7878");
-    let mut client = gofast::server::Client::connect(&addr)?;
-    if args.has("stats") {
-        println!("{}", client.stats()?);
-        return Ok(());
-    }
-    let n = args.usize_or("n", 4)?;
-    let model = args.str_or("model", "");
-    let solver = args.str_or("solver", "");
+/// The one request surface every client subcommand serializes from
+/// (sync `generate`, async `submit`/`watch`): flags -> builder.
+fn gen_request(args: &Args) -> Result<gofast::server::GenerateRequest> {
     let priority = args.str_or("priority", "");
     if !priority.is_empty() {
         qos::Priority::parse(&priority)?; // fail locally, not on the wire
     }
-    let r = client.generate_qos(
-        &model,
-        &solver,
-        n,
-        args.f64_or("eps-rel", 0.05)?,
-        args.u64_or("seed", 0)?,
-        &priority,
-        args.u64_or("deadline-ms", 0)?,
-        true,
-    )?;
-    let mean_nfe = r.nfe.iter().sum::<u64>() as f64 / r.nfe.len() as f64;
+    Ok(gofast::server::GenerateRequest::new(args.usize_or("n", 4)?)
+        .model(&args.str_or("model", ""))
+        .solver(&args.str_or("solver", ""))
+        .eps_rel(args.f64_or("eps-rel", 0.05)?)
+        .seed(args.u64_or("seed", 0)?)
+        .priority(&priority)
+        .deadline_ms(args.u64_or("deadline-ms", 0)?)
+        .binary(args.has("binary")))
+}
+
+fn print_gen(args: &Args, n: usize, r: &gofast::server::ClientGenResult) -> Result<()> {
+    let model = args.str_or("model", "");
+    let solver = args.str_or("solver", "");
+    let mean_nfe = r.nfe.iter().sum::<u64>() as f64 / r.nfe.len().max(1) as f64;
     println!(
         "model={} solver={} n={n} wall={:.2}s queued={:.3}s mean_nfe={mean_nfe:.1}",
         if model.is_empty() { "<default>" } else { &model },
@@ -329,6 +333,102 @@ fn cmd_client(args: &Args) -> Result<()> {
         println!("wrote {out}");
     }
     Ok(())
+}
+
+fn print_update(u: &gofast::server::JobUpdate) {
+    let round = u.round.map(|r| format!(" round={r}")).unwrap_or_default();
+    if let Some(err) = &u.error {
+        let code = u.code.as_deref().unwrap_or("internal");
+        println!("job {} {}{round} failed [{code}]: {err}", u.job, u.op);
+    } else if let Some(g) = &u.gen {
+        let mean_nfe = g.nfe.iter().sum::<u64>() as f64 / g.nfe.len().max(1) as f64;
+        println!(
+            "job {} {}{round} done: n={} wall={:.2}s queued={:.3}s mean_nfe={mean_nfe:.1}",
+            u.job,
+            u.op,
+            g.nfe.len(),
+            g.wall_s,
+            g.queued_s
+        );
+    } else if let Some(e) = &u.eval {
+        println!(
+            "job {} {}{round} done: samples={} FID*={:.3} IS*={:.3} NFE={:.1}",
+            u.job, u.op, e.samples, e.fid, e.is, e.mean_nfe
+        );
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let mut client = gofast::server::Client::connect(&addr)?;
+    if args.has("stats") {
+        println!("{}", client.stats()?);
+        return Ok(());
+    }
+    let binary = args.has("binary");
+    match args.positional.get(1).map(|s| s.as_str()).unwrap_or("generate") {
+        "generate" => {
+            let req = gen_request(args)?;
+            let n = args.usize_or("n", 4)?;
+            let r = client.run(&req)?;
+            print_gen(args, n, &r)
+        }
+        "submit" => {
+            let id = client.submit(&gen_request(args)?)?;
+            println!("job {id}");
+            Ok(())
+        }
+        "poll" => {
+            let timeout_ms = args.u64_or("timeout-ms", 0)?;
+            let updates = match args.get("job") {
+                Some(_) => client.poll_job(args.u64_or("job", 0)?, timeout_ms, binary)?,
+                None => client.poll(timeout_ms, binary)?,
+            };
+            if updates.is_empty() {
+                println!("no completed jobs");
+            }
+            for u in &updates {
+                print_update(u);
+            }
+            Ok(())
+        }
+        "cancel" => {
+            let id = args.u64_or("job", 0)?;
+            if id == 0 {
+                bail!("cancel needs --job <id>");
+            }
+            if client.cancel(id)? {
+                println!("job {id} canceled (freed while queued)");
+            } else {
+                println!("job {id} still running (will complete; poll for the result)");
+            }
+            Ok(())
+        }
+        "watch" => {
+            let rate_ms = args.u64_or("rate-ms", 1000)?;
+            let rounds = args.u64_or("rounds", 0)?; // 0 = until killed
+            let id = client.periodic(&gen_request(args)?, rate_ms)?;
+            println!("periodic job {id} every {rate_ms}ms (ctrl-c to stop)");
+            let mut seen = 0u64;
+            loop {
+                for u in client.poll_job(id, 1000, binary)? {
+                    print_update(&u);
+                    seen += 1;
+                }
+                if rounds > 0 && seen >= rounds {
+                    let _ = client.cancel(id);
+                    return Ok(());
+                }
+            }
+        }
+        "hello" => {
+            println!("{}", client.hello()?);
+            Ok(())
+        }
+        other => bail!(
+            "unknown client subcommand '{other}' (generate, submit, poll, cancel, watch, hello)"
+        ),
+    }
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
@@ -410,7 +510,13 @@ fn evaluate_served(args: &Args, solver: solvers::ServingSolver) -> Result<EvalSu
             }
         }
         let mut client = gofast::server::Client::connect(addr)?;
-        let r = client.evaluate(&model, &solver.spec_string(), samples, eps_rel, seed)?;
+        let r = client.run_eval(
+            &gofast::server::EvalRequest::new(samples)
+                .model(&model)
+                .solver(&solver.spec_string())
+                .eps_rel(eps_rel)
+                .seed(seed),
+        )?;
         return Ok(EvalSummary {
             fid: r.fid,
             is: r.is,

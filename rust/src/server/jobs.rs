@@ -1,0 +1,394 @@
+//! Async job table: fire-and-poll delivery between the wire protocol
+//! and the engine (docs/ARCHITECTURE.md §Async jobs).
+//!
+//! A `submit` allocates a job id, stamps it into the request's
+//! `cancel_token`, and hands the engine's reply channel to the table
+//! instead of blocking the connection on it. `poll` drains whatever has
+//! completed since (each result delivered exactly once), `cancel`
+//! frees still-queued work through the engine's shed path (a request
+//! with a sample in a lane runs to completion, mirroring deadline
+//! semantics), and `periodic` re-runs a generation spec on an interval
+//! with the newest results retained ring-buffer style.
+//!
+//! The table is server-global (one per `serve`), so jobs outlive the
+//! connection that submitted them: a client may submit, disconnect,
+//! reconnect and poll. Ownership of a result is transferred at
+//! delivery — a polled job is gone from the table.
+
+use crate::coordinator::{
+    CancelOutcome, EngineClient, EvalResult as EngineEvalResult, EvalRequest as EngineEvalRequest,
+    GenResult, SampleRequest,
+};
+use crate::Result;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Newest periodic rounds retained per job; older unpolled rounds are
+/// dropped (a smoke-sampling consumer wants fresh samples, not a
+/// backlog that grows while it sleeps).
+pub const PERIODIC_RING: usize = 8;
+
+/// Request facts echoed into every update so a poller can interpret a
+/// payload without holding its own submit-time bookkeeping.
+#[derive(Clone, Debug)]
+pub struct JobMeta {
+    /// Canonical solver spec string ("adaptive", "em:128", ...).
+    pub solver: String,
+    pub n: usize,
+    /// Whether the submit asked for sample payloads (generate only).
+    pub want_images: bool,
+}
+
+enum Job {
+    Gen {
+        rx: std::sync::mpsc::Receiver<std::result::Result<GenResult, String>>,
+        /// Result parked by a losing `cancel` race (the engine had
+        /// already replied): the job can no longer be canceled but its
+        /// payload stays pollable.
+        done: Option<std::result::Result<GenResult, String>>,
+        meta: JobMeta,
+    },
+    Eval {
+        rx: std::sync::mpsc::Receiver<std::result::Result<EngineEvalResult, String>>,
+        meta: JobMeta,
+    },
+    Periodic {
+        /// (round, result) pairs awaiting delivery, newest last.
+        ring: VecDeque<(u64, std::result::Result<GenResult, String>)>,
+        stop: Arc<AtomicBool>,
+        meta: JobMeta,
+    },
+}
+
+/// One completed unit of work drained by `poll`.
+pub struct JobUpdate {
+    pub id: u64,
+    pub meta: JobMeta,
+    /// Round index for periodic jobs (`None` for one-shot submits).
+    pub round: Option<u64>,
+    pub outcome: JobOutcome,
+}
+
+pub enum JobOutcome {
+    Gen(std::result::Result<GenResult, String>),
+    Eval(std::result::Result<EngineEvalResult, String>),
+}
+
+/// What a cancel did; the wire layer maps `AlreadyDone`/`Unknown` to a
+/// structured `unknown_job` rejection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelStatus {
+    /// Freed while still fully queued (quota/queue_depth released).
+    Canceled,
+    /// Holds at least one lane (or is an eval job): runs to completion,
+    /// stays pollable.
+    Running,
+    /// Completed before the cancel arrived; the result stays pollable.
+    AlreadyDone,
+    /// Never issued, already polled, or already canceled.
+    Unknown,
+}
+
+/// Lifetime counters for the `stats` op's `jobs` block.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobStats {
+    pub submitted: u64,
+    pub delivered: u64,
+    pub canceled: u64,
+    /// Jobs currently held by the table (undelivered or periodic).
+    pub active: usize,
+    /// Periodic jobs among `active`.
+    pub periodic: usize,
+}
+
+struct Inner {
+    next_id: u64,
+    jobs: HashMap<u64, Job>,
+    submitted: u64,
+    delivered: u64,
+    canceled: u64,
+}
+
+pub struct JobTable {
+    inner: Mutex<Inner>,
+}
+
+impl Default for JobTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JobTable {
+    pub fn new() -> JobTable {
+        JobTable {
+            inner: Mutex::new(Inner {
+                next_id: 1,
+                jobs: HashMap::new(),
+                submitted: 0,
+                delivered: 0,
+                canceled: 0,
+            }),
+        }
+    }
+
+    /// Submit a generate body: the job id doubles as the engine-side
+    /// `cancel_token`, and the engine's reply channel is parked in the
+    /// table. Admission rejections (quota, queue cap) arrive on that
+    /// channel too, surfacing as a failed job in `poll` — by the time
+    /// submit returns, the caller only ever has an id.
+    pub fn submit_gen(
+        &self,
+        engine: &EngineClient,
+        mut req: SampleRequest,
+        meta: JobMeta,
+    ) -> Result<u64> {
+        let id = self.alloc_id();
+        req.cancel_token = Some(id);
+        let rx = engine.generate_async(req)?;
+        let mut inner = self.inner.lock().unwrap();
+        inner.jobs.insert(id, Job::Gen { rx, done: None, meta });
+        inner.submitted += 1;
+        Ok(id)
+    }
+
+    /// Submit an evaluate body. Eval jobs run to completion (no engine
+    /// cancel path, mirroring the deadline rules), so `cancel` reports
+    /// them `Running`.
+    pub fn submit_eval(
+        &self,
+        engine: &EngineClient,
+        req: EngineEvalRequest,
+        meta: JobMeta,
+    ) -> Result<u64> {
+        let id = self.alloc_id();
+        let rx = engine.evaluate_async(req)?;
+        let mut inner = self.inner.lock().unwrap();
+        inner.jobs.insert(id, Job::Eval { rx, meta });
+        inner.submitted += 1;
+        Ok(id)
+    }
+
+    /// Start a periodic generation job: a worker thread re-runs `req`
+    /// every `rate_ms` until canceled, each round drawing fresh sample
+    /// streams (`sample_base = round * n`, so round r reproduces a sync
+    /// generate of the same seed at that base). Results land in a ring
+    /// capped at [`PERIODIC_RING`].
+    pub fn submit_periodic(
+        self: &Arc<Self>,
+        engine: EngineClient,
+        req: SampleRequest,
+        rate_ms: u64,
+        meta: JobMeta,
+    ) -> u64 {
+        let stop = Arc::new(AtomicBool::new(false));
+        let id = {
+            let mut inner = self.inner.lock().unwrap();
+            let id = inner.next_id;
+            inner.next_id += 1;
+            inner
+                .jobs
+                .insert(id, Job::Periodic { ring: VecDeque::new(), stop: stop.clone(), meta });
+            inner.submitted += 1;
+            id
+        };
+        let table = self.clone();
+        std::thread::spawn(move || {
+            let mut round: u64 = 0;
+            while !stop.load(Ordering::Relaxed) {
+                let mut r = req.clone();
+                r.sample_base = round * r.n as u64;
+                let res = engine.generate_request(r).map_err(|e| format!("{e:#}"));
+                let fatal = res.is_err();
+                if !table.periodic_push(id, round, res) {
+                    return; // job canceled/removed: stop producing
+                }
+                if fatal {
+                    // an engine that rejects (or died) would reject every
+                    // round; park the error in the ring and stop
+                    return;
+                }
+                round += 1;
+                // sleep in small chunks so cancel takes effect promptly
+                let mut slept = 0u64;
+                while slept < rate_ms && !stop.load(Ordering::Relaxed) {
+                    let chunk = (rate_ms - slept).min(10);
+                    std::thread::sleep(Duration::from_millis(chunk));
+                    slept += chunk;
+                }
+            }
+        });
+        id
+    }
+
+    /// Drain completed work. `timeout_ms` = 0 returns immediately with
+    /// whatever is ready; otherwise blocks until at least one update or
+    /// the timeout. `job` filters to a single id; `None` means that id
+    /// is unknown (never issued or already delivered).
+    pub fn poll(&self, timeout_ms: u64, job: Option<u64>) -> Option<Vec<JobUpdate>> {
+        let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+        loop {
+            let (updates, known) = self.drain(job);
+            if job.is_some() && !known && updates.is_empty() {
+                return None; // never issued or already delivered
+            }
+            if !updates.is_empty() || Instant::now() >= deadline {
+                return Some(updates);
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// One non-blocking sweep; returns (updates, filtered-id-known).
+    fn drain(&self, filter: Option<u64>) -> (Vec<JobUpdate>, bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let mut ids: Vec<u64> = inner.jobs.keys().copied().collect();
+        ids.sort_unstable(); // deliver in submit order
+        let known = filter.is_none_or(|id| inner.jobs.contains_key(&id));
+        let mut out = Vec::new();
+        for id in ids {
+            if let Some(f) = filter {
+                if id != f {
+                    continue;
+                }
+            }
+            let finished = match inner.jobs.get_mut(&id) {
+                Some(Job::Gen { rx, done, meta }) => {
+                    done.take().or_else(|| rx.try_recv().ok()).map(|r| JobUpdate {
+                        id,
+                        meta: meta.clone(),
+                        round: None,
+                        outcome: JobOutcome::Gen(r),
+                    })
+                }
+                Some(Job::Eval { rx, meta }) => rx.try_recv().ok().map(|r| JobUpdate {
+                    id,
+                    meta: meta.clone(),
+                    round: None,
+                    outcome: JobOutcome::Eval(r),
+                }),
+                Some(Job::Periodic { ring, meta, .. }) => {
+                    while let Some((round, r)) = ring.pop_front() {
+                        out.push(JobUpdate {
+                            id,
+                            meta: meta.clone(),
+                            round: Some(round),
+                            outcome: JobOutcome::Gen(r),
+                        });
+                    }
+                    None // periodic jobs stay in the table
+                }
+                None => None,
+            };
+            if let Some(u) = finished {
+                inner.jobs.remove(&id);
+                out.push(u);
+            }
+        }
+        inner.delivered += out.len() as u64;
+        (out, known)
+    }
+
+    /// Cancel a job. One-shot generates go through the engine's dequeue
+    /// hook (the job id is the `cancel_token`): still fully queued →
+    /// freed, lane-holding → runs to completion. FIFO ordering of the
+    /// engine mailbox means a `NotFound` here implies the result was
+    /// already sent — it is parked so `poll` still delivers it, and the
+    /// cancel reports `AlreadyDone`.
+    pub fn cancel(&self, engine: &EngineClient, id: u64) -> CancelStatus {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            match inner.jobs.get_mut(&id) {
+                None => return CancelStatus::Unknown,
+                Some(Job::Periodic { stop, .. }) => {
+                    stop.store(true, Ordering::Relaxed);
+                    inner.jobs.remove(&id);
+                    inner.canceled += 1;
+                    return CancelStatus::Canceled;
+                }
+                Some(Job::Eval { .. }) => return CancelStatus::Running,
+                Some(Job::Gen { rx, done, .. }) => {
+                    if done.is_some() {
+                        return CancelStatus::AlreadyDone;
+                    }
+                    if let Ok(r) = rx.try_recv() {
+                        *done = Some(r);
+                        return CancelStatus::AlreadyDone;
+                    }
+                    // in flight: fall through to the engine (lock
+                    // dropped — the engine roundtrip must not stall
+                    // concurrent polls)
+                }
+            }
+        }
+        match engine.cancel(id) {
+            Ok(CancelOutcome::Canceled) => {
+                // the engine pushed its "canceled" error into the reply
+                // channel; dropping the job here keeps canceled work out
+                // of the delivery stream
+                let mut inner = self.inner.lock().unwrap();
+                inner.jobs.remove(&id);
+                inner.canceled += 1;
+                CancelStatus::Canceled
+            }
+            Ok(CancelOutcome::Running) => CancelStatus::Running,
+            Ok(CancelOutcome::NotFound) => {
+                let mut inner = self.inner.lock().unwrap();
+                if let Some(Job::Gen { rx, done, .. }) = inner.jobs.get_mut(&id) {
+                    if done.is_none() {
+                        if let Ok(r) = rx.try_recv() {
+                            *done = Some(r);
+                        }
+                    }
+                }
+                CancelStatus::AlreadyDone
+            }
+            Err(_) => CancelStatus::Unknown, // engine is down
+        }
+    }
+
+    pub fn stats(&self) -> JobStats {
+        let inner = self.inner.lock().unwrap();
+        JobStats {
+            submitted: inner.submitted,
+            delivered: inner.delivered,
+            canceled: inner.canceled,
+            active: inner.jobs.len(),
+            periodic: inner
+                .jobs
+                .values()
+                .filter(|j| matches!(j, Job::Periodic { .. }))
+                .count(),
+        }
+    }
+
+    fn alloc_id(&self) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        id
+    }
+
+    /// Worker-thread entry: append a periodic round. `false` once the
+    /// job is gone (canceled) — the worker exits on it.
+    fn periodic_push(
+        &self,
+        id: u64,
+        round: u64,
+        result: std::result::Result<GenResult, String>,
+    ) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.jobs.get_mut(&id) {
+            Some(Job::Periodic { ring, .. }) => {
+                ring.push_back((round, result));
+                while ring.len() > PERIODIC_RING {
+                    ring.pop_front(); // oldest unpolled rounds age out
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+}

@@ -1,132 +1,44 @@
 //! JSON-lines TCP serving front-end + client library.
 //!
-//! Protocol (one JSON object per line, both directions):
-//!   -> {"op":"generate","n":16,"eps_rel":0.05,"seed":7,"model":"vp",
-//!       "solver":"adaptive","priority":"interactive","deadline_ms":2000}
-//!   <- {"ok":true,"model":"vp","solver":"adaptive","n":16,"h":16,
-//!       "w":16,"nfe":[...],"wall_s":...,"queued_s":...,
-//!       "images_b64":"<f32-le raw, base64>"}
-//!   -> {"op":"evaluate","samples":256,"eps_rel":0.05,"seed":7,
-//!       "model":"vp","solver":"em:128","priority":"batch"}
-//!   <- {"ok":true,"model":"vp","solver":"em:128","samples":256,
-//!       "fid":...,"is":...,"mean_nfe":...,"wall_s":...,
-//!       "steps_per_bucket":{"<bucket>":steps,...}}
-//!   -> {"op":"stats"}
-//!   <- {"ok":true,"requests_done":...,"models":[...],
-//!       "programs":{"adaptive":{"pools":...,"active_lanes":...,
-//!         "queue_depth":...,
-//!         "steps":...,"occupied_lane_steps":...,"wasted_lane_steps":...,
-//!         "score_evals":...,"migrations_up":...,"migrations_down":...,
-//!         "steps_per_bucket":{"<bucket>":steps,...}},"em":{...},...},
-//!       "steps_per_bucket":{"<bucket>":steps,...},
-//!       "migrations_up":...,"migrations_down":...,
-//!       "wasted_lane_steps":...,"occupied_lane_steps":...,
-//!       "dispatches":...,"bytes_h2d":...,"bytes_d2h":...,
-//!       "evals_done":...,"eval_active":...,"eval_samples_done":...,
-//!       "eval_lane_steps":...,
-//!       "queue_depth":...,
-//!       "qos":{"shed_deadline":...,"rejected_quota":...,
-//!         "pools":{"<model>/<solver>":{"weight":...,"turns":...,
-//!           "steps":...,"occupied_lane_steps":...,"queue_depth":...,
-//!           "active_lanes":...},...},
-//!         "classes":{"interactive":{"requests_done":...,
-//!           "queue_wait_p50_s":...,"queue_wait_p95_s":...,
-//!           "queue_wait_p99_s":...,"e2e_p50_s":...,"e2e_p95_s":...,
-//!           "e2e_p99_s":...},"batch":{...}}},...}
-//!   -> {"op":"ping"} / <- {"ok":true}
+//! The wire protocol — ops (`hello`/`ping`/`stats`/`generate`/
+//! `evaluate`/`submit`/`poll`/`cancel`/`periodic`), the error-code
+//! table, binary payload framing, and the version field — is specified
+//! in **docs/PROTOCOL.md**; this module is its implementation. In
+//! brief: one JSON object per line in both directions, every response
+//! carries `"v":1`, every `ok:false` carries a machine-readable
+//! `code`, and a response whose header carries `images_bin` is
+//! followed by that many raw f32-le payload bytes (negotiated per
+//! request via `"binary":true`, advertised by `hello`).
 //!
-//! Error responses are `{"ok":false,"error":"<message>"}`; structured
-//! rejections additionally carry a machine-readable `"code"`:
-//! `"queue_full"` (global cap), `"quota_exceeded"` (per-model admission
-//! quota), `"deadline_exceeded"` (request shed after its `deadline_ms`
-//! expired while still queued), `"bad_solver"` (malformed or degenerate
-//! solver spec: unknown name, zero-step fixed schedule, non-positive or
-//! non-finite Langevin `snr`).
-//!
-//! QoS fields (docs/ARCHITECTURE.md §Admission & QoS):
-//! * `priority` (optional on `generate` and `evaluate`; `"interactive"`
-//!   or `"batch"`, default = the server's `--default-priority`) —
-//!   interactive requests are queued ahead of batch within their pool;
-//!   the class never changes a sample's content, only its wait.
-//! * `deadline_ms` (optional on `generate`; 0 or absent = no deadline)
-//!   — a request still fully queued when the deadline expires is shed
-//!   with `code:"deadline_exceeded"` instead of burning lane time; once
-//!   any sample holds a lane the request runs to completion. `evaluate`
-//!   rejects the field (evaluation jobs run to completion).
-//! * `queue_depth` in `stats` is the QoS-standard alias of
-//!   `queued_samples` (kept for compatibility); the per-pool and
-//!   per-program splits exist only under the new names.
-//!
-//! Dispatch/transfer counters in `stats` — `dispatches` (executable
-//! launches), `bytes_h2d`, `bytes_d2h` — expose the host↔device traffic
-//! the fused k-step path amortises (serve `--steps-per-dispatch`,
-//! docs/ARCHITECTURE.md §Device-resident lane state): at k > 1 the
-//! fixed-step pools keep lane state device-resident and launch one
-//! executable per k grid nodes, so `dispatches` and per-sample bytes
-//! fall roughly k-fold while `score_evals` and the sample bits stay
-//! identical to k = 1.
-//!
-//! `model` is optional and defaults to the engine's first configured
-//! model; the response `h`/`w` are the geometry of the model that
-//! actually served the request.
-//!
-//! `solver` (optional on both `generate` and `evaluate`, default
-//! "adaptive") is a solver spec parsed by `solvers::spec::parse` — the
-//! same parser `gofast evaluate` and `gofast serve --solvers` use, so
-//! the accepted names and defaults cannot drift between the CLI and the
-//! wire: `"adaptive"` (Algorithm 1, per-lane step sizes; `eps_rel` is
-//! its tolerance knob), `"em[:<steps>]"`, `"ddim[:<steps>]"` and
-//! `"pc[:<steps>[@<snr>]]"` (fixed uniform schedules, default 256
-//! steps; `ddim` is VP-only and a request against a non-VP model gets a
-//! clean `ok:false` protocol error at admission). `pc` is Song et
-//! al.'s Reverse-Diffusion + Langevin predictor–corrector: `<steps>`
-//! predictor steps at 2 score evals each (reported NFE = 2 x steps +
-//! the denoise call), with the Langevin corrector targeting the
-//! optional `@<snr>` signal-to-noise ratio — omitted, the serving
-//! process's default applies (0.16 VE / 0.01 VP, Song et al.). A spec
-//! with `snr <= 0`, a non-finite snr, or zero steps is rejected with
-//! `code:"bad_solver"`. Each (model, solver) pair is served by its own
-//! lane-program pool behind the bucket scheduler (docs/ARCHITECTURE.md
-//! §Solver-program pools), so mixed solver traffic co-batches on one
-//! engine thread. The response echoes the canonical spec string.
-//!
-//! `evaluate` runs FID*/IS* *through the serving path*: its samples are
-//! admitted as evaluation lanes onto the named solver's pool through
-//! the same scheduler/registry machinery as `generate` traffic
-//! (docs/ARCHITECTURE.md §Evaluation). `eps_rel` defaults to the
-//! server's solver tolerance, `samples` to 256 (must be >= 2: FID needs
-//! a non-singular feature covariance). The response `steps_per_bucket`
-//! counts the fused steps the serving pool ran while the job was in
-//! flight (shared with concurrent traffic on the same pool); `fid`/`is`
-//! use the in-tree synthception feature net (values comparable within
-//! this repo only).
-//!
-//! The `stats` op reports, besides the aggregate counters, a
-//! `programs` object keyed by solver name with that program's pool
-//! count, live lanes, queued samples, fused step executions,
-//! occupied/wasted lane-steps, useful score evaluations (occupied
-//! lane-steps x the program's per-step NFE cost), migration counters
-//! and per-bucket step counts — the per-program breakdown of the
-//! aggregate `steps_per_bucket` / `*_lane_steps` fields. `evals_done` /
-//! `eval_active` / `eval_samples_done` / `eval_lane_steps` expose the
-//! eval-lane share of engine work. `queue_depth` is the global count of
-//! samples awaiting a lane; the `qos` object breaks it down per
-//! (model, solver) pool next to each pool's configured weight and
-//! service-turn share, and reports per-priority-class queue-wait and
-//! end-to-end latency percentiles plus the deadline-shed / quota-reject
-//! counters.
+//! Synchronous ops block the connection on the engine reply; the async
+//! ops (`submit`/`poll`/`cancel`/`periodic`) go through the
+//! server-global [`jobs::JobTable`], so a submitted job survives its
+//! connection and can be polled from another one
+//! (docs/ARCHITECTURE.md §Async jobs).
 //!
 //! One OS thread per connection (requests within a connection pipeline
 //! through the shared engine, which does the real batching).
 
 pub mod b64;
+pub mod jobs;
 
-use crate::coordinator::{qos, EngineClient, EngineStats, EvalRequest, SampleRequest};
+use crate::coordinator::{
+    qos, EngineClient, EngineStats, EvalRequest as EngineEvalRequest, GenResult, SampleRequest,
+};
 use crate::json::{self, Value};
 use crate::solvers::spec;
 use crate::{anyhow, bail, Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use jobs::{CancelStatus, JobMeta, JobOutcome, JobTable};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Protocol version stamped into every response (`"v"`).
+pub const PROTO_VERSION: u64 = 1;
+
+/// Every op the server answers; unknown-op errors echo this list.
+pub const OPS: [&str; 9] =
+    ["hello", "ping", "stats", "generate", "evaluate", "submit", "poll", "cancel", "periodic"];
 
 pub struct ServerConfig {
     pub port: u16,
@@ -134,15 +46,19 @@ pub struct ServerConfig {
     pub default_eps_rel: f64,
 }
 
-/// Serve forever (each connection on its own thread).
+/// Serve forever (each connection on its own thread). The job table is
+/// server-global: jobs submitted on one connection are pollable from
+/// any other.
 pub fn serve(listener: TcpListener, engine: EngineClient, cfg: ServerConfig) -> Result<()> {
     let cfg = std::sync::Arc::new(cfg);
+    let jobs = Arc::new(JobTable::new());
     for stream in listener.incoming() {
         let stream = stream?;
         let engine = engine.clone();
         let cfg = cfg.clone();
+        let jobs = jobs.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(stream, engine, &cfg) {
+            if let Err(e) = handle_conn(stream, engine, &jobs, &cfg) {
                 eprintln!("[server] connection error: {e:#}");
             }
         });
@@ -150,9 +66,23 @@ pub fn serve(listener: TcpListener, engine: EngineClient, cfg: ServerConfig) -> 
     Ok(())
 }
 
+/// A response: the JSON header line plus any raw payload frames that
+/// follow it on the wire (in field order of their `images_bin` keys).
+struct Reply {
+    head: Value,
+    frames: Vec<Vec<u8>>,
+}
+
+impl Reply {
+    fn head(head: Value) -> Reply {
+        Reply { head, frames: Vec::new() }
+    }
+}
+
 pub fn handle_conn(
     stream: TcpStream,
     engine: EngineClient,
+    jobs: &Arc<JobTable>,
     cfg: &ServerConfig,
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -166,21 +96,25 @@ pub fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match handle_request(&line, &engine, cfg) {
-            Ok(v) => v,
+        let mut reply = match handle_request(&line, &engine, jobs, cfg) {
+            Ok(r) => r,
             Err(e) => {
                 let msg = format!("{e:#}");
-                let mut pairs = vec![("ok", Value::Bool(false))];
-                // structured rejections (quota / queue cap / deadline
-                // shed) carry a machine-readable code next to the text
-                if let Some(code) = qos::error_code(&msg) {
-                    pairs.push(("code", Value::str(code)));
-                }
-                pairs.push(("error", Value::str(msg)));
-                Value::obj(pairs)
+                // every ok:false carries a code: structured rejections
+                // keep theirs, everything else is the internal fallback
+                let code = qos::error_code(&msg).unwrap_or(qos::CODE_INTERNAL);
+                Reply::head(Value::obj(vec![
+                    ("ok", Value::Bool(false)),
+                    ("code", Value::str(code)),
+                    ("error", Value::str(msg)),
+                ]))
             }
         };
-        writeln!(writer, "{resp}")?;
+        reply.head.set("v", Value::num(PROTO_VERSION as f64));
+        writeln!(writer, "{}", reply.head)?;
+        for frame in &reply.frames {
+            writer.write_all(frame)?;
+        }
     }
 }
 
@@ -199,103 +133,377 @@ fn parse_solver(s: &str) -> Result<crate::solvers::ServingSolver> {
     spec::parse(s).map_err(|e| anyhow!("{}", qos::coded(qos::CODE_BAD_SOLVER, &format!("{e:#}"))))
 }
 
-fn handle_request(line: &str, engine: &EngineClient, cfg: &ServerConfig) -> Result<Value> {
-    let req = json::parse(line).context("parsing request json")?;
-    match req.req("op")?.as_str()? {
-        "ping" => Ok(Value::obj(vec![("ok", Value::Bool(true))])),
+/// Attach `code` to an error that carries none yet (request-parsing
+/// failures become `bad_request`; already-coded rejections like
+/// `bad_solver` pass through).
+fn coded_or(e: anyhow::Error, code: &str) -> anyhow::Error {
+    let msg = format!("{e:#}");
+    if qos::error_code(&msg).is_some() {
+        anyhow!("{msg}")
+    } else {
+        anyhow!("{}", qos::coded(code, &msg))
+    }
+}
+
+/// A parsed generate body (shared by `generate`, `submit` and
+/// `periodic` — async is a delivery mode, not a second parameter list).
+struct GenParams {
+    req: SampleRequest,
+    want_images: bool,
+    binary: bool,
+}
+
+fn parse_generate(req: &Value, cfg: &ServerConfig) -> Result<GenParams> {
+    let n = req.get("n").map(|v| v.as_usize()).transpose()?.unwrap_or(1);
+    let eps_rel = req
+        .get("eps_rel")
+        .map(|v| v.as_f64())
+        .transpose()?
+        .unwrap_or(cfg.default_eps_rel);
+    let seed = req.get("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64;
+    let model = req.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("").to_string();
+    let solver = parse_solver(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
+    let want_images = req.get("images").map(|v| v.as_bool()).transpose()?.unwrap_or(true);
+    let binary = req.get("binary").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
+    let priority = parse_priority(req)?;
+    // 0 means "no deadline", matching the builder and the CLI
+    // --deadline-ms convention — not "shed immediately"
+    let deadline_ms = req
+        .get("deadline_ms")
+        .map(|v| v.as_f64())
+        .transpose()?
+        .map(|v| v as u64)
+        .filter(|&d| d > 0);
+    Ok(GenParams {
+        req: SampleRequest {
+            model,
+            solver,
+            n,
+            eps_rel,
+            seed,
+            sample_base: 0,
+            priority,
+            deadline_ms,
+            cancel_token: None, // the job table stamps ids on submit
+        },
+        want_images,
+        binary,
+    })
+}
+
+fn parse_evaluate(req: &Value, cfg: &ServerConfig) -> Result<EngineEvalRequest> {
+    let samples = req.get("samples").map(|v| v.as_usize()).transpose()?.unwrap_or(256);
+    let eps_rel = req
+        .get("eps_rel")
+        .map(|v| v.as_f64())
+        .transpose()?
+        .unwrap_or(cfg.default_eps_rel);
+    let seed = req.get("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64;
+    let model = req.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("").to_string();
+    let solver = parse_solver(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
+    let priority = parse_priority(req)?;
+    if req.get("deadline_ms").is_some() {
+        bail!(
+            "deadline_ms is not supported on evaluate (deadlines shed queued \
+             generate requests; evaluation jobs run to completion)"
+        );
+    }
+    Ok(EngineEvalRequest { model, solver, samples, eps_rel, seed, priority })
+}
+
+/// A completed generate as a response object. With `binary`, the
+/// payload leaves the JSON line: the header carries
+/// `"images_bin":<byte count>` and the raw f32-le bytes are appended
+/// to `frames` (written after the line, in field order).
+fn gen_json(
+    r: &GenResult,
+    solver: &str,
+    n: usize,
+    want_images: bool,
+    binary: bool,
+    frames: &mut Vec<Vec<u8>>,
+) -> Value {
+    let mut pairs = vec![
+        ("ok", Value::Bool(true)),
+        // the model that actually served it (resolved default)
+        ("model", Value::str(r.model.clone())),
+        ("solver", Value::str(solver)),
+        ("n", Value::num(n as f64)),
+        ("h", Value::num(r.h as f64)),
+        ("w", Value::num(r.w as f64)),
+        ("wall_s", Value::num(r.wall_s)),
+        ("queued_s", Value::num(r.queued_s)),
+        ("nfe", Value::Arr(r.nfe.iter().map(|&v| Value::num(v as f64)).collect())),
+    ];
+    if want_images {
+        let bytes: Vec<u8> = r.images.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        if binary {
+            pairs.push(("images_bin", Value::num(bytes.len() as f64)));
+            frames.push(bytes);
+        } else {
+            pairs.push(("images_b64", Value::str(b64::encode(&bytes))));
+        }
+    }
+    Value::obj(pairs)
+}
+
+fn eval_json(r: &crate::coordinator::EvalResult) -> Value {
+    Value::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("model", Value::str(r.model.clone())),
+        ("solver", Value::str(r.solver.clone())),
+        ("samples", Value::num(r.samples as f64)),
+        ("fid", Value::num(r.fid)),
+        ("is", Value::num(r.is)),
+        ("mean_nfe", Value::num(r.mean_nfe)),
+        ("wall_s", Value::num(r.wall_s)),
+        ("steps_per_bucket", buckets_obj(&r.steps_per_bucket)),
+    ])
+}
+
+/// A failed job as a poll entry: same code plumbing as a top-level
+/// error, scoped to the one job instead of failing the poll.
+fn fail_json(op: &str, msg: &str) -> Value {
+    Value::obj(vec![
+        ("ok", Value::Bool(false)),
+        ("op", Value::str(op)),
+        ("code", Value::str(qos::error_code(msg).unwrap_or(qos::CODE_INTERNAL))),
+        ("error", Value::str(msg)),
+    ])
+}
+
+fn update_json(u: jobs::JobUpdate, binary: bool, frames: &mut Vec<Vec<u8>>) -> Value {
+    let mut v = match &u.outcome {
+        JobOutcome::Gen(Ok(r)) => {
+            let mut v = gen_json(r, &u.meta.solver, u.meta.n, u.meta.want_images, binary, frames);
+            v.set("op", Value::str("generate"));
+            v
+        }
+        JobOutcome::Eval(Ok(r)) => {
+            let mut v = eval_json(r);
+            v.set("op", Value::str("evaluate"));
+            v
+        }
+        JobOutcome::Gen(Err(e)) => fail_json("generate", e),
+        JobOutcome::Eval(Err(e)) => fail_json("evaluate", e),
+    };
+    v.set("job", Value::num(u.id as f64));
+    if let Some(round) = u.round {
+        v.set("round", Value::num(round as f64));
+    }
+    v
+}
+
+fn handle_request(
+    line: &str,
+    engine: &EngineClient,
+    jobs: &Arc<JobTable>,
+    cfg: &ServerConfig,
+) -> Result<Reply> {
+    let req = json::parse(line)
+        .context("parsing request json")
+        .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?;
+    let op = req
+        .req("op")
+        .and_then(|v| v.as_str())
+        .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?
+        .to_string();
+    match op.as_str() {
+        "ping" => Ok(Reply::head(Value::obj(vec![("ok", Value::Bool(true))]))),
+        "hello" => {
+            // capability discovery: version, ops, served models and
+            // solver programs, binary-frame availability — so clients
+            // stop probing `stats` for any of it
+            let s = engine.stats()?;
+            Ok(Reply::head(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("ops", Value::Arr(OPS.iter().map(|&o| Value::str(o)).collect())),
+                (
+                    "models",
+                    Value::Arr(s.models.iter().map(|m| Value::str(m.clone())).collect()),
+                ),
+                (
+                    "solvers",
+                    Value::Arr(s.programs.iter().map(|p| Value::str(p.solver.clone())).collect()),
+                ),
+                ("binary", Value::Bool(true)),
+            ])))
+        }
         "stats" => {
             let s = engine.stats()?;
-            Ok(stats_to_json(&s))
+            Ok(Reply::head(stats_to_json(&s, &jobs.stats())))
         }
         "generate" => {
-            let n = req.get("n").map(|v| v.as_usize()).transpose()?.unwrap_or(1);
-            let eps_rel = req
-                .get("eps_rel")
-                .map(|v| v.as_f64())
-                .transpose()?
-                .unwrap_or(cfg.default_eps_rel);
-            let seed = req.get("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64;
-            let model =
-                req.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("").to_string();
-            let solver =
-                parse_solver(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
-            let want_images =
-                req.get("images").map(|v| v.as_bool()).transpose()?.unwrap_or(true);
-            let priority = parse_priority(&req)?;
-            // 0 means "no deadline", matching Client::generate_qos and
-            // the CLI --deadline-ms convention — not "shed immediately"
-            let deadline_ms = req
-                .get("deadline_ms")
-                .map(|v| v.as_f64())
-                .transpose()?
-                .map(|v| v as u64)
-                .filter(|&d| d > 0);
-            let r = engine.generate_request(SampleRequest {
-                model,
-                solver,
+            let p = parse_generate(&req, cfg).map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?;
+            let solver = p.req.solver;
+            let n = p.req.n;
+            let r = engine.generate_request(p.req)?;
+            let mut frames = Vec::new();
+            let head = gen_json(
+                &r,
+                &solver.spec_string(),
                 n,
-                eps_rel,
-                seed,
-                sample_base: 0,
-                priority,
-                deadline_ms,
-            })?;
-            let mut pairs = vec![
-                ("ok", Value::Bool(true)),
-                // the model that actually served it (resolved default)
-                ("model", Value::str(r.model)),
-                ("solver", Value::str(solver.spec_string())),
-                ("n", Value::num(n as f64)),
-                ("h", Value::num(r.h as f64)),
-                ("w", Value::num(r.w as f64)),
-                ("wall_s", Value::num(r.wall_s)),
-                ("queued_s", Value::num(r.queued_s)),
-                (
-                    "nfe",
-                    Value::Arr(r.nfe.iter().map(|&v| Value::num(v as f64)).collect()),
-                ),
-            ];
-            if want_images {
-                let bytes: Vec<u8> =
-                    r.images.data.iter().flat_map(|v| v.to_le_bytes()).collect();
-                pairs.push(("images_b64", Value::str(b64::encode(&bytes))));
-            }
-            Ok(Value::obj(pairs))
+                p.want_images,
+                p.binary,
+                &mut frames,
+            );
+            Ok(Reply { head, frames })
         }
         "evaluate" => {
-            let samples = req.get("samples").map(|v| v.as_usize()).transpose()?.unwrap_or(256);
-            let eps_rel = req
-                .get("eps_rel")
-                .map(|v| v.as_f64())
-                .transpose()?
-                .unwrap_or(cfg.default_eps_rel);
-            let seed = req.get("seed").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as u64;
-            let model =
-                req.get("model").map(|v| v.as_str()).transpose()?.unwrap_or("").to_string();
-            let solver =
-                parse_solver(req.get("solver").map(|v| v.as_str()).transpose()?.unwrap_or(""))?;
-            let priority = parse_priority(&req)?;
-            if req.get("deadline_ms").is_some() {
-                bail!(
-                    "deadline_ms is not supported on evaluate (deadlines shed queued \
-                     generate requests; evaluation jobs run to completion)"
-                );
-            }
-            let r = engine
-                .evaluate(EvalRequest { model, solver, samples, eps_rel, seed, priority })?;
-            Ok(Value::obj(vec![
-                ("ok", Value::Bool(true)),
-                ("model", Value::str(r.model)),
-                ("solver", Value::str(r.solver)),
-                ("samples", Value::num(r.samples as f64)),
-                ("fid", Value::num(r.fid)),
-                ("is", Value::num(r.is)),
-                ("mean_nfe", Value::num(r.mean_nfe)),
-                ("wall_s", Value::num(r.wall_s)),
-                ("steps_per_bucket", buckets_obj(&r.steps_per_bucket)),
-            ]))
+            let er = parse_evaluate(&req, cfg).map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?;
+            let r = engine.evaluate(er)?;
+            Ok(Reply::head(eval_json(&r)))
         }
-        other => Err(anyhow!("unknown op '{other}'")),
+        "submit" => {
+            // wraps any generate/evaluate body: same fields, plus
+            // kind ("generate" default); returns a job id immediately
+            let kind = req
+                .get("kind")
+                .map(|v| v.as_str())
+                .transpose()
+                .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?
+                .unwrap_or("generate");
+            let id = match kind {
+                "generate" => {
+                    let p = parse_generate(&req, cfg)
+                        .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?;
+                    let meta = JobMeta {
+                        solver: p.req.solver.spec_string(),
+                        n: p.req.n,
+                        want_images: p.want_images,
+                    };
+                    jobs.submit_gen(engine, p.req, meta)?
+                }
+                "evaluate" => {
+                    let er = parse_evaluate(&req, cfg)
+                        .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?;
+                    let meta = JobMeta {
+                        solver: er.solver.spec_string(),
+                        n: er.samples,
+                        want_images: false,
+                    };
+                    jobs.submit_eval(engine, er, meta)?
+                }
+                other => {
+                    return Err(anyhow!(
+                        "{}",
+                        qos::coded(
+                            qos::CODE_BAD_REQUEST,
+                            &format!("submit kind must be 'generate' or 'evaluate', got '{other}'"),
+                        )
+                    ))
+                }
+            };
+            Ok(Reply::head(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("job", Value::num(id as f64)),
+            ])))
+        }
+        "poll" => {
+            let timeout_ms = req
+                .get("timeout_ms")
+                .map(|v| v.as_f64())
+                .transpose()
+                .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?
+                .unwrap_or(0.0) as u64;
+            let job = req
+                .get("job")
+                .map(|v| v.as_f64())
+                .transpose()
+                .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?
+                .map(|v| v as u64);
+            let binary = req
+                .get("binary")
+                .map(|v| v.as_bool())
+                .transpose()
+                .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?
+                .unwrap_or(false);
+            let updates = jobs.poll(timeout_ms, job).ok_or_else(|| {
+                anyhow!(
+                    "{}",
+                    qos::coded(
+                        qos::CODE_UNKNOWN_JOB,
+                        &format!(
+                            "no such job {} (never issued, already delivered, or canceled)",
+                            job.unwrap_or(0)
+                        ),
+                    )
+                )
+            })?;
+            let mut frames = Vec::new();
+            let arr: Vec<Value> =
+                updates.into_iter().map(|u| update_json(u, binary, &mut frames)).collect();
+            Ok(Reply {
+                head: Value::obj(vec![("ok", Value::Bool(true)), ("jobs", Value::Arr(arr))]),
+                frames,
+            })
+        }
+        "cancel" => {
+            let id = req
+                .req("job")
+                .and_then(|v| v.as_f64())
+                .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))? as u64;
+            match jobs.cancel(engine, id) {
+                CancelStatus::Canceled => Ok(Reply::head(Value::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("job", Value::num(id as f64)),
+                    ("canceled", Value::Bool(true)),
+                    ("state", Value::str("canceled")),
+                ]))),
+                CancelStatus::Running => Ok(Reply::head(Value::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("job", Value::num(id as f64)),
+                    ("canceled", Value::Bool(false)),
+                    // lane-holding work runs to completion (deadline
+                    // semantics); the result stays pollable
+                    ("state", Value::str("running")),
+                ]))),
+                CancelStatus::AlreadyDone => Err(anyhow!(
+                    "{}",
+                    qos::coded(
+                        qos::CODE_UNKNOWN_JOB,
+                        &format!("job {id} already completed (its result remains pollable)"),
+                    )
+                )),
+                CancelStatus::Unknown => Err(anyhow!(
+                    "{}",
+                    qos::coded(
+                        qos::CODE_UNKNOWN_JOB,
+                        &format!("no such job {id} (never issued, already delivered, or canceled)"),
+                    )
+                )),
+            }
+        }
+        "periodic" => {
+            let p = parse_generate(&req, cfg).map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?;
+            let rate_ms = req
+                .req("rate_ms")
+                .and_then(|v| v.as_f64())
+                .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))? as u64;
+            if rate_ms == 0 {
+                return Err(anyhow!(
+                    "{}",
+                    qos::coded(qos::CODE_BAD_REQUEST, "rate_ms must be >= 1")
+                ));
+            }
+            let meta = JobMeta {
+                solver: p.req.solver.spec_string(),
+                n: p.req.n,
+                want_images: p.want_images,
+            };
+            let id = jobs.submit_periodic(engine.clone(), p.req, rate_ms, meta);
+            Ok(Reply::head(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("job", Value::num(id as f64)),
+            ])))
+        }
+        other => Err(anyhow!(
+            "{}",
+            qos::coded(
+                qos::CODE_BAD_OP,
+                &format!("unknown op '{other}' (supported: {})", OPS.join(", ")),
+            )
+        )),
     }
 }
 
@@ -303,7 +511,7 @@ fn buckets_obj(per: &[(usize, u64)]) -> Value {
     Value::Obj(per.iter().map(|(b, n)| (b.to_string(), Value::num(*n as f64))).collect())
 }
 
-fn stats_to_json(s: &EngineStats) -> Value {
+fn stats_to_json(s: &EngineStats, j: &jobs::JobStats) -> Value {
     Value::obj(vec![
         ("ok", Value::Bool(true)),
         ("requests_done", Value::num(s.requests_done as f64)),
@@ -361,10 +569,22 @@ fn stats_to_json(s: &EngineStats) -> Value {
         // QoS-standard alias of queued_samples (kept above for compat)
         ("queue_depth", Value::num(s.queued_samples as f64)),
         (
+            "jobs",
+            Value::obj(vec![
+                ("submitted", Value::num(j.submitted as f64)),
+                ("delivered", Value::num(j.delivered as f64)),
+                ("canceled", Value::num(j.canceled as f64)),
+                ("active", Value::num(j.active as f64)),
+                ("periodic", Value::num(j.periodic as f64)),
+            ]),
+        ),
+        (
             "qos",
             Value::obj(vec![
                 ("shed_deadline", Value::num(s.shed_deadline as f64)),
                 ("rejected_quota", Value::num(s.rejected_quota as f64)),
+                // still-queued submissions freed through the cancel op
+                ("canceled", Value::num(s.canceled as f64)),
                 (
                     "pools",
                     Value::Obj(
@@ -432,7 +652,7 @@ pub struct ClientGenResult {
     pub queued_s: f64,
 }
 
-/// Parsed `evaluate` response (wire format in the module docs).
+/// Parsed `evaluate` response (wire format in docs/PROTOCOL.md).
 #[derive(Clone, Debug)]
 pub struct ClientEvalResult {
     pub model: String,
@@ -444,6 +664,272 @@ pub struct ClientEvalResult {
     pub wall_s: f64,
     /// Fused steps per pool width consumed while the run was in flight.
     pub steps_per_bucket: Vec<(usize, u64)>,
+}
+
+/// A generation request under construction — the one parameter surface
+/// both the sync op ([`Client::run`]) and the async ops
+/// ([`Client::submit`], [`Client::periodic`]) serialize from.
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    model: String,
+    solver: String,
+    n: usize,
+    eps_rel: Option<f64>,
+    seed: u64,
+    priority: String,
+    deadline_ms: u64,
+    want_images: bool,
+    binary: bool,
+}
+
+impl GenerateRequest {
+    /// `n` samples from the server's default model with the default
+    /// solver (adaptive), seed 0, server-default eps_rel, payload on.
+    pub fn new(n: usize) -> GenerateRequest {
+        GenerateRequest {
+            model: String::new(),
+            solver: String::new(),
+            n,
+            eps_rel: None,
+            seed: 0,
+            priority: String::new(),
+            deadline_ms: 0,
+            want_images: true,
+            binary: false,
+        }
+    }
+
+    /// Named model ("" = the server's default).
+    pub fn model(mut self, model: &str) -> Self {
+        self.model = model.to_string();
+        self
+    }
+
+    /// Solver spec ("adaptive", "em:<n>", "ddim:<n>", "pc:<n>[@<snr>]";
+    /// "" = the server default, adaptive).
+    pub fn solver(mut self, solver: &str) -> Self {
+        self.solver = solver.to_string();
+        self
+    }
+
+    /// Adaptive tolerance knob (unset = the server's default).
+    pub fn eps_rel(mut self, eps_rel: f64) -> Self {
+        self.eps_rel = Some(eps_rel);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Priority class: "interactive" / "batch" ("" = server default).
+    pub fn priority(mut self, priority: &str) -> Self {
+        self.priority = priority.to_string();
+        self
+    }
+
+    /// Shed the request if still fully queued after this many ms
+    /// (0 = no deadline).
+    pub fn deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = deadline_ms;
+        self
+    }
+
+    /// Whether the response carries sample payloads (default true).
+    pub fn images(mut self, want: bool) -> Self {
+        self.want_images = want;
+        self
+    }
+
+    /// Deliver payloads as a raw binary frame instead of base64
+    /// (default false; availability advertised by `hello`).
+    pub fn binary(mut self, binary: bool) -> Self {
+        self.binary = binary;
+        self
+    }
+
+    fn body(&self, op: &str) -> Value {
+        let mut pairs = vec![
+            ("op", Value::str(op)),
+            ("n", Value::num(self.n as f64)),
+            ("seed", Value::num(self.seed as f64)),
+            ("images", Value::Bool(self.want_images)),
+        ];
+        if let Some(e) = self.eps_rel {
+            pairs.push(("eps_rel", Value::num(e)));
+        }
+        if !self.model.is_empty() {
+            pairs.push(("model", Value::str(self.model.clone())));
+        }
+        if !self.solver.is_empty() {
+            pairs.push(("solver", Value::str(self.solver.clone())));
+        }
+        if !self.priority.is_empty() {
+            pairs.push(("priority", Value::str(self.priority.clone())));
+        }
+        if self.deadline_ms > 0 {
+            pairs.push(("deadline_ms", Value::num(self.deadline_ms as f64)));
+        }
+        if self.binary {
+            pairs.push(("binary", Value::Bool(true)));
+        }
+        Value::obj(pairs)
+    }
+}
+
+/// An evaluation request under construction — serialized by both
+/// [`Client::run_eval`] and [`Client::submit_eval`].
+#[derive(Clone, Debug)]
+pub struct EvalRequest {
+    model: String,
+    solver: String,
+    samples: usize,
+    eps_rel: Option<f64>,
+    seed: u64,
+    priority: String,
+}
+
+impl EvalRequest {
+    pub fn new(samples: usize) -> EvalRequest {
+        EvalRequest {
+            model: String::new(),
+            solver: String::new(),
+            samples,
+            eps_rel: None,
+            seed: 0,
+            priority: String::new(),
+        }
+    }
+
+    pub fn model(mut self, model: &str) -> Self {
+        self.model = model.to_string();
+        self
+    }
+
+    pub fn solver(mut self, solver: &str) -> Self {
+        self.solver = solver.to_string();
+        self
+    }
+
+    pub fn eps_rel(mut self, eps_rel: f64) -> Self {
+        self.eps_rel = Some(eps_rel);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Mark bulk evaluation runs "batch" so interactive traffic on the
+    /// same pool is admitted first ("" = server default).
+    pub fn priority(mut self, priority: &str) -> Self {
+        self.priority = priority.to_string();
+        self
+    }
+
+    fn body(&self, op: &str) -> Value {
+        let mut pairs = vec![
+            ("op", Value::str(op)),
+            ("samples", Value::num(self.samples as f64)),
+            ("seed", Value::num(self.seed as f64)),
+        ];
+        if let Some(e) = self.eps_rel {
+            pairs.push(("eps_rel", Value::num(e)));
+        }
+        if !self.model.is_empty() {
+            pairs.push(("model", Value::str(self.model.clone())));
+        }
+        if !self.solver.is_empty() {
+            pairs.push(("solver", Value::str(self.solver.clone())));
+        }
+        if !self.priority.is_empty() {
+            pairs.push(("priority", Value::str(self.priority.clone())));
+        }
+        Value::obj(pairs)
+    }
+}
+
+/// One completed job drained by [`Client::poll`]. `error`/`code` are
+/// set for failed jobs; exactly one of `gen`/`eval` for successful
+/// ones (by `op`).
+#[derive(Debug)]
+pub struct JobUpdate {
+    pub job: u64,
+    /// "generate" | "evaluate".
+    pub op: String,
+    /// Round index for periodic jobs.
+    pub round: Option<u64>,
+    pub code: Option<String>,
+    pub error: Option<String>,
+    pub gen: Option<ClientGenResult>,
+    pub eval: Option<ClientEvalResult>,
+}
+
+impl JobUpdate {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+fn parse_client_gen(v: &Value, bin: Option<Vec<u8>>) -> Result<ClientGenResult> {
+    let n = v.req("n")?.as_usize()?;
+    let nfe = v
+        .req("nfe")?
+        .as_arr()?
+        .iter()
+        .map(|x| Ok(x.as_f64()? as u64))
+        .collect::<Result<Vec<_>>>()?;
+    let (h, w) = (v.req("h")?.as_usize()?, v.req("w")?.as_usize()?);
+    let bytes = match bin {
+        Some(b) => Some(b),
+        None => match v.get("images_b64") {
+            Some(s) => Some(b64::decode(s.as_str()?)?),
+            None => None,
+        },
+    };
+    let images = match bytes {
+        Some(bytes) => {
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            crate::tensor::Tensor::from_vec(&[n, h * w * 3], data)?
+        }
+        None => crate::tensor::Tensor::zeros(&[0]),
+    };
+    Ok(ClientGenResult {
+        images,
+        nfe,
+        wall_s: v.req("wall_s")?.as_f64()?,
+        queued_s: v.req("queued_s")?.as_f64()?,
+    })
+}
+
+fn parse_client_eval(v: &Value) -> Result<ClientEvalResult> {
+    let mut steps_per_bucket = v
+        .req("steps_per_bucket")?
+        .members()
+        .iter()
+        .map(|(b, n)| {
+            Ok((
+                b.parse::<usize>().map_err(|_| anyhow!("bad bucket key '{b}'"))?,
+                n.as_f64()? as u64,
+            ))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    steps_per_bucket.sort();
+    Ok(ClientEvalResult {
+        model: v.req("model")?.as_str()?.to_string(),
+        solver: v.req("solver")?.as_str()?.to_string(),
+        samples: v.req("samples")?.as_usize()?,
+        fid: v.req("fid")?.as_f64()?,
+        is: v.req("is")?.as_f64()?,
+        mean_nfe: v.req("mean_nfe")?.as_f64()?,
+        wall_s: v.req("wall_s")?.as_f64()?,
+        steps_per_bucket,
+    })
 }
 
 impl Client {
@@ -477,6 +963,19 @@ impl Client {
         Ok(v)
     }
 
+    /// Read the raw payload frame a header object announced via
+    /// `images_bin` (frames follow the JSON line in field order).
+    fn take_frame(&mut self, head: &Value) -> Result<Option<Vec<u8>>> {
+        match head.get("images_bin") {
+            Some(len) => {
+                let mut buf = vec![0u8; len.as_usize()?];
+                self.reader.read_exact(&mut buf)?;
+                Ok(Some(buf))
+            }
+            None => Ok(None),
+        }
+    }
+
     pub fn ping(&mut self) -> Result<()> {
         self.call(&Value::obj(vec![("op", Value::str("ping"))]))?;
         Ok(())
@@ -486,6 +985,130 @@ impl Client {
         self.call(&Value::obj(vec![("op", Value::str("stats"))]))
     }
 
+    /// Capability discovery: `{"v", "ops", "models", "solvers",
+    /// "binary"}` (docs/PROTOCOL.md §hello).
+    pub fn hello(&mut self) -> Result<Value> {
+        self.call(&Value::obj(vec![("op", Value::str("hello"))]))
+    }
+
+    /// Run a generate synchronously (blocks until the samples are done).
+    pub fn run(&mut self, req: &GenerateRequest) -> Result<ClientGenResult> {
+        let v = self.call(&req.body("generate"))?;
+        let bin = self.take_frame(&v)?;
+        parse_client_gen(&v, bin)
+    }
+
+    /// Run an evaluate synchronously.
+    pub fn run_eval(&mut self, req: &EvalRequest) -> Result<ClientEvalResult> {
+        let v = self.call(&req.body("evaluate"))?;
+        parse_client_eval(&v)
+    }
+
+    /// Submit a generate asynchronously; returns the job id to `poll`
+    /// for. The request's `binary` flag applies at delivery (pass the
+    /// same preference to `poll`).
+    pub fn submit(&mut self, req: &GenerateRequest) -> Result<u64> {
+        let mut body = req.body("submit");
+        body.set("kind", Value::str("generate"));
+        let v = self.call(&body)?;
+        Ok(v.req("job")?.as_f64()? as u64)
+    }
+
+    /// Submit an evaluate asynchronously; returns the job id.
+    pub fn submit_eval(&mut self, req: &EvalRequest) -> Result<u64> {
+        let mut body = req.body("submit");
+        body.set("kind", Value::str("evaluate"));
+        let v = self.call(&body)?;
+        Ok(v.req("job")?.as_f64()? as u64)
+    }
+
+    /// Re-run a generation spec every `rate_ms` until canceled; the
+    /// newest rounds are retained ring-buffer style and drained by
+    /// `poll`. Returns the job id.
+    pub fn periodic(&mut self, req: &GenerateRequest, rate_ms: u64) -> Result<u64> {
+        let mut body = req.body("periodic");
+        body.set("rate_ms", Value::num(rate_ms as f64));
+        let v = self.call(&body)?;
+        Ok(v.req("job")?.as_f64()? as u64)
+    }
+
+    /// Drain completed jobs (each delivered exactly once).
+    /// `timeout_ms` = 0 returns immediately; otherwise blocks until at
+    /// least one update or the timeout. `binary` asks for raw payload
+    /// frames instead of base64.
+    pub fn poll(&mut self, timeout_ms: u64, binary: bool) -> Result<Vec<JobUpdate>> {
+        self.poll_inner(None, timeout_ms, binary)
+    }
+
+    /// [`Client::poll`] filtered to one job id; unknown ids (never
+    /// issued or already delivered) are an `unknown_job` error.
+    pub fn poll_job(&mut self, job: u64, timeout_ms: u64, binary: bool) -> Result<Vec<JobUpdate>> {
+        self.poll_inner(Some(job), timeout_ms, binary)
+    }
+
+    fn poll_inner(
+        &mut self,
+        job: Option<u64>,
+        timeout_ms: u64,
+        binary: bool,
+    ) -> Result<Vec<JobUpdate>> {
+        let mut pairs = vec![
+            ("op", Value::str("poll")),
+            ("timeout_ms", Value::num(timeout_ms as f64)),
+            ("binary", Value::Bool(binary)),
+        ];
+        if let Some(j) = job {
+            pairs.push(("job", Value::num(j as f64)));
+        }
+        let v = self.call(&Value::obj(pairs))?;
+        let mut out = Vec::new();
+        for u in v.req("jobs")?.as_arr()? {
+            let job = u.req("job")?.as_f64()? as u64;
+            let op = u.req("op")?.as_str()?.to_string();
+            let round = u.get("round").map(|r| r.as_f64()).transpose()?.map(|r| r as u64);
+            if !u.req("ok")?.as_bool()? {
+                out.push(JobUpdate {
+                    job,
+                    op,
+                    round,
+                    code: u.get("code").and_then(|c| c.as_str().ok()).map(String::from),
+                    error: Some(
+                        u.get("error")
+                            .and_then(|e| e.as_str().ok())
+                            .unwrap_or("unknown")
+                            .to_string(),
+                    ),
+                    gen: None,
+                    eval: None,
+                });
+                continue;
+            }
+            let (gen, eval) = if op == "evaluate" {
+                (None, Some(parse_client_eval(u)?))
+            } else {
+                let bin = self.take_frame(u)?;
+                (Some(parse_client_gen(u, bin)?), None)
+            };
+            out.push(JobUpdate { job, op, round, code: None, error: None, gen, eval });
+        }
+        Ok(out)
+    }
+
+    /// Cancel a job: `Ok(true)` = freed while still fully queued
+    /// (quota/queue_depth released), `Ok(false)` = holds a lane (or is
+    /// an eval job) and runs to completion, staying pollable. Unknown
+    /// or already-completed jobs are an `unknown_job` error.
+    pub fn cancel(&mut self, job: u64) -> Result<bool> {
+        let v = self.call(&Value::obj(vec![
+            ("op", Value::str("cancel")),
+            ("job", Value::num(job as f64)),
+        ]))?;
+        v.req("canceled")?.as_bool()
+    }
+
+    // --- deprecated positional surface (pre-builder) ----------------------
+
+    #[deprecated(note = "use Client::run with GenerateRequest::new(n)")]
     pub fn generate(
         &mut self,
         n: usize,
@@ -493,11 +1116,10 @@ impl Client {
         seed: u64,
         want_images: bool,
     ) -> Result<ClientGenResult> {
-        self.generate_on("", n, eps_rel, seed, want_images)
+        self.run(&GenerateRequest::new(n).eps_rel(eps_rel).seed(seed).images(want_images))
     }
 
-    /// Generate on a named model ("" = the server's default model) with
-    /// the adaptive solver.
+    #[deprecated(note = "use Client::run with GenerateRequest::new(n).model(..)")]
     pub fn generate_on(
         &mut self,
         model: &str,
@@ -506,11 +1128,16 @@ impl Client {
         seed: u64,
         want_images: bool,
     ) -> Result<ClientGenResult> {
-        self.generate_spec(model, "", n, eps_rel, seed, want_images)
+        self.run(
+            &GenerateRequest::new(n)
+                .model(model)
+                .eps_rel(eps_rel)
+                .seed(seed)
+                .images(want_images),
+        )
     }
 
-    /// Generate with an explicit solver spec ("adaptive", "em:<n>",
-    /// "ddim:<n>", "pc:<n>[@<snr>]"; "" = the server default, adaptive).
+    #[deprecated(note = "use Client::run with GenerateRequest::new(n).model(..).solver(..)")]
     pub fn generate_spec(
         &mut self,
         model: &str,
@@ -520,13 +1147,17 @@ impl Client {
         seed: u64,
         want_images: bool,
     ) -> Result<ClientGenResult> {
-        self.generate_qos(model, solver, n, eps_rel, seed, "", 0, want_images)
+        self.run(
+            &GenerateRequest::new(n)
+                .model(model)
+                .solver(solver)
+                .eps_rel(eps_rel)
+                .seed(seed)
+                .images(want_images),
+        )
     }
 
-    /// Generate with QoS controls: `priority` is "interactive"/"batch"
-    /// ("" = the server's default class); `deadline_ms` > 0 sheds the
-    /// request if it is still fully queued when the deadline expires
-    /// (0 = no deadline).
+    #[deprecated(note = "use Client::run with GenerateRequest's priority/deadline_ms builders")]
     pub fn generate_qos(
         &mut self,
         model: &str,
@@ -538,55 +1169,19 @@ impl Client {
         deadline_ms: u64,
         want_images: bool,
     ) -> Result<ClientGenResult> {
-        let mut pairs = vec![
-            ("op", Value::str("generate")),
-            ("n", Value::num(n as f64)),
-            ("eps_rel", Value::num(eps_rel)),
-            ("seed", Value::num(seed as f64)),
-            ("images", Value::Bool(want_images)),
-        ];
-        if !model.is_empty() {
-            pairs.push(("model", Value::str(model)));
-        }
-        if !solver.is_empty() {
-            pairs.push(("solver", Value::str(solver)));
-        }
-        if !priority.is_empty() {
-            pairs.push(("priority", Value::str(priority)));
-        }
-        if deadline_ms > 0 {
-            pairs.push(("deadline_ms", Value::num(deadline_ms as f64)));
-        }
-        let req = Value::obj(pairs);
-        let v = self.call(&req)?;
-        let nfe = v
-            .req("nfe")?
-            .as_arr()?
-            .iter()
-            .map(|x| Ok(x.as_f64()? as u64))
-            .collect::<Result<Vec<_>>>()?;
-        let (h, w) = (v.req("h")?.as_usize()?, v.req("w")?.as_usize()?);
-        let images = if want_images {
-            let bytes = b64::decode(v.req("images_b64")?.as_str()?)?;
-            let data: Vec<f32> = bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            crate::tensor::Tensor::from_vec(&[n, h * w * 3], data)?
-        } else {
-            crate::tensor::Tensor::zeros(&[0])
-        };
-        Ok(ClientGenResult {
-            images,
-            nfe,
-            wall_s: v.req("wall_s")?.as_f64()?,
-            queued_s: v.req("queued_s")?.as_f64()?,
-        })
+        self.run(
+            &GenerateRequest::new(n)
+                .model(model)
+                .solver(solver)
+                .eps_rel(eps_rel)
+                .seed(seed)
+                .priority(priority)
+                .deadline_ms(deadline_ms)
+                .images(want_images),
+        )
     }
 
-    /// FID*/IS* evaluation served through the engine ("" model/solver =
-    /// the server defaults; solver specs: "adaptive", "em:<n>",
-    /// "ddim:<n>", "pc:<n>[@<snr>]").
+    #[deprecated(note = "use Client::run_eval with EvalRequest::new(samples)")]
     pub fn evaluate(
         &mut self,
         model: &str,
@@ -595,13 +1190,10 @@ impl Client {
         eps_rel: f64,
         seed: u64,
     ) -> Result<ClientEvalResult> {
-        self.evaluate_qos(model, solver, samples, eps_rel, seed, "")
+        self.run_eval(&EvalRequest::new(samples).model(model).solver(solver).eps_rel(eps_rel).seed(seed))
     }
 
-    /// [`Client::evaluate`] with an explicit priority class
-    /// ("interactive"/"batch"; "" = the server's default). Mark bulk
-    /// evaluation runs "batch" so interactive traffic on the same pool
-    /// is admitted first.
+    #[deprecated(note = "use Client::run_eval with EvalRequest's priority builder")]
     pub fn evaluate_qos(
         &mut self,
         model: &str,
@@ -611,43 +1203,13 @@ impl Client {
         seed: u64,
         priority: &str,
     ) -> Result<ClientEvalResult> {
-        let mut pairs = vec![
-            ("op", Value::str("evaluate")),
-            ("samples", Value::num(samples as f64)),
-            ("eps_rel", Value::num(eps_rel)),
-            ("seed", Value::num(seed as f64)),
-        ];
-        if !model.is_empty() {
-            pairs.push(("model", Value::str(model)));
-        }
-        if !solver.is_empty() {
-            pairs.push(("solver", Value::str(solver)));
-        }
-        if !priority.is_empty() {
-            pairs.push(("priority", Value::str(priority)));
-        }
-        let v = self.call(&Value::obj(pairs))?;
-        let mut steps_per_bucket = v
-            .req("steps_per_bucket")?
-            .members()
-            .iter()
-            .map(|(b, n)| {
-                Ok((
-                    b.parse::<usize>().map_err(|_| anyhow!("bad bucket key '{b}'"))?,
-                    n.as_f64()? as u64,
-                ))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        steps_per_bucket.sort();
-        Ok(ClientEvalResult {
-            model: v.req("model")?.as_str()?.to_string(),
-            solver: v.req("solver")?.as_str()?.to_string(),
-            samples: v.req("samples")?.as_usize()?,
-            fid: v.req("fid")?.as_f64()?,
-            is: v.req("is")?.as_f64()?,
-            mean_nfe: v.req("mean_nfe")?.as_f64()?,
-            wall_s: v.req("wall_s")?.as_f64()?,
-            steps_per_bucket,
-        })
+        self.run_eval(
+            &EvalRequest::new(samples)
+                .model(model)
+                .solver(solver)
+                .eps_rel(eps_rel)
+                .seed(seed)
+                .priority(priority),
+        )
     }
 }

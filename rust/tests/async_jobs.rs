@@ -1,0 +1,246 @@
+//! Integration: the async job layer on the wire — submit/poll parity
+//! with sync generate, exactly-once delivery, cancel accounting through
+//! the QoS path, unknown-job error shapes, periodic re-generation, and
+//! binary-frame payload equivalence.
+
+mod common;
+
+use gofast::coordinator::{Engine, EngineConfig};
+use gofast::server::{serve, Client, GenerateRequest, ServerConfig};
+
+fn spawn_server_cfg(
+    tweak: impl FnOnce(&mut EngineConfig),
+) -> Option<(Engine, std::net::SocketAddr)> {
+    let dir = common::artifacts()?;
+    let mut cfg = EngineConfig::new(dir.clone(), "vp");
+    cfg.bucket = common::engine_bucket(&dir);
+    tweak(&mut cfg);
+    let engine = Engine::start(cfg).expect("engine");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let client = engine.client();
+    std::thread::spawn(move || {
+        let _ = serve(
+            listener,
+            client,
+            ServerConfig { port: addr.port(), default_eps_rel: 0.05 },
+        );
+    });
+    Some((engine, addr))
+}
+
+fn spawn_server() -> Option<(Engine, std::net::SocketAddr)> {
+    spawn_server_cfg(|_| {})
+}
+
+/// Poll until `job` delivers its (single) update, failing the test if
+/// it takes longer than ~60 s.
+fn poll_one(c: &mut Client, job: u64, binary: bool) -> gofast::server::JobUpdate {
+    for _ in 0..600 {
+        let mut got = c.poll_job(job, 100, binary).unwrap();
+        if let Some(u) = got.pop() {
+            assert!(got.is_empty(), "more than one update for job {job}");
+            return u;
+        }
+    }
+    panic!("job {job} never delivered");
+}
+
+/// The tentpole parity gate: a submitted generate, drained through
+/// poll, is bit-identical to the same request run synchronously — same
+/// images, same per-sample NFE. The async layer adds scheduling, never
+/// arithmetic.
+#[test]
+fn submit_poll_matches_sync_generate() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let req = GenerateRequest::new(3).solver("em:6").eps_rel(0.5).seed(42);
+    let sync = c.run(&req).unwrap();
+    let job = c.submit(&req).unwrap();
+    assert!(job > 0);
+    let u = poll_one(&mut c, job, false);
+    assert!(u.is_ok(), "submitted job failed: {:?}", u.error);
+    assert_eq!(u.job, job);
+    assert_eq!(u.op, "generate");
+    let r = u.gen.expect("generate payload");
+    assert_eq!(r.images, sync.images, "async result must be bit-identical to sync");
+    assert_eq!(r.nfe, sync.nfe);
+    // the jobs counters saw exactly this lifecycle
+    let stats = c.stats().unwrap();
+    let jobs = stats.get("jobs").expect("stats.jobs");
+    assert_eq!(jobs.get("submitted").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(jobs.get("delivered").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(jobs.get("active").unwrap().as_f64().unwrap(), 0.0);
+}
+
+/// Exactly-once delivery: a drained job is gone — the next poll returns
+/// nothing, and polling it by id is a structured `unknown_job` error.
+#[test]
+fn poll_drains_each_job_once() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let req = GenerateRequest::new(1).solver("em:4").eps_rel(0.5).seed(7).images(false);
+    let a = c.submit(&req).unwrap();
+    let b = c.submit(&req).unwrap();
+    assert_ne!(a, b, "job ids must be unique");
+    // blocking poll with no filter drains both, in submit order
+    let mut seen = Vec::new();
+    for _ in 0..600 {
+        let got = c.poll(100, false).unwrap();
+        seen.extend(got.into_iter().map(|u| u.job));
+        if seen.len() >= 2 {
+            break;
+        }
+    }
+    assert_eq!(seen, vec![a, b]);
+    // drained means gone: empty drain, and the ids no longer resolve
+    assert!(c.poll(0, false).unwrap().is_empty());
+    let err = c.poll_job(a, 0, false).unwrap_err().to_string();
+    assert!(err.contains("[unknown_job]"), "{err}");
+}
+
+/// Cancel of a still-queued job frees the queue and quota accounting —
+/// the same bookkeeping path as deadline shedding — and the job id
+/// stops resolving. The lane-holding job is untouched.
+#[test]
+fn cancel_queued_job_frees_queue_and_quota() {
+    let Some((_engine, addr)) = spawn_server_cfg(|cfg| {
+        // one lane for the whole model, so the second job must queue
+        cfg.qos.set_max_active_lanes("vp", 1);
+    }) else {
+        return;
+    };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let blocker = c
+        .submit(&GenerateRequest::new(1).solver("em:2000").eps_rel(0.5).seed(7).images(false))
+        .unwrap();
+    while c.stats().unwrap().get("active_slots").unwrap().as_f64().unwrap() == 0.0 {
+        std::thread::yield_now();
+    }
+    let victim = c
+        .submit(&GenerateRequest::new(1).solver("em:4").eps_rel(0.5).seed(9).images(false))
+        .unwrap();
+    while c.stats().unwrap().get("queue_depth").unwrap().as_f64().unwrap() == 0.0 {
+        std::thread::yield_now();
+    }
+    assert!(c.cancel(victim).unwrap(), "queued job must cancel");
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("queue_depth").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(stats.get("qos").unwrap().get("canceled").unwrap().as_f64().unwrap(), 1.0);
+    let jobs = stats.get("jobs").expect("stats.jobs");
+    assert_eq!(jobs.get("canceled").unwrap().as_f64().unwrap(), 1.0);
+    // the canceled id is gone from the table
+    let err = c.poll_job(victim, 0, false).unwrap_err().to_string();
+    assert!(err.contains("[unknown_job]"), "{err}");
+    // the blocker ran to completion and still delivers
+    let u = poll_one(&mut c, blocker, false);
+    assert!(u.is_ok(), "{:?}", u.error);
+    assert_eq!(u.gen.unwrap().nfe, vec![2001]);
+}
+
+/// Cancel of a never-issued id and of an already-completed job both
+/// answer `unknown_job` — and a completed job's result stays pollable
+/// after the refused cancel.
+#[test]
+fn cancel_unknown_or_completed_is_unknown_job() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let err = c.cancel(9999).unwrap_err().to_string();
+    assert!(err.contains("[unknown_job]"), "{err}");
+    let job = c
+        .submit(&GenerateRequest::new(1).solver("em:4").eps_rel(0.5).seed(3).images(false))
+        .unwrap();
+    // wait for the engine to finish the sample before canceling
+    while c.stats().unwrap().get("requests_done").unwrap().as_f64().unwrap() == 0.0 {
+        std::thread::yield_now();
+    }
+    let err = c.cancel(job).unwrap_err().to_string();
+    assert!(err.contains("[unknown_job]"), "{err}");
+    assert!(err.contains("already completed"), "{err}");
+    let u = poll_one(&mut c, job, false);
+    assert!(u.is_ok(), "completed job must stay pollable after refused cancel");
+    assert_eq!(u.gen.unwrap().nfe, vec![5]);
+}
+
+/// Periodic jobs re-run their spec on an interval with distinct sample
+/// bases per round: round indices arrive in order, round 0 matches the
+/// plain sync run of the same spec, and cancel stops the worker and
+/// removes the job.
+#[test]
+fn periodic_fires_rounds_and_cancels() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let req = GenerateRequest::new(1).solver("em:5").eps_rel(0.5).seed(11);
+    let sync = c.run(&req).unwrap();
+    let job = c.periodic(&req, 10).unwrap();
+    let mut rounds = Vec::new();
+    for _ in 0..600 {
+        for u in c.poll_job(job, 100, false).unwrap() {
+            assert!(u.is_ok(), "periodic round failed: {:?}", u.error);
+            let round = u.round.expect("periodic updates carry a round index");
+            if round == 0 {
+                let r = u.gen.as_ref().expect("round payload");
+                assert_eq!(r.images, sync.images, "round 0 must match the sync run");
+            }
+            rounds.push(round);
+        }
+        if rounds.len() >= 2 {
+            break;
+        }
+    }
+    assert!(rounds.len() >= 2, "periodic job fired {} round(s)", rounds.len());
+    assert_eq!(rounds[0], 0);
+    assert!(rounds.windows(2).all(|w| w[1] == w[0] + 1), "rounds out of order: {rounds:?}");
+    assert!(c.cancel(job).unwrap(), "periodic cancel");
+    let err = c.poll_job(job, 0, false).unwrap_err().to_string();
+    assert!(err.contains("[unknown_job]"), "{err}");
+    let stats = c.stats().unwrap();
+    let jobs = stats.get("jobs").expect("stats.jobs");
+    assert_eq!(jobs.get("periodic").unwrap().as_f64().unwrap(), 0.0, "worker must stop");
+}
+
+/// The negotiated binary frame carries exactly the same pixels as the
+/// base64 payload — for sync generate and for the async poll path.
+#[test]
+fn binary_frames_match_base64() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let req = GenerateRequest::new(2).solver("em:6").eps_rel(0.5).seed(5);
+    let b64 = c.run(&req).unwrap();
+    let bin = c.run(&req.clone().binary(true)).unwrap();
+    assert_eq!(bin.images, b64.images, "binary frame must decode to the base64 pixels");
+    assert_eq!(bin.nfe, b64.nfe);
+    let job = c.submit(&req).unwrap();
+    let u = poll_one(&mut c, job, true);
+    assert!(u.is_ok(), "{:?}", u.error);
+    assert_eq!(u.gen.unwrap().images, b64.images, "binary poll must match too");
+}
+
+/// `hello` reports the protocol version and capabilities so clients
+/// stop probing stats: every op, the served models and solver
+/// programs, and binary-frame availability.
+#[test]
+fn hello_reports_version_ops_and_capabilities() {
+    let Some((_engine, addr)) = spawn_server() else { return };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let h = c.hello().unwrap();
+    assert_eq!(h.get("v").unwrap().as_f64().unwrap(), 1.0);
+    let ops: Vec<&str> =
+        h.get("ops").unwrap().as_arr().unwrap().iter().map(|o| o.as_str().unwrap()).collect();
+    for op in
+        ["hello", "ping", "stats", "generate", "evaluate", "submit", "poll", "cancel", "periodic"]
+    {
+        assert!(ops.contains(&op), "hello must advertise {op}: {ops:?}");
+    }
+    let models: Vec<&str> = h
+        .get("models")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| m.as_str().unwrap())
+        .collect();
+    assert!(models.contains(&"vp"), "{models:?}");
+    assert!(!h.get("solvers").unwrap().as_arr().unwrap().is_empty());
+    assert!(h.get("binary").unwrap().as_bool().unwrap());
+}

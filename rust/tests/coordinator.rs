@@ -6,7 +6,7 @@
 
 mod common;
 
-use gofast::coordinator::{qos, Engine, EngineConfig, SampleRequest};
+use gofast::coordinator::{qos, CancelOutcome, Engine, EngineConfig, SampleRequest};
 use gofast::solvers::ServingSolver;
 
 fn engine() -> Option<Engine> {
@@ -150,6 +150,7 @@ fn deadline_sheds_still_queued_requests() {
             sample_base: 0,
             priority: None,
             deadline_ms: Some(1),
+            cancel_token: None,
         })
         .unwrap_err()
         .to_string();
@@ -170,8 +171,64 @@ fn deadline_sheds_still_queued_requests() {
             sample_base: 0,
             priority: Some(qos::Priority::Interactive),
             deadline_ms: Some(60_000),
+            cancel_token: None,
         })
         .unwrap();
+    assert_eq!(ok.nfe, vec![5]);
+}
+
+/// Client-side cancellation mirrors deadline shedding: a fully-queued
+/// request is dequeued (queue freed, quota released, its waiter
+/// unblocked with an error), a request already holding lanes reports
+/// `Running` and completes untouched, and an unknown or already-spent
+/// token is `NotFound`.
+#[test]
+fn cancel_dequeues_queued_request_and_frees_accounting() {
+    let Some(dir) = common::artifacts() else { return };
+    let mut cfg = EngineConfig::new(dir.clone(), "vp");
+    cfg.bucket = common::engine_bucket(&dir);
+    // one lane for the whole model, so the victim request must queue
+    cfg.qos.set_max_active_lanes("vp", 1);
+    let engine = Engine::start(cfg).unwrap();
+    let req = |steps: usize, seed: u64, token: u64| SampleRequest {
+        model: String::new(),
+        solver: ServingSolver::Em { steps },
+        n: 1,
+        eps_rel: 0.5,
+        seed,
+        sample_base: 0,
+        priority: None,
+        deadline_ms: None,
+        cancel_token: Some(token),
+    };
+    let c_long = engine.client();
+    let long = std::thread::spawn(move || c_long.generate_request(req(2000, 7, 1)).unwrap());
+    let c = engine.client();
+    while c.stats().unwrap().active_slots == 0 {
+        std::thread::yield_now();
+    }
+    // the lane-holding request cannot be canceled, only observed
+    assert_eq!(c.cancel(1).unwrap(), CancelOutcome::Running);
+    let c_victim = engine.client();
+    let victim = std::thread::spawn(move || {
+        c_victim.generate_request(req(4, 9, 42)).unwrap_err().to_string()
+    });
+    while c.stats().unwrap().queued_samples == 0 {
+        std::thread::yield_now();
+    }
+    assert_eq!(c.cancel(42).unwrap(), CancelOutcome::Canceled);
+    let err = victim.join().unwrap();
+    assert!(err.contains("canceled"), "{err}");
+    // the same token a second time, and a never-issued token: NotFound
+    assert_eq!(c.cancel(42).unwrap(), CancelOutcome::NotFound);
+    assert_eq!(c.cancel(999).unwrap(), CancelOutcome::NotFound);
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.canceled, 1);
+    assert_eq!(stats.queued_samples, 0, "cancel must free the queue");
+    let r = long.join().unwrap();
+    assert_eq!(r.nfe, vec![2001], "the running request must complete untouched");
+    // the freed lane quota admits new traffic
+    let ok = c.generate_request(req(4, 3, 0)).unwrap();
     assert_eq!(ok.nfe, vec![5]);
 }
 

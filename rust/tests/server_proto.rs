@@ -5,7 +5,7 @@
 mod common;
 
 use gofast::coordinator::{Engine, EngineConfig};
-use gofast::server::{serve, Client, ServerConfig};
+use gofast::server::{serve, Client, EvalRequest, GenerateRequest, ServerConfig};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
@@ -45,7 +45,7 @@ fn ping_stats_generate_roundtrip() {
     let Some((_engine, addr)) = spawn_server() else { return };
     let mut c = Client::connect(&addr.to_string()).unwrap();
     c.ping().unwrap();
-    let r = c.generate(2, 0.1, 3, true).unwrap();
+    let r = c.run(&GenerateRequest::new(2).eps_rel(0.1).seed(3)).unwrap();
     assert_eq!(r.images.shape, vec![2, 768]);
     assert!(r.images.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
     assert_eq!(r.nfe.len(), 2);
@@ -57,7 +57,7 @@ fn ping_stats_generate_roundtrip() {
 fn images_can_be_omitted() {
     let Some((_engine, addr)) = spawn_server() else { return };
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let r = c.generate(1, 0.5, 0, false).unwrap();
+    let r = c.run(&GenerateRequest::new(1).eps_rel(0.5).images(false)).unwrap();
     assert_eq!(r.images.len(), 0);
     assert_eq!(r.nfe.len(), 1);
 }
@@ -89,6 +89,13 @@ fn unknown_op_is_rejected() {
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("unknown op"), "{line}");
+    // the rejection is structured (bad_op) and lists the supported ops
+    assert!(line.contains("\"code\":\"bad_op\""), "{line}");
+    for op in ["hello", "submit", "poll", "cancel", "periodic", "generate"] {
+        assert!(line.contains(op), "supported-op list must name {op}: {line}");
+    }
+    // every response carries the protocol version
+    assert!(line.contains("\"v\":1"), "{line}");
 }
 
 /// The evaluate op goes through the engine's eval lanes and reports the
@@ -104,7 +111,9 @@ fn evaluate_roundtrip_reports_metrics_and_counters() {
         }
     }
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let r = c.evaluate("", "adaptive", 3, 0.5, 7).unwrap();
+    let r = c
+        .run_eval(&EvalRequest::new(3).solver("adaptive").eps_rel(0.5).seed(7))
+        .unwrap();
     assert_eq!(r.samples, 3);
     assert_eq!(r.solver, "adaptive");
     assert!(r.fid.is_finite() && r.fid >= 0.0, "fid {}", r.fid);
@@ -132,7 +141,7 @@ fn evaluate_em_roundtrip_over_the_wire() {
         }
     }
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let r = c.evaluate("", "em:8", 3, 0.5, 7).unwrap();
+    let r = c.run_eval(&EvalRequest::new(3).solver("em:8").eps_rel(0.5).seed(7)).unwrap();
     assert_eq!(r.solver, "em:8");
     assert_eq!(r.samples, 3);
     assert_eq!(r.mean_nfe, 9.0, "em NFE must be steps + denoise exactly");
@@ -151,7 +160,9 @@ fn evaluate_em_roundtrip_over_the_wire() {
 fn generate_with_solver_spec() {
     let Some((_engine, addr)) = spawn_server() else { return };
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let r = c.generate_spec("", "em:5", 2, 0.5, 3, false).unwrap();
+    let r = c
+        .run(&GenerateRequest::new(2).solver("em:5").eps_rel(0.5).seed(3).images(false))
+        .unwrap();
     assert_eq!(r.nfe, vec![6, 6], "em nfe is steps + denoise");
 }
 
@@ -167,14 +178,21 @@ fn ddim_on_non_vp_model_is_clean_protocol_error() {
     }
     let Some((_engine, addr)) = spawn_server_for(&["vp", "ve"]) else { return };
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let err = c.evaluate("ve", "ddim:4", 2, 0.5, 0).unwrap_err().to_string();
+    let err = c
+        .run_eval(&EvalRequest::new(2).model("ve").solver("ddim:4").eps_rel(0.5))
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("VP"), "error must name the VP constraint: {err}");
-    let err = c.generate_spec("ve", "ddim:4", 1, 0.5, 0, false).unwrap_err().to_string();
+    let err = c
+        .run(&GenerateRequest::new(1).model("ve").solver("ddim:4").eps_rel(0.5).images(false))
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("VP"), "{err}");
     // the engine survived both rejections: vp traffic still flows, and
     // ve still serves its own solvers
-    c.generate_spec("ve", "em:3", 1, 0.5, 0, false).unwrap();
-    c.generate(1, 0.5, 0, false).unwrap();
+    c.run(&GenerateRequest::new(1).model("ve").solver("em:3").eps_rel(0.5).images(false))
+        .unwrap();
+    c.run(&GenerateRequest::new(1).eps_rel(0.5).images(false)).unwrap();
 }
 
 /// Unknown or malformed solver specs die in the wire parser with the
@@ -183,11 +201,17 @@ fn ddim_on_non_vp_model_is_clean_protocol_error() {
 fn evaluate_rejects_unknown_solver() {
     let Some((_engine, addr)) = spawn_server() else { return };
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let err = c.evaluate("", "ode", 2, 0.5, 0).unwrap_err().to_string();
+    let err = c
+        .run_eval(&EvalRequest::new(2).solver("ode").eps_rel(0.5))
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("adaptive, em[:<steps>], ddim[:<steps>]"), "{err}");
     assert!(err.contains("pc[:<steps>[@<snr>]]"), "{err}");
     assert!(err.contains("[bad_solver]"), "{err}");
-    let err = c.evaluate("", "em:nope", 2, 0.5, 0).unwrap_err().to_string();
+    let err = c
+        .run_eval(&EvalRequest::new(2).solver("em:nope").eps_rel(0.5))
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("bad step count"), "{err}");
 }
 
@@ -230,9 +254,13 @@ fn pc_specs_ride_the_wire() {
     }
     let Some((_engine, addr)) = spawn_server() else { return };
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let r = c.generate_spec("", "pc:4", 2, 0.5, 3, false).unwrap();
+    let r = c
+        .run(&GenerateRequest::new(2).solver("pc:4").eps_rel(0.5).seed(3).images(false))
+        .unwrap();
     assert_eq!(r.nfe, vec![9, 9], "pc nfe is 2 x steps + denoise");
-    let r = c.generate_spec("", "pc:4@0.17", 1, 0.5, 3, false).unwrap();
+    let r = c
+        .run(&GenerateRequest::new(1).solver("pc:4@0.17").eps_rel(0.5).seed(3).images(false))
+        .unwrap();
     assert_eq!(r.nfe, vec![9]);
     let stats = c.stats().unwrap();
     let pc = stats.get("programs").unwrap().get("pc").expect("programs.pc");
@@ -247,7 +275,9 @@ fn pc_specs_ride_the_wire() {
             return;
         }
     }
-    let r = c.evaluate("", "pc:4@0.17", 3, 0.5, 7).unwrap();
+    let r = c
+        .run_eval(&EvalRequest::new(3).solver("pc:4@0.17").eps_rel(0.5).seed(7))
+        .unwrap();
     assert_eq!(r.solver, "pc:4@0.17");
     assert_eq!(r.mean_nfe, 9.0);
     assert!(r.fid.is_finite() && r.fid >= 0.0, "fid {}", r.fid);
@@ -260,9 +290,23 @@ fn pc_specs_ride_the_wire() {
 fn generate_priority_and_deadline_roundtrip() {
     let Some((_engine, addr)) = spawn_server() else { return };
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let r = c.generate_qos("", "", 1, 0.5, 3, "interactive", 60_000, false).unwrap();
+    let r = c
+        .run(&GenerateRequest::new(1)
+            .eps_rel(0.5)
+            .seed(3)
+            .priority("interactive")
+            .deadline_ms(60_000)
+            .images(false))
+        .unwrap();
     assert_eq!(r.nfe.len(), 1);
-    let r = c.generate_qos("", "em:4", 2, 0.5, 3, "batch", 0, false).unwrap();
+    let r = c
+        .run(&GenerateRequest::new(2)
+            .solver("em:4")
+            .eps_rel(0.5)
+            .seed(3)
+            .priority("batch")
+            .images(false))
+        .unwrap();
     assert_eq!(r.nfe, vec![5, 5]);
     let stream = TcpStream::connect(addr).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
@@ -303,9 +347,12 @@ fn quota_rejection_error_shape_on_the_wire() {
     assert!(line.contains("quota 4"), "{line}");
     // the typed client surfaces the code, and within-quota traffic flows
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let err = c.generate(50, 0.5, 0, false).unwrap_err().to_string();
+    let err = c
+        .run(&GenerateRequest::new(50).eps_rel(0.5).images(false))
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("[quota_exceeded]"), "{err}");
-    c.generate(2, 0.5, 1, false).unwrap();
+    c.run(&GenerateRequest::new(2).eps_rel(0.5).seed(1).images(false)).unwrap();
     let stats = c.stats().unwrap();
     assert_eq!(stats.get("qos").unwrap().get("rejected_quota").unwrap().as_f64().unwrap(), 2.0);
 }
@@ -332,7 +379,9 @@ fn evaluate_priority_accepted_deadline_rejected() {
         }
     }
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    let r = c.evaluate_qos("", "em:6", 3, 0.5, 7, "batch").unwrap();
+    let r = c
+        .run_eval(&EvalRequest::new(3).solver("em:6").eps_rel(0.5).seed(7).priority("batch"))
+        .unwrap();
     assert_eq!(r.samples, 3);
     assert_eq!(r.mean_nfe, 7.0);
 }
@@ -343,7 +392,7 @@ fn evaluate_priority_accepted_deadline_rejected() {
 fn stats_export_queue_depth_and_pool_qos() {
     let Some((_engine, addr)) = spawn_server() else { return };
     let mut c = Client::connect(&addr.to_string()).unwrap();
-    c.generate(2, 0.5, 1, false).unwrap();
+    c.run(&GenerateRequest::new(2).eps_rel(0.5).seed(1).images(false)).unwrap();
     let stats = c.stats().unwrap();
     assert_eq!(stats.get("queue_depth").unwrap().as_f64().unwrap(), 0.0, "drained engine");
     let qos = stats.get("qos").unwrap();
@@ -366,7 +415,10 @@ fn parallel_connections_share_the_engine() {
         let addr_s = addr.to_string();
         handles.push(std::thread::spawn(move || {
             let mut c = Client::connect(&addr_s).unwrap();
-            c.generate(2, 0.1, i, false).unwrap().nfe.len()
+            c.run(&GenerateRequest::new(2).eps_rel(0.1).seed(i).images(false))
+                .unwrap()
+                .nfe
+                .len()
         }));
     }
     let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();

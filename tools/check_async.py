@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Async-job delivery/payload regression gates for benches/serving.rs part 4.
+
+The serving bench's async part (`cargo bench --bench serving -- --async-only`)
+writes bench_out/serving_async.json; this script turns it into a CI gate
+(mirroring tools/check_qos.py):
+
+  * delivery: every submitted job must be drained through poll exactly
+    once — delivered == submitted, zero duplicates, zero failed jobs.
+    The async layer adds scheduling, it must not lose or re-deliver work.
+  * payload: the negotiated binary frame must be strictly smaller than
+    the base64 payload it replaces, both as the payload field alone and
+    as the total wire footprint (header line + frame vs the b64 line) —
+    otherwise the framing negotiation is pure overhead.
+
+Usage: python3 tools/check_async.py bench_out/serving_async.json
+Exits non-zero with a per-violation report on failure.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench_out/serving_async.json"
+    with open(path) as f:
+        doc = json.load(f)
+    errors = []
+
+    submitted = doc.get("submitted", 0)
+    delivered = doc.get("delivered", 0)
+    duplicates = doc.get("duplicates", 0)
+    failures = doc.get("failures", 0)
+    if submitted <= 0:
+        errors.append(f"delivery: no jobs submitted ({submitted})")
+    if delivered != submitted:
+        errors.append(
+            f"delivery: {delivered} of {submitted} submitted jobs drained "
+            f"(every job must be delivered exactly once)"
+        )
+    if duplicates != 0:
+        errors.append(f"delivery: {duplicates} duplicate/unexpected deliveries")
+    if failures != 0:
+        errors.append(f"delivery: {failures} jobs completed with an error")
+
+    payload = doc.get("payload", {})
+    b64 = payload.get("b64_bytes", 0)
+    b64_total = payload.get("b64_total_bytes", 0)
+    bin_ = payload.get("bin_bytes", 0)
+    bin_total = payload.get("bin_total_bytes", 0)
+    if bin_ <= 0 or b64 <= 0:
+        errors.append(f"payload: missing byte counts (b64={b64}, bin={bin_})")
+    else:
+        if bin_ >= b64:
+            errors.append(
+                f"payload: binary frame not smaller than base64 "
+                f"({bin_} >= {b64} bytes)"
+            )
+        if bin_total >= b64_total:
+            errors.append(
+                f"payload: binary wire footprint not smaller than base64 "
+                f"({bin_total} >= {b64_total} bytes)"
+            )
+
+    print(
+        f"[check_async] {path}: submitted={submitted} delivered={delivered} "
+        f"duplicates={duplicates} failures={failures}"
+    )
+    if b64 and bin_:
+        print(
+            f"[check_async] payload: base64 {b64} -> binary {bin_} bytes "
+            f"({b64 / max(bin_, 1):.2f}x), wire {b64_total} -> {bin_total}"
+        )
+    if errors:
+        for e in errors:
+            print(f"[check_async] FAIL: {e}", file=sys.stderr)
+        return 1
+    print("[check_async] ok: exactly-once delivery and binary framing hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,6 +36,14 @@ if [ -f bench_out/serving_qos.json ]; then
   python3 tools/check_qos.py bench_out/serving_qos.json
 fi
 
+# Async-job gates: when the serving bench's async part has run
+# (`cargo bench --bench serving -- --async-only` in the CI artifacts
+# job), enforce exactly-once submit->poll delivery and the
+# binary-frame-vs-base64 payload reduction on its JSON.
+if [ -f bench_out/serving_async.json ]; then
+  python3 tools/check_async.py bench_out/serving_async.json
+fi
+
 # Dispatch-amortisation gates: when the perf bench's k-sweep has run
 # (`cargo bench --bench perf` in the CI artifacts job), enforce
 # bit-identical samples and unchanged NFE across steps-per-dispatch
