@@ -24,10 +24,19 @@
 //!    payload overhead for one image batch. Results land in
 //!    bench_out/serving_async.json, gated in CI by
 //!    tools/check_async.py.
+//! 5. observability (docs/PROTOCOL.md §trace/§metrics): the same TCP
+//!    topology under a submit burst plus one evaluate and one canceled
+//!    job, the request-lifecycle spans and dispatch timeline pulled
+//!    back through the `trace` op and the stats tree through `metrics`,
+//!    plus the tracing-overhead ratio (steps/s with --trace-ring 1024
+//!    vs 0 on the same fixed-step workload). Results land in
+//!    bench_out/serving_trace.json, gated in CI by
+//!    tools/check_trace.py.
 //!
 //!   cargo bench --offline --bench serving -- [--rate 2] [--duration 12]
 //!       [--bucket 16] [--model vp] [--qos-only] [--qos-duration 4]
-//!       [--async-only] [--async-burst 64]
+//!       [--async-only] [--async-burst 64] [--trace-only]
+//!       [--trace-burst 32] [--trace-reqs 4]
 
 #[path = "common.rs"]
 mod common;
@@ -38,7 +47,7 @@ use gofast::cli::Args;
 use gofast::coordinator::{qos, Engine, EngineConfig, SampleRequest};
 use gofast::json::Value;
 use gofast::rng::Rng;
-use gofast::server::{serve, Client, GenerateRequest, ServerConfig};
+use gofast::server::{serve, Client, EvalRequest, GenerateRequest, ServerConfig};
 use gofast::solvers::ServingSolver;
 use gofast::workload::{poisson_trace, TraceConfig};
 use gofast::Result;
@@ -61,6 +70,9 @@ fn main() -> Result<()> {
     }
     if args.has("async-only") {
         return async_bench(&args, &model);
+    }
+    if args.has("trace-only") {
+        return trace_bench(&args, &model);
     }
 
     let mut table = Table::new(&[
@@ -211,7 +223,8 @@ fn main() -> Result<()> {
     write_outputs("serving_low_occupancy", &lo_table)?;
 
     qos_bench(&args, &model)?;
-    async_bench(&args, &model)
+    async_bench(&args, &model)?;
+    trace_bench(&args, &model)
 }
 
 /// Part 3: the QoS subsystem under mixed traffic. Writes
@@ -553,5 +566,146 @@ fn async_bench(args: &Args, model: &str) -> Result<()> {
     std::fs::create_dir_all("bench_out")?;
     std::fs::write("bench_out/serving_async.json", format!("{doc}"))?;
     println!("[serving_async] json -> bench_out/serving_async.json");
+    Ok(())
+}
+
+/// Part 5: observability. The part-4 TCP topology under a mixed
+/// workload — an async submit burst, one evaluate, one canceled job —
+/// then the span ring, dispatch timeline and Prometheus text pulled
+/// back through the `trace`/`metrics` ops, then the tracing-overhead
+/// ratio from two in-process engines (`--trace-ring` 1024 vs 0) on the
+/// same fixed-step workload. Writes bench_out/serving_trace.json for
+/// tools/check_trace.py.
+fn trace_bench(args: &Args, model: &str) -> Result<()> {
+    let burst = args.usize_or("trace-burst", 32)?;
+    let bucket = {
+        let rt = gofast::runtime::Runtime::new("artifacts")?;
+        engine_bucket(&rt.model(model)?, args.usize_or("bucket", 16)?)
+    };
+    let mut cfg = EngineConfig::new("artifacts", model);
+    cfg.bucket = bucket;
+    cfg.max_queue_samples = 100_000;
+    cfg.trace_ring = 1024;
+    let engine = Engine::start(cfg)?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    {
+        let c = engine.client();
+        std::thread::spawn(move || {
+            let _ = serve(
+                listener,
+                c,
+                ServerConfig { port: addr.port(), default_eps_rel: 0.05 },
+            );
+        });
+    }
+    println!("\n== trace: {burst} submits + evaluate + cancel, spans over TCP ==");
+    let mut c = Client::connect(&addr.to_string())?;
+
+    // a wide fixed-step job keeps every lane busy so the cancel victim
+    // below is still fully queued when the cancel lands
+    let flood = c.submit(
+        &GenerateRequest::new(4 * bucket).solver("em:64").eps_rel(0.5).seed(999).images(false),
+    )?;
+    let victim = c
+        .submit(&GenerateRequest::new(1).solver("em:8").eps_rel(0.5).seed(1000).images(false))?;
+    // unknown_job (the cancel raced with completion) counts as a miss,
+    // not a bench abort — the victim's result then drains normally
+    let canceled = c.cancel(victim).unwrap_or(false);
+    let mut expected = 1 + usize::from(!canceled); // flood (+ victim if the cancel raced)
+    for i in 0..burst {
+        c.submit(
+            &GenerateRequest::new(1).solver("em:8").eps_rel(0.5).seed(i as u64).images(false),
+        )?;
+        expected += 1;
+    }
+    // one evaluate so the ring holds eval-kind span chains too
+    let ev = c.run_eval(&EvalRequest::new(bucket).solver("em:8").eps_rel(0.5).seed(7))?;
+    let mut delivered = 0usize;
+    let t0 = Instant::now();
+    while delivered < expected && t0.elapsed().as_secs_f64() < 120.0 {
+        delivered += c.poll(100, false)?.len();
+    }
+    println!(
+        "  flood job {flood}, victim job {victim} canceled={canceled}, \
+         drained {delivered}/{expected}, eval fid {:.1} mean_nfe {:.1}",
+        ev.fid, ev.mean_nfe
+    );
+
+    let tv = c.trace(None, 0, true)?;
+    let spans = tv.req("spans")?.clone();
+    let timeline = tv.req("timeline")?.clone();
+    let metrics_text = c.metrics()?;
+    println!(
+        "  spans {} timeline records {} metrics {} bytes",
+        spans.as_arr()?.len(),
+        timeline.as_arr()?.len(),
+        metrics_text.len()
+    );
+    drop(engine);
+
+    // tracing overhead: the zero-allocation contract says a live span
+    // ring must not tax the hot step path. Same fixed-step workload on
+    // two fresh engines, ring off vs on; check_trace.py gates the
+    // steps/s ratio at >= 0.95.
+    let reqs = args.usize_or("trace-reqs", 4)?;
+    let mut sps = Vec::new();
+    for ring in [0usize, 1024] {
+        let mut cfg = EngineConfig::new("artifacts", model);
+        cfg.bucket = bucket;
+        cfg.max_queue_samples = 100_000;
+        cfg.trace_ring = ring;
+        let engine = Engine::start(cfg)?;
+        let c = engine.client();
+        let gen = |steps: usize, seed: u64| SampleRequest {
+            model: String::new(),
+            solver: ServingSolver::Em { steps },
+            n: bucket,
+            eps_rel: 0.5,
+            seed,
+            sample_base: 0,
+            priority: None,
+            deadline_ms: None,
+            cancel_token: None,
+        };
+        c.generate_request(gen(50, 1))?; // warm the pool and runtime caches
+        let s0 = c.stats()?;
+        let t0 = Instant::now();
+        for r in 0..reqs {
+            c.generate_request(gen(200, 2 + r as u64))?;
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let s1 = c.stats()?;
+        let v = (s1.steps - s0.steps) as f64 / elapsed;
+        println!("  trace_ring {ring}: {v:.0} steps/s");
+        sps.push(v);
+    }
+    let (off_sps, on_sps) = (sps[0], sps[1]);
+    let ratio = on_sps / off_sps.max(1e-9);
+    println!("  ring-on / ring-off throughput ratio {ratio:.3}");
+
+    let doc = Value::obj(vec![
+        ("model", Value::str(model)),
+        ("bucket", Value::num(bucket as f64)),
+        ("submitted", Value::num(burst as f64)),
+        ("delivered", Value::num(delivered as f64)),
+        ("canceled_job", Value::num(victim as f64)),
+        ("cancel_acked", Value::Bool(canceled)),
+        ("eval_mean_nfe", Value::num(ev.mean_nfe)),
+        ("spans", spans),
+        ("timeline", timeline),
+        ("metrics_text", Value::str(metrics_text)),
+        (
+            "ring",
+            Value::obj(vec![
+                ("off_steps_per_s", Value::num(off_sps)),
+                ("on_steps_per_s", Value::num(on_sps)),
+                ("ratio", Value::num(ratio)),
+            ]),
+        ),
+    ]);
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/serving_trace.json", format!("{doc}"))?;
+    println!("[serving_trace] json -> bench_out/serving_trace.json");
     Ok(())
 }

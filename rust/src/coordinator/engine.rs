@@ -19,6 +19,7 @@ use super::programs::{LaneState, StepIo};
 use super::qos::{self, ClassLatencyStats, PoolQosStats, QosConfig, QosState};
 use super::registry::{ModelEntry, ProgramPool, Registry};
 use super::scheduler::migrate_lanes;
+use super::telemetry::{self, Kind, Outcome, SpanRing, TraceQuery, TraceReply};
 use super::{Msg, Pending, SampleRequest, Sink, Slot};
 use crate::metrics::hist::Histogram;
 use crate::rng::Rng;
@@ -63,6 +64,12 @@ pub struct EngineConfig {
     /// class. The default is behaviour-preserving (flat rotation, no
     /// quotas, every request interactive).
     pub qos: QosConfig,
+    /// Request-lifecycle span ring capacity (`serve --trace-ring`).
+    /// 0 disables tracing entirely: the engine holds no ring and the
+    /// hot step path records nothing and allocates nothing. Also sizes
+    /// the runtime's dispatch-timeline ring (4x this, there being a few
+    /// dispatches per request at typical NFE).
+    pub trace_ring: usize,
     /// Algorithm-1 controller parameters (paper defaults).
     pub h_init: f64,
     pub r: f64,
@@ -81,6 +88,7 @@ impl EngineConfig {
             steps_per_dispatch: 1,
             max_queue_samples: 4096,
             qos: QosConfig::default(),
+            trace_ring: 1024,
             h_init: 0.01,
             r: 0.9,
             safety: 0.9,
@@ -142,6 +150,11 @@ pub struct ProgramStats {
     pub migrations_down: u64,
     /// Step executions per bucket width, ascending.
     pub steps_per_bucket: Vec<(usize, u64)>,
+    /// Adaptive proposal outcomes summed over this program's pools
+    /// (Algorithm 1's accept/reject test). Meaningful for the adaptive
+    /// program only — fixed-step solvers never reject, so both stay 0.
+    pub accepted: u64,
+    pub rejected: u64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -345,6 +358,15 @@ impl EngineClient {
         self.tx.send(Msg::Stats(rtx)).map_err(|_| anyhow!("engine is down"))?;
         rrx.recv().map_err(|_| anyhow!("engine dropped the stats request"))
     }
+
+    /// Snapshot request-lifecycle spans (and, with `q.timeline`, the
+    /// runtime's dispatch timeline) from the engine's telemetry rings.
+    /// Empty when the server runs with `--trace-ring 0`.
+    pub fn trace(&self, q: TraceQuery) -> Result<TraceReply> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Trace(q, rtx)).map_err(|_| anyhow!("engine is down"))?;
+        rrx.recv().map_err(|_| anyhow!("engine dropped the trace request"))
+    }
 }
 
 // --- engine internals ---------------------------------------------------------
@@ -378,6 +400,10 @@ struct EngineState<'rt> {
     metrics: Metrics,
     evals: EvalManager<'rt>,
     qos: QosState,
+    /// Request-lifecycle span ring; `None` when `trace_ring` is 0, and
+    /// every hot-path record site is gated on that `Option` so disabled
+    /// tracing costs neither time nor allocation.
+    trace: Option<SpanRing>,
 }
 
 fn engine_main(
@@ -392,6 +418,12 @@ fn engine_main(
             return;
         }
     };
+    // dispatch-timeline ring on the runtime, sized to hold a few
+    // dispatches per traced request; 0 leaves it off (no per-launch
+    // records, no label allocations)
+    if cfg.trace_ring > 0 {
+        rt.set_timeline(cfg.trace_ring * 4);
+    }
     // device residency rides the buffer path; with fused buffers off the
     // engine stays single-step and host-resident regardless of config
     let steps = if cfg.fused_buffers { cfg.steps_per_dispatch } else { 1 };
@@ -412,6 +444,7 @@ fn engine_main(
             return;
         }
     };
+    let trace = if cfg.trace_ring > 0 { Some(SpanRing::new(cfg.trace_ring)) } else { None };
     let mut st = EngineState {
         registry,
         cfg,
@@ -421,6 +454,7 @@ fn engine_main(
         metrics: Metrics::new(),
         evals: EvalManager::new(),
         qos,
+        trace,
     };
     let _ = ready.send(Ok(()));
 
@@ -493,25 +527,39 @@ impl<'rt> EngineState<'rt> {
                 let _ = reply.send(self.cancel_queued(token));
                 false
             }
+            Msg::Trace(q, reply) => {
+                let spans = self.trace.as_ref().map(|r| r.query(&q)).unwrap_or_default();
+                let timeline = if q.timeline {
+                    self.registry.entries()[0].model.runtime().timeline_snapshot()
+                } else {
+                    Vec::new()
+                };
+                let _ = reply.send(TraceReply { spans, timeline });
+                false
+            }
             Msg::Generate(req, reply) => {
                 if let Err(e) = req.solver.validate() {
                     // a spec the wire parser would refuse (em:0, pc@0)
                     // built via the Rust API: structured bad_solver code
+                    self.reject_span(&req, Kind::Generate, qos::CODE_BAD_SOLVER);
                     let _ = reply.send(Err(qos::coded(qos::CODE_BAD_SOLVER, &format!("{e:#}"))));
                     return false;
                 }
                 let (mi, pi) = match self.registry.resolve_pool(&req.model, &req.solver) {
                     Ok(v) => v,
                     Err(e) => {
+                        self.reject_span(&req, Kind::Generate, qos::CODE_BAD_REQUEST);
                         let _ = reply.send(Err(format!("{e:#}")));
                         return false;
                     }
                 };
                 if req.n == 0 {
+                    self.reject_span(&req, Kind::Generate, qos::CODE_BAD_REQUEST);
                     let _ = reply.send(Err("n must be > 0".into()));
                     return false;
                 }
                 if self.queued_samples + req.n > self.cfg.max_queue_samples {
+                    self.reject_span(&req, Kind::Generate, qos::CODE_QUEUE_FULL);
                     let _ = reply.send(Err(qos::coded(
                         qos::CODE_QUEUE_FULL,
                         &format!(
@@ -524,6 +572,7 @@ impl<'rt> EngineState<'rt> {
                 if let Some(maxq) = self.qos.quotas[mi].max_queued {
                     if self.qos.queued_per_model[mi] + req.n > maxq {
                         self.qos.rejected_quota += 1;
+                        self.reject_span(&req, Kind::Generate, qos::CODE_QUOTA);
                         let model = &self.registry.entries()[mi].model.meta.name;
                         let _ = reply.send(Err(qos::coded(
                             qos::CODE_QUOTA,
@@ -541,12 +590,14 @@ impl<'rt> EngineState<'rt> {
             }
             Msg::Evaluate(req, reply) => {
                 if let Err(e) = req.solver.validate() {
+                    self.reject_eval_span(&req, qos::CODE_BAD_SOLVER);
                     let _ = reply.send(Err(qos::coded(qos::CODE_BAD_SOLVER, &format!("{e:#}"))));
                     return false;
                 }
                 let (mi, pi) = match self.registry.resolve_pool(&req.model, &req.solver) {
                     Ok(v) => v,
                     Err(e) => {
+                        self.reject_eval_span(&req, qos::CODE_BAD_REQUEST);
                         let _ = reply.send(Err(format!("{e:#}")));
                         return false;
                     }
@@ -554,6 +605,7 @@ impl<'rt> EngineState<'rt> {
                 if req.samples < 2 {
                     // fail at admission, not after the run: FID needs a
                     // non-singular feature covariance
+                    self.reject_eval_span(&req, qos::CODE_BAD_REQUEST);
                     let _ = reply.send(Err(format!(
                         "evaluate needs samples >= 2 (got {}); the feature \
                          covariance is singular below that",
@@ -562,6 +614,7 @@ impl<'rt> EngineState<'rt> {
                     return false;
                 }
                 if let Err(e) = self.evals.ensure_net(mi, &self.registry) {
+                    self.reject_eval_span(&req, qos::CODE_INTERNAL);
                     let _ = reply.send(Err(e));
                     return false;
                 }
@@ -575,6 +628,41 @@ impl<'rt> EngineState<'rt> {
         }
     }
 
+    /// Record an admission rejection as a terminal span, so refused
+    /// traffic shows up in the trace ring with its code. Rejections
+    /// happen before `enqueue`, so the span allocates its request id
+    /// from the same counter admitted requests use.
+    fn reject_span(&mut self, req: &SampleRequest, kind: Kind, code: &str) {
+        let Some(ring) = self.trace.as_mut() else {
+            return;
+        };
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        let pr = req.priority.unwrap_or(self.qos.default_priority).as_str();
+        ring.on_reject(
+            id,
+            req.cancel_token,
+            &req.model,
+            req.solver.name(),
+            kind,
+            req.n,
+            pr,
+            code,
+        );
+    }
+
+    /// [`reject_span`](Self::reject_span) for an evaluate request
+    /// refused before it spawned any chunks.
+    fn reject_eval_span(&mut self, req: &EvalRequest, code: &str) {
+        let Some(ring) = self.trace.as_mut() else {
+            return;
+        };
+        let id = self.next_req_id;
+        self.next_req_id += 1;
+        let pr = req.priority.unwrap_or(self.qos.default_priority).as_str();
+        ring.on_reject(id, None, &req.model, req.solver.name(), Kind::Eval, req.samples, pr, code);
+    }
+
     /// Register a request's accumulation state and queue it on pool
     /// `(mi, pi)`. Interactive requests are queued ahead of batch ones,
     /// but never ahead of an earlier request of their own class (stable
@@ -585,6 +673,16 @@ impl<'rt> EngineState<'rt> {
         self.queued_samples += req.n;
         self.qos.queued_per_model[mi] += req.n;
         let priority = req.priority.unwrap_or(self.qos.default_priority);
+        if let Some(ring) = self.trace.as_mut() {
+            let (kind, job) = match &sink {
+                Sink::Client(_) => (Kind::Generate, req.cancel_token),
+                // eval spans carry the engine's eval-job id (the async
+                // wire job id lives in a different namespace)
+                Sink::Eval { job, .. } => (Kind::Eval, Some(*job)),
+            };
+            let model_name = &self.registry.entries()[mi].model.meta.name;
+            ring.on_submit(id, job, model_name, req.solver.name(), kind, req.n, priority.as_str());
+        }
         let dim = self.registry.entries()[mi].model.meta.dim;
         self.pending.insert(
             id,
@@ -635,7 +733,7 @@ impl<'rt> EngineState<'rt> {
     /// so no lane time is ever wasted on it.
     fn shed_expired(&mut self, mi: usize, pi: usize) {
         let now = Instant::now();
-        let EngineState { registry, pending, queued_samples, qos, .. } = self;
+        let EngineState { registry, pending, queued_samples, qos, trace, .. } = self;
         let pool = &mut registry.entry_mut(mi).pools[pi];
         let mut shed: Vec<u64> = Vec::new();
         pool.fifo.retain(|id| {
@@ -656,6 +754,9 @@ impl<'rt> EngineState<'rt> {
             *queued_samples -= p.req.n;
             qos.queued_per_model[mi] -= p.req.n;
             qos.shed_deadline += 1;
+            if let Some(ring) = trace.as_mut() {
+                ring.on_end(id, Outcome::Shed, Some(qos::CODE_DEADLINE));
+            }
             if let Sink::Client(reply) = p.sink {
                 let waited = now.duration_since(p.enqueued).as_millis();
                 let _ = reply.send(Err(qos::coded(
@@ -697,6 +798,9 @@ impl<'rt> EngineState<'rt> {
             self.qos.queued_per_model[mi] -= p.req.n;
         }
         self.qos.canceled += 1;
+        if let Some(ring) = self.trace.as_mut() {
+            ring.on_end(id, Outcome::Canceled, None);
+        }
         if let Sink::Client(reply) = p.sink {
             let _ = reply.send(Err("request canceled by client".to_string()));
         }
@@ -762,7 +866,7 @@ impl<'rt> EngineState<'rt> {
     /// per-model `max_active_lanes` quota pauses admission at the cap;
     /// it resumes as lanes free up.
     fn admit(&mut self, mi: usize, pi: usize) -> Result<()> {
-        let EngineState { registry, pending, queued_samples, cfg, qos, .. } = self;
+        let EngineState { registry, pending, queued_samples, cfg, qos, trace, .. } = self;
         let e = registry.entry_mut(mi);
         let lane_cap = qos.quotas[mi].max_active_lanes;
         let mut model_active: usize = e.pools.iter().map(|p| p.active()).sum();
@@ -816,6 +920,9 @@ impl<'rt> EngineState<'rt> {
             if p.started.is_none() {
                 let now = Instant::now();
                 p.started = Some(now);
+                if let Some(ring) = trace.as_mut() {
+                    ring.on_admit(id);
+                }
                 if matches!(p.sink, Sink::Client(_)) {
                     qos.classes[p.priority.idx()]
                         .queue_wait
@@ -853,7 +960,7 @@ impl<'rt> EngineState<'rt> {
     /// One fused step of pool `(mi, pi)`'s program at its current width.
     /// Returns the eval chunks that completed this iteration.
     fn step(&mut self, mi: usize, pi: usize) -> Result<Vec<(u64, usize, GenResult)>> {
-        let EngineState { registry, pending, cfg, metrics, evals, qos, .. } = self;
+        let EngineState { registry, pending, cfg, metrics, evals, qos, trace, .. } = self;
         let e = registry.entry_mut(mi);
         // eval-lane share of this dispatch's real lane-nodes (the same
         // unit as occupied_lane_steps): a fused dispatch advances a
@@ -871,6 +978,7 @@ impl<'rt> EngineState<'rt> {
             }
         }
         evals.eval_lane_steps += eval_nodes;
+        let step_start = Instant::now();
         let outcome = {
             let ModelEntry { model, process, pools } = e;
             let ProgramPool { program, slots, x, xprev, dev_x, steps_per_dispatch, .. } =
@@ -892,10 +1000,37 @@ impl<'rt> EngineState<'rt> {
         let e = registry.entry_mut(mi);
         let k = e.pools[pi].steps_per_dispatch;
         e.pools[pi].sched.note_step(outcome.lane_nodes, k);
+        {
+            // per-pool step telemetry: Histogram::record is
+            // allocation-free, and the accept/reject split only moves
+            // for the adaptive program (fixed kernels never reject)
+            let pool = &mut e.pools[pi];
+            pool.step_time.record(step_start.elapsed().as_secs_f64());
+            if crate::solvers::spec::kernel(pool.program.solver_name())
+                .is_some_and(|sk| sk.adaptive)
+            {
+                pool.accepted += outcome.occupied as u64 - outcome.rejections;
+                pool.rejected += outcome.rejections;
+            }
+        }
+        if let Some(ring) = trace.as_mut() {
+            // one dispatch event per request with a live lane in this
+            // batch (converged lanes are still Running here; they free
+            // in finish_lanes below)
+            let mut seen: Vec<u64> = Vec::new();
+            for s in e.pools[pi].slots.iter() {
+                if let Slot::Running { req_id, .. } = s {
+                    if !seen.contains(req_id) {
+                        seen.push(*req_id);
+                        ring.on_dispatch(*req_id);
+                    }
+                }
+            }
+        }
         if outcome.converged.is_empty() {
             return Ok(Vec::new());
         }
-        finish_lanes(e, pi, pending, metrics, qos, cfg.fused_buffers, &outcome.converged)
+        finish_lanes(e, pi, pending, metrics, qos, trace, cfg.fused_buffers, &outcome.converged)
     }
 
     /// Fail every request owned by pool `(mi, pi)` (incomplete requests
@@ -920,6 +1055,9 @@ impl<'rt> EngineState<'rt> {
             if let Some(p) = self.pending.remove(&id) {
                 self.queued_samples -= p.req.n - p.next_sample;
                 self.qos.queued_per_model[mi] -= p.req.n - p.next_sample;
+                if let Some(ring) = self.trace.as_mut() {
+                    ring.on_end(id, Outcome::Failed, Some(qos::CODE_INTERNAL));
+                }
                 if let Sink::Client(reply) = p.sink {
                     let _ = reply.send(Err(msg.to_string()));
                 }
@@ -963,6 +1101,13 @@ impl<'rt> EngineState<'rt> {
                     occupied_lane_steps: s.occupied_lane_steps,
                     queue_depth,
                     active_lanes: pool.active(),
+                    step_count: pool.step_time.count(),
+                    step_sum_s: pool.step_time.sum(),
+                    step_p50_s: pool.step_time.quantile(0.5),
+                    step_p95_s: pool.step_time.quantile(0.95),
+                    step_p99_s: pool.step_time.quantile(0.99),
+                    accepted: pool.accepted,
+                    rejected: pool.rejected,
                 });
                 flat += 1;
                 let name = pool.program.solver_name();
@@ -985,6 +1130,8 @@ impl<'rt> EngineState<'rt> {
                     s.occupied_lane_steps * pool.program.score_evals_per_step();
                 ps.migrations_up += s.migrations_up;
                 ps.migrations_down += s.migrations_down;
+                ps.accepted += pool.accepted;
+                ps.rejected += pool.rejected;
                 for (bucket, n) in s.steps_per_bucket() {
                     ps.steps += n;
                     for acc in [&mut ps.steps_per_bucket, &mut steps_per_bucket] {
@@ -1043,12 +1190,14 @@ impl<'rt> EngineState<'rt> {
 /// lanes. Client requests are answered directly; completed eval chunks
 /// are returned to the caller for folding into their jobs. The denoise
 /// call is shared by every solver program (+1 NFE per sample).
+#[allow(clippy::too_many_arguments)]
 fn finish_lanes(
     e: &mut ModelEntry<'_>,
     pi: usize,
     pending: &mut HashMap<u64, Pending>,
     metrics: &mut Metrics,
     qos: &mut QosState,
+    trace: &mut Option<SpanRing>,
     fused_buffers: bool,
     lanes: &[usize],
 ) -> Result<Vec<(u64, usize, GenResult)>> {
@@ -1088,6 +1237,9 @@ fn finish_lanes(
         metrics.samples_done += 1;
         if p.done == p.req.n {
             let p = pending.remove(&req_id).unwrap();
+            if let Some(ring) = trace.as_mut() {
+                ring.on_end(req_id, Outcome::Complete, None);
+            }
             let now = Instant::now();
             let wall = now.duration_since(p.started.unwrap_or(p.enqueued)).as_secs_f64();
             let queued = p

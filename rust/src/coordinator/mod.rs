@@ -40,6 +40,7 @@ pub(crate) mod programs;
 pub mod qos;
 pub(crate) mod registry;
 pub mod scheduler;
+pub mod telemetry;
 
 pub use engine::{
     CancelOutcome, Engine, EngineClient, EngineConfig, EngineStats, GenResult, ProgramStats,
@@ -47,6 +48,7 @@ pub use engine::{
 pub use eval::{EvalRequest, EvalResult};
 pub use qos::{ClassLatencyStats, PoolQosStats, Priority, QosConfig, Quota};
 pub use scheduler::BucketScheduler;
+pub use telemetry::{DispatchRecord, Span, SpanRing, TraceQuery, TraceReply};
 
 use crate::solvers::ServingSolver;
 use crate::tensor::Tensor;
@@ -94,6 +96,9 @@ pub(crate) enum Msg {
     /// (engine::CancelOutcome reports queued/running/absent).
     Cancel(u64, mpsc::Sender<engine::CancelOutcome>),
     Stats(mpsc::Sender<EngineStats>),
+    /// Snapshot the span ring (and optionally the runtime's dispatch
+    /// timeline) for the `trace` wire op.
+    Trace(telemetry::TraceQuery, mpsc::Sender<telemetry::TraceReply>),
     Shutdown,
 }
 

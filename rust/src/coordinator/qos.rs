@@ -358,6 +358,13 @@ pub struct ClassLatencyStats {
     pub e2e_p50_s: f64,
     pub e2e_p95_s: f64,
     pub e2e_p99_s: f64,
+    /// Histogram count/sum pairs backing the Prometheus summary
+    /// exposition (`_count`/`_sum` next to the quantile gauges); the
+    /// JSON `stats` shape keeps its original keys.
+    pub queue_wait_count: u64,
+    pub queue_wait_sum_s: f64,
+    pub e2e_count: u64,
+    pub e2e_sum_s: f64,
 }
 
 /// Per-(model, program) pool QoS snapshot, exported through `stats`.
@@ -374,6 +381,18 @@ pub struct PoolQosStats {
     /// Samples queued on the pool (not yet in a lane).
     pub queue_depth: usize,
     pub active_lanes: usize,
+    /// Per-pool step wall-time distribution (telemetry): dispatch
+    /// count, summed seconds, and quantiles of the pool's step-time
+    /// histogram — the Prometheus `gofast_pool_step_seconds` series.
+    pub step_count: u64,
+    pub step_sum_s: f64,
+    pub step_p50_s: f64,
+    pub step_p95_s: f64,
+    pub step_p99_s: f64,
+    /// Adaptive proposal accept/reject counters (Algorithm 1's step
+    /// test; always 0 for fixed-step pools, which never reject).
+    pub accepted: u64,
+    pub rejected: u64,
 }
 
 /// All QoS state the engine threads through admission and service:
@@ -483,6 +502,10 @@ impl QosState {
                     e2e_p50_s: m.e2e.quantile(0.5),
                     e2e_p95_s: m.e2e.quantile(0.95),
                     e2e_p99_s: m.e2e.quantile(0.99),
+                    queue_wait_count: m.queue_wait.count(),
+                    queue_wait_sum_s: m.queue_wait.sum(),
+                    e2e_count: m.e2e.count(),
+                    e2e_sum_s: m.e2e.sum(),
                 }
             })
             .collect()

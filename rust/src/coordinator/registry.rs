@@ -24,6 +24,7 @@
 use super::programs::{self, LaneProgram};
 use super::scheduler::BucketScheduler;
 use super::Slot;
+use crate::metrics::hist::Histogram;
 use crate::runtime::{DeviceSlab, Model, Runtime};
 use crate::sde::Process;
 use crate::solvers::spec::fused_artifact;
@@ -53,6 +54,17 @@ pub(crate) struct ProgramPool {
     /// Request ids (into the engine's pending map) in arrival order.
     pub fifo: Vec<u64>,
     pub sched: BucketScheduler,
+    /// Wall seconds per fused step dispatch of this pool (telemetry:
+    /// the per-pool step-time quantiles the `metrics` op exports).
+    /// `Histogram::record` is allocation-free, so this runs
+    /// unconditionally on the hot path.
+    pub step_time: Histogram,
+    /// Adaptive accept/reject outcome counters (Algorithm 1's
+    /// proposal test). Fixed-step programs never reject, so both stay
+    /// 0 for their pools; the wire documents the series as
+    /// adaptive-only.
+    pub accepted: u64,
+    pub rejected: u64,
 }
 
 impl ProgramPool {
@@ -248,6 +260,9 @@ impl<'rt> Registry<'rt> {
                     steps_per_dispatch: k,
                     fifo: Vec::new(),
                     sched,
+                    step_time: Histogram::new(),
+                    accepted: 0,
+                    rejected: 0,
                 });
             }
             if pools.is_empty() {

@@ -1,0 +1,582 @@
+//! Request-lifecycle tracing and dispatch timelines
+//! (docs/ARCHITECTURE.md §Observability).
+//!
+//! Two bounded overwrite-oldest rings, both stamped against one
+//! process-wide monotonic epoch so their timestamps land on a single
+//! timeline (the Chrome-trace export interleaves them):
+//!
+//! * [`SpanRing`] — one [`Span`] per engine request (a client generate,
+//!   an eval chunk, an async-job round), recording monotonic seconds at
+//!   submit → admit (or reject, with code) → first lane grant → each
+//!   dispatch batch → terminal outcome. Owned by the engine thread;
+//!   when `EngineConfig::trace_ring` is 0 the engine holds `None` and
+//!   the hot step path records nothing and allocates nothing.
+//! * [`DispatchRing`] — one [`DispatchRecord`] per executable launch,
+//!   its wall time split into argument upload / device execution /
+//!   output download and tagged (model, program, bucket, k). Owned by
+//!   the runtime behind a `RefCell`; disabled (empty capacity) unless
+//!   the engine turns it on at startup.
+//!
+//! Both rings are fixed capacity: steady-state serving retains the
+//! newest N entries with no growth. The only per-record allocations are
+//! the label strings of the record itself, and those happen only while
+//! the ring is enabled — the overhead contract `tools/check_trace.py`
+//! gates (ring-on throughput ≥ 0.95× ring-off).
+
+use crate::json::Value;
+use std::collections::HashMap;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process-wide monotonic epoch every telemetry timestamp is
+/// relative to. First caller pins it; the engine and runtime both
+/// touch it at startup so serving-time stamps are far from zero.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Seconds since [`epoch`] (monotonic, f64).
+pub fn now_s() -> f64 {
+    epoch().elapsed().as_secs_f64()
+}
+
+/// Seconds from [`epoch`] to `t` (0 if `t` predates the epoch).
+pub fn since_epoch(t: Instant) -> f64 {
+    t.saturating_duration_since(epoch()).as_secs_f64()
+}
+
+/// What kind of work a span covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Generate,
+    Eval,
+}
+
+impl Kind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::Generate => "generate",
+            Kind::Eval => "eval",
+        }
+    }
+}
+
+/// How a request left the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// All samples finished and were delivered to the sink.
+    Complete,
+    /// Dequeued while still fully queued (client cancel).
+    Canceled,
+    /// Shed because its deadline expired while queued.
+    Shed,
+    /// Refused at admission (never queued); `code` says why.
+    Rejected,
+    /// Pool fault failed the request mid-flight.
+    Failed,
+}
+
+impl Outcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Outcome::Complete => "complete",
+            Outcome::Canceled => "canceled",
+            Outcome::Shed => "shed",
+            Outcome::Rejected => "rejected",
+            Outcome::Failed => "failed",
+        }
+    }
+}
+
+/// The lifecycle of one engine request. All timestamps are monotonic
+/// seconds since [`epoch`]; unset stages are `None` (a rejected span
+/// never admits, a queued-then-canceled span never dispatches).
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Engine request id (also allocated for rejections, so rejected
+    /// traffic is visible in the ring).
+    pub id: u64,
+    /// Async job id when the request came through the job table
+    /// (`SampleRequest::cancel_token`) or an eval job's id.
+    pub job: Option<u64>,
+    pub model: String,
+    pub solver: String,
+    pub kind: Kind,
+    pub n: usize,
+    pub priority: &'static str,
+    pub submit_s: f64,
+    /// First lane grant (the request left the queue).
+    pub admit_s: Option<f64>,
+    /// Dispatch batches that advanced at least one of this request's
+    /// lanes (one count per engine step, not per lane).
+    pub dispatches: u64,
+    pub first_dispatch_s: Option<f64>,
+    pub last_dispatch_s: Option<f64>,
+    pub end_s: Option<f64>,
+    pub outcome: Option<Outcome>,
+    /// Machine-readable error code for rejected/shed/failed spans.
+    pub code: Option<String>,
+}
+
+impl Span {
+    fn new(
+        id: u64,
+        job: Option<u64>,
+        model: &str,
+        solver: &str,
+        kind: Kind,
+        n: usize,
+        priority: &'static str,
+    ) -> Span {
+        Span {
+            id,
+            job,
+            model: model.to_string(),
+            solver: solver.to_string(),
+            kind,
+            n,
+            priority,
+            submit_s: now_s(),
+            admit_s: None,
+            dispatches: 0,
+            first_dispatch_s: None,
+            last_dispatch_s: None,
+            end_s: None,
+            outcome: None,
+            code: None,
+        }
+    }
+
+    /// Queue wait: submit → first lane grant.
+    pub fn queued_s(&self) -> Option<f64> {
+        self.admit_s.map(|a| a - self.submit_s)
+    }
+
+    /// Execution: first lane grant → terminal outcome.
+    pub fn exec_s(&self) -> Option<f64> {
+        match (self.admit_s, self.end_s) {
+            (Some(a), Some(e)) => Some(e - a),
+            _ => None,
+        }
+    }
+
+    /// End to end: submit → terminal outcome.
+    pub fn e2e_s(&self) -> Option<f64> {
+        self.end_s.map(|e| e - self.submit_s)
+    }
+
+    /// Wire shape of one span (`trace` op, `gofast trace`). Optional
+    /// stages are emitted only when set, so a span's present keys tell
+    /// the reader how far it got.
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj(vec![
+            ("id", Value::num(self.id as f64)),
+            ("kind", Value::str(self.kind.as_str())),
+            ("model", Value::str(&self.model)),
+            ("solver", Value::str(&self.solver)),
+            ("n", Value::num(self.n as f64)),
+            ("priority", Value::str(self.priority)),
+            ("submit_s", Value::num(self.submit_s)),
+            ("dispatches", Value::num(self.dispatches as f64)),
+        ]);
+        if let Some(j) = self.job {
+            o.set("job", Value::num(j as f64));
+        }
+        if let Some(a) = self.admit_s {
+            o.set("admit_s", Value::num(a));
+        }
+        if let Some(t) = self.first_dispatch_s {
+            o.set("first_dispatch_s", Value::num(t));
+        }
+        if let Some(t) = self.last_dispatch_s {
+            o.set("last_dispatch_s", Value::num(t));
+        }
+        if let Some(e) = self.end_s {
+            o.set("end_s", Value::num(e));
+        }
+        if let Some(out) = self.outcome {
+            o.set("outcome", Value::str(out.as_str()));
+        }
+        if let Some(ref c) = self.code {
+            o.set("code", Value::str(c.as_str()));
+        }
+        if let Some(q) = self.queued_s() {
+            o.set("queued_s", Value::num(q));
+        }
+        if let Some(x) = self.exec_s() {
+            o.set("exec_s", Value::num(x));
+        }
+        if let Some(e) = self.e2e_s() {
+            o.set("e2e_s", Value::num(e));
+        }
+        o
+    }
+}
+
+/// Query shape of the `trace` wire op: by request id, by job id, or the
+/// last N spans in submit order. `timeline` additionally pulls the
+/// runtime's dispatch-timeline ring.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceQuery {
+    pub id: Option<u64>,
+    pub job: Option<u64>,
+    pub last: usize,
+    pub timeline: bool,
+}
+
+/// Reply of the `trace` wire op / `EngineClient::trace`: matching
+/// spans plus (when `TraceQuery::timeline`) the runtime's dispatch
+/// timeline, both cloned out of the engine thread.
+#[derive(Clone, Debug, Default)]
+pub struct TraceReply {
+    pub spans: Vec<Span>,
+    pub timeline: Vec<DispatchRecord>,
+}
+
+/// Bounded per-server span ring: the newest `cap` requests, indexed by
+/// request id for O(1) stage updates from the engine loop. Overwriting
+/// an old span drops its id from the index, so a lookup never aliases
+/// an evicted request.
+pub struct SpanRing {
+    spans: Vec<Span>,
+    cap: usize,
+    /// Next overwrite position once `spans` is full.
+    cursor: usize,
+    index: HashMap<u64, usize>,
+}
+
+impl SpanRing {
+    pub fn new(cap: usize) -> SpanRing {
+        assert!(cap > 0, "SpanRing capacity must be > 0 (use None to disable tracing)");
+        epoch(); // pin the timeline origin at startup
+        SpanRing { spans: Vec::with_capacity(cap), cap, cursor: 0, index: HashMap::new() }
+    }
+
+    fn push(&mut self, span: Span) {
+        if self.spans.len() < self.cap {
+            self.index.insert(span.id, self.spans.len());
+            self.spans.push(span);
+        } else {
+            let old = &self.spans[self.cursor];
+            self.index.remove(&old.id);
+            self.index.insert(span.id, self.cursor);
+            self.spans[self.cursor] = span;
+            self.cursor = (self.cursor + 1) % self.cap;
+        }
+    }
+
+    fn get_mut(&mut self, id: u64) -> Option<&mut Span> {
+        self.index.get(&id).map(|&i| &mut self.spans[i])
+    }
+
+    /// A request entered the engine mailbox and was queued.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_submit(
+        &mut self,
+        id: u64,
+        job: Option<u64>,
+        model: &str,
+        solver: &str,
+        kind: Kind,
+        n: usize,
+        priority: &'static str,
+    ) {
+        self.push(Span::new(id, job, model, solver, kind, n, priority));
+    }
+
+    /// A request was refused at admission (quota, queue cap, bad
+    /// solver…): one span carrying the rejection code, already ended.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_reject(
+        &mut self,
+        id: u64,
+        job: Option<u64>,
+        model: &str,
+        solver: &str,
+        kind: Kind,
+        n: usize,
+        priority: &'static str,
+        code: &str,
+    ) {
+        let mut s = Span::new(id, job, model, solver, kind, n, priority);
+        s.end_s = Some(s.submit_s);
+        s.outcome = Some(Outcome::Rejected);
+        s.code = Some(code.to_string());
+        self.push(s);
+    }
+
+    /// First lane grant: the request's first sample left the queue.
+    pub fn on_admit(&mut self, id: u64) {
+        let t = now_s();
+        if let Some(s) = self.get_mut(id) {
+            if s.admit_s.is_none() {
+                s.admit_s = Some(t);
+            }
+        }
+    }
+
+    /// A dispatch batch advanced at least one of the request's lanes.
+    pub fn on_dispatch(&mut self, id: u64) {
+        let t = now_s();
+        if let Some(s) = self.get_mut(id) {
+            s.dispatches += 1;
+            if s.first_dispatch_s.is_none() {
+                s.first_dispatch_s = Some(t);
+            }
+            s.last_dispatch_s = Some(t);
+        }
+    }
+
+    /// Terminal stage. `code` is the machine-readable error code for
+    /// shed/failed/canceled ends (None for clean completion).
+    pub fn on_end(&mut self, id: u64, outcome: Outcome, code: Option<&str>) {
+        let t = now_s();
+        if let Some(s) = self.get_mut(id) {
+            if s.end_s.is_none() {
+                s.end_s = Some(t);
+                s.outcome = Some(outcome);
+                s.code = code.map(|c| c.to_string());
+            }
+        }
+    }
+
+    /// Spans matching `q`, in submit (id) order, cloned for the wire.
+    pub fn query(&self, q: &TraceQuery) -> Vec<Span> {
+        if let Some(id) = q.id {
+            return self.index.get(&id).map(|&i| vec![self.spans[i].clone()]).unwrap_or_default();
+        }
+        let mut out: Vec<Span> = match q.job {
+            Some(job) => self.spans.iter().filter(|s| s.job == Some(job)).cloned().collect(),
+            None => self.spans.to_vec(),
+        };
+        out.sort_by_key(|s| s.id);
+        let keep = if q.last == 0 { usize::MAX } else { q.last };
+        if out.len() > keep {
+            out.drain(..out.len() - keep);
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+}
+
+/// Fused-dispatch depth encoded in a step artifact's name
+/// (`em_stepk8` → 8; anything unfused → 1) — the `k` tag of a
+/// [`DispatchRecord`] without plumbing engine state into the runtime.
+pub fn k_of(program: &str) -> usize {
+    program
+        .rsplit_once('k')
+        .and_then(|(head, digits)| {
+            if head.ends_with("step") && !digits.is_empty() {
+                digits.parse().ok()
+            } else {
+                None
+            }
+        })
+        .unwrap_or(1)
+}
+
+/// One executable launch on the runtime's timeline, wall time split
+/// into the three phases the buffer path optimises (upload is ~0 for
+/// device-resident lane state; download is 0 for `exec_device`, whose
+/// output stays on device).
+#[derive(Clone, Debug)]
+pub struct DispatchRecord {
+    /// Launch start, seconds since [`epoch`].
+    pub start_s: f64,
+    /// Argument staging/upload (host→device, incl. literal conversion).
+    pub upload_s: f64,
+    /// Device execution.
+    pub exec_s: f64,
+    /// Output transfer back to host (device→host).
+    pub download_s: f64,
+    pub model: String,
+    pub program: String,
+    pub bucket: usize,
+    /// Fused steps per dispatch (1 unless a `*_stepk<k>` artifact).
+    pub k: usize,
+}
+
+impl DispatchRecord {
+    /// Wire/`--chrome` source shape of one launch.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("start_s", Value::num(self.start_s)),
+            ("upload_s", Value::num(self.upload_s)),
+            ("exec_s", Value::num(self.exec_s)),
+            ("download_s", Value::num(self.download_s)),
+            ("model", Value::str(&self.model)),
+            ("program", Value::str(&self.program)),
+            ("bucket", Value::num(self.bucket as f64)),
+            ("k", Value::num(self.k as f64)),
+        ])
+    }
+}
+
+/// Bounded ring of the runtime's newest `cap` dispatches.
+pub struct DispatchRing {
+    recs: Vec<DispatchRecord>,
+    cap: usize,
+    cursor: usize,
+}
+
+impl DispatchRing {
+    pub fn new(cap: usize) -> DispatchRing {
+        assert!(cap > 0, "DispatchRing capacity must be > 0 (use None to disable)");
+        epoch();
+        DispatchRing { recs: Vec::with_capacity(cap), cap, cursor: 0 }
+    }
+
+    pub fn push(&mut self, rec: DispatchRecord) {
+        if self.recs.len() < self.cap {
+            self.recs.push(rec);
+        } else {
+            self.recs[self.cursor] = rec;
+            self.cursor = (self.cursor + 1) % self.cap;
+        }
+    }
+
+    /// Records oldest → newest (unwraps the ring).
+    pub fn snapshot(&self) -> Vec<DispatchRecord> {
+        let mut out = Vec::with_capacity(self.recs.len());
+        out.extend_from_slice(&self.recs[self.cursor..]);
+        out.extend_from_slice(&self.recs[..self.cursor]);
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.recs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn submit(ring: &mut SpanRing, id: u64) {
+        ring.on_submit(id, None, "vp", "adaptive", Kind::Generate, 4, "interactive");
+    }
+
+    #[test]
+    fn lifecycle_is_monotonic_and_complete() {
+        let mut ring = SpanRing::new(8);
+        submit(&mut ring, 1);
+        ring.on_admit(1);
+        ring.on_dispatch(1);
+        ring.on_dispatch(1);
+        ring.on_end(1, Outcome::Complete, None);
+        let s = &ring.query(&TraceQuery { id: Some(1), ..Default::default() })[0];
+        let admit = s.admit_s.unwrap();
+        let first = s.first_dispatch_s.unwrap();
+        let last = s.last_dispatch_s.unwrap();
+        let end = s.end_s.unwrap();
+        assert!(s.submit_s <= admit && admit <= first && first <= last && last <= end);
+        assert_eq!(s.dispatches, 2);
+        assert_eq!(s.outcome, Some(Outcome::Complete));
+        // queued + exec == e2e by construction (the invariant
+        // tools/check_trace.py asserts over the wire)
+        let sum = s.queued_s().unwrap() + s.exec_s().unwrap();
+        assert!((sum - s.e2e_s().unwrap()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reject_span_is_terminal_at_submit() {
+        let mut ring = SpanRing::new(8);
+        ring.on_reject(7, Some(3), "vp", "em:16", Kind::Generate, 2, "batch", "quota_exceeded");
+        let s = &ring.query(&TraceQuery { id: Some(7), ..Default::default() })[0];
+        assert_eq!(s.outcome, Some(Outcome::Rejected));
+        assert_eq!(s.code.as_deref(), Some("quota_exceeded"));
+        assert_eq!(s.end_s, Some(s.submit_s));
+        assert!(s.admit_s.is_none());
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_unindexes_it() {
+        let mut ring = SpanRing::new(2);
+        submit(&mut ring, 1);
+        submit(&mut ring, 2);
+        submit(&mut ring, 3); // evicts 1
+        assert_eq!(ring.len(), 2);
+        assert!(ring.query(&TraceQuery { id: Some(1), ..Default::default() }).is_empty());
+        // a late stage update for the evicted id must be a no-op, not a
+        // write into whatever span reused the slot
+        ring.on_end(1, Outcome::Complete, None);
+        let ids: Vec<u64> =
+            ring.query(&TraceQuery { last: 0, ..Default::default() }).iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![2, 3]);
+        assert!(ring.query(&TraceQuery { id: Some(3), ..Default::default() })[0].end_s.is_none());
+    }
+
+    #[test]
+    fn query_by_job_and_last_n() {
+        let mut ring = SpanRing::new(8);
+        for id in 1..=5 {
+            ring.on_submit(id, Some(id % 2), "vp", "adaptive", Kind::Generate, 1, "batch");
+        }
+        let job1: Vec<u64> = ring
+            .query(&TraceQuery { job: Some(1), ..Default::default() })
+            .iter()
+            .map(|s| s.id)
+            .collect();
+        assert_eq!(job1, vec![1, 3, 5]);
+        let last2: Vec<u64> =
+            ring.query(&TraceQuery { last: 2, ..Default::default() }).iter().map(|s| s.id).collect();
+        assert_eq!(last2, vec![4, 5]);
+    }
+
+    #[test]
+    fn span_json_has_stage_keys_only_when_set() {
+        let mut ring = SpanRing::new(2);
+        submit(&mut ring, 1);
+        let queued = ring.query(&TraceQuery { id: Some(1), ..Default::default() })[0].to_json();
+        assert!(queued.get("admit_s").is_none());
+        assert!(queued.get("outcome").is_none());
+        ring.on_admit(1);
+        ring.on_end(1, Outcome::Complete, None);
+        let done = ring.query(&TraceQuery { id: Some(1), ..Default::default() })[0].to_json();
+        assert_eq!(done.get("outcome").unwrap().as_str().unwrap(), "complete");
+        assert!(done.get("queued_s").is_some() && done.get("e2e_s").is_some());
+    }
+
+    #[test]
+    fn k_of_parses_fused_artifacts_only() {
+        assert_eq!(k_of("em_stepk8"), 8);
+        assert_eq!(k_of("pc_stepk4"), 4);
+        assert_eq!(k_of("ddim_stepk16"), 16);
+        assert_eq!(k_of("em_step"), 1);
+        assert_eq!(k_of("adaptive_step"), 1);
+        assert_eq!(k_of("score"), 1);
+        assert_eq!(k_of("denoise"), 1);
+    }
+
+    #[test]
+    fn dispatch_ring_wraps_in_order() {
+        let mut ring = DispatchRing::new(3);
+        for i in 0..5 {
+            ring.push(DispatchRecord {
+                start_s: i as f64,
+                upload_s: 0.0,
+                exec_s: 0.0,
+                download_s: 0.0,
+                model: "vp".into(),
+                program: "em_step".into(),
+                bucket: 16,
+                k: 1,
+            });
+        }
+        let starts: Vec<f64> = ring.snapshot().iter().map(|r| r.start_s).collect();
+        assert_eq!(starts, vec![2.0, 3.0, 4.0]);
+    }
+}

@@ -7,6 +7,8 @@
 //!   inspect   list artifact variants, programs and buckets
 //!   evaluate  FID*/IS* against the reference split, served through the
 //!             engine's scheduler/registry path (--offline bypasses it)
+//!   trace     dump request-lifecycle spans and dispatch timelines from
+//!             a running server (--chrome writes a chrome://tracing file)
 //!
 //! Paper-table regeneration lives in `benches/` (cargo bench).
 
@@ -36,6 +38,7 @@ fn main() {
         "client" => cmd_client(&args),
         "inspect" => cmd_inspect(&args),
         "evaluate" => cmd_evaluate(&args),
+        "trace" => cmd_trace(&args),
         "help" | "--help" => {
             print!("{}", USAGE);
             Ok(())
@@ -64,7 +67,8 @@ USAGE: gofast <command> [flags]
             [--solvers adaptive,em,ddim,pc] [--max-bucket 16] [--no-migrate]
             [--steps-per-dispatch 1] [--weights vp=3,ve=1|vp/em=0.5]
             [--quota vp=256] [--quota-lanes vp=8]
-            [--default-priority interactive|batch] [--set k=v ...]
+            [--default-priority interactive|batch] [--trace-ring 1024]
+            [--set k=v ...]
             (--steps-per-dispatch k>1 keeps fixed-step lane state
              device-resident and advances k grid nodes per kernel
              launch via the fused k-step artifacts — bit-identical
@@ -74,7 +78,9 @@ USAGE: gofast <command> [flags]
              model or model/program; --quota caps queued samples and
              --quota-lanes active lanes per model; requests may carry
              priority/deadline_ms — see rust/src/server/mod.rs)
-  client    [generate|submit|poll|cancel|watch|hello]
+            (--trace-ring N keeps the newest N request-lifecycle spans
+             for the trace op; 0 disables tracing entirely)
+  client    [generate|submit|poll|cancel|watch|hello|metrics]
             [--addr 127.0.0.1:7878] [--model vp]
             [--solver adaptive|em:<n>|ddim:<n>|pc:<n>[@<snr>]]
             [--n 4] [--eps-rel 0.05] [--seed 0] [--priority interactive|batch]
@@ -84,7 +90,9 @@ USAGE: gofast <command> [flags]
              poll [--job id] [--timeout-ms 0] drains completed jobs;
              cancel --job id frees a still-queued job;
              watch [--rate-ms 1000] [--rounds 0] runs a periodic job and
-             streams its rounds; hello prints server capabilities;
+             streams its rounds, each with a span-derived queue/exec
+             latency line; hello prints server capabilities; metrics
+             prints the Prometheus text exposition;
              --binary asks for raw f32 payload frames instead of base64)
   evaluate  --model vp [--solver adaptive|em:<n>|ddim:<n>|pc:<n>[@<snr>]|...]
             [--samples 256]
@@ -97,6 +105,11 @@ USAGE: gofast <command> [flags]
              process-default Langevin SNR. Non-served solvers — ode,
              lamba, ... — are --offline only.)
   inspect   [--artifacts artifacts]
+  trace     [--addr 127.0.0.1:7878] [--last 0] [--chrome trace.json]
+            (dump request-lifecycle spans + the dispatch timeline from a
+             running server's trace ring; --chrome writes a
+             chrome://tracing / Perfetto timeline JSON with per-dispatch
+             upload/exec/download phases; --last 0 = all retained spans)
 ";
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -278,6 +291,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("--steps-per-dispatch must be >= 1");
     }
     ecfg.max_queue_samples = cfg.usize_or("server.max_queue_samples", 4096)?;
+    ecfg.trace_ring =
+        args.usize_or("trace-ring", cfg.usize_or("server.trace_ring", 1024)?)?;
     ecfg.qos = qcfg;
 
     let engine = Engine::start(ecfg)?;
@@ -413,6 +428,7 @@ fn cmd_client(args: &Args) -> Result<()> {
             loop {
                 for u in client.poll_job(id, 1000, binary)? {
                     print_update(&u);
+                    print_watch_trace(&mut client, id);
                     seen += 1;
                 }
                 if rounds > 0 && seen >= rounds {
@@ -425,10 +441,144 @@ fn cmd_client(args: &Args) -> Result<()> {
             println!("{}", client.hello()?);
             Ok(())
         }
+        "metrics" => {
+            print!("{}", client.metrics()?);
+            Ok(())
+        }
         other => bail!(
-            "unknown client subcommand '{other}' (generate, submit, poll, cancel, watch, hello)"
+            "unknown client subcommand '{other}' (generate, submit, poll, cancel, watch, \
+             hello, metrics)"
         ),
     }
+}
+
+/// Compact span-derived telemetry line under each watch round: where
+/// the round's wall time went (queue wait vs lane execution) and how
+/// many dispatch batches advanced it. Silent when the server runs with
+/// --trace-ring 0 or the span has already been evicted.
+fn print_watch_trace(client: &mut gofast::server::Client, job: u64) {
+    let Ok(v) = client.trace(Some(job), 0, false) else { return };
+    let Ok(spans) = v.req("spans").and_then(|s| s.as_arr()) else { return };
+    let Some(s) = spans.iter().rev().find(|s| s.get("e2e_s").is_some()) else { return };
+    let f = |k: &str| s.get(k).and_then(|x| x.as_f64().ok()).unwrap_or(0.0);
+    println!(
+        "  span {}: queued={:.1}ms exec={:.1}ms e2e={:.1}ms dispatches={}",
+        f("id") as u64,
+        f("queued_s") * 1e3,
+        f("exec_s") * 1e3,
+        f("e2e_s") * 1e3,
+        f("dispatches") as u64,
+    );
+}
+
+/// `gofast trace`: dump the server's span ring (and dispatch timeline)
+/// as text, or as a chrome://tracing / Perfetto JSON with --chrome.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let mut client = gofast::server::Client::connect(&addr)?;
+    let last = args.usize_or("last", 0)?;
+    let v = client.trace(None, last, true)?;
+    let spans = v.req("spans")?.as_arr()?;
+    let timeline = v.req("timeline")?.as_arr()?;
+    if let Some(out) = args.get("chrome") {
+        let text = chrome_trace(spans, timeline)?;
+        std::fs::write(out, &text).with_context(|| format!("writing {out}"))?;
+        println!(
+            "wrote {out}: {} request spans, {} dispatches (open in chrome://tracing or Perfetto)",
+            spans.len(),
+            timeline.len()
+        );
+        return Ok(());
+    }
+    for s in spans {
+        let g = |k: &str| s.get(k).and_then(|x| x.as_str().ok()).unwrap_or("-");
+        let f = |k: &str| s.get(k).and_then(|x| x.as_f64().ok());
+        let mut line = format!(
+            "span {} {} {}/{} n={} priority={}",
+            f("id").unwrap_or(0.0) as u64,
+            g("kind"),
+            g("model"),
+            g("solver"),
+            f("n").unwrap_or(0.0) as u64,
+            g("priority"),
+        );
+        if let Some(q) = f("queued_s") {
+            line.push_str(&format!(" queued={:.1}ms", q * 1e3));
+        }
+        if let Some(x) = f("exec_s") {
+            line.push_str(&format!(" exec={:.1}ms", x * 1e3));
+        }
+        line.push_str(&format!(" dispatches={}", f("dispatches").unwrap_or(0.0) as u64));
+        match s.get("outcome") {
+            Some(o) => line.push_str(&format!(" outcome={}", o.as_str()?)),
+            None => line.push_str(" outcome=in-flight"),
+        }
+        if let Some(c) = s.get("code") {
+            line.push_str(&format!(" code={}", c.as_str()?));
+        }
+        println!("{line}");
+    }
+    println!("{} spans, {} dispatch records (--chrome <out.json> for a timeline)",
+        spans.len(), timeline.len());
+    Ok(())
+}
+
+/// Chrome-trace ("trace event format") export: one complete ("X")
+/// event per finished request span (its own tid, so concurrent
+/// requests stack instead of clobbering), plus upload/exec/download
+/// phase events per dispatch on tid 0. Timestamps are microseconds on
+/// the telemetry epoch shared by both rings.
+fn chrome_trace(spans: &[json::Value], timeline: &[json::Value]) -> Result<String> {
+    use json::Value;
+    let mut events: Vec<Value> = Vec::new();
+    for d in timeline {
+        let f = |k: &str| d.get(k).and_then(|x| x.as_f64().ok()).unwrap_or(0.0);
+        let program = d.get("program").and_then(|x| x.as_str().ok()).unwrap_or("dispatch");
+        let mut t = f("start_s");
+        for (phase, dur) in
+            [("upload", f("upload_s")), ("exec", f("exec_s")), ("download", f("download_s"))]
+        {
+            // zero-length upload/download phases (device-resident lane
+            // state) would only clutter the timeline
+            if dur > 0.0 || phase == "exec" {
+                events.push(Value::obj(vec![
+                    ("name", Value::str(format!("{program}:{phase}"))),
+                    ("cat", Value::str("dispatch")),
+                    ("ph", Value::str("X")),
+                    ("ts", Value::num(t * 1e6)),
+                    ("dur", Value::num(dur * 1e6)),
+                    ("pid", Value::num(0.0)),
+                    ("tid", Value::num(0.0)),
+                    ("args", d.clone()),
+                ]));
+            }
+            t += dur;
+        }
+    }
+    for s in spans {
+        let f = |k: &str| s.get(k).and_then(|x| x.as_f64().ok());
+        let (Some(id), Some(submit)) = (f("id"), f("submit_s")) else { continue };
+        // in-flight spans have no duration yet; skip them rather than
+        // invent an end time
+        let Some(e2e) = f("e2e_s") else { continue };
+        let name = format!(
+            "{} {}/{}",
+            s.get("kind").and_then(|x| x.as_str().ok()).unwrap_or("request"),
+            s.get("model").and_then(|x| x.as_str().ok()).unwrap_or("?"),
+            s.get("solver").and_then(|x| x.as_str().ok()).unwrap_or("?"),
+        );
+        events.push(Value::obj(vec![
+            ("name", Value::str(name)),
+            ("cat", Value::str("request")),
+            ("ph", Value::str("X")),
+            ("ts", Value::num(submit * 1e6)),
+            ("dur", Value::num(e2e * 1e6)),
+            ("pid", Value::num(1.0)),
+            ("tid", Value::num(id)),
+            ("args", s.clone()),
+        ]));
+    }
+    Ok(Value::obj(vec![("traceEvents", Value::Arr(events))]).to_string())
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {

@@ -45,6 +45,12 @@ impl Histogram {
         self.total
     }
 
+    /// Sum of every recorded value (exact, not bucket-approximated) —
+    /// the `_sum` of the Prometheus summary exposition.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -172,5 +178,68 @@ mod tests {
         let v = h.quantile(0.5);
         assert!(v.is_finite() && v > 0.0, "overflow quantile {v}");
         assert_eq!(h.max(), 1e9);
+    }
+
+    /// Telemetry merges per-pool histograms into totals, so merge must
+    /// preserve count and sum exactly and keep every quantile within
+    /// one bucket (a factor of `ratio`) of the pooled stream's.
+    #[test]
+    fn merge_preserves_count_sum_and_quantiles() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut pooled = Histogram::new();
+        // two disjoint-ish streams: fast pool vs slow pool
+        for i in 0..500u32 {
+            let fast = 0.001 + (i as f64) * 1e-5;
+            let slow = 0.5 + (i as f64) * 1e-3;
+            a.record(fast);
+            b.record(slow);
+            pooled.record(fast);
+            pooled.record(slow);
+        }
+        let (ca, sa) = (a.count(), a.sum());
+        let (cb, sb) = (b.count(), b.sum());
+        a.merge(&b);
+        // count and sum are exact under merge
+        assert_eq!(a.count(), ca + cb);
+        assert!((a.sum() - (sa + sb)).abs() < 1e-9);
+        assert_eq!(a.count(), pooled.count());
+        assert!((a.sum() - pooled.sum()).abs() < 1e-9);
+        assert_eq!(a.max(), pooled.max());
+        // merged quantiles match the pooled stream to within one
+        // bucket of relative error (ratio 1.05)
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+            let m = a.quantile(q);
+            let p = pooled.quantile(q);
+            assert!(
+                (m / p) < 1.0501 && (p / m) < 1.0501,
+                "quantile({q}): merged {m} vs pooled {p}"
+            );
+        }
+    }
+
+    /// Merging in either order lands on the same distribution (bucket
+    /// counts add commutatively), and merging an empty histogram is the
+    /// identity.
+    #[test]
+    fn merge_is_commutative_and_empty_is_identity() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 1..=100u32 {
+            a.record(i as f64 / 100.0);
+            b.record(i as f64 / 10.0);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.count(), ba.count());
+        assert!((ab.sum() - ba.sum()).abs() < 1e-9);
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(ab.quantile(q), ba.quantile(q));
+        }
+        let before = (a.count(), a.sum(), a.quantile(0.5));
+        a.merge(&Histogram::new());
+        assert_eq!((a.count(), a.sum(), a.quantile(0.5)), before);
     }
 }

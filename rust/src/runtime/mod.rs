@@ -20,6 +20,7 @@ mod literal_util;
 
 pub use literal_util::{literal_to_tensor, tensor_to_literal};
 
+use crate::coordinator::telemetry::{self, DispatchRecord, DispatchRing};
 use crate::json::{self, Value};
 use crate::tensor::{read_f32_file, Tensor};
 use crate::{anyhow, bail, Context, Result};
@@ -27,6 +28,7 @@ use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::time::Instant;
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 /// Smallest bucket >= n, else the largest available (None if `buckets`
@@ -167,6 +169,10 @@ pub struct Runtime {
     dispatches: Cell<u64>,
     bytes_h2d: Cell<u64>,
     bytes_d2h: Cell<u64>,
+    /// Dispatch-timeline ring (telemetry): one timed record per
+    /// executable launch when enabled via [`Runtime::set_timeline`];
+    /// `None` (the default) records nothing and allocates nothing.
+    timeline: RefCell<Option<DispatchRing>>,
 }
 
 impl Runtime {
@@ -183,7 +189,48 @@ impl Runtime {
             dispatches: Cell::new(0),
             bytes_h2d: Cell::new(0),
             bytes_d2h: Cell::new(0),
+            timeline: RefCell::new(None),
         })
+    }
+
+    /// Enable (or, with `cap` 0, disable) the dispatch-timeline ring:
+    /// the newest `cap` executable launches, each timed and split into
+    /// upload / execution / download. The engine turns this on at
+    /// startup when its span ring is enabled.
+    pub fn set_timeline(&self, cap: usize) {
+        *self.timeline.borrow_mut() = if cap > 0 { Some(DispatchRing::new(cap)) } else { None };
+    }
+
+    /// Timeline records oldest → newest (empty when disabled).
+    pub fn timeline_snapshot(&self) -> Vec<DispatchRecord> {
+        self.timeline.borrow().as_ref().map(|r| r.snapshot()).unwrap_or_default()
+    }
+
+    /// Push one timed launch onto the timeline ring. The record (and
+    /// its label allocations) is only built when the ring is enabled.
+    #[allow(clippy::too_many_arguments)]
+    fn note_timeline(
+        &self,
+        model: &str,
+        program: &str,
+        bucket: usize,
+        start: Instant,
+        upload_s: f64,
+        exec_s: f64,
+        download_s: f64,
+    ) {
+        if let Some(ring) = self.timeline.borrow_mut().as_mut() {
+            ring.push(DispatchRecord {
+                start_s: telemetry::since_epoch(start),
+                upload_s,
+                exec_s,
+                download_s,
+                model: model.to_string(),
+                program: program.to_string(),
+                bucket,
+                k: telemetry::k_of(program),
+            });
+        }
     }
 
     pub fn root(&self) -> &Path {
@@ -465,6 +512,7 @@ impl<'rt> Model<'rt> {
         inputs: &[&Tensor],
     ) -> Result<Vec<Tensor>> {
         let exe = self.exe(program, bucket)?;
+        let start = Instant::now();
         let mut args: Vec<Literal> = Vec::with_capacity(inputs.len() + 1);
         args.push(self.theta_lit.clone_literal()?);
         let mut up = self.theta_host.data.len() as u64 * 4;
@@ -472,10 +520,12 @@ impl<'rt> Model<'rt> {
             up += t.data.len() as u64 * 4;
             args.push(tensor_to_literal(t)?);
         }
+        let upload_s = start.elapsed().as_secs_f64();
         self.rt.note_call(program);
         self.rt.note_h2d(up);
-        let out = run(&exe, ExecArgs::Literals(&args))?;
+        let (out, exec_s, download_s) = run_timed(&exe, ExecArgs::Literals(&args))?;
         self.rt.note_d2h(out.iter().map(|t| t.data.len() as u64 * 4).sum());
+        self.rt.note_timeline(&self.meta.name, program, bucket, start, upload_s, exec_s, download_s);
         Ok(out)
     }
 
@@ -578,11 +628,14 @@ impl<'rt> Model<'rt> {
                 .collect::<Result<_>>()?;
             return self.exec_literals(program, bucket, &tensors);
         }
+        let start = Instant::now();
         let (exe, staged) = self.stage(program, bucket, inputs)?;
+        let upload_s = start.elapsed().as_secs_f64();
         let args = staged.arg_refs();
         self.rt.note_call(program);
-        let out = run(&exe, ExecArgs::Buffers(&args))?;
+        let (out, exec_s, download_s) = run_timed(&exe, ExecArgs::Buffers(&args))?;
         self.rt.note_d2h(out.iter().map(|t| t.data.len() as u64 * 4).sum());
+        self.rt.note_timeline(&self.meta.name, program, bucket, start, upload_s, exec_s, download_s);
         Ok(out)
     }
 
@@ -644,16 +697,22 @@ impl<'rt> Model<'rt> {
             Some(ExecArg::Device(slab)) => slab.shape.clone(),
             None => bail!("{program}: exec_device needs at least the x input"),
         };
+        let start = Instant::now();
         let (exe, staged) = self.stage(program, bucket, inputs)?;
+        let upload_s = start.elapsed().as_secs_f64();
         let args = staged.arg_refs();
         self.rt.note_call(program);
         self.rt.note_score_evals(score_evals);
+        let t_exec = Instant::now();
         let buf = exe
             .execute_b(&args)?
             .into_iter()
             .next()
             .and_then(|r| r.into_iter().next())
             .ok_or_else(|| anyhow!("{program}: executable returned no outputs"))?;
+        // output stays device-resident: download is 0 by design here
+        let exec_s = t_exec.elapsed().as_secs_f64();
+        self.rt.note_timeline(&self.meta.name, program, bucket, start, upload_s, exec_s, 0.0);
         Ok(DeviceSlab { buf: Rc::new(buf), shape: out_shape })
     }
 }
@@ -723,10 +782,20 @@ impl StagedArgs {
 
 /// Execute and pull every tuple element back to host tensors.
 fn run(exe: &PjRtLoadedExecutable, args: ExecArgs<'_>) -> Result<Vec<Tensor>> {
+    run_timed(exe, args).map(|(out, _, _)| out)
+}
+
+/// [`run`] plus the telemetry split: returns `(outputs, exec seconds,
+/// download seconds)`, where download covers the device→host literal
+/// pull and tensor conversion.
+fn run_timed(exe: &PjRtLoadedExecutable, args: ExecArgs<'_>) -> Result<(Vec<Tensor>, f64, f64)> {
+    let t0 = Instant::now();
     let result = match args {
         ExecArgs::Literals(lits) => exe.execute::<Literal>(lits)?,
         ExecArgs::Buffers(bufs) => exe.execute_b(bufs)?,
     };
+    let exec_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
     let lit = result
         .first()
         .and_then(|r| r.first())
@@ -736,7 +805,8 @@ fn run(exe: &PjRtLoadedExecutable, args: ExecArgs<'_>) -> Result<Vec<Tensor>> {
     // return_tuple=True: the output is always a tuple (the untupled
     // fused step artifacts go through `Model::exec_device` instead)
     let parts = lit.to_tuple()?;
-    parts.iter().map(literal_to_tensor).collect()
+    let out = parts.iter().map(literal_to_tensor).collect::<Result<Vec<Tensor>>>()?;
+    Ok((out, exec_s, t1.elapsed().as_secs_f64()))
 }
 
 /// Extension trait: the xla crate's Literal lacks Clone.

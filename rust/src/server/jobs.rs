@@ -200,6 +200,10 @@ impl JobTable {
             while !stop.load(Ordering::Relaxed) {
                 let mut r = req.clone();
                 r.sample_base = round * r.n as u64;
+                // stamp the job id so every round's trace span carries
+                // it (periodic cancel never reaches the engine, so the
+                // token is only ever read by telemetry)
+                r.cancel_token = Some(id);
                 let res = engine.generate_request(r).map_err(|e| format!("{e:#}"));
                 let fatal = res.is_err();
                 if !table.periodic_push(id, round, res) {

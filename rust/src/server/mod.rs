@@ -1,8 +1,9 @@
 //! JSON-lines TCP serving front-end + client library.
 //!
 //! The wire protocol — ops (`hello`/`ping`/`stats`/`generate`/
-//! `evaluate`/`submit`/`poll`/`cancel`/`periodic`), the error-code
-//! table, binary payload framing, and the version field — is specified
+//! `evaluate`/`submit`/`poll`/`cancel`/`periodic`/`trace`/`metrics`),
+//! the error-code table, binary payload framing, and the version
+//! field — is specified
 //! in **docs/PROTOCOL.md**; this module is its implementation. In
 //! brief: one JSON object per line in both directions, every response
 //! carries `"v":1`, every `ok:false` carries a machine-readable
@@ -21,9 +22,10 @@
 
 pub mod b64;
 pub mod jobs;
+pub mod stats;
 
 use crate::coordinator::{
-    qos, EngineClient, EngineStats, EvalRequest as EngineEvalRequest, GenResult, SampleRequest,
+    qos, EngineClient, EvalRequest as EngineEvalRequest, GenResult, SampleRequest, TraceQuery,
 };
 use crate::json::{self, Value};
 use crate::solvers::spec;
@@ -37,8 +39,10 @@ use std::sync::Arc;
 pub const PROTO_VERSION: u64 = 1;
 
 /// Every op the server answers; unknown-op errors echo this list.
-pub const OPS: [&str; 9] =
-    ["hello", "ping", "stats", "generate", "evaluate", "submit", "poll", "cancel", "periodic"];
+pub const OPS: [&str; 11] = [
+    "hello", "ping", "stats", "generate", "evaluate", "submit", "poll", "cancel", "periodic",
+    "trace", "metrics",
+];
 
 pub struct ServerConfig {
     pub port: u16,
@@ -331,7 +335,48 @@ fn handle_request(
         }
         "stats" => {
             let s = engine.stats()?;
-            Ok(Reply::head(stats_to_json(&s, &jobs.stats())))
+            Ok(Reply::head(stats::StatsTree::build(&s, &jobs.stats()).to_json()))
+        }
+        "metrics" => {
+            // the same stats tree as `stats`, rendered as Prometheus
+            // text exposition (docs/PROTOCOL.md §metrics)
+            let s = engine.stats()?;
+            let text = stats::StatsTree::build(&s, &jobs.stats()).to_prometheus();
+            Ok(Reply::head(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("content_type", Value::str("text/plain; version=0.0.4")),
+                ("text", Value::str(text)),
+            ])))
+        }
+        "trace" => {
+            let parse_id = |key: &str| -> Result<Option<u64>> {
+                req.get(key)
+                    .map(|v| v.as_f64())
+                    .transpose()
+                    .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))
+                    .map(|v| v.map(|v| v as u64))
+            };
+            let (id, job) = (parse_id("id")?, parse_id("job")?);
+            let last = req
+                .get("last")
+                .map(|v| v.as_usize())
+                .transpose()
+                .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?
+                // a targeted query returns every matching span; an
+                // open-ended listing defaults to the newest 16 (0 = all)
+                .unwrap_or(if id.is_some() || job.is_some() { 0 } else { 16 });
+            let timeline = req
+                .get("timeline")
+                .map(|v| v.as_bool())
+                .transpose()
+                .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?
+                .unwrap_or(false);
+            let r = engine.trace(TraceQuery { id, job, last, timeline })?;
+            Ok(Reply::head(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("spans", Value::Arr(r.spans.iter().map(|s| s.to_json()).collect())),
+                ("timeline", Value::Arr(r.timeline.iter().map(|d| d.to_json()).collect())),
+            ])))
         }
         "generate" => {
             let p = parse_generate(&req, cfg).map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?;
@@ -509,131 +554,6 @@ fn handle_request(
 
 fn buckets_obj(per: &[(usize, u64)]) -> Value {
     Value::Obj(per.iter().map(|(b, n)| (b.to_string(), Value::num(*n as f64))).collect())
-}
-
-fn stats_to_json(s: &EngineStats, j: &jobs::JobStats) -> Value {
-    Value::obj(vec![
-        ("ok", Value::Bool(true)),
-        ("requests_done", Value::num(s.requests_done as f64)),
-        ("samples_done", Value::num(s.samples_done as f64)),
-        ("queued_samples", Value::num(s.queued_samples as f64)),
-        ("active_slots", Value::num(s.active_slots as f64)),
-        ("steps", Value::num(s.steps as f64)),
-        ("rejections", Value::num(s.rejections as f64)),
-        ("score_evals", Value::num(s.score_evals as f64)),
-        ("dispatches", Value::num(s.dispatches as f64)),
-        ("bytes_h2d", Value::num(s.bytes_h2d as f64)),
-        ("bytes_d2h", Value::num(s.bytes_d2h as f64)),
-        ("latency_p50_s", Value::num(s.latency_p50_s)),
-        ("latency_p95_s", Value::num(s.latency_p95_s)),
-        ("latency_mean_s", Value::num(s.latency_mean_s)),
-        ("mean_occupancy", Value::num(s.mean_occupancy)),
-        ("models", Value::Arr(s.models.iter().map(|m| Value::str(m.clone())).collect())),
-        (
-            "programs",
-            Value::Obj(
-                s.programs
-                    .iter()
-                    .map(|p| {
-                        (
-                            p.solver.clone(),
-                            Value::obj(vec![
-                                ("pools", Value::num(p.pools as f64)),
-                                ("active_lanes", Value::num(p.active_lanes as f64)),
-                                ("queue_depth", Value::num(p.queue_depth as f64)),
-                                ("steps", Value::num(p.steps as f64)),
-                                (
-                                    "occupied_lane_steps",
-                                    Value::num(p.occupied_lane_steps as f64),
-                                ),
-                                ("wasted_lane_steps", Value::num(p.wasted_lane_steps as f64)),
-                                ("score_evals", Value::num(p.score_evals as f64)),
-                                ("migrations_up", Value::num(p.migrations_up as f64)),
-                                ("migrations_down", Value::num(p.migrations_down as f64)),
-                                ("steps_per_bucket", buckets_obj(&p.steps_per_bucket)),
-                            ]),
-                        )
-                    })
-                    .collect(),
-            ),
-        ),
-        ("steps_per_bucket", buckets_obj(&s.steps_per_bucket)),
-        ("migrations_up", Value::num(s.migrations_up as f64)),
-        ("migrations_down", Value::num(s.migrations_down as f64)),
-        ("wasted_lane_steps", Value::num(s.wasted_lane_steps as f64)),
-        ("occupied_lane_steps", Value::num(s.occupied_lane_steps as f64)),
-        ("evals_done", Value::num(s.evals_done as f64)),
-        ("eval_active", Value::num(s.eval_active as f64)),
-        ("eval_samples_done", Value::num(s.eval_samples_done as f64)),
-        ("eval_lane_steps", Value::num(s.eval_lane_steps as f64)),
-        // QoS-standard alias of queued_samples (kept above for compat)
-        ("queue_depth", Value::num(s.queued_samples as f64)),
-        (
-            "jobs",
-            Value::obj(vec![
-                ("submitted", Value::num(j.submitted as f64)),
-                ("delivered", Value::num(j.delivered as f64)),
-                ("canceled", Value::num(j.canceled as f64)),
-                ("active", Value::num(j.active as f64)),
-                ("periodic", Value::num(j.periodic as f64)),
-            ]),
-        ),
-        (
-            "qos",
-            Value::obj(vec![
-                ("shed_deadline", Value::num(s.shed_deadline as f64)),
-                ("rejected_quota", Value::num(s.rejected_quota as f64)),
-                // still-queued submissions freed through the cancel op
-                ("canceled", Value::num(s.canceled as f64)),
-                (
-                    "pools",
-                    Value::Obj(
-                        s.pool_qos
-                            .iter()
-                            .map(|p| {
-                                (
-                                    format!("{}/{}", p.model, p.solver),
-                                    Value::obj(vec![
-                                        ("weight", Value::num(p.weight)),
-                                        ("turns", Value::num(p.turns as f64)),
-                                        ("steps", Value::num(p.steps as f64)),
-                                        (
-                                            "occupied_lane_steps",
-                                            Value::num(p.occupied_lane_steps as f64),
-                                        ),
-                                        ("queue_depth", Value::num(p.queue_depth as f64)),
-                                        ("active_lanes", Value::num(p.active_lanes as f64)),
-                                    ]),
-                                )
-                            })
-                            .collect(),
-                    ),
-                ),
-                (
-                    "classes",
-                    Value::Obj(
-                        s.classes
-                            .iter()
-                            .map(|c| {
-                                (
-                                    c.class.clone(),
-                                    Value::obj(vec![
-                                        ("requests_done", Value::num(c.requests_done as f64)),
-                                        ("queue_wait_p50_s", Value::num(c.queue_wait_p50_s)),
-                                        ("queue_wait_p95_s", Value::num(c.queue_wait_p95_s)),
-                                        ("queue_wait_p99_s", Value::num(c.queue_wait_p99_s)),
-                                        ("e2e_p50_s", Value::num(c.e2e_p50_s)),
-                                        ("e2e_p95_s", Value::num(c.e2e_p95_s)),
-                                        ("e2e_p99_s", Value::num(c.e2e_p99_s)),
-                                    ]),
-                                )
-                            })
-                            .collect(),
-                    ),
-                ),
-            ]),
-        ),
-    ])
 }
 
 // --- client ---------------------------------------------------------------------
@@ -989,6 +909,31 @@ impl Client {
     /// "binary"}` (docs/PROTOCOL.md §hello).
     pub fn hello(&mut self) -> Result<Value> {
         self.call(&Value::obj(vec![("op", Value::str("hello"))]))
+    }
+
+    /// Request-lifecycle spans from the server's trace ring, optionally
+    /// with the runtime's dispatch timeline (docs/PROTOCOL.md §trace).
+    /// `job` filters to one async job's spans; `last` keeps the newest
+    /// N (0 = everything retained). Returns the raw response object
+    /// (`spans` and `timeline` arrays).
+    pub fn trace(&mut self, job: Option<u64>, last: usize, timeline: bool) -> Result<Value> {
+        let mut pairs = vec![
+            ("op", Value::str("trace")),
+            ("last", Value::num(last as f64)),
+            ("timeline", Value::Bool(timeline)),
+        ];
+        if let Some(j) = job {
+            pairs.push(("job", Value::num(j as f64)));
+        }
+        self.call(&Value::obj(pairs))
+    }
+
+    /// The full stats tree in Prometheus text exposition format
+    /// (docs/PROTOCOL.md §metrics) — scrape-ready, content type
+    /// `text/plain; version=0.0.4`.
+    pub fn metrics(&mut self) -> Result<String> {
+        let v = self.call(&Value::obj(vec![("op", Value::str("metrics"))]))?;
+        Ok(v.req("text")?.as_str()?.to_string())
     }
 
     /// Run a generate synchronously (blocks until the samples are done).

@@ -1,0 +1,709 @@
+//! Typed stats tree: one builder feeding both renderers — the `stats`
+//! op's JSON object and the `metrics` op's Prometheus text exposition
+//! (docs/PROTOCOL.md §stats, §metrics).
+//!
+//! The JSON shape is load-bearing (benches and check scripts parse it),
+//! so [`StatsTree::to_json`] reproduces the historical key order
+//! exactly and appends new telemetry keys after the original ones. The
+//! Prometheus renderer maps the same leaves to `gofast_*` series:
+//! histogram percentiles become `quantile`-labelled gauges with
+//! `_count`/`_sum` counter companions, per-solver and per-pool
+//! breakdowns become label dimensions instead of nested objects.
+
+use super::jobs::JobStats;
+use crate::coordinator::EngineStats;
+use crate::json::Value;
+
+/// Prometheus series type (the `# TYPE` line).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+        }
+    }
+}
+
+/// One leaf of the tree: a JSON key and/or a Prometheus series carrying
+/// a single value. Either name may be empty — a compatibility alias is
+/// JSON-only, a histogram `_count`/`_sum` companion is Prometheus-only.
+pub struct Scalar {
+    /// JSON key within the enclosing object ("" = Prometheus-only).
+    pub key: &'static str,
+    /// Prometheus metric name without the `gofast_` prefix
+    /// ("" = JSON-only).
+    pub prom: &'static str,
+    pub kind: Kind,
+    /// Rendered as a `quantile="..."` label on the series.
+    pub quantile: Option<&'static str>,
+    pub value: f64,
+}
+
+impl Scalar {
+    fn counter(key: &'static str, prom: &'static str, value: f64) -> Scalar {
+        Scalar { key, prom, kind: Kind::Counter, quantile: None, value }
+    }
+
+    fn gauge(key: &'static str, prom: &'static str, value: f64) -> Scalar {
+        Scalar { key, prom, kind: Kind::Gauge, quantile: None, value }
+    }
+
+    fn quantile(key: &'static str, prom: &'static str, q: &'static str, value: f64) -> Scalar {
+        Scalar { key, prom, kind: Kind::Gauge, quantile: Some(q), value }
+    }
+
+    fn json_only(key: &'static str, value: f64) -> Scalar {
+        Scalar { key, prom: "", kind: Kind::Gauge, quantile: None, value }
+    }
+
+    fn prom_only(prom: &'static str, kind: Kind, value: f64) -> Scalar {
+        Scalar { key: "", prom, kind, quantile: None, value }
+    }
+}
+
+/// Per-solver-program breakdown (`programs` object, `solver` label).
+pub struct ProgramNode {
+    pub solver: String,
+    pub scalars: Vec<Scalar>,
+    pub steps_per_bucket: Vec<(usize, u64)>,
+    /// Keys added after the historical shape froze (appended after
+    /// `steps_per_bucket` in JSON so the original prefix is unchanged).
+    pub extra: Vec<Scalar>,
+}
+
+/// Per-(model, solver) pool breakdown (`qos.pools` object,
+/// `model`/`solver` labels).
+pub struct PoolNode {
+    pub model: String,
+    pub solver: String,
+    pub scalars: Vec<Scalar>,
+}
+
+/// Per-priority-class latency breakdown (`qos.classes` object, `class`
+/// label).
+pub struct ClassNode {
+    pub class: String,
+    pub scalars: Vec<Scalar>,
+}
+
+/// The full stats tree, one node per section of the wire shape, in
+/// wire order.
+pub struct StatsTree {
+    pub root: Vec<Scalar>,
+    pub models: Vec<String>,
+    pub programs: Vec<ProgramNode>,
+    pub steps_per_bucket: Vec<(usize, u64)>,
+    /// Aggregate counters between `steps_per_bucket` and `jobs`.
+    pub tail: Vec<Scalar>,
+    pub jobs: Vec<Scalar>,
+    pub qos_root: Vec<Scalar>,
+    pub pools: Vec<PoolNode>,
+    pub classes: Vec<ClassNode>,
+}
+
+impl StatsTree {
+    pub fn build(s: &EngineStats, j: &JobStats) -> StatsTree {
+        let root = vec![
+            Scalar::counter("requests_done", "requests_done_total", s.requests_done as f64),
+            Scalar::counter("samples_done", "samples_done_total", s.samples_done as f64),
+            Scalar::gauge("queued_samples", "queued_samples", s.queued_samples as f64),
+            Scalar::gauge("active_slots", "active_slots", s.active_slots as f64),
+            Scalar::counter("steps", "steps_total", s.steps as f64),
+            // adaptive-only: fixed-step solvers never reject a proposal
+            Scalar::counter("rejections", "adaptive_rejections_total", s.rejections as f64),
+            Scalar::counter("score_evals", "score_evals_total", s.score_evals as f64),
+            Scalar::counter("dispatches", "dispatches_total", s.dispatches as f64),
+            Scalar::counter("bytes_h2d", "bytes_h2d_total", s.bytes_h2d as f64),
+            Scalar::counter("bytes_d2h", "bytes_d2h_total", s.bytes_d2h as f64),
+            Scalar::quantile("latency_p50_s", "request_latency_seconds", "0.5", s.latency_p50_s),
+            Scalar::quantile("latency_p95_s", "request_latency_seconds", "0.95", s.latency_p95_s),
+            Scalar::gauge("latency_mean_s", "request_latency_seconds_mean", s.latency_mean_s),
+            Scalar::gauge("mean_occupancy", "mean_occupancy", s.mean_occupancy),
+        ];
+        let programs = s
+            .programs
+            .iter()
+            .map(|p| ProgramNode {
+                solver: p.solver.clone(),
+                scalars: vec![
+                    Scalar::gauge("pools", "program_pools", p.pools as f64),
+                    Scalar::gauge("active_lanes", "program_active_lanes", p.active_lanes as f64),
+                    Scalar::gauge("queue_depth", "program_queue_depth", p.queue_depth as f64),
+                    Scalar::counter("steps", "program_steps_total", p.steps as f64),
+                    Scalar::counter(
+                        "occupied_lane_steps",
+                        "program_occupied_lane_steps_total",
+                        p.occupied_lane_steps as f64,
+                    ),
+                    Scalar::counter(
+                        "wasted_lane_steps",
+                        "program_wasted_lane_steps_total",
+                        p.wasted_lane_steps as f64,
+                    ),
+                    Scalar::counter(
+                        "score_evals",
+                        "program_score_evals_total",
+                        p.score_evals as f64,
+                    ),
+                    Scalar::counter(
+                        "migrations_up",
+                        "program_migrations_up_total",
+                        p.migrations_up as f64,
+                    ),
+                    Scalar::counter(
+                        "migrations_down",
+                        "program_migrations_down_total",
+                        p.migrations_down as f64,
+                    ),
+                ],
+                steps_per_bucket: p.steps_per_bucket.clone(),
+                // adaptive-only accept/reject (fixed-step pools stay 0)
+                extra: vec![
+                    Scalar::counter(
+                        "accepted",
+                        "program_adaptive_accepted_total",
+                        p.accepted as f64,
+                    ),
+                    Scalar::counter(
+                        "rejected",
+                        "program_adaptive_rejected_total",
+                        p.rejected as f64,
+                    ),
+                ],
+            })
+            .collect();
+        let tail = vec![
+            Scalar::counter("migrations_up", "migrations_up_total", s.migrations_up as f64),
+            Scalar::counter("migrations_down", "migrations_down_total", s.migrations_down as f64),
+            Scalar::counter(
+                "wasted_lane_steps",
+                "wasted_lane_steps_total",
+                s.wasted_lane_steps as f64,
+            ),
+            Scalar::counter(
+                "occupied_lane_steps",
+                "occupied_lane_steps_total",
+                s.occupied_lane_steps as f64,
+            ),
+            Scalar::counter("evals_done", "evals_done_total", s.evals_done as f64),
+            Scalar::gauge("eval_active", "eval_active", s.eval_active as f64),
+            Scalar::counter(
+                "eval_samples_done",
+                "eval_samples_done_total",
+                s.eval_samples_done as f64,
+            ),
+            Scalar::counter("eval_lane_steps", "eval_lane_steps_total", s.eval_lane_steps as f64),
+            // QoS-standard alias of queued_samples (kept for compat;
+            // Prometheus already has gofast_queued_samples)
+            Scalar::json_only("queue_depth", s.queued_samples as f64),
+        ];
+        let jobs = vec![
+            Scalar::counter("submitted", "jobs_submitted_total", j.submitted as f64),
+            Scalar::counter("delivered", "jobs_delivered_total", j.delivered as f64),
+            Scalar::counter("canceled", "jobs_canceled_total", j.canceled as f64),
+            Scalar::gauge("active", "jobs_active", j.active as f64),
+            Scalar::gauge("periodic", "jobs_periodic", j.periodic as f64),
+        ];
+        let qos_root = vec![
+            Scalar::counter("shed_deadline", "shed_deadline_total", s.shed_deadline as f64),
+            Scalar::counter("rejected_quota", "rejected_quota_total", s.rejected_quota as f64),
+            // still-queued submissions freed through the cancel op
+            Scalar::counter("canceled", "canceled_total", s.canceled as f64),
+        ];
+        let pools = s
+            .pool_qos
+            .iter()
+            .map(|p| {
+                let proposals = p.accepted + p.rejected;
+                let reject_rate =
+                    if proposals > 0 { p.rejected as f64 / proposals as f64 } else { 0.0 };
+                PoolNode {
+                    model: p.model.clone(),
+                    solver: p.solver.clone(),
+                    scalars: vec![
+                        Scalar::gauge("weight", "pool_weight", p.weight),
+                        Scalar::counter("turns", "pool_turns_total", p.turns as f64),
+                        Scalar::counter("steps", "pool_steps_total", p.steps as f64),
+                        Scalar::counter(
+                            "occupied_lane_steps",
+                            "pool_occupied_lane_steps_total",
+                            p.occupied_lane_steps as f64,
+                        ),
+                        Scalar::gauge("queue_depth", "pool_queue_depth", p.queue_depth as f64),
+                        Scalar::gauge("active_lanes", "pool_active_lanes", p.active_lanes as f64),
+                        // per-pool step-time summary: quantile gauges +
+                        // count/sum companions
+                        Scalar::counter("step_count", "pool_step_seconds_count", p.step_count as f64),
+                        Scalar::counter("step_sum_s", "pool_step_seconds_sum", p.step_sum_s),
+                        Scalar::quantile("step_p50_s", "pool_step_seconds", "0.5", p.step_p50_s),
+                        Scalar::quantile("step_p95_s", "pool_step_seconds", "0.95", p.step_p95_s),
+                        Scalar::quantile("step_p99_s", "pool_step_seconds", "0.99", p.step_p99_s),
+                        // adaptive-only (fixed-step pools never reject)
+                        Scalar::counter(
+                            "accepted",
+                            "pool_adaptive_accepted_total",
+                            p.accepted as f64,
+                        ),
+                        Scalar::counter(
+                            "rejected",
+                            "pool_adaptive_rejected_total",
+                            p.rejected as f64,
+                        ),
+                        Scalar::prom_only("pool_adaptive_reject_rate", Kind::Gauge, reject_rate),
+                    ],
+                }
+            })
+            .collect();
+        let classes = s
+            .classes
+            .iter()
+            .map(|c| ClassNode {
+                class: c.class.clone(),
+                scalars: vec![
+                    Scalar::counter(
+                        "requests_done",
+                        "class_requests_done_total",
+                        c.requests_done as f64,
+                    ),
+                    Scalar::quantile(
+                        "queue_wait_p50_s",
+                        "class_queue_wait_seconds",
+                        "0.5",
+                        c.queue_wait_p50_s,
+                    ),
+                    Scalar::quantile(
+                        "queue_wait_p95_s",
+                        "class_queue_wait_seconds",
+                        "0.95",
+                        c.queue_wait_p95_s,
+                    ),
+                    Scalar::quantile(
+                        "queue_wait_p99_s",
+                        "class_queue_wait_seconds",
+                        "0.99",
+                        c.queue_wait_p99_s,
+                    ),
+                    Scalar::quantile("e2e_p50_s", "class_e2e_seconds", "0.5", c.e2e_p50_s),
+                    Scalar::quantile("e2e_p95_s", "class_e2e_seconds", "0.95", c.e2e_p95_s),
+                    Scalar::quantile("e2e_p99_s", "class_e2e_seconds", "0.99", c.e2e_p99_s),
+                    // the JSON shape keeps its original keys; count/sum
+                    // exist for the Prometheus summary convention only
+                    Scalar::prom_only(
+                        "class_queue_wait_seconds_count",
+                        Kind::Counter,
+                        c.queue_wait_count as f64,
+                    ),
+                    Scalar::prom_only(
+                        "class_queue_wait_seconds_sum",
+                        Kind::Counter,
+                        c.queue_wait_sum_s,
+                    ),
+                    Scalar::prom_only("class_e2e_seconds_count", Kind::Counter, c.e2e_count as f64),
+                    Scalar::prom_only("class_e2e_seconds_sum", Kind::Counter, c.e2e_sum_s),
+                ],
+            })
+            .collect();
+        StatsTree {
+            root,
+            models: s.models.clone(),
+            programs,
+            steps_per_bucket: s.steps_per_bucket.clone(),
+            tail,
+            jobs,
+            qos_root,
+            pools,
+            classes,
+        }
+    }
+
+    /// The `stats` op's response object (historical shape, new keys
+    /// appended after the original ones within each section).
+    pub fn to_json(&self) -> Value {
+        let mut root: Vec<(String, Value)> = vec![("ok".to_string(), Value::Bool(true))];
+        push_json(&mut root, &self.root);
+        root.push((
+            "models".to_string(),
+            Value::Arr(self.models.iter().map(|m| Value::str(m.clone())).collect()),
+        ));
+        root.push((
+            "programs".to_string(),
+            Value::Obj(
+                self.programs
+                    .iter()
+                    .map(|p| {
+                        let mut o: Vec<(String, Value)> = Vec::new();
+                        push_json(&mut o, &p.scalars);
+                        o.push(("steps_per_bucket".to_string(), buckets_obj(&p.steps_per_bucket)));
+                        push_json(&mut o, &p.extra);
+                        (p.solver.clone(), Value::Obj(o))
+                    })
+                    .collect(),
+            ),
+        ));
+        root.push(("steps_per_bucket".to_string(), buckets_obj(&self.steps_per_bucket)));
+        push_json(&mut root, &self.tail);
+        root.push(("jobs".to_string(), scalars_obj(&self.jobs)));
+        let mut qos: Vec<(String, Value)> = Vec::new();
+        push_json(&mut qos, &self.qos_root);
+        qos.push((
+            "pools".to_string(),
+            Value::Obj(
+                self.pools
+                    .iter()
+                    .map(|p| (format!("{}/{}", p.model, p.solver), scalars_obj(&p.scalars)))
+                    .collect(),
+            ),
+        ));
+        qos.push((
+            "classes".to_string(),
+            Value::Obj(
+                self.classes.iter().map(|c| (c.class.clone(), scalars_obj(&c.scalars))).collect(),
+            ),
+        ));
+        root.push(("qos".to_string(), Value::Obj(qos)));
+        Value::Obj(root)
+    }
+
+    /// The `metrics` op's Prometheus text exposition (format 0.0.4):
+    /// every series under one `# TYPE` line, label dimensions replacing
+    /// the JSON nesting.
+    pub fn to_prometheus(&self) -> String {
+        let mut series: Vec<Series> = Vec::new();
+        emit(&mut series, &self.root, "");
+        for p in &self.programs {
+            let base = format!("solver=\"{}\"", escape(&p.solver));
+            emit(&mut series, &p.scalars, &base);
+            for &(b, n) in &p.steps_per_bucket {
+                add(
+                    &mut series,
+                    "program_bucket_steps_total",
+                    Kind::Counter,
+                    format!("{base},bucket=\"{b}\""),
+                    n as f64,
+                );
+            }
+            emit(&mut series, &p.extra, &base);
+        }
+        for &(b, n) in &self.steps_per_bucket {
+            add(
+                &mut series,
+                "bucket_steps_total",
+                Kind::Counter,
+                format!("bucket=\"{b}\""),
+                n as f64,
+            );
+        }
+        emit(&mut series, &self.tail, "");
+        emit(&mut series, &self.jobs, "");
+        emit(&mut series, &self.qos_root, "");
+        for p in &self.pools {
+            let base =
+                format!("model=\"{}\",solver=\"{}\"", escape(&p.model), escape(&p.solver));
+            emit(&mut series, &p.scalars, &base);
+        }
+        for c in &self.classes {
+            let base = format!("class=\"{}\"", escape(&c.class));
+            emit(&mut series, &c.scalars, &base);
+        }
+        let mut out = String::new();
+        for s in &series {
+            out.push_str("# TYPE gofast_");
+            out.push_str(&s.name);
+            out.push(' ');
+            out.push_str(s.kind.as_str());
+            out.push('\n');
+            for (labels, v) in &s.points {
+                if labels.is_empty() {
+                    out.push_str(&format!("gofast_{} {v}\n", s.name));
+                } else {
+                    out.push_str(&format!("gofast_{}{{{labels}}} {v}\n", s.name));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn push_json(out: &mut Vec<(String, Value)>, scalars: &[Scalar]) {
+    for s in scalars {
+        if !s.key.is_empty() {
+            out.push((s.key.to_string(), Value::num(s.value)));
+        }
+    }
+}
+
+fn scalars_obj(scalars: &[Scalar]) -> Value {
+    let mut o: Vec<(String, Value)> = Vec::new();
+    push_json(&mut o, scalars);
+    Value::Obj(o)
+}
+
+fn buckets_obj(per: &[(usize, u64)]) -> Value {
+    Value::Obj(per.iter().map(|(b, n)| (b.to_string(), Value::num(*n as f64))).collect())
+}
+
+/// One Prometheus metric: all its (label set, value) points, grouped so
+/// the text output has exactly one `# TYPE` line per name.
+struct Series {
+    name: String,
+    kind: Kind,
+    points: Vec<(String, f64)>,
+}
+
+fn add(series: &mut Vec<Series>, name: &str, kind: Kind, labels: String, value: f64) {
+    match series.iter_mut().find(|s| s.name == name) {
+        Some(s) => s.points.push((labels, value)),
+        None => series.push(Series { name: name.to_string(), kind, points: vec![(labels, value)] }),
+    }
+}
+
+fn emit(series: &mut Vec<Series>, scalars: &[Scalar], base: &str) {
+    for s in scalars {
+        if s.prom.is_empty() {
+            continue;
+        }
+        let labels = match s.quantile {
+            Some(q) if base.is_empty() => format!("quantile=\"{q}\""),
+            Some(q) => format!("{base},quantile=\"{q}\""),
+            None => base.to_string(),
+        };
+        add(series, s.prom, s.kind, labels, s.value);
+    }
+}
+
+/// Prometheus label-value escaping: backslash, double quote, newline.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ClassLatencyStats, PoolQosStats, ProgramStats};
+
+    fn sample() -> (EngineStats, JobStats) {
+        let s = EngineStats {
+            requests_done: 10,
+            samples_done: 40,
+            queued_samples: 3,
+            active_slots: 5,
+            steps: 100,
+            rejections: 7,
+            score_evals: 200,
+            dispatches: 90,
+            bytes_h2d: 1000,
+            bytes_d2h: 2000,
+            latency_p50_s: 0.1,
+            latency_p95_s: 0.5,
+            latency_mean_s: 0.2,
+            mean_occupancy: 3.5,
+            models: vec!["vp".to_string()],
+            programs: vec![ProgramStats {
+                solver: "adaptive".to_string(),
+                pools: 1,
+                active_lanes: 4,
+                queue_depth: 3,
+                steps: 100,
+                occupied_lane_steps: 350,
+                wasted_lane_steps: 50,
+                score_evals: 200,
+                migrations_up: 2,
+                migrations_down: 1,
+                steps_per_bucket: vec![(8, 60), (16, 40)],
+                accepted: 343,
+                rejected: 7,
+            }],
+            steps_per_bucket: vec![(8, 60), (16, 40)],
+            migrations_up: 2,
+            migrations_down: 1,
+            wasted_lane_steps: 50,
+            occupied_lane_steps: 350,
+            evals_done: 1,
+            eval_active: 0,
+            eval_samples_done: 16,
+            eval_lane_steps: 120,
+            pool_qos: vec![PoolQosStats {
+                model: "vp".to_string(),
+                solver: "adaptive".to_string(),
+                weight: 1.0,
+                turns: 20,
+                steps: 100,
+                occupied_lane_steps: 350,
+                queue_depth: 3,
+                active_lanes: 4,
+                step_count: 100,
+                step_sum_s: 1.5,
+                step_p50_s: 0.012,
+                step_p95_s: 0.03,
+                step_p99_s: 0.04,
+                accepted: 343,
+                rejected: 7,
+            }],
+            classes: vec![ClassLatencyStats {
+                class: "interactive".to_string(),
+                requests_done: 10,
+                queue_wait_p50_s: 0.01,
+                queue_wait_p95_s: 0.05,
+                queue_wait_p99_s: 0.06,
+                e2e_p50_s: 0.1,
+                e2e_p95_s: 0.5,
+                e2e_p99_s: 0.6,
+                queue_wait_count: 10,
+                queue_wait_sum_s: 0.2,
+                e2e_count: 10,
+                e2e_sum_s: 2.0,
+            }],
+            shed_deadline: 1,
+            rejected_quota: 2,
+            canceled: 3,
+        };
+        let j = JobStats { submitted: 4, delivered: 3, canceled: 1, active: 1, periodic: 1 };
+        (s, j)
+    }
+
+    /// The wire contract: top-level JSON key order is frozen (parsers
+    /// in benches/ and tools/ index into it), new keys only append
+    /// within nested sections.
+    #[test]
+    fn json_preserves_historical_key_order() {
+        let (s, j) = sample();
+        let v = StatsTree::build(&s, &j).to_json();
+        let keys: Vec<&str> = v.members().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "ok",
+                "requests_done",
+                "samples_done",
+                "queued_samples",
+                "active_slots",
+                "steps",
+                "rejections",
+                "score_evals",
+                "dispatches",
+                "bytes_h2d",
+                "bytes_d2h",
+                "latency_p50_s",
+                "latency_p95_s",
+                "latency_mean_s",
+                "mean_occupancy",
+                "models",
+                "programs",
+                "steps_per_bucket",
+                "migrations_up",
+                "migrations_down",
+                "wasted_lane_steps",
+                "occupied_lane_steps",
+                "evals_done",
+                "eval_active",
+                "eval_samples_done",
+                "eval_lane_steps",
+                "queue_depth",
+                "jobs",
+                "qos",
+            ]
+        );
+        // nested sections: original prefixes intact, telemetry appended
+        let prog = v.req("programs").unwrap().req("adaptive").unwrap();
+        let pkeys: Vec<&str> = prog.members().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            &pkeys[..10],
+            &[
+                "pools",
+                "active_lanes",
+                "queue_depth",
+                "steps",
+                "occupied_lane_steps",
+                "wasted_lane_steps",
+                "score_evals",
+                "migrations_up",
+                "migrations_down",
+                "steps_per_bucket",
+            ]
+        );
+        assert_eq!(&pkeys[10..], &["accepted", "rejected"]);
+        let pool = v.req("qos").unwrap().req("pools").unwrap().req("vp/adaptive").unwrap();
+        let poolkeys: Vec<&str> = pool.members().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            &poolkeys[..6],
+            &["weight", "turns", "steps", "occupied_lane_steps", "queue_depth", "active_lanes"]
+        );
+        assert!(poolkeys.contains(&"step_p95_s") && poolkeys.contains(&"accepted"));
+        // classes keep their original keys only (count/sum are
+        // Prometheus-only)
+        let class = v.req("qos").unwrap().req("classes").unwrap().req("interactive").unwrap();
+        assert!(class.get("queue_wait_p99_s").is_some());
+        assert!(class.get("queue_wait_count").is_none());
+        // queue_depth alias mirrors queued_samples
+        assert_eq!(v.req("queue_depth").unwrap().as_f64().unwrap(), 3.0);
+        // round-trips through the writer/parser
+        let parsed = crate::json::parse(&v.to_string()).unwrap();
+        assert_eq!(parsed.req("rejections").unwrap().as_f64().unwrap(), 7.0);
+    }
+
+    /// Every line of the exposition is `# TYPE` or `name{labels} value`
+    /// with a parseable float, one TYPE line per metric, and the
+    /// telemetry series the scrape contract names are present.
+    #[test]
+    fn prometheus_text_is_well_formed() {
+        let (s, j) = sample();
+        let text = StatsTree::build(&s, &j).to_prometheus();
+        let mut typed: Vec<&str> = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().unwrap();
+                let kind = it.next().unwrap();
+                assert!(name.starts_with("gofast_"), "metric name {name}");
+                assert!(kind == "counter" || kind == "gauge", "TYPE {kind}");
+                assert!(!typed.contains(&name), "duplicate TYPE for {name}");
+                typed.push(name);
+                continue;
+            }
+            let (head, value) = line.rsplit_once(' ').expect("sample line");
+            value.parse::<f64>().unwrap_or_else(|_| panic!("bad value in: {line}"));
+            let name = head.split('{').next().unwrap();
+            assert!(name.starts_with("gofast_"), "series {name}");
+            // every sample sits under its TYPE line
+            assert!(typed.contains(&name), "sample before TYPE: {line}");
+        }
+        for needle in [
+            "gofast_requests_done_total 10",
+            "gofast_request_latency_seconds{quantile=\"0.5\"} 0.1",
+            "gofast_pool_step_seconds{model=\"vp\",solver=\"adaptive\",quantile=\"0.5\"} 0.012",
+            "gofast_pool_step_seconds_count{model=\"vp\",solver=\"adaptive\"} 100",
+            "gofast_pool_step_seconds_sum{model=\"vp\",solver=\"adaptive\"} 1.5",
+            "gofast_pool_adaptive_accepted_total{model=\"vp\",solver=\"adaptive\"} 343",
+            "gofast_pool_adaptive_rejected_total{model=\"vp\",solver=\"adaptive\"} 7",
+            "gofast_pool_adaptive_reject_rate{model=\"vp\",solver=\"adaptive\"} 0.02",
+            "gofast_class_queue_wait_seconds{class=\"interactive\",quantile=\"0.99\"} 0.06",
+            "gofast_class_e2e_seconds_sum{class=\"interactive\"} 2",
+            "gofast_program_bucket_steps_total{solver=\"adaptive\",bucket=\"8\"} 60",
+            "gofast_jobs_submitted_total 4",
+            "gofast_shed_deadline_total 1",
+        ] {
+            assert!(text.contains(needle), "missing: {needle}\n{text}");
+        }
+    }
+
+    /// Label values with quotes/backslashes/newlines must escape.
+    #[test]
+    fn label_values_escape() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

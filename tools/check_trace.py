@@ -1,0 +1,172 @@
+#!/usr/bin/env python3
+"""Observability regression gates for benches/serving.rs part 5.
+
+The serving bench's trace part (`cargo bench --bench serving -- --trace-only`)
+writes bench_out/serving_trace.json; this script turns it into a CI gate
+(mirroring tools/check_async.py):
+
+  * span chains: every completed generate span must carry the full
+    lifecycle (submit -> admit -> first/last dispatch -> end) with
+    monotonic timestamps, >= 1 dispatch, and queued_s + exec_s <= e2e_s
+    (the derived stage times must not exceed end-to-end). The ring must
+    also hold at least one eval-kind span and one canceled span — the
+    mixed workload the bench drives.
+  * timeline: the dispatch-timeline ring must be non-empty, with each
+    record carrying non-negative phase durations and k >= 1 fused steps.
+  * metrics: the Prometheus text must parse line by line (every sample
+    a `name{labels} value` with a float value, every name declared by
+    exactly one preceding `# TYPE` line) and contain the required
+    series (pool step-time quantiles + count/sum, adaptive
+    accept/reject, request latency, job counters).
+  * overhead: steps/s with the span ring enabled must be >= 0.95x the
+    ring-off throughput — tracing must stay off the hot step path.
+
+Usage: python3 tools/check_trace.py bench_out/serving_trace.json
+Exits non-zero with a per-violation report on failure.
+"""
+
+import json
+import re
+import sys
+
+EPS = 1e-6
+
+REQUIRED_SERIES = [
+    "gofast_requests_done_total",
+    "gofast_samples_done_total",
+    "gofast_request_latency_seconds",
+    "gofast_pool_step_seconds",
+    "gofast_pool_step_seconds_count",
+    "gofast_pool_step_seconds_sum",
+    "gofast_pool_adaptive_accepted_total",
+    "gofast_pool_adaptive_rejected_total",
+    "gofast_pool_adaptive_reject_rate",
+    "gofast_jobs_submitted_total",
+    "gofast_jobs_delivered_total",
+    "gofast_canceled_total",
+]
+
+SAMPLE_RE = re.compile(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})? (\S+)$")
+TYPE_RE = re.compile(r"^# TYPE ([a-zA-Z_:][a-zA-Z0-9_:]*) (counter|gauge)$")
+
+
+def check_spans(spans, errors):
+    complete_gen = 0
+    evals = 0
+    canceled = 0
+    for s in spans:
+        sid = s.get("id")
+        if sid is None or "submit_s" not in s or "kind" not in s:
+            errors.append(f"span {s}: missing id/kind/submit_s")
+            continue
+        if s.get("kind") == "eval":
+            evals += 1
+        if s.get("outcome") == "canceled":
+            canceled += 1
+        if s.get("outcome") != "complete":
+            continue
+        stages = ["submit_s", "admit_s", "first_dispatch_s", "last_dispatch_s", "end_s"]
+        missing = [k for k in stages if k not in s]
+        if missing:
+            errors.append(f"span {sid}: complete but missing {missing}")
+            continue
+        ts = [s[k] for k in stages]
+        if any(b < a - EPS for a, b in zip(ts, ts[1:])):
+            errors.append(f"span {sid}: non-monotonic stage timestamps {ts}")
+        if s.get("dispatches", 0) < 1:
+            errors.append(f"span {sid}: complete with no dispatches")
+        q, x, e = s.get("queued_s", 0.0), s.get("exec_s", 0.0), s.get("e2e_s", 0.0)
+        if q + x > e + EPS:
+            errors.append(f"span {sid}: queued {q} + exec {x} > e2e {e}")
+        if s.get("kind") == "generate":
+            complete_gen += 1
+    if complete_gen < 1:
+        errors.append(f"spans: no complete generate chains ({len(spans)} spans)")
+    if evals < 1:
+        errors.append("spans: no eval-kind spans (the bench ran an evaluate)")
+    if canceled < 1:
+        errors.append("spans: no canceled span (the bench canceled a queued job)")
+    return complete_gen, evals, canceled
+
+
+def check_timeline(timeline, errors):
+    if not timeline:
+        errors.append("timeline: dispatch-timeline ring is empty")
+        return
+    for i, d in enumerate(timeline):
+        if d.get("k", 0) < 1:
+            errors.append(f"timeline[{i}]: k < 1 ({d.get('k')})")
+        for k in ("upload_s", "exec_s", "download_s"):
+            if d.get(k, 0.0) < 0.0:
+                errors.append(f"timeline[{i}]: negative {k} ({d.get(k)})")
+
+
+def check_metrics(text, errors):
+    if not text:
+        errors.append("metrics: empty Prometheus text")
+        return
+    typed = {}
+    seen = set()
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line:
+            continue
+        m = TYPE_RE.match(line)
+        if m:
+            if m.group(1) in typed:
+                errors.append(f"metrics line {ln}: duplicate TYPE for {m.group(1)}")
+            typed[m.group(1)] = m.group(2)
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"metrics line {ln}: unparseable: {line!r}")
+            continue
+        name = m.group(1)
+        seen.add(name)
+        if name not in typed:
+            errors.append(f"metrics line {ln}: sample {name} before its # TYPE")
+        try:
+            float(m.group(3))
+        except ValueError:
+            errors.append(f"metrics line {ln}: non-float value {m.group(3)!r}")
+    for name in REQUIRED_SERIES:
+        if name not in seen:
+            errors.append(f"metrics: required series {name} absent")
+    return len(seen)
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench_out/serving_trace.json"
+    with open(path) as f:
+        doc = json.load(f)
+    errors = []
+
+    spans = doc.get("spans", [])
+    gen, evals, canceled = check_spans(spans, errors)
+    check_timeline(doc.get("timeline", []), errors)
+    n_series = check_metrics(doc.get("metrics_text", ""), errors)
+
+    ring = doc.get("ring", {})
+    off, on = ring.get("off_steps_per_s", 0.0), ring.get("on_steps_per_s", 0.0)
+    ratio = ring.get("ratio", 0.0)
+    if off <= 0 or on <= 0:
+        errors.append(f"overhead: missing throughput numbers (off={off}, on={on})")
+    elif ratio < 0.95:
+        errors.append(
+            f"overhead: ring-on throughput {on:.0f} steps/s is {ratio:.3f}x "
+            f"ring-off {off:.0f} (must be >= 0.95x)"
+        )
+
+    print(
+        f"[check_trace] {path}: spans={len(spans)} complete_generate={gen} "
+        f"eval={evals} canceled={canceled} series={n_series} ring_ratio={ratio:.3f}"
+    )
+    if errors:
+        for e in errors:
+            print(f"[check_trace] FAIL: {e}", file=sys.stderr)
+        return 1
+    print("[check_trace] ok: span chains, timeline, metrics and overhead hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,6 +44,15 @@ if [ -f bench_out/serving_async.json ]; then
   python3 tools/check_async.py bench_out/serving_async.json
 fi
 
+# Observability gates: when the serving bench's trace part has run
+# (`cargo bench --bench serving -- --trace-only` in the CI artifacts
+# job), enforce complete span chains, dispatch-timeline sanity,
+# well-formed Prometheus text with the required series, and the
+# <= 5% tracing-overhead ceiling on its JSON.
+if [ -f bench_out/serving_trace.json ]; then
+  python3 tools/check_trace.py bench_out/serving_trace.json
+fi
+
 # Dispatch-amortisation gates: when the perf bench's k-sweep has run
 # (`cargo bench --bench perf` in the CI artifacts job), enforce
 # bit-identical samples and unchanged NFE across steps-per-dispatch
