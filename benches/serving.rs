@@ -32,11 +32,20 @@
 //!    vs 0 on the same fixed-step workload). Results land in
 //!    bench_out/serving_trace.json, gated in CI by
 //!    tools/check_trace.py.
+//! 6. diagnostics + watchdog (docs/PROTOCOL.md §diag/§health): an
+//!    adaptive workload with `--diag-sample 1`, its per-pool profile
+//!    reconciled against the stats accept/reject counters; a
+//!    stall-injection run (zero stall budget, per-iteration health
+//!    checks, two concurrently active pools) observed through the
+//!    `health` op and the Prometheus text; and the diag-on vs diag-off
+//!    throughput ratio on the same fixed-step workload. Results land in
+//!    bench_out/serving_diag.json, gated in CI by tools/check_diag.py.
 //!
 //!   cargo bench --offline --bench serving -- [--rate 2] [--duration 12]
 //!       [--bucket 16] [--model vp] [--qos-only] [--qos-duration 4]
 //!       [--async-only] [--async-burst 64] [--trace-only]
-//!       [--trace-burst 32] [--trace-reqs 4]
+//!       [--trace-burst 32] [--trace-reqs 4] [--diag-only]
+//!       [--diag-reqs 3]
 
 #[path = "common.rs"]
 mod common;
@@ -44,7 +53,7 @@ mod common;
 use common::*;
 use gofast::bench::{summarize, Table};
 use gofast::cli::Args;
-use gofast::coordinator::{qos, Engine, EngineConfig, SampleRequest};
+use gofast::coordinator::{qos, DiagQuery, Engine, EngineConfig, SampleRequest};
 use gofast::json::Value;
 use gofast::rng::Rng;
 use gofast::server::{serve, Client, EvalRequest, GenerateRequest, ServerConfig};
@@ -73,6 +82,9 @@ fn main() -> Result<()> {
     }
     if args.has("trace-only") {
         return trace_bench(&args, &model);
+    }
+    if args.has("diag-only") {
+        return diag_bench(&args, &model);
     }
 
     let mut table = Table::new(&[
@@ -224,7 +236,8 @@ fn main() -> Result<()> {
 
     qos_bench(&args, &model)?;
     async_bench(&args, &model)?;
-    trace_bench(&args, &model)
+    trace_bench(&args, &model)?;
+    diag_bench(&args, &model)
 }
 
 /// Part 3: the QoS subsystem under mixed traffic. Writes
@@ -707,5 +720,206 @@ fn trace_bench(args: &Args, model: &str) -> Result<()> {
     std::fs::create_dir_all("bench_out")?;
     std::fs::write("bench_out/serving_trace.json", format!("{doc}"))?;
     println!("[serving_trace] json -> bench_out/serving_trace.json");
+    Ok(())
+}
+
+/// Part 6: solver diagnostics + the health watchdog. Three
+/// experiments: (a) an adaptive workload with `--diag-sample 1`, its
+/// diffusion-time profile pulled from a quiesced engine and reconciled
+/// against the stats accept/reject counters; (b) a stall-injection run
+/// — zero stall budget, per-iteration health checks, and a long
+/// fixed-step flood next to adaptive traffic so the unserved pool's
+/// lanes sit unchanged between consecutive checks — observed through
+/// the wire `health` op and the Prometheus text; (c) the diag-on vs
+/// diag-off throughput ratio on the same fixed-step workload (the
+/// `--diag-sample 0` zero-allocation contract). Writes
+/// bench_out/serving_diag.json for tools/check_diag.py.
+fn diag_bench(args: &Args, model: &str) -> Result<()> {
+    let reqs = args.usize_or("diag-reqs", 3)?;
+    let bucket = {
+        let rt = gofast::runtime::Runtime::new("artifacts")?;
+        engine_bucket(&rt.model(model)?, args.usize_or("bucket", 16)?)
+    };
+
+    // --- 6a: profile reconciliation under sampling --------------------
+    println!("\n== diag: {reqs} adaptive bursts (n={bucket}) with --diag-sample 1 ==");
+    let mut cfg = EngineConfig::new("artifacts", model);
+    cfg.bucket = bucket;
+    cfg.max_queue_samples = 100_000;
+    cfg.diag_sample = 1;
+    let engine = Engine::start(cfg)?;
+    let c = engine.client();
+    for r in 0..reqs {
+        c.generate_request(SampleRequest {
+            model: String::new(),
+            solver: ServingSolver::Adaptive,
+            n: bucket,
+            eps_rel: 0.2,
+            seed: 7000 + r as u64,
+            sample_base: 0,
+            priority: None,
+            deadline_ms: None,
+            cancel_token: None,
+        })?;
+    }
+    // both snapshots from the quiesced engine, so the reconciliation
+    // invariant must hold exactly: sum(accepted+rejected) over an
+    // adaptive pool's bins == the pool's stats counters
+    let stats = c.stats()?;
+    let diag = c.diag(DiagQuery::default())?;
+    let mut stats_pools = Vec::new();
+    for p in &stats.pool_qos {
+        stats_pools.push(Value::obj(vec![
+            ("pool", Value::str(format!("{}/{}", p.model, p.solver))),
+            ("accepted", Value::num(p.accepted as f64)),
+            ("rejected", Value::num(p.rejected as f64)),
+            ("steps", Value::num(p.steps as f64)),
+        ]));
+    }
+    for p in &diag.pools {
+        let (acc, rej): (u64, u64) = p
+            .bins
+            .iter()
+            .fold((0, 0), |(a, r), b| (a + b.accepted, r + b.rejected));
+        println!(
+            "  {}/{}: {} bins, {} proposals ({} accepted, {} rejected), {} traces",
+            p.model,
+            p.solver,
+            p.bins.len(),
+            acc + rej,
+            acc,
+            rej,
+            p.traces.len()
+        );
+    }
+    let diag_pools: Vec<Value> = diag.pools.iter().map(|p| p.to_json()).collect();
+    drop(engine);
+
+    // --- 6b: stall injection, observed over the wire ------------------
+    // stall budget 0 + health checks every loop iteration: whichever
+    // pool the round-robin leaves unserved this iteration has made no
+    // progress since the previous check, so a stall fires as soon as
+    // both pools hold active lanes. The defaults (10s budget, 1s
+    // interval) never fire on this workload.
+    println!("== diag: stall injection (budget 0, per-iteration checks) ==");
+    let mut cfg = EngineConfig::new("artifacts", model);
+    cfg.bucket = bucket;
+    cfg.max_queue_samples = 100_000;
+    cfg.diag_sample = 1;
+    cfg.stall_budget_s = 0.0;
+    cfg.health_interval_s = 0.0;
+    let engine = Engine::start(cfg)?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    {
+        let c = engine.client();
+        std::thread::spawn(move || {
+            let _ = serve(
+                listener,
+                c,
+                ServerConfig { port: addr.port(), default_eps_rel: 0.05 },
+            );
+        });
+    }
+    let mut wc = Client::connect(&addr.to_string())?;
+    // a long fixed-step flood next to adaptive traffic: two pools with
+    // active lanes, one loop, guaranteed unserved-pool checks
+    wc.submit(
+        &GenerateRequest::new(bucket).solver("em:300").eps_rel(0.5).seed(1).images(false),
+    )?;
+    wc.submit(&GenerateRequest::new(bucket).eps_rel(0.2).seed(2).images(false))?;
+    let t0 = Instant::now();
+    let mut stall_count = 0u64;
+    let mut health = wc.health()?;
+    while stall_count < 1 && t0.elapsed().as_secs_f64() < 60.0 {
+        health = wc.health()?;
+        stall_count = health.req("counts")?.req("stall")?.as_f64()? as u64;
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    let metrics_text = wc.metrics()?;
+    let mut delivered = 0usize;
+    while delivered < 2 && t0.elapsed().as_secs_f64() < 120.0 {
+        delivered += wc.poll(100, false)?.len();
+    }
+    println!(
+        "  stall events {stall_count} after {:.2}s, status {}, drained {delivered}/2",
+        t0.elapsed().as_secs_f64(),
+        health.req("status")?.as_f64()?,
+    );
+    drop(engine);
+
+    // --- 6c: sampling overhead ----------------------------------------
+    // The --diag-sample 0 contract says the always-on profile (and a
+    // disabled sampler) must not tax the hot step path; check_diag.py
+    // gates the steps/s ratio at >= 0.95. Default watchdog cadence on
+    // both engines so only the sampler varies.
+    let mut sps = Vec::new();
+    for sample in [0usize, 1] {
+        let mut cfg = EngineConfig::new("artifacts", model);
+        cfg.bucket = bucket;
+        cfg.max_queue_samples = 100_000;
+        cfg.diag_sample = sample;
+        let engine = Engine::start(cfg)?;
+        let c = engine.client();
+        let gen = |steps: usize, seed: u64| SampleRequest {
+            model: String::new(),
+            solver: ServingSolver::Em { steps },
+            n: bucket,
+            eps_rel: 0.5,
+            seed,
+            sample_base: 0,
+            priority: None,
+            deadline_ms: None,
+            cancel_token: None,
+        };
+        c.generate_request(gen(50, 1))?; // warm the pool and runtime caches
+        let s0 = c.stats()?;
+        let t0 = Instant::now();
+        for r in 0..args.usize_or("trace-reqs", 4)? {
+            c.generate_request(gen(200, 2 + r as u64))?;
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let s1 = c.stats()?;
+        let v = (s1.steps - s0.steps) as f64 / elapsed;
+        println!("  diag_sample {sample}: {v:.0} steps/s");
+        sps.push(v);
+    }
+    let (off_sps, on_sps) = (sps[0], sps[1]);
+    let ratio = on_sps / off_sps.max(1e-9);
+    println!("  diag-on / diag-off throughput ratio {ratio:.3}");
+
+    let doc = Value::obj(vec![
+        ("model", Value::str(model)),
+        ("bucket", Value::num(bucket as f64)),
+        (
+            "profile",
+            Value::obj(vec![
+                ("pools", Value::Arr(diag_pools)),
+                ("stats_pools", Value::Arr(stats_pools)),
+            ]),
+        ),
+        (
+            "stall",
+            Value::obj(vec![
+                ("fired", Value::Bool(stall_count >= 1)),
+                ("stall_events", Value::num(stall_count as f64)),
+                ("status", health.req("status")?.clone()),
+                ("counts", health.req("counts")?.clone()),
+                ("events", health.req("events")?.clone()),
+            ]),
+        ),
+        ("metrics_text", Value::str(metrics_text)),
+        (
+            "overhead",
+            Value::obj(vec![
+                ("off_steps_per_s", Value::num(off_sps)),
+                ("on_steps_per_s", Value::num(on_sps)),
+                ("ratio", Value::num(ratio)),
+            ]),
+        ),
+    ]);
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/serving_diag.json", format!("{doc}"))?;
+    println!("[serving_diag] json -> bench_out/serving_diag.json");
     Ok(())
 }

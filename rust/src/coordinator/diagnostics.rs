@@ -1,0 +1,905 @@
+//! Solver numerical diagnostics + engine health watchdog.
+//!
+//! Two layers, both owned by the engine thread (no locks, no extra
+//! threads — the watchdog piggybacks on the engine loop):
+//!
+//! * **Per-pool profiles** ([`PoolProfile`]): a fixed
+//!   [`PROFILE_BINS`]-bin grid over diffusion time `[t_eps, 1]`
+//!   accumulating, per bin, step-size and error-norm statistics plus
+//!   Algorithm 1 accept/reject counts (adaptive pools) or grid-node
+//!   counts (fixed-step pools, which record steps-per-bin only). The
+//!   bin array is allocated once at pool creation and `record_*`
+//!   writes plain fields — the always-on cost is a few float ops per
+//!   lane step, the same class as `Histogram::record`.
+//! * **Sampled lane traces** ([`PoolDiag`]): with `serve
+//!   --diag-sample N`, every Nth admitted lane records its full
+//!   `(t, h, err, accepted)` sequence into a bounded ring. `0` (the
+//!   default) disables sampling and the per-step path touches only
+//!   the fixed profile — no allocation, the same overhead contract as
+//!   `--trace-ring 0`.
+//!
+//! The [`Watchdog`] runs a periodic check over state the engine
+//! already owns: stalled lanes (no progress for `stall_budget_s`),
+//! reject-rate spikes against a per-pool EWMA baseline, admission
+//! queue saturation, and step-time p95 drift. Events land in a
+//! bounded ring plus per-kind counters, exported as the
+//! `gofast_health_status` gauge and `gofast_health_events_total{kind}`
+//! counters through the stats tree and as the `health` wire op.
+
+use crate::json::Value;
+
+/// Diffusion-time bins per pool profile.
+pub const PROFILE_BINS: usize = 32;
+
+/// Sampled lane traces retained per pool (ring; oldest evicted).
+pub const TRACE_RING_CAP: usize = 256;
+
+/// Per-trace step cap — an adaptive lane grinding at tiny `h` must not
+/// grow a sampled trace without bound; the head of the sequence is the
+/// diagnostic payload.
+const TRACE_MAX_STEPS: usize = 4096;
+
+// --- per-pool profiles ----------------------------------------------------------
+
+/// One diffusion-time bin's accumulators. `h_*`/`err_*` cover adaptive
+/// proposals only; `steps` counts fixed-grid nodes.
+#[derive(Clone, Copy, Debug)]
+pub struct BinStat {
+    /// Fixed-step grid nodes that landed in the bin.
+    pub steps: u64,
+    /// Adaptive proposals accepted / rejected in the bin.
+    pub accepted: u64,
+    pub rejected: u64,
+    h_sum: f64,
+    h_min: f64,
+    h_max: f64,
+    err_sum: f64,
+    err_max: f64,
+}
+
+impl BinStat {
+    const EMPTY: BinStat = BinStat {
+        steps: 0,
+        accepted: 0,
+        rejected: 0,
+        h_sum: 0.0,
+        h_min: f64::INFINITY,
+        h_max: 0.0,
+        err_sum: 0.0,
+        err_max: 0.0,
+    };
+
+    fn proposals(&self) -> u64 {
+        self.accepted + self.rejected
+    }
+
+    fn to_json(&self, t_lo: f64, t_hi: f64) -> Value {
+        let n = self.proposals() as f64;
+        let mean = |sum: f64| if n > 0.0 { sum / n } else { 0.0 };
+        Value::obj(vec![
+            ("t_lo", Value::num(t_lo)),
+            ("t_hi", Value::num(t_hi)),
+            ("steps", Value::num(self.steps as f64)),
+            ("accepted", Value::num(self.accepted as f64)),
+            ("rejected", Value::num(self.rejected as f64)),
+            ("h_mean", Value::num(mean(self.h_sum))),
+            ("h_min", Value::num(if n > 0.0 { self.h_min } else { 0.0 })),
+            ("h_max", Value::num(self.h_max)),
+            ("err_mean", Value::num(mean(self.err_sum))),
+            ("err_max", Value::num(self.err_max)),
+        ])
+    }
+}
+
+/// Fixed diffusion-time grid over `[t_eps, 1]`: where in the reverse
+/// SDE the solver spends its NFE budget, and how Algorithm 1's step
+/// test behaves there.
+#[derive(Clone, Debug)]
+pub struct PoolProfile {
+    t_lo: f64,
+    t_hi: f64,
+    bins: [BinStat; PROFILE_BINS],
+}
+
+impl PoolProfile {
+    pub fn new(t_eps: f64) -> PoolProfile {
+        PoolProfile {
+            t_lo: t_eps.clamp(0.0, 0.999),
+            t_hi: 1.0,
+            bins: [BinStat::EMPTY; PROFILE_BINS],
+        }
+    }
+
+    /// Bin index for diffusion time `t` (clamped to the grid).
+    pub fn bin_of(&self, t: f64) -> usize {
+        let frac = (t - self.t_lo) / (self.t_hi - self.t_lo);
+        ((frac * PROFILE_BINS as f64) as isize).clamp(0, PROFILE_BINS as isize - 1) as usize
+    }
+
+    /// One adaptive proposal at pre-step `(t, h)` with error norm
+    /// `err` and its accept/reject outcome.
+    pub fn record_adaptive(&mut self, t: f64, h: f64, err: f64, accepted: bool) {
+        let b = &mut self.bins[self.bin_of(t)];
+        if accepted {
+            b.accepted += 1;
+        } else {
+            b.rejected += 1;
+        }
+        b.h_sum += h;
+        b.h_min = b.h_min.min(h);
+        b.h_max = b.h_max.max(h);
+        b.err_sum += err;
+        b.err_max = b.err_max.max(err);
+    }
+
+    /// One fixed-grid node at diffusion time `t`.
+    pub fn record_fixed(&mut self, t: f64) {
+        self.bins[self.bin_of(t)].steps += 1;
+    }
+
+    /// `(steps, accepted, rejected)` summed over all bins — the
+    /// reconciliation surface against the pool's stats counters.
+    pub fn totals(&self) -> (u64, u64, u64) {
+        self.bins.iter().fold((0, 0, 0), |(s, a, r), b| {
+            (s + b.steps, a + b.accepted, r + b.rejected)
+        })
+    }
+
+    pub fn bins(&self) -> &[BinStat] {
+        &self.bins
+    }
+}
+
+// --- sampled lane traces --------------------------------------------------------
+
+/// One recorded solver step of a sampled lane.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneStep {
+    pub t: f64,
+    pub h: f64,
+    /// Algorithm 1 mixed-tolerance error norm (0 for fixed-step lanes).
+    pub err: f64,
+    pub accepted: bool,
+}
+
+/// The full step sequence of one sampled lane.
+#[derive(Clone, Debug)]
+pub struct LaneTrace {
+    /// Engine request id of the lane (the `trace` op's span id space).
+    pub req_id: u64,
+    pub sample_idx: usize,
+    /// The lane finished (converged, failed, or its pool was reset).
+    pub done: bool,
+    pub steps: Vec<LaneStep>,
+}
+
+impl LaneTrace {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("lane", Value::num(self.req_id as f64)),
+            ("sample", Value::num(self.sample_idx as f64)),
+            ("done", Value::Bool(self.done)),
+            (
+                "steps",
+                Value::Arr(
+                    self.steps
+                        .iter()
+                        .map(|s| {
+                            Value::obj(vec![
+                                ("t", Value::num(s.t)),
+                                ("h", Value::num(s.h)),
+                                ("err", Value::num(s.err)),
+                                ("accepted", Value::Bool(s.accepted)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Per-pool diagnostics: the always-on profile plus the 1-in-N lane
+/// trace sampler. Owned by `ProgramPool`, fed from the lane programs'
+/// step folds through `StepIo`.
+#[derive(Clone, Debug)]
+pub struct PoolDiag {
+    pub profile: PoolProfile,
+    /// 1-in-N admission sampling; 0 disables lane traces entirely.
+    sample_every: usize,
+    admitted: u64,
+    /// Ring position of the open trace per lane slot (None = unsampled).
+    slot_trace: Vec<Option<usize>>,
+    traces: Vec<LaneTrace>,
+    cursor: usize,
+    cap: usize,
+}
+
+impl PoolDiag {
+    pub fn new(t_eps: f64, width: usize, sample_every: usize) -> PoolDiag {
+        PoolDiag::with_cap(t_eps, width, sample_every, TRACE_RING_CAP)
+    }
+
+    fn with_cap(t_eps: f64, width: usize, sample_every: usize, cap: usize) -> PoolDiag {
+        PoolDiag {
+            profile: PoolProfile::new(t_eps),
+            sample_every,
+            admitted: 0,
+            slot_trace: vec![None; width],
+            traces: Vec::new(),
+            cursor: 0,
+            cap: cap.max(1),
+        }
+    }
+
+    /// Admission hook: decides whether this lane is sampled (every Nth
+    /// admitted lane) and opens its trace. No-op when sampling is off.
+    pub fn on_lane_start(&mut self, slot: usize, req_id: u64, sample_idx: usize) {
+        if self.sample_every == 0 {
+            return;
+        }
+        let pick = self.admitted % self.sample_every as u64 == 0;
+        self.admitted += 1;
+        if !pick {
+            self.slot_trace[slot] = None;
+            return;
+        }
+        let trace = LaneTrace { req_id, sample_idx, done: false, steps: Vec::new() };
+        let pos = if self.traces.len() < self.cap {
+            self.traces.push(trace);
+            self.traces.len() - 1
+        } else {
+            let pos = self.cursor;
+            self.cursor = (pos + 1) % self.cap;
+            // the evicted record may belong to a still-running lane —
+            // that lane stops being sampled rather than appending its
+            // tail to the newcomer's trace
+            for s in &mut self.slot_trace {
+                if *s == Some(pos) {
+                    *s = None;
+                }
+            }
+            self.traces[pos] = trace;
+            pos
+        };
+        self.slot_trace[slot] = Some(pos);
+    }
+
+    /// Bucket-migration hook: `migrate_lanes` compacts live lanes into
+    /// new slot positions, so open trace markers must follow their
+    /// lanes. Re-derives the slot -> trace mapping from the migrated
+    /// slot array by `(req_id, sample_idx)` identity. No-op (and
+    /// allocation-free) with sampling off.
+    pub(crate) fn remap(&mut self, slots: &[super::Slot]) {
+        if self.sample_every == 0 {
+            return;
+        }
+        let open: Vec<(usize, u64, usize)> = self
+            .slot_trace
+            .iter()
+            .flatten()
+            .map(|&pos| (pos, self.traces[pos].req_id, self.traces[pos].sample_idx))
+            .collect();
+        self.slot_trace.iter_mut().for_each(|s| *s = None);
+        for (si, slot) in slots.iter().enumerate() {
+            if let super::Slot::Running { req_id, sample_idx, .. } = slot {
+                if let Some(&(pos, _, _)) =
+                    open.iter().find(|&&(_, r, sx)| r == *req_id && sx == *sample_idx)
+                {
+                    self.slot_trace[si] = Some(pos);
+                }
+            }
+        }
+    }
+
+    /// Lane completion hook (converged, failed, or reset).
+    pub fn on_lane_end(&mut self, slot: usize) {
+        if let Some(pos) = self.slot_trace[slot].take() {
+            self.traces[pos].done = true;
+        }
+    }
+
+    /// Pool reset (`fail_pool`): every open trace ends truncated.
+    pub fn clear_slots(&mut self) {
+        for slot in 0..self.slot_trace.len() {
+            self.on_lane_end(slot);
+        }
+    }
+
+    /// Adaptive proposal on lane `slot` — profile always, trace only
+    /// when the slot is sampled.
+    pub fn record_adaptive(&mut self, slot: usize, t: f64, h: f64, err: f64, accepted: bool) {
+        self.profile.record_adaptive(t, h, err, accepted);
+        if let Some(pos) = self.slot_trace[slot] {
+            let steps = &mut self.traces[pos].steps;
+            if steps.len() < TRACE_MAX_STEPS {
+                steps.push(LaneStep { t, h, err, accepted });
+            }
+        }
+    }
+
+    /// Fixed-grid node on lane `slot` (steps-per-bin in the profile;
+    /// sampled traces record the node with `err = 0`, accepted).
+    pub fn record_fixed(&mut self, slot: usize, t: f64, h: f64) {
+        self.profile.record_fixed(t);
+        if let Some(pos) = self.slot_trace[slot] {
+            let steps = &mut self.traces[pos].steps;
+            if steps.len() < TRACE_MAX_STEPS {
+                steps.push(LaneStep { t, h, err: 0.0, accepted: true });
+            }
+        }
+    }
+
+    /// Retained traces, oldest first.
+    fn traces_in_order(&self) -> impl Iterator<Item = &LaneTrace> {
+        let n = self.traces.len();
+        let start = if n < self.cap { 0 } else { self.cursor };
+        (0..n).map(move |i| &self.traces[(start + i) % n.max(1)])
+    }
+
+    /// Snapshot for the `diag` op; `lane` filters traces by request id.
+    pub fn snapshot(
+        &self,
+        model: &str,
+        solver: &str,
+        adaptive: bool,
+        lane: Option<u64>,
+    ) -> PoolDiagSnapshot {
+        PoolDiagSnapshot {
+            model: model.to_string(),
+            solver: solver.to_string(),
+            adaptive,
+            t_lo: self.profile.t_lo,
+            t_hi: self.profile.t_hi,
+            bins: self.profile.bins.to_vec(),
+            traces: self
+                .traces_in_order()
+                .filter(|t| lane.is_none_or(|id| t.req_id == id))
+                .cloned()
+                .collect(),
+        }
+    }
+}
+
+/// Query for the `diag` op: optional `model/solver` (or `model:solver`)
+/// pool filter and optional lane (request id) trace filter.
+#[derive(Clone, Debug, Default)]
+pub struct DiagQuery {
+    pub pool: Option<String>,
+    pub lane: Option<u64>,
+}
+
+impl DiagQuery {
+    /// Pool filter match; accepts both `model/solver` and
+    /// `model:solver` spellings.
+    pub fn matches_pool(&self, model: &str, solver: &str) -> bool {
+        match &self.pool {
+            None => true,
+            Some(p) => {
+                let want = p.replace(':', "/");
+                want == format!("{model}/{solver}")
+            }
+        }
+    }
+}
+
+/// One pool's diagnostics snapshot (profile + retained lane traces).
+#[derive(Clone, Debug)]
+pub struct PoolDiagSnapshot {
+    pub model: String,
+    pub solver: String,
+    pub adaptive: bool,
+    pub t_lo: f64,
+    pub t_hi: f64,
+    pub bins: Vec<BinStat>,
+    pub traces: Vec<LaneTrace>,
+}
+
+impl PoolDiagSnapshot {
+    pub fn to_json(&self) -> Value {
+        let w = (self.t_hi - self.t_lo) / PROFILE_BINS as f64;
+        Value::obj(vec![
+            ("model", Value::str(self.model.clone())),
+            ("solver", Value::str(self.solver.clone())),
+            ("adaptive", Value::Bool(self.adaptive)),
+            ("t_lo", Value::num(self.t_lo)),
+            ("t_hi", Value::num(self.t_hi)),
+            (
+                "bins",
+                Value::Arr(
+                    self.bins
+                        .iter()
+                        .enumerate()
+                        .map(|(i, b)| {
+                            b.to_json(self.t_lo + i as f64 * w, self.t_lo + (i + 1) as f64 * w)
+                        })
+                        .collect(),
+                ),
+            ),
+            ("traces", Value::Arr(self.traces.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+}
+
+/// Reply to the `diag` op.
+#[derive(Clone, Debug, Default)]
+pub struct DiagReply {
+    pub pools: Vec<PoolDiagSnapshot>,
+}
+
+// --- watchdog -------------------------------------------------------------------
+
+/// Health event kinds, in counter order (`kind` label values).
+pub const HEALTH_KINDS: [&str; 4] =
+    ["stall", "reject_spike", "queue_saturation", "step_time_drift"];
+
+const HEALTH_RING_CAP: usize = 256;
+/// Reject-rate windows need at least this many proposals to judge.
+const REJECT_MIN_PROPOSALS: u64 = 8;
+/// EWMA smoothing for the reject-rate and p95 baselines.
+const EWMA_ALPHA: f64 = 0.2;
+/// A window's reject rate must exceed `2x baseline + margin` to fire.
+const REJECT_SPIKE_MARGIN: f64 = 0.10;
+/// Queued samples >= this fraction of the admission cap fires.
+const QUEUE_SATURATION_FRAC: f64 = 0.9;
+/// Step-time p95 must exceed `2x baseline` (and this floor) to fire.
+const DRIFT_FACTOR: f64 = 2.0;
+const DRIFT_FLOOR_S: f64 = 1e-4;
+
+/// One structured health event (ring-retained, counter-counted).
+#[derive(Clone, Debug)]
+pub struct HealthEvent {
+    /// Seconds on the telemetry epoch (same clock as trace spans).
+    pub at_s: f64,
+    pub kind: &'static str,
+    /// Pool labels; empty for engine-level events (queue saturation).
+    pub model: String,
+    pub solver: String,
+    pub detail: String,
+}
+
+impl HealthEvent {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("at_s", Value::num(self.at_s)),
+            ("kind", Value::str(self.kind)),
+            ("model", Value::str(self.model.clone())),
+            ("solver", Value::str(self.solver.clone())),
+            ("detail", Value::str(self.detail.clone())),
+        ])
+    }
+}
+
+/// Per-tick pool observation the engine hands the watchdog (cumulative
+/// counters; the watchdog differences them against the previous tick).
+pub struct PoolHealthSample {
+    pub adaptive: bool,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub step_p95_s: f64,
+    pub step_count: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct PoolHealth {
+    /// Per slot: (progress scalar, wall time it last changed).
+    lanes: Vec<Option<(f64, f64)>>,
+    reject_ewma: f64,
+    reject_primed: bool,
+    last_accepted: u64,
+    last_rejected: u64,
+    p95_ewma: f64,
+    p95_primed: bool,
+    last_step_count: u64,
+}
+
+/// Reply to the `health` op.
+#[derive(Clone, Debug, Default)]
+pub struct HealthReply {
+    /// 1 = healthy, 0 = degraded (an event fired on the last tick).
+    pub status: u64,
+    /// Retained events, oldest first.
+    pub events: Vec<HealthEvent>,
+    /// Cumulative per-kind counters (every kind, zeros included).
+    pub counts: Vec<(String, u64)>,
+}
+
+/// Health summary carried on `EngineStats` into the stats tree.
+#[derive(Clone, Debug, Default)]
+pub struct HealthStats {
+    /// 1 = healthy, 0 = degraded.
+    pub status: u64,
+    pub counts: Vec<(String, u64)>,
+}
+
+/// Periodic engine-health checks over state the engine already owns.
+/// The engine calls `begin_tick`, then `check_queue` once and
+/// `tick_pool` per pool (flat service order), then `end_tick`.
+pub struct Watchdog {
+    stall_budget_s: f64,
+    pools: Vec<PoolHealth>,
+    events: Vec<HealthEvent>,
+    cursor: usize,
+    counts: [u64; HEALTH_KINDS.len()],
+    tick_fired: bool,
+    degraded: bool,
+    pub last_tick_s: f64,
+}
+
+impl Watchdog {
+    /// `widths[flat]` = lane count of each pool in flat service order.
+    pub fn new(widths: &[usize], stall_budget_s: f64) -> Watchdog {
+        Watchdog {
+            stall_budget_s,
+            pools: widths
+                .iter()
+                .map(|&w| PoolHealth { lanes: vec![None; w], ..Default::default() })
+                .collect(),
+            events: Vec::new(),
+            cursor: 0,
+            counts: [0; HEALTH_KINDS.len()],
+            tick_fired: false,
+            degraded: false,
+            last_tick_s: 0.0,
+        }
+    }
+
+    pub fn begin_tick(&mut self) {
+        self.tick_fired = false;
+    }
+
+    /// Engine-level admission-queue saturation check.
+    pub fn check_queue(&mut self, queued: usize, cap: usize, now: f64) {
+        if cap > 0 && queued as f64 >= cap as f64 * QUEUE_SATURATION_FRAC {
+            self.push_event(
+                2,
+                "",
+                "",
+                format!("queued samples {queued} >= {QUEUE_SATURATION_FRAC} x cap {cap}"),
+                now,
+            );
+        }
+    }
+
+    /// Per-pool checks. `lanes` lists occupied slots in ascending slot
+    /// order with a monotone progress scalar (adaptive: remaining `t`;
+    /// fixed: nodes done) that changes on every real step.
+    pub fn tick_pool(
+        &mut self,
+        flat: usize,
+        model: &str,
+        solver: &str,
+        lanes: &[(usize, f64)],
+        s: &PoolHealthSample,
+        now: f64,
+    ) {
+        let budget = self.stall_budget_s;
+        let ph = &mut self.pools[flat];
+        let mut stalled: Vec<usize> = Vec::new();
+        let mut it = lanes.iter().peekable();
+        for (si, entry) in ph.lanes.iter_mut().enumerate() {
+            match it.peek() {
+                Some(&&(slot, progress)) if slot == si => {
+                    it.next();
+                    match entry {
+                        Some((last, changed_at)) if *last == progress => {
+                            if now - *changed_at > budget {
+                                stalled.push(si);
+                                *changed_at = now; // re-arm
+                            }
+                        }
+                        _ => *entry = Some((progress, now)),
+                    }
+                }
+                _ => *entry = None, // slot freed
+            }
+        }
+
+        // reject-rate spike: this tick's window vs the EWMA baseline
+        let mut spike: Option<String> = None;
+        if s.adaptive {
+            let (da, dr) =
+                (s.accepted - ph.last_accepted, s.rejected - ph.last_rejected);
+            ph.last_accepted = s.accepted;
+            ph.last_rejected = s.rejected;
+            if da + dr >= REJECT_MIN_PROPOSALS {
+                let rate = dr as f64 / (da + dr) as f64;
+                if ph.reject_primed
+                    && rate > DRIFT_FACTOR * ph.reject_ewma + REJECT_SPIKE_MARGIN
+                {
+                    spike = Some(format!(
+                        "reject rate {rate:.3} vs baseline {:.3} ({} of {} proposals)",
+                        ph.reject_ewma,
+                        dr,
+                        da + dr
+                    ));
+                }
+                ph.reject_ewma = if ph.reject_primed {
+                    (1.0 - EWMA_ALPHA) * ph.reject_ewma + EWMA_ALPHA * rate
+                } else {
+                    rate
+                };
+                ph.reject_primed = true;
+            }
+        }
+
+        // step-time p95 drift: only when new dispatches landed
+        let mut drift: Option<String> = None;
+        if s.step_count > ph.last_step_count {
+            ph.last_step_count = s.step_count;
+            let p95 = s.step_p95_s;
+            if ph.p95_primed && p95 > DRIFT_FACTOR * ph.p95_ewma && p95 > DRIFT_FLOOR_S {
+                drift = Some(format!(
+                    "step p95 {:.1}ms vs baseline {:.1}ms",
+                    p95 * 1e3,
+                    ph.p95_ewma * 1e3
+                ));
+            }
+            ph.p95_ewma = if ph.p95_primed {
+                (1.0 - EWMA_ALPHA) * ph.p95_ewma + EWMA_ALPHA * p95
+            } else {
+                p95
+            };
+            ph.p95_primed = true;
+        }
+
+        for si in stalled {
+            let budget_ms = budget * 1e3;
+            self.push_event(
+                0,
+                model,
+                solver,
+                format!("lane {si}: no progress for > {budget_ms:.0}ms"),
+                now,
+            );
+        }
+        if let Some(d) = spike {
+            self.push_event(1, model, solver, d, now);
+        }
+        if let Some(d) = drift {
+            self.push_event(3, model, solver, d, now);
+        }
+    }
+
+    pub fn end_tick(&mut self, now: f64) {
+        self.degraded = self.tick_fired;
+        self.last_tick_s = now;
+    }
+
+    fn push_event(&mut self, kind: usize, model: &str, solver: &str, detail: String, now: f64) {
+        let ev = HealthEvent {
+            at_s: now,
+            kind: HEALTH_KINDS[kind],
+            model: model.to_string(),
+            solver: solver.to_string(),
+            detail,
+        };
+        if self.events.len() < HEALTH_RING_CAP {
+            self.events.push(ev);
+        } else {
+            self.events[self.cursor] = ev;
+            self.cursor = (self.cursor + 1) % HEALTH_RING_CAP;
+        }
+        self.counts[kind] += 1;
+        self.tick_fired = true;
+    }
+
+    /// 1 = healthy, 0 = degraded on the last completed tick.
+    pub fn status(&self) -> u64 {
+        if self.degraded {
+            0
+        } else {
+            1
+        }
+    }
+
+    fn counts_vec(&self) -> Vec<(String, u64)> {
+        HEALTH_KINDS
+            .iter()
+            .zip(self.counts.iter())
+            .map(|(k, &n)| (k.to_string(), n))
+            .collect()
+    }
+
+    /// Snapshot for the `health` op (events oldest first).
+    pub fn snapshot(&self) -> HealthReply {
+        let n = self.events.len();
+        let start = if n < HEALTH_RING_CAP { 0 } else { self.cursor };
+        HealthReply {
+            status: self.status(),
+            events: (0..n).map(|i| self.events[(start + i) % n.max(1)].clone()).collect(),
+            counts: self.counts_vec(),
+        }
+    }
+
+    /// Summary carried on `EngineStats` into the stats tree.
+    pub fn stats(&self) -> HealthStats {
+        HealthStats { status: self.status(), counts: self.counts_vec() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_grid_is_monotone_and_clamped() {
+        let p = PoolProfile::new(0.01);
+        assert_eq!(p.bin_of(0.01), 0);
+        assert_eq!(p.bin_of(1.0), PROFILE_BINS - 1);
+        assert_eq!(p.bin_of(-5.0), 0);
+        assert_eq!(p.bin_of(5.0), PROFILE_BINS - 1);
+        let mut last = 0;
+        for i in 0..=1000 {
+            let t = 0.01 + (1.0 - 0.01) * i as f64 / 1000.0;
+            let b = p.bin_of(t);
+            assert!(b >= last, "bin_of not monotone at t={t}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn adaptive_totals_reconcile_with_bin_sums() {
+        let mut p = PoolProfile::new(0.01);
+        let (mut acc, mut rej) = (0u64, 0u64);
+        for i in 0..500 {
+            let t = 0.01 + 0.99 * (i as f64 / 500.0);
+            let accepted = i % 3 != 0;
+            p.record_adaptive(t, 0.02, 0.5, accepted);
+            if accepted {
+                acc += 1;
+            } else {
+                rej += 1;
+            }
+        }
+        let (steps, a, r) = p.totals();
+        assert_eq!((steps, a, r), (0, acc, rej));
+        let bin_sum: u64 = p.bins().iter().map(|b| b.accepted + b.rejected).sum();
+        assert_eq!(bin_sum, acc + rej);
+    }
+
+    #[test]
+    fn sampling_cadence_is_one_in_n() {
+        let mut d = PoolDiag::new(0.01, 4, 2);
+        for i in 0..8 {
+            d.on_lane_start(i % 4, 100 + i as u64, 0);
+            d.on_lane_end(i % 4);
+        }
+        assert_eq!(d.snapshot("m", "s", true, None).traces.len(), 4);
+        // sampling off: no traces, no admitted accounting
+        let mut off = PoolDiag::new(0.01, 4, 0);
+        for i in 0..8 {
+            off.on_lane_start(i % 4, i as u64, 0);
+            off.record_adaptive(i % 4, 0.5, 0.02, 0.3, true);
+        }
+        assert!(off.snapshot("m", "s", true, None).traces.is_empty());
+        assert_eq!(off.profile.totals(), (0, 8, 0));
+    }
+
+    #[test]
+    fn trace_ring_evicts_oldest_and_unmarks_live_slot() {
+        let mut d = PoolDiag::with_cap(0.01, 2, 1, 2);
+        d.on_lane_start(0, 1, 0); // pos 0, still running
+        d.on_lane_start(1, 2, 0); // pos 1
+        d.on_lane_end(1);
+        d.on_lane_start(1, 3, 0); // evicts pos 0 (lane 1's trace)
+        // lane in slot 0 lost its record: recording must not leak into
+        // the newcomer that reused its ring position
+        d.record_adaptive(0, 0.5, 0.02, 0.3, true);
+        let snap = d.snapshot("m", "s", true, None);
+        let ids: Vec<u64> = snap.traces.iter().map(|t| t.req_id).collect();
+        assert_eq!(ids, vec![2, 3]);
+        assert!(snap.traces.iter().all(|t| t.steps.is_empty()));
+        assert!(snap.traces.iter().find(|t| t.req_id == 3).is_some_and(|t| !t.done));
+        // evicted-id queries return empty, not stale records
+        assert!(d.snapshot("m", "s", true, Some(1)).traces.is_empty());
+    }
+
+    #[test]
+    fn sampled_lane_records_steps_and_lane_filter_works() {
+        let mut d = PoolDiag::new(0.01, 2, 1);
+        d.on_lane_start(0, 7, 3);
+        d.record_adaptive(0, 0.9, 0.05, 0.8, false);
+        d.record_adaptive(0, 0.9, 0.02, 0.4, true);
+        d.on_lane_end(0);
+        let snap = d.snapshot("m", "s", true, Some(7));
+        assert_eq!(snap.traces.len(), 1);
+        let t = &snap.traces[0];
+        assert!(t.done && t.sample_idx == 3);
+        assert_eq!(t.steps.len(), 2);
+        assert!(!t.steps[0].accepted && t.steps[1].accepted);
+        assert!(d.snapshot("m", "s", true, Some(8)).traces.is_empty());
+    }
+
+    #[test]
+    fn watchdog_fires_stall_after_budget_and_recovers() {
+        let mut w = Watchdog::new(&[2], 0.5);
+        let quiet = PoolHealthSample {
+            adaptive: true,
+            accepted: 0,
+            rejected: 0,
+            step_p95_s: 0.0,
+            step_count: 0,
+        };
+        w.begin_tick();
+        w.tick_pool(0, "vp", "adaptive", &[(0, 0.9)], &quiet, 0.0);
+        w.end_tick(0.0);
+        assert_eq!(w.status(), 1);
+        // same progress 1s later: budget exceeded
+        w.begin_tick();
+        w.tick_pool(0, "vp", "adaptive", &[(0, 0.9)], &quiet, 1.0);
+        w.end_tick(1.0);
+        assert_eq!(w.status(), 0);
+        let r = w.snapshot();
+        assert_eq!(r.events.len(), 1);
+        assert_eq!(r.events[0].kind, "stall");
+        assert_eq!(r.counts.iter().find(|(k, _)| k == "stall").unwrap().1, 1);
+        // progress resumes: healthy again, counter retained
+        w.begin_tick();
+        w.tick_pool(0, "vp", "adaptive", &[(0, 0.7)], &quiet, 1.1);
+        w.end_tick(1.1);
+        assert_eq!(w.status(), 1);
+        assert_eq!(w.snapshot().counts.iter().find(|(k, _)| k == "stall").unwrap().1, 1);
+    }
+
+    #[test]
+    fn watchdog_reject_spike_vs_ewma_baseline() {
+        let mut w = Watchdog::new(&[1], 10.0);
+        let s = |a, r| PoolHealthSample {
+            adaptive: true,
+            accepted: a,
+            rejected: r,
+            step_p95_s: 0.0,
+            step_count: 0,
+        };
+        w.begin_tick();
+        w.tick_pool(0, "vp", "adaptive", &[], &s(90, 10), 0.0); // primes baseline at 0.1
+        w.end_tick(0.0);
+        assert_eq!(w.status(), 1);
+        w.begin_tick();
+        w.tick_pool(0, "vp", "adaptive", &[], &s(100, 30), 1.0); // window rate 0.667
+        w.end_tick(1.0);
+        assert_eq!(w.status(), 0);
+        assert_eq!(w.snapshot().events.last().unwrap().kind, "reject_spike");
+    }
+
+    #[test]
+    fn watchdog_queue_saturation_is_engine_level() {
+        let mut w = Watchdog::new(&[1], 10.0);
+        w.begin_tick();
+        w.check_queue(100, 4096, 0.0);
+        w.end_tick(0.0);
+        assert_eq!(w.status(), 1);
+        w.begin_tick();
+        w.check_queue(4000, 4096, 1.0);
+        w.end_tick(1.0);
+        assert_eq!(w.status(), 0);
+        let ev = w.snapshot().events.last().unwrap().clone();
+        assert_eq!(ev.kind, "queue_saturation");
+        assert!(ev.model.is_empty());
+    }
+
+    #[test]
+    fn watchdog_step_time_drift_needs_new_dispatches() {
+        let mut w = Watchdog::new(&[1], 10.0);
+        let s = |p95, count| PoolHealthSample {
+            adaptive: false,
+            accepted: 0,
+            rejected: 0,
+            step_p95_s: p95,
+            step_count: count,
+        };
+        w.begin_tick();
+        w.tick_pool(0, "vp", "em", &[], &s(0.001, 10), 0.0); // primes baseline
+        w.end_tick(0.0);
+        w.begin_tick();
+        w.tick_pool(0, "vp", "em", &[], &s(0.01, 10), 1.0); // no new dispatches
+        w.end_tick(1.0);
+        assert_eq!(w.status(), 1);
+        w.begin_tick();
+        w.tick_pool(0, "vp", "em", &[], &s(0.01, 20), 2.0);
+        w.end_tick(2.0);
+        assert_eq!(w.status(), 0);
+        assert_eq!(w.snapshot().events.last().unwrap().kind, "step_time_drift");
+    }
+}

@@ -14,6 +14,9 @@
 //! the single engine thread. Admission control (quotas, priorities,
 //! deadlines, weights) lives in `coordinator/qos.rs`.
 
+use super::diagnostics::{
+    DiagQuery, DiagReply, HealthReply, HealthStats, PoolHealthSample, Watchdog,
+};
 use super::eval::{ChunkSpec, EvalManager, EvalRequest, EvalResult};
 use super::programs::{LaneState, StepIo};
 use super::qos::{self, ClassLatencyStats, PoolQosStats, QosConfig, QosState};
@@ -30,7 +33,7 @@ use crate::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -70,6 +73,19 @@ pub struct EngineConfig {
     /// the runtime's dispatch-timeline ring (4x this, there being a few
     /// dispatches per request at typical NFE).
     pub trace_ring: usize,
+    /// Lane-trace sampling for solver diagnostics (`serve
+    /// --diag-sample N`): every Nth admitted lane records its full
+    /// `(t, h, err, accepted)` sequence. 0 (the default) disables
+    /// sampling; the always-on per-pool profiles cost a few float ops
+    /// per lane step and allocate nothing, same contract as
+    /// `--trace-ring 0`.
+    pub diag_sample: usize,
+    /// Seconds between watchdog health ticks (`serve
+    /// --health-interval`). 0 checks on every engine-loop iteration.
+    pub health_interval_s: f64,
+    /// Wall-time a live lane may sit without progress before the
+    /// watchdog fires a `stall` event (`serve --stall-budget`).
+    pub stall_budget_s: f64,
     /// Algorithm-1 controller parameters (paper defaults).
     pub h_init: f64,
     pub r: f64,
@@ -89,6 +105,9 @@ impl EngineConfig {
             max_queue_samples: 4096,
             qos: QosConfig::default(),
             trace_ring: 1024,
+            diag_sample: 0,
+            health_interval_s: 1.0,
+            stall_budget_s: 10.0,
             h_init: 0.01,
             r: 0.9,
             safety: 0.9,
@@ -226,6 +245,9 @@ pub struct EngineStats {
     /// Still-queued requests dequeued by `EngineClient::cancel` (the
     /// async job API's cancel path).
     pub canceled: u64,
+    /// Watchdog summary: health status gauge plus cumulative per-kind
+    /// event counters.
+    pub health: HealthStats,
 }
 
 /// Handle owning the engine thread.
@@ -367,6 +389,22 @@ impl EngineClient {
         self.tx.send(Msg::Trace(q, rtx)).map_err(|_| anyhow!("engine is down"))?;
         rrx.recv().map_err(|_| anyhow!("engine dropped the trace request"))
     }
+
+    /// Snapshot per-pool solver diagnostics: diffusion-time profiles
+    /// (always on) plus sampled lane traces (`serve --diag-sample N`).
+    pub fn diag(&self, q: DiagQuery) -> Result<DiagReply> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Diag(q, rtx)).map_err(|_| anyhow!("engine is down"))?;
+        rrx.recv().map_err(|_| anyhow!("engine dropped the diag request"))
+    }
+
+    /// Snapshot the watchdog's health status, retained events, and
+    /// per-kind counters.
+    pub fn health(&self) -> Result<HealthReply> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Health(rtx)).map_err(|_| anyhow!("engine is down"))?;
+        rrx.recv().map_err(|_| anyhow!("engine dropped the health request"))
+    }
 }
 
 // --- engine internals ---------------------------------------------------------
@@ -404,6 +442,11 @@ struct EngineState<'rt> {
     /// every hot-path record site is gated on that `Option` so disabled
     /// tracing costs neither time nor allocation.
     trace: Option<SpanRing>,
+    /// Engine health watchdog, ticked every `health_interval_s` from
+    /// the engine loop (state it reads — lane progress, accept/reject
+    /// counters, step-time histograms — is all engine-owned, so the
+    /// check is lock-free).
+    watchdog: Watchdog,
 }
 
 fn engine_main(
@@ -427,14 +470,21 @@ fn engine_main(
     // device residency rides the buffer path; with fused buffers off the
     // engine stays single-step and host-resident regardless of config
     let steps = if cfg.fused_buffers { cfg.steps_per_dispatch } else { 1 };
-    let registry =
-        match Registry::load(&rt, &cfg.models, cfg.bucket, cfg.migrate, &cfg.programs, steps) {
-            Ok(r) => r,
-            Err(e) => {
-                let _ = ready.send(Err(format!("{e:#}")));
-                return;
-            }
-        };
+    let registry = match Registry::load(
+        &rt,
+        &cfg.models,
+        cfg.bucket,
+        cfg.migrate,
+        &cfg.programs,
+        steps,
+        cfg.diag_sample,
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
     let model_names: Vec<String> =
         registry.entries().iter().map(|e| e.model.meta.name.clone()).collect();
     let qos = match QosState::new(&cfg.qos, &registry.pool_labels(), &model_names) {
@@ -445,6 +495,11 @@ fn engine_main(
         }
     };
     let trace = if cfg.trace_ring > 0 { Some(SpanRing::new(cfg.trace_ring)) } else { None };
+    // per-pool lane tracking sized at load width — the widest rung, an
+    // upper bound on every later migration target
+    let widths: Vec<usize> =
+        registry.entries().iter().flat_map(|e| e.pools.iter().map(|p| p.slots.len())).collect();
+    let watchdog = Watchdog::new(&widths, cfg.stall_budget_s);
     let mut st = EngineState {
         registry,
         cfg,
@@ -455,19 +510,23 @@ fn engine_main(
         evals: EvalManager::new(),
         qos,
         trace,
+        watchdog,
     };
     let _ = ready.send(Ok(()));
 
     loop {
-        // 1. drain the mailbox (block only when every pool is idle)
+        // 1. drain the mailbox (block only when every pool is idle; the
+        //    timeout keeps watchdog ticks firing while quiescent)
         if st.registry.all_idle() {
-            match rx.recv() {
+            let wait = Duration::from_secs_f64(st.cfg.health_interval_s.clamp(0.01, 60.0));
+            match rx.recv_timeout(wait) {
                 Ok(msg) => {
                     if st.handle_msg(msg) {
                         return;
                     }
                 }
-                Err(_) => return,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
             }
         }
         loop {
@@ -481,7 +540,12 @@ fn engine_main(
                 Err(mpsc::TryRecvError::Disconnected) => return,
             }
         }
-        // 2. service the next pool with work (deficit-weighted
+        // 2. periodic health check (interval 0 = every iteration)
+        let now = telemetry::now_s();
+        if now - st.watchdog.last_tick_s >= st.cfg.health_interval_s {
+            st.health_tick(now);
+        }
+        // 3. service the next pool with work (deficit-weighted
         //    round-robin): shed expired queued requests, re-bucket to
         //    the cheapest fitting width, admit queued samples, advance
         //    one iteration of its solver program
@@ -535,6 +599,27 @@ impl<'rt> EngineState<'rt> {
                     Vec::new()
                 };
                 let _ = reply.send(TraceReply { spans, timeline });
+                false
+            }
+            Msg::Diag(q, reply) => {
+                let mut pools = Vec::new();
+                for e in self.registry.entries() {
+                    let model_name = &e.model.meta.name;
+                    for pool in &e.pools {
+                        let solver = pool.program.solver_name();
+                        if !q.matches_pool(model_name, solver) {
+                            continue;
+                        }
+                        let adaptive = crate::solvers::spec::kernel(solver)
+                            .is_some_and(|sk| sk.adaptive);
+                        pools.push(pool.diag.snapshot(model_name, solver, adaptive, q.lane));
+                    }
+                }
+                let _ = reply.send(DiagReply { pools });
+                false
+            }
+            Msg::Health(reply) => {
+                let _ = reply.send(self.watchdog.snapshot());
                 false
             }
             Msg::Generate(req, reply) => {
@@ -853,6 +938,9 @@ impl<'rt> EngineState<'rt> {
         if target != pool.sched.width() {
             sync_pool_host(model, pool)?;
             migrate_lanes(&mut pool.slots, &mut pool.x, &mut pool.xprev, target);
+            // migration compacts live lanes into new slots; open trace
+            // markers follow their lanes
+            pool.diag.remap(&pool.slots);
             pool.sched.set_width(target);
         }
         Ok(())
@@ -892,7 +980,7 @@ impl<'rt> EngineState<'rt> {
         {
             sync_pool_host(model, pool)?;
         }
-        let ProgramPool { program, slots, x, xprev, fifo, .. } = pool;
+        let ProgramPool { program, slots, x, xprev, fifo, diag, .. } = pool;
         let mut fi = 0;
         for si in 0..slots.len() {
             if !slots[si].is_free() {
@@ -951,6 +1039,7 @@ impl<'rt> EngineState<'rt> {
                 rng,
                 state: program.init_lane(cfg, &process, &p.req),
             };
+            diag.on_lane_start(si, id, sample_idx);
         }
         // drop fully-admitted-and-finished request ids from fifo head
         fifo.retain(|id| pending.contains_key(id));
@@ -981,7 +1070,7 @@ impl<'rt> EngineState<'rt> {
         let step_start = Instant::now();
         let outcome = {
             let ModelEntry { model, process, pools } = e;
-            let ProgramPool { program, slots, x, xprev, dev_x, steps_per_dispatch, .. } =
+            let ProgramPool { program, slots, x, xprev, dev_x, steps_per_dispatch, diag, .. } =
                 &mut pools[pi];
             let k = *steps_per_dispatch;
             program.step(StepIo {
@@ -993,6 +1082,7 @@ impl<'rt> EngineState<'rt> {
                 xprev,
                 dev_x,
                 steps_per_dispatch: k,
+                diag,
             })?
         };
         metrics.steps += 1;
@@ -1049,6 +1139,8 @@ impl<'rt> EngineState<'rt> {
             }
             *s = Slot::Free;
         }
+        // every open sampled trace ends truncated with the reset
+        pool.diag.clear_slots();
         ids.sort_unstable();
         ids.dedup();
         for id in ids {
@@ -1065,6 +1157,49 @@ impl<'rt> EngineState<'rt> {
             }
         }
         self.evals.fail_jobs_on_pool(mi, pi, msg);
+    }
+
+    /// One watchdog tick: queue saturation at the engine level, then
+    /// stalled-lane / reject-spike / p95-drift checks per pool in flat
+    /// service order. Reads only engine-owned state; the occupied-lane
+    /// scratch Vec is the tick's sole allocation (periodic, not
+    /// per-step).
+    fn health_tick(&mut self, now: f64) {
+        let EngineState { registry, watchdog, queued_samples, cfg, .. } = self;
+        watchdog.begin_tick();
+        watchdog.check_queue(*queued_samples, cfg.max_queue_samples, now);
+        let mut flat = 0usize;
+        let mut lanes: Vec<(usize, f64)> = Vec::new();
+        for e in registry.entries() {
+            let model_name = &e.model.meta.name;
+            for pool in &e.pools {
+                lanes.clear();
+                for (si, s) in pool.slots.iter().enumerate() {
+                    if let Slot::Running { state, .. } = s {
+                        // any monotone scalar that moves on every real
+                        // step works as lane progress
+                        let progress = match state {
+                            LaneState::Adaptive { t, .. } => *t,
+                            LaneState::Fixed { done, .. } => *done as f64,
+                        };
+                        lanes.push((si, progress));
+                    }
+                }
+                let solver = pool.program.solver_name();
+                let adaptive =
+                    crate::solvers::spec::kernel(solver).is_some_and(|sk| sk.adaptive);
+                let sample = PoolHealthSample {
+                    adaptive,
+                    accepted: pool.accepted,
+                    rejected: pool.rejected,
+                    step_p95_s: pool.step_time.quantile(0.95),
+                    step_count: pool.step_time.count(),
+                };
+                watchdog.tick_pool(flat, model_name, solver, &lanes, &sample, now);
+                flat += 1;
+            }
+        }
+        watchdog.end_tick(now);
     }
 
     fn stats(&self) -> EngineStats {
@@ -1108,6 +1243,7 @@ impl<'rt> EngineState<'rt> {
                     step_p99_s: pool.step_time.quantile(0.99),
                     accepted: pool.accepted,
                     rejected: pool.rejected,
+                    steps_per_bucket: s.steps_per_bucket(),
                 });
                 flat += 1;
                 let name = pool.program.solver_name();
@@ -1181,6 +1317,7 @@ impl<'rt> EngineState<'rt> {
             shed_deadline: self.qos.shed_deadline,
             rejected_quota: self.qos.rejected_quota,
             canceled: self.qos.canceled,
+            health: self.watchdog.stats(),
         }
     }
 }
@@ -1271,6 +1408,7 @@ fn finish_lanes(
             }
         }
         e.pools[pi].slots[i] = Slot::Free;
+        e.pools[pi].diag.on_lane_end(i);
     }
     Ok(eval_done)
 }

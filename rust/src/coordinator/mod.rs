@@ -34,6 +34,7 @@
 //! Ownership: PJRT handles are not Send, so the engine thread creates and
 //! owns the `Runtime`; everything else talks to it via channels.
 
+pub mod diagnostics;
 pub mod engine;
 pub(crate) mod eval;
 pub(crate) mod programs;
@@ -42,6 +43,9 @@ pub(crate) mod registry;
 pub mod scheduler;
 pub mod telemetry;
 
+pub use diagnostics::{
+    DiagQuery, DiagReply, HealthEvent, HealthReply, HealthStats, PoolDiagSnapshot,
+};
 pub use engine::{
     CancelOutcome, Engine, EngineClient, EngineConfig, EngineStats, GenResult, ProgramStats,
 };
@@ -99,6 +103,11 @@ pub(crate) enum Msg {
     /// Snapshot the span ring (and optionally the runtime's dispatch
     /// timeline) for the `trace` wire op.
     Trace(telemetry::TraceQuery, mpsc::Sender<telemetry::TraceReply>),
+    /// Snapshot per-pool solver diagnostics (profiles + sampled lane
+    /// traces) for the `diag` wire op.
+    Diag(diagnostics::DiagQuery, mpsc::Sender<diagnostics::DiagReply>),
+    /// Snapshot the watchdog's health ring for the `health` wire op.
+    Health(mpsc::Sender<diagnostics::HealthReply>),
     Shutdown,
 }
 

@@ -31,6 +31,7 @@
 //! co-batched traffic — for fixed-step programs exactly as for the
 //! adaptive solver.
 
+use super::diagnostics::PoolDiag;
 use super::engine::EngineConfig;
 use super::{SampleRequest, Slot};
 use crate::runtime::{DeviceSlab, ExecArg, Model};
@@ -73,6 +74,11 @@ pub(crate) struct StepIo<'a, 'rt> {
     /// Grid nodes each fused dispatch advances a live lane by (the
     /// pool's resolved `k`; 1 = today's single-step host path).
     pub steps_per_dispatch: usize,
+    /// Pool diagnostics sink: the always-on diffusion-time profile plus
+    /// the 1-in-N sampled lane traces (`--diag-sample`). Programs feed
+    /// it from the values their step folds already compute — pre-step
+    /// `(t, h)`, the error norm, and the accept/reject outcome.
+    pub diag: &'a mut PoolDiag,
 }
 
 /// Outcome of one fused pool step.
@@ -209,6 +215,16 @@ impl LaneProgram for AdaptiveProgram {
             };
             *nfe += 2;
             let err = e2.data[i] as f64;
+            // profile the proposal at its pre-step (t, h) — the inputs
+            // the dispatch actually ran with, kept alive in the arg
+            // tensors
+            io.diag.record_adaptive(
+                i,
+                t_t.data[i] as f64,
+                h_t.data[i] as f64,
+                err,
+                err <= 1.0,
+            );
             if err <= 1.0 {
                 io.x.row_mut(i).copy_from_slice(xpp.row(i));
                 io.xprev.row_mut(i).copy_from_slice(xp.row(i));
@@ -305,6 +321,7 @@ impl LaneProgram for FixedProgram {
                 occupied += 1;
                 let t = uniform_t(t_eps, *total, *done);
                 let tn = uniform_t(t_eps, *total, *done + 1);
+                io.diag.record_fixed(i, t, t - tn);
                 t_in[i] = t as f32;
                 t2_in[i] = match self.kernel.time {
                     TimeArg::StepSize => (t - tn) as f32,
@@ -377,6 +394,7 @@ impl FixedProgram {
                 for j in 0..r {
                     let t = uniform_t(t_eps, *total, *done + j);
                     let tn = uniform_t(t_eps, *total, *done + j + 1);
+                    io.diag.record_fixed(i, t, t - tn);
                     t_in[j * b + i] = t as f32;
                     t2_in[j * b + i] = match self.kernel.time {
                         TimeArg::StepSize => (t - tn) as f32,

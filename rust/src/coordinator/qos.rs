@@ -393,6 +393,10 @@ pub struct PoolQosStats {
     /// test; always 0 for fixed-step pools, which never reject).
     pub accepted: u64,
     pub rejected: u64,
+    /// Step executions per bucket width, ascending — the per-pool
+    /// split of the program-level breakdown, exported as
+    /// `gofast_pool_bucket_steps_total{model,solver,bucket}`.
+    pub steps_per_bucket: Vec<(usize, u64)>,
 }
 
 /// All QoS state the engine threads through admission and service:

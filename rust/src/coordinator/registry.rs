@@ -21,6 +21,7 @@
 //! manifest offers, and requests for an absent pool get a clean
 //! protocol error at admission instead of an engine-thread fault.
 
+use super::diagnostics::PoolDiag;
 use super::programs::{self, LaneProgram};
 use super::scheduler::BucketScheduler;
 use super::Slot;
@@ -65,6 +66,10 @@ pub(crate) struct ProgramPool {
     /// adaptive-only.
     pub accepted: u64,
     pub rejected: u64,
+    /// Solver-numerics diagnostics: the always-on diffusion-time
+    /// profile plus the 1-in-N sampled lane traces (`--diag-sample`;
+    /// 0 keeps the per-step path allocation-free, profile only).
+    pub diag: PoolDiag,
 }
 
 impl ProgramPool {
@@ -166,6 +171,7 @@ impl<'rt> Registry<'rt> {
         migrate: bool,
         programs: &[String],
         steps_per_dispatch: usize,
+        diag_sample: usize,
     ) -> Result<Registry<'rt>> {
         if names.is_empty() {
             bail!("registry needs at least one model");
@@ -263,6 +269,7 @@ impl<'rt> Registry<'rt> {
                     step_time: Histogram::new(),
                     accepted: 0,
                     rejected: 0,
+                    diag: PoolDiag::new(process.t_eps(), width, diag_sample),
                 });
             }
             if pools.is_empty() {

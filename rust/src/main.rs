@@ -9,6 +9,9 @@
 //!             engine's scheduler/registry path (--offline bypasses it)
 //!   trace     dump request-lifecycle spans and dispatch timelines from
 //!             a running server (--chrome writes a chrome://tracing file)
+//!   diag      dump per-pool solver profiles and sampled lane traces
+//!             (--csv for plot-ready output)
+//!   health    print the engine watchdog's status, counters and events
 //!
 //! Paper-table regeneration lives in `benches/` (cargo bench).
 
@@ -39,6 +42,8 @@ fn main() {
         "inspect" => cmd_inspect(&args),
         "evaluate" => cmd_evaluate(&args),
         "trace" => cmd_trace(&args),
+        "diag" => cmd_diag(&args),
+        "health" => cmd_health(&args),
         "help" | "--help" => {
             print!("{}", USAGE);
             Ok(())
@@ -68,6 +73,7 @@ USAGE: gofast <command> [flags]
             [--steps-per-dispatch 1] [--weights vp=3,ve=1|vp/em=0.5]
             [--quota vp=256] [--quota-lanes vp=8]
             [--default-priority interactive|batch] [--trace-ring 1024]
+            [--diag-sample 0] [--health-interval 1.0] [--stall-budget 10.0]
             [--set k=v ...]
             (--steps-per-dispatch k>1 keeps fixed-step lane state
              device-resident and advances k grid nodes per kernel
@@ -80,6 +86,11 @@ USAGE: gofast <command> [flags]
              priority/deadline_ms — see rust/src/server/mod.rs)
             (--trace-ring N keeps the newest N request-lifecycle spans
              for the trace op; 0 disables tracing entirely)
+            (--diag-sample N records every Nth admitted lane's full
+             (t, h, err, accepted) step sequence for the diag op; 0 —
+             the default — keeps the hot step path allocation-free.
+             --health-interval / --stall-budget tune the watchdog's
+             check cadence and per-lane no-progress budget, seconds)
   client    [generate|submit|poll|cancel|watch|hello|metrics]
             [--addr 127.0.0.1:7878] [--model vp]
             [--solver adaptive|em:<n>|ddim:<n>|pc:<n>[@<snr>]]
@@ -109,7 +120,18 @@ USAGE: gofast <command> [flags]
             (dump request-lifecycle spans + the dispatch timeline from a
              running server's trace ring; --chrome writes a
              chrome://tracing / Perfetto timeline JSON with per-dispatch
-             upload/exec/download phases; --last 0 = all retained spans)
+             upload/exec/download phases and watchdog health events as
+             instant markers; --last 0 = all retained spans)
+  diag      [--addr 127.0.0.1:7878] [--pool model:solver] [--lane id]
+            [--csv]
+            (dump per-pool diffusion-time profiles — step sizes,
+             accept/reject counts, error norms per bin — and, when the
+             server runs with --diag-sample, retained lane traces.
+             --csv emits plot-ready rows: bins by default, one row per
+             recorded step with --lane)
+  health    [--addr 127.0.0.1:7878]
+            (print the watchdog's status gauge, per-kind event
+             counters, and the retained health-event ring)
 ";
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -293,6 +315,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     ecfg.max_queue_samples = cfg.usize_or("server.max_queue_samples", 4096)?;
     ecfg.trace_ring =
         args.usize_or("trace-ring", cfg.usize_or("server.trace_ring", 1024)?)?;
+    ecfg.diag_sample =
+        args.usize_or("diag-sample", cfg.usize_or("server.diag_sample", 0)?)?;
+    ecfg.health_interval_s = args
+        .f64_or("health-interval", cfg.f64_or("server.health_interval_s", 1.0)?)?;
+    ecfg.stall_budget_s =
+        args.f64_or("stall-budget", cfg.f64_or("server.stall_budget_s", 10.0)?)?;
     ecfg.qos = qcfg;
 
     let engine = Engine::start(ecfg)?;
@@ -429,6 +457,7 @@ fn cmd_client(args: &Args) -> Result<()> {
                 for u in client.poll_job(id, 1000, binary)? {
                     print_update(&u);
                     print_watch_trace(&mut client, id);
+                    print_watch_health(&mut client);
                     seen += 1;
                 }
                 if rounds > 0 && seen >= rounds {
@@ -471,6 +500,28 @@ fn print_watch_trace(client: &mut gofast::server::Client, job: u64) {
     );
 }
 
+/// Watchdog line under each watch round: overall status plus any
+/// event kinds that have fired so far. Silent against servers that
+/// predate the health op.
+fn print_watch_health(client: &mut gofast::server::Client) {
+    let Ok(v) = client.health() else { return };
+    let Ok(status) = v.req("status").and_then(|s| s.as_f64()) else { return };
+    let mut fired = Vec::new();
+    if let Ok(counts) = v.req("counts") {
+        for (kind, n) in counts.members() {
+            if n.as_f64().unwrap_or(0.0) > 0.0 {
+                fired.push(format!("{kind}={}", n.as_f64().unwrap_or(0.0) as u64));
+            }
+        }
+    }
+    println!(
+        "  health {}{}{}",
+        if status >= 1.0 { "ok" } else { "DEGRADED" },
+        if fired.is_empty() { "" } else { " " },
+        fired.join(" "),
+    );
+}
+
 /// `gofast trace`: dump the server's span ring (and dispatch timeline)
 /// as text, or as a chrome://tracing / Perfetto JSON with --chrome.
 fn cmd_trace(args: &Args) -> Result<()> {
@@ -481,12 +532,22 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let spans = v.req("spans")?.as_arr()?;
     let timeline = v.req("timeline")?.as_arr()?;
     if let Some(out) = args.get("chrome") {
-        let text = chrome_trace(spans, timeline)?;
+        // watchdog events share the telemetry epoch with the rings, so
+        // firings line up with the dispatch timeline; tolerate servers
+        // that predate the health op
+        let health = client.health().ok();
+        let events = health
+            .as_ref()
+            .and_then(|h| h.req("events").and_then(|e| e.as_arr()).ok())
+            .unwrap_or(&[]);
+        let text = chrome_trace(spans, timeline, events)?;
         std::fs::write(out, &text).with_context(|| format!("writing {out}"))?;
         println!(
-            "wrote {out}: {} request spans, {} dispatches (open in chrome://tracing or Perfetto)",
+            "wrote {out}: {} request spans, {} dispatches, {} health events \
+             (open in chrome://tracing or Perfetto)",
             spans.len(),
-            timeline.len()
+            timeline.len(),
+            events.len()
         );
         return Ok(());
     }
@@ -526,9 +587,14 @@ fn cmd_trace(args: &Args) -> Result<()> {
 /// Chrome-trace ("trace event format") export: one complete ("X")
 /// event per finished request span (its own tid, so concurrent
 /// requests stack instead of clobbering), plus upload/exec/download
-/// phase events per dispatch on tid 0. Timestamps are microseconds on
-/// the telemetry epoch shared by both rings.
-fn chrome_trace(spans: &[json::Value], timeline: &[json::Value]) -> Result<String> {
+/// phase events per dispatch on tid 0, plus one global-scope instant
+/// ("i") marker per watchdog health event. Timestamps are microseconds
+/// on the telemetry epoch shared by all three sources.
+fn chrome_trace(
+    spans: &[json::Value],
+    timeline: &[json::Value],
+    health: &[json::Value],
+) -> Result<String> {
     use json::Value;
     let mut events: Vec<Value> = Vec::new();
     for d in timeline {
@@ -578,7 +644,202 @@ fn chrome_trace(spans: &[json::Value], timeline: &[json::Value]) -> Result<Strin
             ("args", s.clone()),
         ]));
     }
+    for h in health {
+        // global-scope instant events draw a full-height line across
+        // every track, so firings line up with the dispatch timeline
+        let Some(at) = h.get("at_s").and_then(|x| x.as_f64().ok()) else { continue };
+        let kind = h.get("kind").and_then(|x| x.as_str().ok()).unwrap_or("health");
+        events.push(Value::obj(vec![
+            ("name", Value::str(kind)),
+            ("cat", Value::str("health")),
+            ("ph", Value::str("i")),
+            ("s", Value::str("g")),
+            ("ts", Value::num(at * 1e6)),
+            ("pid", Value::num(0.0)),
+            ("tid", Value::num(0.0)),
+            ("args", h.clone()),
+        ]));
+    }
     Ok(Value::obj(vec![("traceEvents", Value::Arr(events))]).to_string())
+}
+
+/// `gofast diag`: per-pool solver profiles (step sizes, accept/reject
+/// counts, error norms over the diffusion-time grid) plus any sampled
+/// lane traces, as text or plot-ready CSV. `--lane` narrows traces to
+/// one request id; with `--csv` it switches the output to one row per
+/// recorded step instead of one row per profile bin.
+fn cmd_diag(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let mut client = gofast::server::Client::connect(&addr)?;
+    let lane = match args.get("lane") {
+        Some(_) => Some(args.u64_or("lane", 0)?),
+        None => None,
+    };
+    let v = client.diag(args.get("pool"), lane)?;
+    let pools = v.req("pools")?.as_arr()?;
+    if args.has("csv") {
+        return print_diag_csv(pools, lane.is_some());
+    }
+    for p in pools {
+        let g = |k: &str| p.get(k).and_then(|x| x.as_str().ok()).unwrap_or("?");
+        let adaptive = p.get("adaptive").and_then(|x| x.as_bool().ok()).unwrap_or(false);
+        let bins = p.req("bins")?.as_arr()?;
+        let traces = p.req("traces")?.as_arr()?;
+        let (mut steps, mut acc, mut rej) = (0u64, 0u64, 0u64);
+        for b in bins {
+            let f = |k: &str| b.get(k).and_then(|x| x.as_f64().ok()).unwrap_or(0.0);
+            steps += f("steps") as u64;
+            acc += f("accepted") as u64;
+            rej += f("rejected") as u64;
+        }
+        if adaptive {
+            let n = (acc + rej).max(1);
+            println!(
+                "pool {}/{} adaptive: {} proposals ({} accepted, {} rejected, \
+                 reject rate {:.3}), {} sampled traces",
+                g("model"),
+                g("solver"),
+                acc + rej,
+                acc,
+                rej,
+                rej as f64 / n as f64,
+                traces.len(),
+            );
+        } else {
+            println!(
+                "pool {}/{} fixed: {} grid nodes, {} sampled traces",
+                g("model"),
+                g("solver"),
+                steps,
+                traces.len(),
+            );
+        }
+        for b in bins {
+            let f = |k: &str| b.get(k).and_then(|x| x.as_f64().ok()).unwrap_or(0.0);
+            if f("steps") + f("accepted") + f("rejected") == 0.0 {
+                continue; // untouched bin
+            }
+            if adaptive {
+                println!(
+                    "  t [{:.3}, {:.3}): acc={} rej={} h_mean={:.4} h=[{:.4}, {:.4}] \
+                     err_mean={:.3} err_max={:.3}",
+                    f("t_lo"),
+                    f("t_hi"),
+                    f("accepted") as u64,
+                    f("rejected") as u64,
+                    f("h_mean"),
+                    f("h_min"),
+                    f("h_max"),
+                    f("err_mean"),
+                    f("err_max"),
+                );
+            } else {
+                println!(
+                    "  t [{:.3}, {:.3}): steps={}",
+                    f("t_lo"),
+                    f("t_hi"),
+                    f("steps") as u64
+                );
+            }
+        }
+        for t in traces {
+            let f = |k: &str| t.get(k).and_then(|x| x.as_f64().ok()).unwrap_or(0.0);
+            let done = t.get("done").and_then(|x| x.as_bool().ok()).unwrap_or(false);
+            let n = t.req("steps")?.as_arr()?.len();
+            println!(
+                "  trace lane={} sample={} steps={} {}",
+                f("lane") as u64,
+                f("sample") as u64,
+                n,
+                if done { "done" } else { "running" },
+            );
+        }
+    }
+    if pools.is_empty() {
+        println!("no pools matched (diag --pool takes model:solver or model/solver)");
+    }
+    Ok(())
+}
+
+/// Plot-ready CSV for `gofast diag --csv`: one row per profile bin,
+/// or — with `--lane` — one row per recorded step of that lane's
+/// sampled traces.
+fn print_diag_csv(pools: &[json::Value], per_step: bool) -> Result<()> {
+    if per_step {
+        println!("model,solver,lane,sample,step,t,h,err,accepted");
+    } else {
+        println!(
+            "model,solver,bin,t_lo,t_hi,steps,accepted,rejected,\
+             h_mean,h_min,h_max,err_mean,err_max"
+        );
+    }
+    for p in pools {
+        let g = |k: &str| p.get(k).and_then(|x| x.as_str().ok()).unwrap_or("?");
+        let (model, solver) = (g("model"), g("solver"));
+        if per_step {
+            for t in p.req("traces")?.as_arr()? {
+                let tf = |k: &str| t.get(k).and_then(|x| x.as_f64().ok()).unwrap_or(0.0);
+                for (i, s) in t.req("steps")?.as_arr()?.iter().enumerate() {
+                    let sf = |k: &str| s.get(k).and_then(|x| x.as_f64().ok()).unwrap_or(0.0);
+                    let acc = s.get("accepted").and_then(|x| x.as_bool().ok()).unwrap_or(false);
+                    println!(
+                        "{model},{solver},{},{},{i},{},{},{},{}",
+                        tf("lane") as u64,
+                        tf("sample") as u64,
+                        sf("t"),
+                        sf("h"),
+                        sf("err"),
+                        acc as u8,
+                    );
+                }
+            }
+        } else {
+            for (i, b) in p.req("bins")?.as_arr()?.iter().enumerate() {
+                let f = |k: &str| b.get(k).and_then(|x| x.as_f64().ok()).unwrap_or(0.0);
+                println!(
+                    "{model},{solver},{i},{},{},{},{},{},{},{},{},{},{}",
+                    f("t_lo"),
+                    f("t_hi"),
+                    f("steps") as u64,
+                    f("accepted") as u64,
+                    f("rejected") as u64,
+                    f("h_mean"),
+                    f("h_min"),
+                    f("h_max"),
+                    f("err_mean"),
+                    f("err_max"),
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `gofast health`: the watchdog's status gauge, per-kind cumulative
+/// counters, and the retained health-event ring (oldest first).
+fn cmd_health(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let mut client = gofast::server::Client::connect(&addr)?;
+    let v = client.health()?;
+    let status = v.req("status")?.as_f64()?;
+    println!("status {}", if status >= 1.0 { "ok" } else { "DEGRADED" });
+    for (kind, n) in v.req("counts")?.members() {
+        println!("  {kind}: {}", n.as_f64()? as u64);
+    }
+    let events = v.req("events")?.as_arr()?;
+    for e in events {
+        let g = |k: &str| e.get(k).and_then(|x| x.as_str().ok()).unwrap_or("");
+        let at = e.get("at_s").and_then(|x| x.as_f64().ok()).unwrap_or(0.0);
+        let pool = match (g("model"), g("solver")) {
+            ("", _) => String::new(),
+            (m, s) => format!(" {m}/{s}"),
+        };
+        println!("event +{at:.3}s {}{pool}: {}", g("kind"), g("detail"));
+    }
+    if events.is_empty() {
+        println!("no health events recorded");
+    }
+    Ok(())
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {

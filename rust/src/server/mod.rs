@@ -1,7 +1,8 @@
 //! JSON-lines TCP serving front-end + client library.
 //!
 //! The wire protocol — ops (`hello`/`ping`/`stats`/`generate`/
-//! `evaluate`/`submit`/`poll`/`cancel`/`periodic`/`trace`/`metrics`),
+//! `evaluate`/`submit`/`poll`/`cancel`/`periodic`/`trace`/`metrics`/
+//! `diag`/`health`),
 //! the error-code table, binary payload framing, and the version
 //! field — is specified
 //! in **docs/PROTOCOL.md**; this module is its implementation. In
@@ -25,7 +26,8 @@ pub mod jobs;
 pub mod stats;
 
 use crate::coordinator::{
-    qos, EngineClient, EvalRequest as EngineEvalRequest, GenResult, SampleRequest, TraceQuery,
+    qos, DiagQuery, EngineClient, EvalRequest as EngineEvalRequest, GenResult, SampleRequest,
+    TraceQuery,
 };
 use crate::json::{self, Value};
 use crate::solvers::spec;
@@ -39,9 +41,9 @@ use std::sync::Arc;
 pub const PROTO_VERSION: u64 = 1;
 
 /// Every op the server answers; unknown-op errors echo this list.
-pub const OPS: [&str; 11] = [
+pub const OPS: [&str; 13] = [
     "hello", "ping", "stats", "generate", "evaluate", "submit", "poll", "cancel", "periodic",
-    "trace", "metrics",
+    "trace", "metrics", "diag", "health",
 ];
 
 pub struct ServerConfig {
@@ -376,6 +378,45 @@ fn handle_request(
                 ("ok", Value::Bool(true)),
                 ("spans", Value::Arr(r.spans.iter().map(|s| s.to_json()).collect())),
                 ("timeline", Value::Arr(r.timeline.iter().map(|d| d.to_json()).collect())),
+            ])))
+        }
+        "diag" => {
+            // per-pool solver diagnostics: diffusion-time profiles plus
+            // any sampled lane traces (docs/PROTOCOL.md §diag)
+            let pool = req
+                .get("pool")
+                .map(|v| v.as_str().map(String::from))
+                .transpose()
+                .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?;
+            let lane = req
+                .get("lane")
+                .map(|v| v.as_f64())
+                .transpose()
+                .map_err(|e| coded_or(e, qos::CODE_BAD_REQUEST))?
+                .map(|v| v as u64);
+            let r = engine.diag(DiagQuery { pool, lane })?;
+            Ok(Reply::head(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("pools", Value::Arr(r.pools.iter().map(|p| p.to_json()).collect())),
+            ])))
+        }
+        "health" => {
+            // watchdog status, retained events, per-kind counters
+            // (docs/PROTOCOL.md §health)
+            let r = engine.health()?;
+            Ok(Reply::head(Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("status", Value::num(r.status as f64)),
+                ("events", Value::Arr(r.events.iter().map(|e| e.to_json()).collect())),
+                (
+                    "counts",
+                    Value::Obj(
+                        r.counts
+                            .iter()
+                            .map(|(k, n)| (k.clone(), Value::num(*n as f64)))
+                            .collect(),
+                    ),
+                ),
             ])))
         }
         "generate" => {
@@ -926,6 +967,29 @@ impl Client {
             pairs.push(("job", Value::num(j as f64)));
         }
         self.call(&Value::obj(pairs))
+    }
+
+    /// Per-pool solver diagnostics (docs/PROTOCOL.md §diag): the
+    /// diffusion-time profile bins plus any sampled lane traces.
+    /// `pool` filters to one `model/solver` (or `model:solver`) pool;
+    /// `lane` filters traces to one request id. Returns the raw
+    /// response object (`pools` array).
+    pub fn diag(&mut self, pool: Option<&str>, lane: Option<u64>) -> Result<Value> {
+        let mut pairs = vec![("op", Value::str("diag"))];
+        if let Some(p) = pool {
+            pairs.push(("pool", Value::str(p)));
+        }
+        if let Some(l) = lane {
+            pairs.push(("lane", Value::num(l as f64)));
+        }
+        self.call(&Value::obj(pairs))
+    }
+
+    /// Watchdog health snapshot (docs/PROTOCOL.md §health): `status`
+    /// gauge (1 healthy / 0 degraded), retained `events`, per-kind
+    /// `counts`. Returns the raw response object.
+    pub fn health(&mut self) -> Result<Value> {
+        self.call(&Value::obj(vec![("op", Value::str("health"))]))
     }
 
     /// The full stats tree in Prometheus text exposition format

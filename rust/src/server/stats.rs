@@ -83,6 +83,9 @@ pub struct PoolNode {
     pub model: String,
     pub solver: String,
     pub scalars: Vec<Scalar>,
+    /// Step executions per bucket width
+    /// (`gofast_pool_bucket_steps_total{model,solver,bucket}`).
+    pub steps_per_bucket: Vec<(usize, u64)>,
 }
 
 /// Per-priority-class latency breakdown (`qos.classes` object, `class`
@@ -105,6 +108,11 @@ pub struct StatsTree {
     pub qos_root: Vec<Scalar>,
     pub pools: Vec<PoolNode>,
     pub classes: Vec<ClassNode>,
+    /// Watchdog summary (`health` object, appended after `qos`):
+    /// the `gofast_health_status` gauge plus per-kind
+    /// `gofast_health_events_total{kind}` counters.
+    pub health: Vec<Scalar>,
+    pub health_counts: Vec<(String, u64)>,
 }
 
 impl StatsTree {
@@ -257,6 +265,7 @@ impl StatsTree {
                         ),
                         Scalar::prom_only("pool_adaptive_reject_rate", Kind::Gauge, reject_rate),
                     ],
+                    steps_per_bucket: p.steps_per_bucket.clone(),
                 }
             })
             .collect();
@@ -319,6 +328,8 @@ impl StatsTree {
             qos_root,
             pools,
             classes,
+            health: vec![Scalar::gauge("status", "health_status", s.health.status as f64)],
+            health_counts: s.health.counts.clone(),
         }
     }
 
@@ -356,7 +367,12 @@ impl StatsTree {
             Value::Obj(
                 self.pools
                     .iter()
-                    .map(|p| (format!("{}/{}", p.model, p.solver), scalars_obj(&p.scalars)))
+                    .map(|p| {
+                        let mut o: Vec<(String, Value)> = Vec::new();
+                        push_json(&mut o, &p.scalars);
+                        o.push(("steps_per_bucket".to_string(), buckets_obj(&p.steps_per_bucket)));
+                        (format!("{}/{}", p.model, p.solver), Value::Obj(o))
+                    })
                     .collect(),
             ),
         ));
@@ -367,6 +383,18 @@ impl StatsTree {
             ),
         ));
         root.push(("qos".to_string(), Value::Obj(qos)));
+        let mut health: Vec<(String, Value)> = Vec::new();
+        push_json(&mut health, &self.health);
+        health.push((
+            "events".to_string(),
+            Value::Obj(
+                self.health_counts
+                    .iter()
+                    .map(|(k, n)| (k.clone(), Value::num(*n as f64)))
+                    .collect(),
+            ),
+        ));
+        root.push(("health".to_string(), Value::Obj(health)));
         Value::Obj(root)
     }
 
@@ -406,10 +434,29 @@ impl StatsTree {
             let base =
                 format!("model=\"{}\",solver=\"{}\"", escape(&p.model), escape(&p.solver));
             emit(&mut series, &p.scalars, &base);
+            for &(b, n) in &p.steps_per_bucket {
+                add(
+                    &mut series,
+                    "pool_bucket_steps_total",
+                    Kind::Counter,
+                    format!("{base},bucket=\"{b}\""),
+                    n as f64,
+                );
+            }
         }
         for c in &self.classes {
             let base = format!("class=\"{}\"", escape(&c.class));
             emit(&mut series, &c.scalars, &base);
+        }
+        emit(&mut series, &self.health, "");
+        for (k, n) in &self.health_counts {
+            add(
+                &mut series,
+                "health_events_total",
+                Kind::Counter,
+                format!("kind=\"{}\"", escape(k)),
+                *n as f64,
+            );
         }
         let mut out = String::new();
         for s in &series {
@@ -494,7 +541,7 @@ fn escape(s: &str) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{ClassLatencyStats, PoolQosStats, ProgramStats};
+    use crate::coordinator::{ClassLatencyStats, HealthStats, PoolQosStats, ProgramStats};
 
     fn sample() -> (EngineStats, JobStats) {
         let s = EngineStats {
@@ -553,6 +600,7 @@ mod tests {
                 step_p99_s: 0.04,
                 accepted: 343,
                 rejected: 7,
+                steps_per_bucket: vec![(8, 60), (16, 40)],
             }],
             classes: vec![ClassLatencyStats {
                 class: "interactive".to_string(),
@@ -571,6 +619,15 @@ mod tests {
             shed_deadline: 1,
             rejected_quota: 2,
             canceled: 3,
+            health: HealthStats {
+                status: 1,
+                counts: vec![
+                    ("stall".to_string(), 2),
+                    ("reject_spike".to_string(), 0),
+                    ("queue_saturation".to_string(), 0),
+                    ("step_time_drift".to_string(), 0),
+                ],
+            },
         };
         let j = JobStats { submitted: 4, delivered: 3, canceled: 1, active: 1, periodic: 1 };
         (s, j)
@@ -616,6 +673,7 @@ mod tests {
                 "queue_depth",
                 "jobs",
                 "qos",
+                "health",
             ]
         );
         // nested sections: original prefixes intact, telemetry appended
@@ -644,6 +702,19 @@ mod tests {
             &["weight", "turns", "steps", "occupied_lane_steps", "queue_depth", "active_lanes"]
         );
         assert!(poolkeys.contains(&"step_p95_s") && poolkeys.contains(&"accepted"));
+        // per-pool bucket split appends after the frozen pool keys
+        assert_eq!(poolkeys.last(), Some(&"steps_per_bucket"));
+        assert_eq!(
+            pool.req("steps_per_bucket").unwrap().req("8").unwrap().as_f64().unwrap(),
+            60.0
+        );
+        // watchdog summary appends after qos
+        let health = v.req("health").unwrap();
+        assert_eq!(health.req("status").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(
+            health.req("events").unwrap().req("stall").unwrap().as_f64().unwrap(),
+            2.0
+        );
         // classes keep their original keys only (count/sum are
         // Prometheus-only)
         let class = v.req("qos").unwrap().req("classes").unwrap().req("interactive").unwrap();
@@ -694,6 +765,11 @@ mod tests {
             "gofast_class_queue_wait_seconds{class=\"interactive\",quantile=\"0.99\"} 0.06",
             "gofast_class_e2e_seconds_sum{class=\"interactive\"} 2",
             "gofast_program_bucket_steps_total{solver=\"adaptive\",bucket=\"8\"} 60",
+            "gofast_pool_bucket_steps_total{model=\"vp\",solver=\"adaptive\",bucket=\"8\"} 60",
+            "gofast_pool_bucket_steps_total{model=\"vp\",solver=\"adaptive\",bucket=\"16\"} 40",
+            "gofast_health_status 1",
+            "gofast_health_events_total{kind=\"stall\"} 2",
+            "gofast_health_events_total{kind=\"reject_spike\"} 0",
             "gofast_jobs_submitted_total 4",
             "gofast_shed_deadline_total 1",
         ] {

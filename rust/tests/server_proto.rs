@@ -407,6 +407,49 @@ fn stats_export_queue_depth_and_pool_qos() {
     assert_eq!(prog.get("queue_depth").unwrap().as_f64().unwrap(), 0.0);
 }
 
+/// Satellite guard: the span ring really is a ring. Submitting more
+/// requests than `--trace-ring` capacity evicts the oldest spans, and
+/// `trace` queries on evicted ids/jobs return empty rather than stale
+/// records.
+#[test]
+fn span_ring_wraparound_evicts_oldest_spans() {
+    let Some((_engine, addr)) = spawn_server_cfg(&["vp"], |cfg| cfg.trace_ring = 3) else {
+        return;
+    };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    // first request rides the async job path so both query shapes
+    // (span id and job id) can be exercised after its eviction
+    let job = c.submit(&GenerateRequest::new(1).eps_rel(0.5).seed(1).images(false)).unwrap();
+    while c.poll_job(job, 2000, false).unwrap().is_empty() {}
+    let v = c.trace(None, 0, false).unwrap();
+    let spans = v.req("spans").unwrap().as_arr().unwrap();
+    assert_eq!(spans.len(), 1);
+    let first_id = spans[0].req("id").unwrap().as_f64().unwrap() as u64;
+    // overflow the ring: 6 more single-span requests into capacity 3
+    for seed in 2..8u64 {
+        c.run(&GenerateRequest::new(1).eps_rel(0.5).seed(seed).images(false)).unwrap();
+    }
+    let v = c.trace(None, 0, false).unwrap();
+    let spans = v.req("spans").unwrap().as_arr().unwrap();
+    assert_eq!(spans.len(), 3, "ring must retain exactly its capacity");
+    for s in spans {
+        let id = s.req("id").unwrap().as_f64().unwrap() as u64;
+        assert!(id > first_id, "oldest span must have been evicted, saw id {id}");
+    }
+    // job query on the evicted job: empty, not a stale record
+    let v = c.trace(Some(job), 0, false).unwrap();
+    assert!(v.req("spans").unwrap().as_arr().unwrap().is_empty());
+    // raw id query on the evicted span id: same
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writeln!(writer, "{{\"op\":\"trace\",\"id\":{first_id}}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+    assert!(line.contains("\"spans\":[]"), "evicted id must query empty: {line}");
+}
+
 #[test]
 fn parallel_connections_share_the_engine() {
     let Some((engine, addr)) = spawn_server() else { return };

@@ -1,0 +1,168 @@
+#!/usr/bin/env python3
+"""Diagnostics + watchdog regression gates for benches/serving.rs part 6.
+
+The serving bench's diag part (`cargo bench --bench serving -- --diag-only`)
+writes bench_out/serving_diag.json; this script turns it into a CI gate
+(mirroring tools/check_trace.py):
+
+  * profile bin grid: every pool's 32 bins must tile [t_lo, t_hi]
+    contiguously and monotonically in diffusion time (bin i's t_hi ==
+    bin i+1's t_lo, strictly increasing), with per-bin h_min <= h_max
+    and non-negative counts.
+  * reconciliation: for every adaptive pool, sum(accepted + rejected)
+    across bins must equal the pool's stats accept/reject counters
+    exactly — the profile and the QoS counters are fed from the same
+    step fold, so any drift is double- or under-counting.
+  * sampling: with --diag-sample 1 every admitted lane is traced, so
+    the adaptive pool must retain at least one trace whose steps carry
+    (t, h, err, accepted) with t in [0, 1] and h > 0.
+  * watchdog: the stall-injection run (zero budget, per-iteration
+    checks, two active pools) must have fired at least one stall
+    event, observable in both the health op's counters and the
+    Prometheus text (gofast_health_status gauge +
+    gofast_health_events_total{kind="stall"} counter).
+  * overhead: steps/s with --diag-sample 1 must be >= 0.95x the
+    diag-off throughput — diagnostics must stay off the hot step path.
+
+Usage: python3 tools/check_diag.py bench_out/serving_diag.json
+Exits non-zero with a per-violation report on failure.
+"""
+
+import json
+import re
+import sys
+
+EPS = 1e-9
+
+HEALTH_SERIES_RE = re.compile(
+    r'^gofast_health_events_total\{kind="stall"\} (\d+(?:\.\d+)?)$', re.M
+)
+
+
+def check_bins(pool, errors):
+    name = f"{pool.get('model')}/{pool.get('solver')}"
+    bins = pool.get("bins", [])
+    if not bins:
+        errors.append(f"{name}: empty bin grid")
+        return
+    t_lo, t_hi = pool.get("t_lo", 0.0), pool.get("t_hi", 1.0)
+    if not t_lo < t_hi:
+        errors.append(f"{name}: degenerate grid [{t_lo}, {t_hi}]")
+    if abs(bins[0].get("t_lo", -1) - t_lo) > 1e-6:
+        errors.append(f"{name}: first bin starts at {bins[0].get('t_lo')}, not {t_lo}")
+    if abs(bins[-1].get("t_hi", -1) - t_hi) > 1e-6:
+        errors.append(f"{name}: last bin ends at {bins[-1].get('t_hi')}, not {t_hi}")
+    for i, b in enumerate(bins):
+        if not b.get("t_lo", 0.0) < b.get("t_hi", 0.0):
+            errors.append(f"{name} bin {i}: t_lo {b.get('t_lo')} !< t_hi {b.get('t_hi')}")
+        if i and abs(b.get("t_lo", -1) - bins[i - 1].get("t_hi", -2)) > 1e-6:
+            errors.append(
+                f"{name} bin {i}: grid not contiguous "
+                f"({bins[i - 1].get('t_hi')} -> {b.get('t_lo')})"
+            )
+        for k in ("steps", "accepted", "rejected"):
+            if b.get(k, 0) < 0:
+                errors.append(f"{name} bin {i}: negative {k}")
+        if b.get("accepted", 0) + b.get("rejected", 0) > 0:
+            if b.get("h_min", 0.0) > b.get("h_max", 0.0) + EPS:
+                errors.append(
+                    f"{name} bin {i}: h_min {b.get('h_min')} > h_max {b.get('h_max')}"
+                )
+
+
+def check_reconciliation(profile, errors):
+    stats = {p.get("pool"): p for p in profile.get("stats_pools", [])}
+    adaptive_pools = 0
+    for pool in profile.get("pools", []):
+        check_bins(pool, errors)
+        name = f"{pool.get('model')}/{pool.get('solver')}"
+        if not pool.get("adaptive"):
+            continue
+        adaptive_pools += 1
+        acc = sum(b.get("accepted", 0) for b in pool.get("bins", []))
+        rej = sum(b.get("rejected", 0) for b in pool.get("bins", []))
+        s = stats.get(name)
+        if s is None:
+            errors.append(f"{name}: adaptive pool missing from stats_pools")
+            continue
+        if acc != s.get("accepted") or rej != s.get("rejected"):
+            errors.append(
+                f"{name}: profile bins sum to {acc} accepted / {rej} rejected, "
+                f"stats counters say {s.get('accepted')} / {s.get('rejected')}"
+            )
+        if acc + rej < 1:
+            errors.append(f"{name}: adaptive pool saw no proposals")
+    if adaptive_pools < 1:
+        errors.append("profile: no adaptive pools (the bench drives adaptive traffic)")
+
+
+def check_traces(profile, errors):
+    traced_steps = 0
+    for pool in profile.get("pools", []):
+        if not pool.get("adaptive"):
+            continue
+        for t in pool.get("traces", []):
+            for s in t.get("steps", []):
+                traced_steps += 1
+                if not -EPS <= s.get("t", -1.0) <= 1.0 + EPS:
+                    errors.append(f"trace lane {t.get('lane')}: t out of range {s.get('t')}")
+                if s.get("h", 0.0) <= 0.0:
+                    errors.append(f"trace lane {t.get('lane')}: non-positive h {s.get('h')}")
+    if traced_steps < 1:
+        errors.append("traces: --diag-sample 1 run retained no adaptive trace steps")
+    return traced_steps
+
+
+def check_stall(stall, metrics_text, errors):
+    count = stall.get("counts", {}).get("stall", 0)
+    if not stall.get("fired") or count < 1:
+        errors.append(f"stall: injection run fired no stall event (count {count})")
+    if not any(e.get("kind") == "stall" for e in stall.get("events", [])):
+        errors.append("stall: no stall event in the health ring")
+    if "gofast_health_status" not in metrics_text:
+        errors.append("metrics: gofast_health_status gauge absent")
+    m = HEALTH_SERIES_RE.search(metrics_text)
+    if m is None:
+        errors.append('metrics: gofast_health_events_total{kind="stall"} absent')
+    elif float(m.group(1)) < 1:
+        errors.append(f"metrics: stall counter {m.group(1)} < 1 despite injection")
+    return count
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench_out/serving_diag.json"
+    with open(path) as f:
+        doc = json.load(f)
+    errors = []
+
+    profile = doc.get("profile", {})
+    check_reconciliation(profile, errors)
+    traced = check_traces(profile, errors)
+    stalls = check_stall(doc.get("stall", {}), doc.get("metrics_text", ""), errors)
+
+    overhead = doc.get("overhead", {})
+    off = overhead.get("off_steps_per_s", 0.0)
+    on = overhead.get("on_steps_per_s", 0.0)
+    ratio = overhead.get("ratio", 0.0)
+    if off <= 0 or on <= 0:
+        errors.append(f"overhead: missing throughput numbers (off={off}, on={on})")
+    elif ratio < 0.95:
+        errors.append(
+            f"overhead: diag-on throughput {on:.0f} steps/s is {ratio:.3f}x "
+            f"diag-off {off:.0f} (must be >= 0.95x)"
+        )
+
+    print(
+        f"[check_diag] {path}: pools={len(profile.get('pools', []))} "
+        f"traced_steps={traced} stall_events={stalls} diag_ratio={ratio:.3f}"
+    )
+    if errors:
+        for e in errors:
+            print(f"[check_diag] FAIL: {e}", file=sys.stderr)
+        return 1
+    print("[check_diag] ok: bin grid, reconciliation, watchdog and overhead hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

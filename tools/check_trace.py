@@ -41,6 +41,9 @@ REQUIRED_SERIES = [
     "gofast_pool_adaptive_accepted_total",
     "gofast_pool_adaptive_rejected_total",
     "gofast_pool_adaptive_reject_rate",
+    "gofast_pool_bucket_steps_total",
+    "gofast_health_status",
+    "gofast_health_events_total",
     "gofast_jobs_submitted_total",
     "gofast_jobs_delivered_total",
     "gofast_canceled_total",

@@ -53,6 +53,16 @@ if [ -f bench_out/serving_trace.json ]; then
   python3 tools/check_trace.py bench_out/serving_trace.json
 fi
 
+# Diagnostics/watchdog gates: when the serving bench's diag part has
+# run (`cargo bench --bench serving -- --diag-only` in the CI artifacts
+# job), enforce a contiguous monotone bin grid, exact profile-vs-stats
+# accept/reject reconciliation, the injected stall firing through both
+# the health op and the Prometheus text, and the <= 5% sampling
+# overhead ceiling on its JSON.
+if [ -f bench_out/serving_diag.json ]; then
+  python3 tools/check_diag.py bench_out/serving_diag.json
+fi
+
 # Dispatch-amortisation gates: when the perf bench's k-sweep has run
 # (`cargo bench --bench perf` in the CI artifacts job), enforce
 # bit-identical samples and unchanged NFE across steps-per-dispatch
