@@ -110,91 +110,109 @@ fn main() -> Result<()> {
     print!("{}", table.render());
     write_outputs("perf", &table)?;
 
-    // --- dispatch amortisation: em at steps-per-dispatch 1 / 4 / 8 ----------
-    // The same request (model, solver, n, seed) through three engines
-    // that differ only in k. Bit-identical outputs are part of the
-    // contract (the fused kernels consume pre-drawn noise on the same
-    // streams), so the sweep both measures the dispatch/byte savings
-    // and asserts the equivalence tools/check_perf.py gates on.
+    // --- dispatch amortisation: em + adaptive at steps-per-dispatch 1/4/8 ----
+    // The same request (model, solver, n, seed) through engines that
+    // differ only in k. Bit-identical outputs are part of the contract
+    // (fixed-step fused kernels consume pre-drawn noise on the same
+    // streams; the adaptive fold additionally replays the device
+    // attempt log through the host controller, so NFE, score_evals and
+    // rejections must all match k = 1 exactly), so the sweep both
+    // measures the dispatch/byte savings and asserts the equivalence
+    // tools/check_perf.py gates on.
     let em_steps = args.usize_or("dispatch-steps", 1000)?;
     let n = args.usize_or("dispatch-samples", 4)?;
     let ebucket = engine_bucket(&model, args.usize_or("bucket", 16)?);
-    let mut disp_table = Table::new(&[
-        "k", "dispatches", "score_evals", "nfe_total", "h2d_bytes", "d2h_bytes",
-        "bytes/sample", "wall", "match_k1",
-    ]);
-    let mut sweep = Vec::new();
-    let mut baseline: Option<(Vec<f32>, u64)> = None; // k=1 images + total nfe
-    println!("\n== dispatch amortisation: em:{em_steps}, n={n}, bucket {ebucket} ==");
-    for k in [1usize, 4, 8] {
-        let mut cfg = EngineConfig::new("artifacts", &model_name);
-        cfg.bucket = ebucket;
-        cfg.programs = vec!["em".to_string()];
-        cfg.steps_per_dispatch = k;
-        let engine = Engine::start(cfg)?;
-        let client = engine.client();
-        let t0 = std::time::Instant::now();
-        let r = match client.generate_with("", ServingSolver::Em { steps: em_steps }, n, 0.05, 11)
-        {
-            Ok(r) => r,
-            Err(e) => {
-                // pre-fused artifact sets un-serve the pool at k > 1;
-                // skip the gate file rather than write a partial sweep
-                println!("  k={k}: not served ({e:#}); skipping perf_dispatch.json");
-                println!("  (rebuild artifacts with fused k-step variants: make artifacts)");
-                return Ok(());
-            }
-        };
-        let wall = t0.elapsed().as_secs_f64();
-        let stats = client.stats()?;
-        drop(engine);
-        let nfe_total: u64 = r.nfe.iter().sum();
-        let matches = match &baseline {
-            None => {
-                baseline = Some((r.images.data.clone(), nfe_total));
-                true
-            }
-            Some((img1, _)) => img1[..] == r.images.data[..],
-        };
-        let bytes_per_sample = (stats.bytes_h2d + stats.bytes_d2h) as f64 / n as f64;
-        println!(
-            "  k={k}: dispatches {} score_evals {} nfe {} h2d {} d2h {} ({:.0} B/sample) \
-             wall {wall:.2}s match {matches}",
-            stats.dispatches, stats.score_evals, nfe_total, stats.bytes_h2d, stats.bytes_d2h,
-            bytes_per_sample,
-        );
-        disp_table.row(vec![
-            format!("{k}"),
-            format!("{}", stats.dispatches),
-            format!("{}", stats.score_evals),
-            format!("{nfe_total}"),
-            format!("{}", stats.bytes_h2d),
-            format!("{}", stats.bytes_d2h),
-            format!("{bytes_per_sample:.0}"),
-            format!("{wall:.2}s"),
-            format!("{matches}"),
+    let cases: [(&str, String, ServingSolver); 2] = [
+        ("em", format!("em:{em_steps}"), ServingSolver::Em { steps: em_steps }),
+        ("adaptive", "adaptive".to_string(), ServingSolver::Adaptive),
+    ];
+    let mut sweeps = Vec::new();
+    for (program, label, solver) in cases {
+        let mut disp_table = Table::new(&[
+            "k", "dispatches", "score_evals", "nfe_total", "rejections", "h2d_bytes",
+            "d2h_bytes", "bytes/sample", "wall", "match_k1",
         ]);
-        sweep.push(Value::obj(vec![
-            ("k", Value::num(k as f64)),
-            ("dispatches", Value::num(stats.dispatches as f64)),
-            ("score_evals", Value::num(stats.score_evals as f64)),
-            ("nfe_total", Value::num(nfe_total as f64)),
-            ("bytes_h2d", Value::num(stats.bytes_h2d as f64)),
-            ("bytes_d2h", Value::num(stats.bytes_d2h as f64)),
-            ("bytes_per_sample", Value::num(bytes_per_sample)),
-            ("wall_s", Value::num(wall)),
-            ("outputs_match", Value::Bool(matches)),
+        let mut sweep = Vec::new();
+        let mut baseline: Option<Vec<f32>> = None; // k=1 images
+        println!("\n== dispatch amortisation: {label}, n={n}, bucket {ebucket} ==");
+        for k in [1usize, 4, 8] {
+            let mut cfg = EngineConfig::new("artifacts", &model_name);
+            cfg.bucket = ebucket;
+            cfg.programs = vec![program.to_string()];
+            cfg.steps_per_dispatch = k;
+            let engine = Engine::start(cfg)?;
+            let client = engine.client();
+            let t0 = std::time::Instant::now();
+            let r = match client.generate_with("", solver, n, 0.05, 11) {
+                Ok(r) => r,
+                Err(e) => {
+                    // pre-fused artifact sets un-serve the pool at k > 1;
+                    // skip the gate file rather than write a partial sweep
+                    println!("  k={k}: not served ({e:#}); skipping perf_dispatch.json");
+                    println!(
+                        "  (rebuild artifacts with fused k-step variants: make artifacts)"
+                    );
+                    return Ok(());
+                }
+            };
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = client.stats()?;
+            drop(engine);
+            let nfe_total: u64 = r.nfe.iter().sum();
+            let matches = match &baseline {
+                None => {
+                    baseline = Some(r.images.data.clone());
+                    true
+                }
+                Some(img1) => img1[..] == r.images.data[..],
+            };
+            let bytes_per_sample = (stats.bytes_h2d + stats.bytes_d2h) as f64 / n as f64;
+            println!(
+                "  k={k}: dispatches {} score_evals {} nfe {} rejections {} h2d {} d2h {} \
+                 ({:.0} B/sample) wall {wall:.2}s match {matches}",
+                stats.dispatches, stats.score_evals, nfe_total, stats.rejections,
+                stats.bytes_h2d, stats.bytes_d2h, bytes_per_sample,
+            );
+            disp_table.row(vec![
+                format!("{k}"),
+                format!("{}", stats.dispatches),
+                format!("{}", stats.score_evals),
+                format!("{nfe_total}"),
+                format!("{}", stats.rejections),
+                format!("{}", stats.bytes_h2d),
+                format!("{}", stats.bytes_d2h),
+                format!("{bytes_per_sample:.0}"),
+                format!("{wall:.2}s"),
+                format!("{matches}"),
+            ]);
+            sweep.push(Value::obj(vec![
+                ("k", Value::num(k as f64)),
+                ("dispatches", Value::num(stats.dispatches as f64)),
+                ("score_evals", Value::num(stats.score_evals as f64)),
+                ("nfe_total", Value::num(nfe_total as f64)),
+                ("rejections", Value::num(stats.rejections as f64)),
+                ("bytes_h2d", Value::num(stats.bytes_h2d as f64)),
+                ("bytes_d2h", Value::num(stats.bytes_d2h as f64)),
+                ("bytes_per_sample", Value::num(bytes_per_sample)),
+                ("wall_s", Value::num(wall)),
+                ("outputs_match", Value::Bool(matches)),
+            ]));
+        }
+        println!("\n=== perf: dispatch amortisation ({label}) ===\n");
+        print!("{}", disp_table.render());
+        write_outputs(&format!("perf_dispatch_{program}"), &disp_table)?;
+        sweeps.push(Value::obj(vec![
+            ("solver", Value::str(label)),
+            ("samples", Value::num(n as f64)),
+            ("bucket", Value::num(ebucket as f64)),
+            ("sweep", Value::Arr(sweep)),
         ]));
     }
-    println!("\n=== perf: dispatch amortisation ===\n");
-    print!("{}", disp_table.render());
-    write_outputs("perf_dispatch", &disp_table)?;
     let doc = Value::obj(vec![
         ("model", Value::str(&model_name)),
-        ("solver", Value::str(format!("em:{em_steps}"))),
         ("samples", Value::num(n as f64)),
         ("bucket", Value::num(ebucket as f64)),
-        ("sweep", Value::Arr(sweep)),
+        ("sweeps", Value::Arr(sweeps)),
     ]);
     std::fs::create_dir_all("bench_out")?;
     std::fs::write("bench_out/perf_dispatch.json", format!("{doc}"))?;

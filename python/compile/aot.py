@@ -14,6 +14,15 @@ One artifact per (model variant, program, batch bucket):
                  UNTUPLED root so the runtime can keep x device-resident
                  across dispatches; pad rows (h=0 / t_next==t) are exact
                  no-ops via a per-lane select
+  adaptive_stepk<k> (theta, slab[2BD+4kB], t f64[B], h f64[B], live[B],
+                  z[k,B,D], eps_abs[1], eps_rel[B], actrl f64[3]) -> slab'
+                 fused k-attempts-per-dispatch Algorithm 1 fold: the
+                 accept/reject test and step controller run on device in
+                 f64 (actrl = [t_eps, safety, r]); the packed slab is
+                 x | xprev | t_log | h_log | err_log | accept_log with
+                 the [k*B] attempt logs zero on input and filled per
+                 attempt, so the host folds NFE/rejections/diagnostics
+                 from the downloaded log without re-running anything
   ode_drift      (theta, x, t[B])                               -> dx/dt
   denoise        (theta, x, t[B])                               -> x0_hat
   fid_features   (theta_c, x[B,D])                              -> (feat, logits)
@@ -210,12 +219,86 @@ def make_fused_programs(cfg: model.ModelCfg):
     }
 
 
+def make_adaptive_fused(cfg: model.ModelCfg):
+    """Fused k-attempts-per-dispatch driver for Algorithm 1.
+
+    Unlike the fixed-step drivers, the loop body is the *whole* adaptive
+    step: both score evals, the mixed-norm error test, accept/reject and
+    the step-size controller. The controller state (t, h) stays f64 on
+    device — the same precision the Rust host controller evolves it at —
+    so attempt j+1 sees bit-identical (t, h) to what k=1 would have
+    computed on the host after attempt j. The f32 casts fed to the score
+    net are the same round-to-nearest casts the host performs per
+    dispatch, and x/xprev updates are per-lane selects of the f32 kernel
+    outputs, so lane state is bitwise equal to k sequential k=1
+    dispatches. Lanes that converge mid-dispatch (or arrive dead via
+    live = 0) are select-masked no-ops for the remaining attempts.
+
+    The state rides a single packed f32 slab (the artifact is lowered
+    untupled so the root buffer feeds straight back in as the next
+    dispatch's input): x | xprev | t_log | h_log | err_log | accept_log.
+    The [k*B] logs record, per attempt, the f32 (t, h) the kernel ran
+    at, the f32 error norm, and the accept bit — everything the host
+    needs to replay the f64 controller, bill NFE/rejections and feed the
+    diagnostics bins without re-running the step. Dead-lane log entries
+    are zeroed. actrl = [t_eps, safety, r] in f64.
+    """
+    progs = make_programs(cfg)
+    astep = progs["adaptive_step"]
+    d = cfg.dim
+    f32, f64 = jnp.float32, jnp.float64
+
+    def run(flat, slab, t, h, live, z, ea, er, actrl):
+        k, b = z.shape[0], z.shape[1]
+        x = slab[: b * d].reshape(b, d)
+        xprev = slab[b * d : 2 * b * d].reshape(b, d)
+        t_eps, safety, r = actrl[0], actrl[1], actrl[2]
+        zero_log = jnp.zeros((k, b), f32)
+
+        def body(j, carry):
+            x, xprev, t, h, alive, tl, hl, el, al = carry
+            # pre-step clamp, exactly the host's h.min(t - t_eps).max(0)
+            hc = jnp.maximum(jnp.minimum(h, t - t_eps), 0.0)
+            t32 = t.astype(f32)
+            h32 = hc.astype(f32)
+            xpp, xp, e2 = astep(flat, x, xprev, t32, h32, z[j], ea, er)
+            err = e2.astype(f64)
+            acc = alive & (err <= 1.0)
+            xn = jnp.where(acc[:, None], xpp, x)
+            xpn = jnp.where(acc[:, None], xp, xprev)
+            tn = jnp.where(acc, t - hc, t)
+            conv = acc & (tn <= t_eps + 1e-12)
+            # h' = (h * safety * err^-r) clamped to the remaining span,
+            # in f64 like the host controller (incl. the 1e-12 floor)
+            grow = safety * jnp.maximum(err, 1e-12) ** (-r)
+            hn = jnp.where(
+                alive, jnp.minimum(hc * grow, jnp.maximum(tn - t_eps, 0.0)), h
+            )
+            tl = tl.at[j].set(jnp.where(alive, t32, 0.0))
+            hl = hl.at[j].set(jnp.where(alive, h32, 0.0))
+            el = el.at[j].set(jnp.where(alive, e2, 0.0))
+            al = al.at[j].set(acc.astype(f32))
+            return (xn, xpn, tn, hn, alive & ~conv, tl, hl, el, al)
+
+        init = (x, xprev, t, h, live > 0.0, zero_log, zero_log, zero_log, zero_log)
+        x, xprev, _, _, _, tl, hl, el, al = jax.lax.fori_loop(0, k, body, init)
+        return jnp.concatenate([
+            x.reshape(-1), xprev.reshape(-1),
+            tl.reshape(-1), hl.reshape(-1), el.reshape(-1), al.reshape(-1),
+        ])
+
+    return run
+
+
 def program_specs(cfg: model.ModelCfg, n_theta: int):
     """(program -> (buckets, arg-spec builder)). Shapes are the runtime ABI."""
     d = cfg.dim
 
     def f32(*shape):
         return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    def f64(*shape):
+        return jax.ShapeDtypeStruct(shape, jnp.float64)
 
     def args(b, program):
         theta = f32(n_theta)
@@ -231,6 +314,12 @@ def program_specs(cfg: model.ModelCfg, n_theta: int):
         if program == "ddim_step":
             return (theta, f32(b, d), f32(b), f32(b))
         base, _, kk = program.rpartition("k")
+        if base == "adaptive_step" and kk.isdigit():
+            # packed slab (x | xprev | 4 [k*B] attempt logs) + f64
+            # controller state/constants (actrl = [t_eps, safety, r])
+            k = int(kk)
+            return (theta, f32(2 * b * d + 4 * k * b), f64(b), f64(b), f32(b),
+                    f32(k, b, d), f32(1), f32(b), f64(3))
         if base in FUSED_BASES and kk.isdigit():
             k = int(kk)
             nz, snr = FUSED_BASES[base]
@@ -313,6 +402,30 @@ def lower_variant(name: str, art_dir: str, manifest: dict):
                     "untupled": True,
                 })
                 print(f"[aot] {name}/{fname} ({len(text)//1024} KiB)", flush=True)
+    # fused adaptive variants: the accept/reject fold runs the step-size
+    # controller on device in f64, so the lowering is scoped under x64
+    # (Python float literals stay weakly typed — the score net and the
+    # pallas kernels keep their f32 internals)
+    afold = make_adaptive_fused(cfg)
+    for k in _buckets("fused", FUSED_STEPS):
+        program = fused_name("adaptive_step", k)
+        for b in buckets["adaptive_step"]:
+            spec = args(b, program)
+            with jax.experimental.enable_x64():
+                text = to_hlo_text(jax.jit(afold).lower(*spec), return_tuple=False)
+            fname = f"{program}_b{b}.hlo.txt"
+            with open(os.path.join(vdir, fname), "w") as f:
+                f.write(text)
+            entries.append({
+                "program": program,
+                "bucket": b,
+                "file": f"{name}/{fname}",
+                "inputs": [list(s.shape) for s in spec],
+                "n_outputs": 1,
+                "steps_per_dispatch": k,
+                "untupled": True,
+            })
+            print(f"[aot] {name}/{fname} ({len(text)//1024} KiB)", flush=True)
     manifest["variants"][name] = {"meta": meta, "programs": entries}
 
 

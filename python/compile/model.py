@@ -156,7 +156,9 @@ def residual_scale(t, cfg: ModelCfg, v0):
 def fourier_features(t):
     """[B] -> [B, TEMB_DIM]; log-spaced frequencies covering t in [0,1]."""
     half = TEMB_DIM // 2
-    freqs = jnp.exp(jnp.linspace(math.log(0.5), math.log(256.0), half))
+    # dtype pinned so the features stay f32 even when a caller traces
+    # under enable_x64 (the fused adaptive fold's f64 step controller)
+    freqs = jnp.exp(jnp.linspace(math.log(0.5), math.log(256.0), half, dtype=jnp.float32))
     ang = 2.0 * math.pi * t[:, None] * freqs[None, :]
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
 

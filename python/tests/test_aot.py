@@ -14,6 +14,7 @@ from compile import model
 from compile.aot import (
     FUSED_BASES,
     fused_name,
+    make_adaptive_fused,
     make_fused_programs,
     make_programs,
     program_specs,
@@ -162,6 +163,117 @@ def test_fused_ddim_matches_sequential_on_vp():
     cfg = model.ModelCfg(dim=128, hidden=128, blocks=1, sde_kind="vp",
                          sigma_max=10.0)
     _fused_parity_case(cfg, "ddim_step")
+
+
+def test_adaptive_fused_abi(tiny_cfg):
+    """The packed input ordering Rust's adaptive fused dispatch builds:
+    (theta, slab[2BD+4kB], t f64[B], h f64[B], live[B], z[k,B,D],
+    eps_abs[1], eps_rel[B], actrl f64[3]) — the slab packs
+    x | xprev | t_log | h_log | err_log | accept_log, and the f64
+    vectors let the on-device controller evolve in host precision."""
+    n = model.n_params(tiny_cfg)
+    _, args = program_specs(tiny_cfg, n)
+    spec = args(4, fused_name("adaptive_step", 8))
+    shapes = [s.shape for s in spec]
+    assert shapes == [(n,), (2 * 4 * 128 + 4 * 8 * 4,), (4,), (4,), (4,),
+                      (8, 4, 128), (1,), (4,), (3,)]
+    dtypes = [s.dtype for s in spec]
+    assert [str(d) for d in dtypes] == [
+        "float32", "float32", "float64", "float64", "float32",
+        "float32", "float32", "float32", "float64",
+    ]
+
+
+def _adaptive_fused_parity_case(cfg, k=4, b=3, seed=7, t_hot=1.0,
+                                eps=0.05, t_conv=None):
+    """Fused adaptive fold vs k sequential adaptive_step calls driven by
+    the host controller replayed in f64 (bit-for-bit the Rust fold in
+    AdaptiveProgram::step). Lane b-1 is dead (live=0) and must come back
+    untouched with zeroed log entries; mid-sequence rejections and
+    convergence must match the host's accept/reject/controller decisions
+    exactly."""
+    d = cfg.dim
+    rng = np.random.default_rng(seed)
+    n = model.n_params(cfg)
+    flat = jnp.asarray(rng.normal(size=(n,), scale=0.05), jnp.float32)
+    theta = np.asarray(flat)
+    x0 = rng.normal(size=(b, d)).astype(np.float32)
+    t0 = np.full(b, t_hot, np.float64)
+    if t_conv is not None:
+        t0[1] = t_conv  # lane 1 converges mid-dispatch
+    h0 = np.full(b, 0.01, np.float64)
+    live = np.ones(b, np.float32)
+    live[-1] = 0.0
+    z = rng.normal(size=(k, b, d)).astype(np.float32)
+    ea = np.array([eps], np.float32)
+    er = np.full(b, eps, np.float32)
+    t_eps, safety, r_exp = 1e-3, 0.9, 0.9
+    actrl = np.array([t_eps, safety, r_exp], np.float64)
+
+    # host reference: f64 controller around the single-attempt kernel
+    astep = jax.jit(make_programs(cfg)["adaptive_step"])
+    x, xp = x0.copy(), x0.copy()
+    t, h = t0.copy(), h0.copy()
+    alive = live > 0
+    logs = {key: np.zeros((k, b), np.float32) for key in "thea"}
+    rejections = 0
+    for j in range(k):
+        hc = np.maximum(np.minimum(h, t - t_eps), 0.0)
+        t32, h32 = t.astype(np.float32), hc.astype(np.float32)
+        xpp, xpr, e2 = map(
+            np.asarray, astep(theta, x, xp, t32, h32, z[j], ea, er)
+        )
+        for i in range(b):
+            if not alive[i]:
+                continue
+            err = float(np.float64(e2[i]))
+            acc = err <= 1.0
+            logs["t"][j, i], logs["h"][j, i] = t32[i], h32[i]
+            logs["e"][j, i], logs["a"][j, i] = e2[i], float(acc)
+            if acc:
+                x[i], xp[i] = xpp[i], xpr[i]
+                t[i] = t[i] - hc[i]
+                if t[i] <= t_eps + 1e-12:
+                    alive[i] = False
+            else:
+                rejections += 1
+            grow = safety * max(err, 1e-12) ** (-r_exp)
+            h[i] = min(hc[i] * grow, max(t[i] - t_eps, 0.0))
+
+    # fused device run on the packed slab
+    slab = np.concatenate(
+        [x0.reshape(-1), x0.reshape(-1), np.zeros(4 * k * b, np.float32)]
+    )
+    with jax.experimental.enable_x64():
+        out = np.asarray(
+            jax.jit(make_adaptive_fused(cfg))(
+                theta, slab, t0, h0, live, z, ea, er, actrl
+            )
+        )
+    fx = out[: b * d].reshape(b, d)
+    fxp = out[b * d : 2 * b * d].reshape(b, d)
+    flog = out[2 * b * d :].reshape(4, k, b)
+    np.testing.assert_array_equal(fx, x)
+    np.testing.assert_array_equal(fxp, xp)
+    for li, key in enumerate("thea"):
+        np.testing.assert_array_equal(flog[li], logs[key])
+    np.testing.assert_array_equal(fx[-1], x0[-1])  # dead lane untouched
+    assert (flog[:, :, -1] == 0).all()  # ...and logged as zeros
+    return rejections, alive
+
+
+def test_adaptive_fused_matches_host_controller(tiny_cfg):
+    rejections, _ = _adaptive_fused_parity_case(tiny_cfg)
+    assert rejections > 0  # the case must exercise the reject branch
+
+
+def test_adaptive_fused_mid_dispatch_convergence(tiny_cfg):
+    # lane 1 starts near t_eps so it converges before the k attempts run
+    # out; the remaining attempts must be select-masked no-ops
+    _, alive = _adaptive_fused_parity_case(
+        tiny_cfg, eps=50.0, t_conv=0.02
+    )
+    assert not alive[1]  # the case must exercise mid-dispatch convergence
 
 
 needs_artifacts = pytest.mark.skipif(

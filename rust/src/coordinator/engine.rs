@@ -60,6 +60,12 @@ pub struct EngineConfig {
     /// forced to 1 when `fused_buffers` is off (device residency needs
     /// the buffer path).
     pub steps_per_dispatch: usize,
+    /// Per-pool fused-k overrides keyed `"model"` or `"model/solver"`
+    /// (the more specific key wins; unlisted pools use
+    /// `steps_per_dispatch`). A key matching no served pool fails
+    /// startup, like a typo'd `--weights` key. Values are forced to 1
+    /// alongside the global default when `fused_buffers` is off.
+    pub steps_overrides: Vec<(String, usize)>,
     /// Admission control: maximum queued samples before rejecting
     /// (global; per-model quotas live in `qos`).
     pub max_queue_samples: usize,
@@ -102,6 +108,7 @@ impl EngineConfig {
             migrate: true,
             fused_buffers: true,
             steps_per_dispatch: 1,
+            steps_overrides: Vec::new(),
             max_queue_samples: 4096,
             qos: QosConfig::default(),
             trace_ring: 1024,
@@ -470,6 +477,13 @@ fn engine_main(
     // device residency rides the buffer path; with fused buffers off the
     // engine stays single-step and host-resident regardless of config
     let steps = if cfg.fused_buffers { cfg.steps_per_dispatch } else { 1 };
+    // override keys are still validated with fused buffers off — only
+    // their values degrade to single-step
+    let overrides: Vec<(String, usize)> = cfg
+        .steps_overrides
+        .iter()
+        .map(|(key, k)| (key.clone(), if cfg.fused_buffers { *k } else { 1 }))
+        .collect();
     let registry = match Registry::load(
         &rt,
         &cfg.models,
@@ -477,6 +491,7 @@ fn engine_main(
         cfg.migrate,
         &cfg.programs,
         steps,
+        &overrides,
         cfg.diag_sample,
     ) {
         Ok(r) => r,
@@ -1051,22 +1066,23 @@ impl<'rt> EngineState<'rt> {
     fn step(&mut self, mi: usize, pi: usize) -> Result<Vec<(u64, usize, GenResult)>> {
         let EngineState { registry, pending, cfg, metrics, evals, qos, trace, .. } = self;
         let e = registry.entry_mut(mi);
-        // eval-lane share of this dispatch's real lane-nodes (the same
-        // unit as occupied_lane_steps): a fused dispatch advances a
-        // fixed lane by up to k nodes, an adaptive lane by one proposal
-        let k = e.pools[pi].steps_per_dispatch;
-        let mut eval_nodes = 0u64;
-        for s in e.pools[pi].slots.iter() {
-            if let Slot::Running { req_id, state, .. } = s {
-                if pending.get(req_id).is_some_and(|p| EvalManager::is_eval_sink(&p.sink)) {
-                    eval_nodes += match state {
-                        LaneState::Fixed { done, total, .. } => k.min(total - done) as u64,
-                        LaneState::Adaptive { .. } => 1,
-                    };
+        // eval-lane slots of this dispatch: their share of the real
+        // lane-nodes (the same unit as occupied_lane_steps) is summed
+        // from the outcome below, since only the step fold knows how
+        // many of the k fused nodes/attempts each lane really ran
+        let eval_slots: Vec<usize> = e.pools[pi]
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(si, s)| match s {
+                Slot::Running { req_id, .. }
+                    if pending.get(req_id).is_some_and(|p| EvalManager::is_eval_sink(&p.sink)) =>
+                {
+                    Some(si)
                 }
-            }
-        }
-        evals.eval_lane_steps += eval_nodes;
+                _ => None,
+            })
+            .collect();
         let step_start = Instant::now();
         let outcome = {
             let ModelEntry { model, process, pools } = e;
@@ -1087,19 +1103,26 @@ impl<'rt> EngineState<'rt> {
         };
         metrics.steps += 1;
         metrics.rejections += outcome.rejections;
+        evals.eval_lane_steps += eval_slots
+            .iter()
+            .map(|&si| outcome.per_lane_nodes.get(si).copied().unwrap_or(0))
+            .sum::<u64>();
         let e = registry.entry_mut(mi);
         let k = e.pools[pi].steps_per_dispatch;
         e.pools[pi].sched.note_step(outcome.lane_nodes, k);
         {
             // per-pool step telemetry: Histogram::record is
             // allocation-free, and the accept/reject split only moves
-            // for the adaptive program (fixed kernels never reject)
+            // for the adaptive program (fixed kernels never reject).
+            // Proposals = lane_nodes (1 per lane at k = 1, the real
+            // attempt count under the fused fold), so accepted =
+            // proposals - rejections in both modes.
             let pool = &mut e.pools[pi];
             pool.step_time.record(step_start.elapsed().as_secs_f64());
             if crate::solvers::spec::kernel(pool.program.solver_name())
                 .is_some_and(|sk| sk.adaptive)
             {
-                pool.accepted += outcome.occupied as u64 - outcome.rejections;
+                pool.accepted += outcome.lane_nodes - outcome.rejections;
                 pool.rejected += outcome.rejections;
             }
         }
@@ -1120,7 +1143,20 @@ impl<'rt> EngineState<'rt> {
         if outcome.converged.is_empty() {
             return Ok(Vec::new());
         }
-        finish_lanes(e, pi, pending, metrics, qos, trace, cfg.fused_buffers, &outcome.converged)
+        // fused adaptive dispatches group converged lanes by the attempt
+        // they crossed t_eps on; one batched denoise per group keeps the
+        // denoise call count (score_evals, d2h bytes) identical to k = 1
+        let single = [outcome.converged];
+        let groups: &[Vec<usize>] = if outcome.converged_groups.is_empty() {
+            &single
+        } else {
+            &outcome.converged_groups
+        };
+        let mut done = Vec::new();
+        for g in groups {
+            done.extend(finish_lanes(e, pi, pending, metrics, qos, trace, cfg.fused_buffers, g)?);
+        }
+        Ok(done)
     }
 
     /// Fail every request owned by pool `(mi, pi)` (incomplete requests
@@ -1236,6 +1272,7 @@ impl<'rt> EngineState<'rt> {
                     occupied_lane_steps: s.occupied_lane_steps,
                     queue_depth,
                     active_lanes: pool.active(),
+                    steps_per_dispatch: pool.steps_per_dispatch,
                     step_count: pool.step_time.count(),
                     step_sum_s: pool.step_time.sum(),
                     step_p50_s: pool.step_time.quantile(0.5),
@@ -1340,12 +1377,15 @@ fn finish_lanes(
 ) -> Result<Vec<(u64, usize, GenResult)>> {
     let b = e.pools[pi].sched.width();
     let t_end = crate::solvers::t_vec(b, e.process.t_eps());
-    // device-resident pools denoise straight from the slab (the host
-    // rows of live lanes are stale); a slab only exists when the engine
-    // runs fused buffers, so the buffer exec path is guaranteed here
+    // fixed-step device-resident pools denoise straight from the slab —
+    // it IS the [B, dim] x tensor, and the host rows of live lanes are
+    // stale (a slab only exists when the engine runs fused buffers, so
+    // the buffer exec path is guaranteed). Adaptive fused pools pack
+    // x | xprev | attempt logs into their slab (a different shape) and
+    // refresh the host x on every dispatch, so they denoise from host.
     let x_arg = match e.pools[pi].dev_x.as_ref() {
-        Some(slab) => ExecArg::Device(slab),
-        None => ExecArg::Host(&e.pools[pi].x),
+        Some(slab) if slab.shape() == e.pools[pi].x.shape.as_slice() => ExecArg::Device(slab),
+        _ => ExecArg::Host(&e.pools[pi].x),
     };
     let mut out = e.model.exec_args(
         "denoise",
@@ -1420,7 +1460,13 @@ fn finish_lanes(
 /// live slab (k=1 pools never grow one).
 fn sync_pool_host(model: &Model<'_>, pool: &mut ProgramPool) -> Result<()> {
     if let Some(slab) = pool.dev_x.take() {
-        pool.x = model.download(&slab)?;
+        if slab.shape() == pool.x.shape.as_slice() {
+            pool.x = model.download(&slab)?;
+        }
+        // adaptive fused pools pack x | xprev | attempt logs into the
+        // slab and already refreshed the host copies from this
+        // dispatch's log download, so the host is current: just drop
+        // the slab and let the next dispatch re-pack from host
     }
     Ok(())
 }

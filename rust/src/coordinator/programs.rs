@@ -85,15 +85,28 @@ pub(crate) struct StepIo<'a, 'rt> {
 pub(crate) struct StepOutcome {
     /// Lanes that were live during the step (occupancy numerator).
     pub occupied: usize,
-    /// Real grid nodes advanced across all live lanes this dispatch
-    /// (no-op tail padding excluded) — `occupied` x k for a full fused
-    /// dispatch, less when lanes ride the tail. Equals `occupied` at
-    /// k = 1.
+    /// Real grid nodes (or adaptive attempts) advanced across all live
+    /// lanes this dispatch (no-op tail padding excluded) — `occupied`
+    /// x k for a full fused dispatch, less when lanes ride the tail.
+    /// Equals `occupied` at k = 1.
     pub lane_nodes: u64,
+    /// Slot-indexed share of `lane_nodes` (0 for free lanes) — the
+    /// engine's eval-lane accounting sums the eval-sink slots' entries
+    /// after the step, since only the step fold knows how many of the
+    /// k attempts an adaptive lane really ran.
+    pub per_lane_nodes: Vec<u64>,
     /// Rejected proposals (adaptive programs only).
     pub rejections: u64,
     /// Lanes that completed their trajectory this step (to denoise).
     pub converged: Vec<usize>,
+    /// `converged` split into convergence order (fused adaptive
+    /// dispatches: one group per attempt index at which lanes crossed
+    /// t_eps). Empty means "one group: `converged`". The engine runs
+    /// one batched denoise per group so the denoise call count — and
+    /// with it `score_evals` and the downloaded bytes — stays exactly
+    /// equal to the k = 1 dispatch sequence, where lanes converging on
+    /// different attempts finish in different iterations.
+    pub converged_groups: Vec<Vec<usize>>,
 }
 
 /// A compiled step program driving a pool of lanes.
@@ -166,6 +179,9 @@ impl LaneProgram for AdaptiveProgram {
     }
 
     fn step(&self, io: StepIo<'_, '_>) -> Result<StepOutcome> {
+        if io.steps_per_dispatch > 1 {
+            return self.step_fused(io);
+        }
         let b = io.slots.len();
         let dim = io.model.meta.dim;
         let t_eps = io.process.t_eps();
@@ -175,10 +191,12 @@ impl LaneProgram for AdaptiveProgram {
         let mut er_in = vec![0.01f32; b];
         let mut z = Tensor::zeros(&[b, dim]);
         let mut occupied = 0usize;
+        let mut per_lane_nodes = vec![0u64; b];
         for (i, slot) in io.slots.iter_mut().enumerate() {
             if let Slot::Running { rng, state: LaneState::Adaptive { t, h, eps_rel }, .. } = slot
             {
                 occupied += 1;
+                per_lane_nodes[i] = 1;
                 *h = h.min(*t - t_eps).max(0.0);
                 t_in[i] = *t as f32;
                 h_in[i] = *h as f32;
@@ -241,7 +259,187 @@ impl LaneProgram for AdaptiveProgram {
             let grow = io.cfg.safety * err.max(1e-12).powf(-io.cfg.r);
             *h = (*h * grow).min((*t - t_eps).max(0.0));
         }
-        Ok(StepOutcome { occupied, lane_nodes: occupied as u64, rejections, converged })
+        Ok(StepOutcome {
+            occupied,
+            lane_nodes: occupied as u64,
+            per_lane_nodes,
+            rejections,
+            converged,
+            converged_groups: Vec::new(),
+        })
+    }
+}
+
+impl AdaptiveProgram {
+    /// Device-side accept/reject fold: one dispatch of the fused
+    /// `adaptive_stepk<k>` artifact runs up to k attempts of
+    /// Algorithm 1 per live lane, with the error test and the f64
+    /// step-size controller on device. The artifact's state is a packed
+    /// device-resident slab `x | xprev | t_log | h_log | err_log |
+    /// accept_log` (`[2·B·dim + 4·k·B]` f32) whose output feeds back as
+    /// the next dispatch's input; the host downloads it once per
+    /// dispatch — that single pull replaces the per-attempt
+    /// `x''/x'/err` round-trip of the k = 1 path and carries the
+    /// `[k, B]` attempt logs the host folds NFE, rejections, and the
+    /// diagnostics bins/traces from, *replaying* (not re-deciding) the
+    /// controller in f64 from the logged f32 error norms so lane state
+    /// stays bit-identical to k = 1.
+    ///
+    /// RNG contract: k noise rows are pre-drawn node-major per live
+    /// lane — the exact draw order k single-attempt dispatches consume
+    /// (a rejected attempt burns a draw at k = 1 too). Rows past a
+    /// mid-dispatch convergence are over-draws on a stream the freed
+    /// lane never uses again; a fresh admission re-forks its own.
+    fn step_fused(&self, io: StepIo<'_, '_>) -> Result<StepOutcome> {
+        let b = io.slots.len();
+        let dim = io.model.meta.dim;
+        let k = io.steps_per_dispatch;
+        let t_eps = io.process.t_eps();
+        let eps_abs = io.process.eps_abs();
+        let mut t_in = vec![1.0f64; b];
+        let mut h_in = vec![0.0f64; b];
+        let mut live_in = vec![0.0f32; b];
+        let mut er_in = vec![0.01f32; b];
+        let mut z = Tensor::zeros(&[k, b, dim]);
+        let mut occupied = 0usize;
+        let mut live = vec![false; b];
+        for (i, slot) in io.slots.iter_mut().enumerate() {
+            if let Slot::Running { rng, state: LaneState::Adaptive { t, h, eps_rel }, .. } = slot
+            {
+                occupied += 1;
+                live[i] = true;
+                // raw (t, h) in f64: the device clamps h to the
+                // remaining span itself, per attempt, exactly as the
+                // k = 1 host loop does before each dispatch
+                t_in[i] = *t;
+                h_in[i] = *h;
+                live_in[i] = 1.0;
+                er_in[i] = *eps_rel as f32;
+                for j in 0..k {
+                    rng.fill_normal(z.row_mut(j * b + i));
+                }
+            }
+        }
+        let live_t = Tensor { shape: vec![b], data: live_in };
+        let er_t = Tensor { shape: vec![b], data: er_in };
+        let ea_t = Tensor::scalar(eps_abs as f32);
+        let actrl = [t_eps, io.cfg.safety, io.cfg.r];
+        let slab_len = 2 * b * dim + 4 * k * b;
+        let artifact = fused_artifact("adaptive_step", k);
+        let packed: Tensor;
+        let out_slab = {
+            let slab_arg = match io.dev_x.as_ref() {
+                Some(slab) => ExecArg::Device(slab),
+                None => {
+                    // admission/migration/first dispatch: host x/xprev
+                    // are current; pack them with a zeroed log region
+                    // (the kernel ignores input logs)
+                    let mut data = Vec::with_capacity(slab_len);
+                    data.extend_from_slice(&io.x.data);
+                    data.extend_from_slice(&io.xprev.data);
+                    data.resize(slab_len, 0.0);
+                    packed = Tensor { shape: vec![slab_len], data };
+                    ExecArg::Host(&packed)
+                }
+            };
+            // score_evals are billed after the fold, from the attempt
+            // log (rejected attempts still ran the score net) — see
+            // `bill_score_evals` below
+            io.model.exec_device(
+                &artifact,
+                b,
+                &[
+                    slab_arg,
+                    ExecArg::HostF64(&t_in, &[b]),
+                    ExecArg::HostF64(&h_in, &[b]),
+                    ExecArg::Host(&live_t),
+                    ExecArg::Host(&z),
+                    ExecArg::Const("eps_abs", &ea_t),
+                    ExecArg::Host(&er_t),
+                    ExecArg::HostF64(&actrl, &[3]),
+                ],
+                0,
+            )?
+        };
+        // the one per-dispatch download: refreshes the host x/xprev
+        // copies AND carries the attempt logs (the slab itself stays
+        // resident as the next dispatch's input)
+        let host = io.model.download(&out_slab)?;
+        *io.dev_x = Some(out_slab);
+        let (x_out, rest) = host.data.split_at(b * dim);
+        let (xp_out, logs) = rest.split_at(b * dim);
+        let t_log = &logs[..k * b];
+        let h_log = &logs[k * b..2 * k * b];
+        let e_log = &logs[2 * k * b..3 * k * b];
+        for i in 0..b {
+            if live[i] {
+                io.x.row_mut(i).copy_from_slice(&x_out[i * dim..(i + 1) * dim]);
+                io.xprev.row_mut(i).copy_from_slice(&xp_out[i * dim..(i + 1) * dim]);
+            }
+        }
+        // replay the controller decisions attempt-major (the k = 1
+        // event order) from the logged error norms: same f32→f64 cast,
+        // same accept test, same f64 controller arithmetic — so (t, h)
+        // and the diagnostics bins land bit-identically
+        let mut per_lane_nodes = vec![0u64; b];
+        let mut rejections = 0u64;
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for j in 0..k {
+            for i in 0..b {
+                if !live[i] {
+                    continue;
+                }
+                let Slot::Running { nfe, state: LaneState::Adaptive { t, h, .. }, .. } =
+                    &mut io.slots[i]
+                else {
+                    continue;
+                };
+                let hc = h.min(*t - t_eps).max(0.0);
+                per_lane_nodes[i] += 1;
+                *nfe += 2;
+                let err = e_log[j * b + i] as f64;
+                io.diag.record_adaptive(
+                    i,
+                    t_log[j * b + i] as f64,
+                    h_log[j * b + i] as f64,
+                    err,
+                    err <= 1.0,
+                );
+                if err <= 1.0 {
+                    *t -= hc;
+                    if *t <= t_eps + 1e-12 {
+                        groups[j].push(i);
+                        live[i] = false;
+                    }
+                } else {
+                    rejections += 1;
+                }
+                let grow = io.cfg.safety * err.max(1e-12).powf(-io.cfg.r);
+                *h = (hc * grow).min((*t - t_eps).max(0.0));
+            }
+        }
+        // NFE parity with k = 1: a single-attempt dispatch bills 2
+        // score evals per batched call while any lane is live, so the
+        // fused dispatch costs 2 × (deepest live lane's attempt count)
+        let max_attempts = per_lane_nodes.iter().copied().max().unwrap_or(0);
+        io.model.bill_score_evals(2 * max_attempts);
+        let lane_nodes = per_lane_nodes.iter().sum();
+        let mut converged_groups: Vec<Vec<usize>> = Vec::new();
+        let mut converged = Vec::new();
+        for g in groups {
+            if !g.is_empty() {
+                converged.extend_from_slice(&g);
+                converged_groups.push(g);
+            }
+        }
+        Ok(StepOutcome {
+            occupied,
+            lane_nodes,
+            per_lane_nodes,
+            rejections,
+            converged,
+            converged_groups,
+        })
     }
 }
 
@@ -315,10 +513,12 @@ impl LaneProgram for FixedProgram {
         let mut noise: Vec<Tensor> =
             (0..self.kernel.noise_inputs).map(|_| Tensor::zeros(&[b, dim])).collect();
         let mut occupied = 0usize;
+        let mut per_lane_nodes = vec![0u64; b];
         for (i, slot) in io.slots.iter_mut().enumerate() {
             if let Slot::Running { rng, state: LaneState::Fixed { done, total, snr }, .. } = slot
             {
                 occupied += 1;
+                per_lane_nodes[i] = 1;
                 let t = uniform_t(t_eps, *total, *done);
                 let tn = uniform_t(t_eps, *total, *done + 1);
                 io.diag.record_fixed(i, t, t - tn);
@@ -349,7 +549,14 @@ impl LaneProgram for FixedProgram {
         let out = io.model.exec_args(self.kernel.artifact, b, &args, io.cfg.fused_buffers)?;
         let converged =
             fold_fixed_step(io.slots, io.x, &out[0], self.kernel.score_evals_per_step);
-        Ok(StepOutcome { occupied, lane_nodes: occupied as u64, rejections: 0, converged })
+        Ok(StepOutcome {
+            occupied,
+            lane_nodes: occupied as u64,
+            per_lane_nodes,
+            rejections: 0,
+            converged,
+            converged_groups: Vec::new(),
+        })
     }
 }
 
@@ -452,7 +659,14 @@ impl FixedProgram {
                 converged.push(i);
             }
         }
-        Ok(StepOutcome { occupied, lane_nodes, rejections: 0, converged })
+        Ok(StepOutcome {
+            occupied,
+            lane_nodes,
+            per_lane_nodes: real.iter().map(|&r| r as u64).collect(),
+            rejections: 0,
+            converged,
+            converged_groups: Vec::new(),
+        })
     }
 }
 

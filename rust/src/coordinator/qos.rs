@@ -227,6 +227,50 @@ pub fn parse_quota_list(s: &str) -> Result<Vec<(String, usize)>> {
     Ok(out)
 }
 
+/// Parse a `--steps-per-dispatch` spec: a bare k sets the global
+/// default (`"8"`), `model=k` / `model/solver=k` entries override it
+/// per pool (`"8,vp=4,vp:adaptive=8"`; `:` is accepted as the
+/// model/solver separator and normalized to `/`). Returns the bare
+/// global (if any) plus the override list in spec order; the registry
+/// validates keys against served pools at startup, like `--weights`.
+/// A k of 0 is rejected here — every pool dispatches at least one
+/// step per turn.
+pub fn parse_steps_spec(s: &str) -> Result<(Option<usize>, Vec<(String, usize)>)> {
+    let mut global: Option<usize> = None;
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let Some((key, val)) = part.split_once('=') else {
+            let k: usize = part.parse().map_err(|_| {
+                anyhow!("bad steps-per-dispatch '{part}' (expected k, model=k or model/solver=k)")
+            })?;
+            if k == 0 {
+                bail!("steps-per-dispatch must be >= 1 (got 0)");
+            }
+            if global.is_some() {
+                bail!("global steps-per-dispatch given twice ('{part}')");
+            }
+            global = Some(k);
+            continue;
+        };
+        let k: usize = val
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad steps-per-dispatch value '{val}' for '{key}'"))?;
+        if k == 0 {
+            bail!("steps-per-dispatch for '{key}' must be >= 1 (got 0)");
+        }
+        let key = key.trim().replace(':', "/");
+        if key.is_empty() || key.split('/').count() > 2 || key.split('/').any(str::is_empty) {
+            bail!("bad steps-per-dispatch key '{key}' (expected model or model/solver)");
+        }
+        if out.iter().any(|(existing, _)| *existing == key) {
+            bail!("steps-per-dispatch for '{key}' given twice");
+        }
+        out.push((key, k));
+    }
+    Ok((global, out))
+}
+
 // --- deficit-weighted round-robin ----------------------------------------------
 
 /// Deficit-weighted round-robin over the flattened (model, program)
@@ -381,6 +425,11 @@ pub struct PoolQosStats {
     /// Samples queued on the pool (not yet in a lane).
     pub queue_depth: usize,
     pub active_lanes: usize,
+    /// Resolved fused k the pool dispatches at (grid nodes for
+    /// fixed-step pools, Algorithm-1 attempts for the adaptive fold),
+    /// after per-pool overrides, kernel clamping and artifact-ladder
+    /// resolution.
+    pub steps_per_dispatch: usize,
     /// Per-pool step wall-time distribution (telemetry): dispatch
     /// count, summed seconds, and quantiles of the pool's step-time
     /// histogram — the Prometheus `gofast_pool_step_seconds` series.
@@ -561,6 +610,30 @@ mod tests {
         let q = parse_quota_list("vp=256,ve=0").unwrap();
         assert_eq!(q, vec![("vp".to_string(), 256), ("ve".to_string(), 0)]);
         assert!(parse_quota_list("vp=many").is_err());
+    }
+
+    #[test]
+    fn steps_spec_parser() {
+        // bare global, keyed overrides, ':' normalized to '/'
+        let (g, o) = parse_steps_spec("8, vp=4,ve:adaptive=8").unwrap();
+        assert_eq!(g, Some(8));
+        assert_eq!(
+            o,
+            vec![("vp".to_string(), 4), ("ve/adaptive".to_string(), 8)]
+        );
+        let (g, o) = parse_steps_spec("vp/em=2").unwrap();
+        assert_eq!(g, None);
+        assert_eq!(o, vec![("vp/em".to_string(), 2)]);
+        assert_eq!(parse_steps_spec("").unwrap(), (None, vec![]));
+        assert!(parse_steps_spec("0").is_err(), "zero global k");
+        assert!(parse_steps_spec("vp=0").is_err(), "zero override k");
+        assert!(parse_steps_spec("4,8").is_err(), "duplicate global");
+        assert!(parse_steps_spec("vp=1,vp=2").is_err(), "duplicate key");
+        assert!(parse_steps_spec("vp:adaptive=1,vp/adaptive=2").is_err(), "':' aliases '/'");
+        assert!(parse_steps_spec("many").is_err(), "non-numeric bare entry");
+        assert!(parse_steps_spec("vp=many").is_err());
+        assert!(parse_steps_spec("a/b/c=2").is_err(), "too many key parts");
+        assert!(parse_steps_spec("/em=2").is_err(), "empty model part");
     }
 
     /// Reference model of the registry's pre-QoS flat rotation: scan

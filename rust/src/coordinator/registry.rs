@@ -111,7 +111,32 @@ fn kernel_abi_matches(model: &Model, solver: &str, bucket: usize, steps: usize) 
         return true;
     };
     if k.adaptive {
-        return true;
+        if steps <= 1 {
+            // the single-step adaptive artifact keeps its own strict
+            // fail-fast startup validation in Registry::load
+            return true;
+        }
+        // the fused accept/reject fold's packed ABI (see aot.py's
+        // make_adaptive_fused): theta, slab[2·b·d + 4·k·b], t f64[b],
+        // h f64[b], live[b], z[k,b,d], eps_abs[1], eps_rel[b],
+        // actrl f64[3]
+        let fused = fused_artifact(k.artifact, steps);
+        let Some(inputs) = model.artifact_inputs(&fused, bucket) else {
+            return false;
+        };
+        let d = model.meta.dim;
+        let want: Vec<Vec<usize>> = vec![
+            vec![model.meta.n_params],
+            vec![2 * bucket * d + 4 * steps * bucket],
+            vec![bucket],
+            vec![bucket],
+            vec![bucket],
+            vec![steps, bucket, d],
+            vec![1],
+            vec![bucket],
+            vec![3],
+        ];
+        return inputs == want.as_slice();
     }
     let d = model.meta.dim;
     if steps > 1 {
@@ -159,11 +184,18 @@ impl<'rt> Registry<'rt> {
     /// across every compiled rung <= `max_bucket`; fixed-step pools use
     /// the widest rung their own artifacts provide under the same cap.
     /// With `migrate` off every pool is pinned at its widest rung.
-    /// `steps_per_dispatch` is the requested fused k; each fixed-step
-    /// pool clamps it to its kernel's `max_steps_per_dispatch` (adaptive
-    /// pools always run at 1) and then resolves it down to the largest
-    /// fused variant its artifact set provides (a pre-fused set degrades
-    /// to single-step rather than un-serving the pool).
+    /// `steps_per_dispatch` is the requested fused k; each pool clamps
+    /// it to its kernel's `max_steps_per_dispatch` (fixed-step kernels
+    /// fuse grid nodes, the adaptive kernel fuses Algorithm-1 attempts
+    /// via the device-side accept/reject fold) and then resolves it
+    /// down to the largest fused variant its artifact set provides (a
+    /// pre-fused set degrades to single-step rather than un-serving the
+    /// pool). `steps_overrides` are per-pool k overrides keyed
+    /// `"model"` or `"model/solver"` (the more specific key wins over
+    /// the model key, which wins over the global default); a key that
+    /// matches no served pool fails startup like a typo'd `--weights`
+    /// key.
+    #[allow(clippy::too_many_arguments)]
     pub fn load(
         rt: &'rt Runtime,
         names: &[String],
@@ -171,6 +203,7 @@ impl<'rt> Registry<'rt> {
         migrate: bool,
         programs: &[String],
         steps_per_dispatch: usize,
+        steps_overrides: &[(String, usize)],
         diag_sample: usize,
     ) -> Result<Registry<'rt>> {
         if names.is_empty() {
@@ -181,6 +214,7 @@ impl<'rt> Registry<'rt> {
         }
         let mut entries = Vec::new();
         let mut by_name = HashMap::new();
+        let mut override_used = vec![false; steps_overrides.len()];
         for name in names {
             if by_name.contains_key(name.as_str()) {
                 bail!("model '{name}' listed twice");
@@ -229,7 +263,21 @@ impl<'rt> Registry<'rt> {
                 // and un-serving the pool
                 let kernel = crate::solvers::spec::kernel(program.solver_name())
                     .expect("for_solver implies a table row");
-                let mut k = steps_per_dispatch.clamp(1, kernel.max_steps_per_dispatch);
+                // per-pool k: "model/solver" key > "model" key > global
+                // (keys are only marked used once the pool actually
+                // serves, matching --weights "no served pool" semantics)
+                let exact = format!("{name}/{}", program.solver_name());
+                let mut want_k = steps_per_dispatch;
+                let mut matched: Vec<usize> = Vec::new();
+                for specificity in [name.as_str(), exact.as_str()] {
+                    for (oi, (key, v)) in steps_overrides.iter().enumerate() {
+                        if key == specificity {
+                            matched.push(oi);
+                            want_k = *v;
+                        }
+                    }
+                }
+                let mut k = want_k.clamp(1, kernel.max_steps_per_dispatch);
                 let ladder: Vec<usize> = loop {
                     let fused_step = fused_artifact(step, k);
                     let ladder: Vec<usize> = model
@@ -252,6 +300,9 @@ impl<'rt> Registry<'rt> {
                 if ladder.is_empty() {
                     continue; // pool absent even single-step: clean
                               // error at admit
+                }
+                for oi in matched {
+                    override_used[oi] = true;
                 }
                 let ladder = if migrate { ladder } else { vec![*ladder.last().unwrap()] };
                 let dim = model.meta.dim;
@@ -280,6 +331,18 @@ impl<'rt> Registry<'rt> {
             }
             by_name.insert(name.clone(), entries.len());
             entries.push(ModelEntry { model, process, pools });
+        }
+        if let Some(i) = override_used.iter().position(|u| !u) {
+            let key = &steps_overrides[i].0;
+            let pools: Vec<String> = entries
+                .iter()
+                .flat_map(|e| {
+                    e.pools
+                        .iter()
+                        .map(|p| format!("{}/{}", e.model.meta.name, p.program.solver_name()))
+                })
+                .collect();
+            bail!("--steps-per-dispatch key '{key}' matches no served pool (pools: {pools:?})");
         }
         Ok(Registry { entries, by_name })
     }

@@ -305,13 +305,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     ecfg.bucket = bucket;
     ecfg.migrate = migrate;
     ecfg.fused_buffers = cfg.bool_or("server.fused_buffers", true)?;
-    ecfg.steps_per_dispatch = args.usize_or(
-        "steps-per-dispatch",
-        cfg.usize_or("server.steps_per_dispatch", 1)?,
-    )?;
+    // global k plus optional per-pool overrides: "8", "vp=4", or
+    // "8,vp/adaptive=4" (':' also accepted as the key separator);
+    // override keys are validated against served pools at startup
+    let (steps_global, steps_overrides) =
+        qos::parse_steps_spec(&args.str_or("steps-per-dispatch", ""))?;
+    ecfg.steps_per_dispatch =
+        steps_global.unwrap_or(cfg.usize_or("server.steps_per_dispatch", 1)?);
     if ecfg.steps_per_dispatch == 0 {
-        bail!("--steps-per-dispatch must be >= 1");
+        bail!("server.steps_per_dispatch must be >= 1");
     }
+    ecfg.steps_overrides = steps_overrides;
     ecfg.max_queue_samples = cfg.usize_or("server.max_queue_samples", 4096)?;
     ecfg.trace_ring =
         args.usize_or("trace-ring", cfg.usize_or("server.trace_ring", 1024)?)?;

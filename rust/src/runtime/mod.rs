@@ -422,6 +422,12 @@ pub enum ExecArg<'a> {
     /// [`Model::exec_device`] output) — no staging cost at all. Only
     /// valid on the buffer path; the literal path has no device state.
     Device(&'a DeviceSlab),
+    /// Per-call f64 tensor (flat data + shape), uploaded fresh. The
+    /// fused adaptive fold's step controller evolves on device in f64
+    /// to match the host controller bit-for-bit, so its `t`/`h` lane
+    /// vectors and `[t_eps, safety, r]` constants cross as f64. Only
+    /// valid on the buffer path (like [`ExecArg::Device`]).
+    HostF64(&'a [f64], &'a [usize]),
 }
 
 /// A loaded score-model variant: metadata + device-ready parameters +
@@ -620,9 +626,10 @@ impl<'rt> Model<'rt> {
                 .iter()
                 .map(|a| match a {
                     ExecArg::Host(t) | ExecArg::Const(_, t) => Ok(*t),
-                    ExecArg::Device(_) => Err(anyhow!(
-                        "{program}: ExecArg::Device needs the buffer path \
-                         (literal execution has no device state)"
+                    ExecArg::Device(_) | ExecArg::HostF64(..) => Err(anyhow!(
+                        "{program}: ExecArg::Device/HostF64 need the buffer \
+                         path (literal execution has no device state and \
+                         stages f32 only)"
                     )),
                 })
                 .collect::<Result<_>>()?;
@@ -668,6 +675,11 @@ impl<'rt> Model<'rt> {
                     cached.push(slab.buf.clone());
                     order.push(Staged::Cached(cached.len() - 1));
                 }
+                ExecArg::HostF64(data, shape) => {
+                    fresh.push(self.rt.client.buffer_from_host_buffer(data, shape, None)?);
+                    up += data.len() as u64 * 8;
+                    order.push(Staged::Fresh(fresh.len() - 1));
+                }
             }
         }
         self.rt.note_h2d(up);
@@ -695,6 +707,7 @@ impl<'rt> Model<'rt> {
         let out_shape = match inputs.first() {
             Some(ExecArg::Host(t)) | Some(ExecArg::Const(_, t)) => t.shape.clone(),
             Some(ExecArg::Device(slab)) => slab.shape.clone(),
+            Some(ExecArg::HostF64(_, shape)) => shape.to_vec(),
             None => bail!("{program}: exec_device needs at least the x input"),
         };
         let start = Instant::now();
@@ -714,6 +727,17 @@ impl<'rt> Model<'rt> {
         let exec_s = t_exec.elapsed().as_secs_f64();
         self.rt.note_timeline(&self.meta.name, program, bucket, start, upload_s, exec_s, 0.0);
         Ok(DeviceSlab { buf: Rc::new(buf), shape: out_shape })
+    }
+
+    /// Bill score-network evaluations after the fact. The fused
+    /// adaptive dispatch passes `score_evals = 0` to [`exec_device`]
+    /// and folds the real cost here once the device attempt log is
+    /// downloaded — rejected attempts still run the score net (the
+    /// paper's NFE accounting), and the per-dispatch cost is
+    /// 2 × (deepest live lane's attempt count), exactly what the k = 1
+    /// per-batched-call billing sums to.
+    pub fn bill_score_evals(&self, n: u64) {
+        self.rt.note_score_evals(n);
     }
 }
 

@@ -333,6 +333,17 @@ fn handle_request(
                     Value::Arr(s.programs.iter().map(|p| Value::str(p.solver.clone())).collect()),
                 ),
                 ("binary", Value::Bool(true)),
+                // whether any adaptive pool dispatches the fused
+                // device-side accept/reject fold (k attempts per
+                // launch) rather than one attempt per dispatch
+                (
+                    "fused_adaptive",
+                    Value::Bool(
+                        s.pool_qos
+                            .iter()
+                            .any(|p| p.solver == "adaptive" && p.steps_per_dispatch > 1),
+                    ),
+                ),
             ])))
         }
         "stats" => {

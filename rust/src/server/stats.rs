@@ -245,6 +245,13 @@ impl StatsTree {
                         ),
                         Scalar::gauge("queue_depth", "pool_queue_depth", p.queue_depth as f64),
                         Scalar::gauge("active_lanes", "pool_active_lanes", p.active_lanes as f64),
+                        // resolved fused k (adaptive: Algorithm-1
+                        // attempts folded per launch)
+                        Scalar::gauge(
+                            "steps_per_dispatch",
+                            "pool_steps_per_dispatch",
+                            p.steps_per_dispatch as f64,
+                        ),
                         // per-pool step-time summary: quantile gauges +
                         // count/sum companions
                         Scalar::counter("step_count", "pool_step_seconds_count", p.step_count as f64),
@@ -593,6 +600,7 @@ mod tests {
                 occupied_lane_steps: 350,
                 queue_depth: 3,
                 active_lanes: 4,
+                steps_per_dispatch: 8,
                 step_count: 100,
                 step_sum_s: 1.5,
                 step_p50_s: 0.012,
@@ -759,6 +767,7 @@ mod tests {
             "gofast_pool_step_seconds{model=\"vp\",solver=\"adaptive\",quantile=\"0.5\"} 0.012",
             "gofast_pool_step_seconds_count{model=\"vp\",solver=\"adaptive\"} 100",
             "gofast_pool_step_seconds_sum{model=\"vp\",solver=\"adaptive\"} 1.5",
+            "gofast_pool_steps_per_dispatch{model=\"vp\",solver=\"adaptive\"} 8",
             "gofast_pool_adaptive_accepted_total{model=\"vp\",solver=\"adaptive\"} 343",
             "gofast_pool_adaptive_rejected_total{model=\"vp\",solver=\"adaptive\"} 7",
             "gofast_pool_adaptive_reject_rate{model=\"vp\",solver=\"adaptive\"} 0.02",

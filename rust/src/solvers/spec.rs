@@ -62,10 +62,13 @@ pub struct StepKernel {
     pub snr_input: bool,
     /// Kernel is only defined for VP processes (paper §4).
     pub vp_only: bool,
-    /// Largest `k` for which aot.py lowers a fused `k`-grid-nodes-per-
-    /// dispatch variant of this artifact ([`fused_artifact`]); 1 means
-    /// only the single-step kernel exists (adaptive stepping needs the
-    /// host accept/reject loop between nodes, so it stays at 1).
+    /// Largest `k` for which aot.py lowers a fused `k`-per-dispatch
+    /// variant of this artifact ([`fused_artifact`]); 1 means only the
+    /// single-step kernel exists. Fixed-step kernels fuse `k` grid
+    /// nodes; the adaptive kernel fuses `k` *attempts* of Algorithm 1
+    /// (the accept/reject fold and step-size controller run on device,
+    /// and the host replays the decisions from the returned attempt
+    /// log).
     pub max_steps_per_dispatch: usize,
 }
 
@@ -82,7 +85,7 @@ pub const STEP_KERNELS: &[StepKernel] = &[
         noise_inputs: 1,
         snr_input: false,
         vp_only: false,
-        max_steps_per_dispatch: 1,
+        max_steps_per_dispatch: 8,
     },
     StepKernel {
         solver: "em",
@@ -512,10 +515,10 @@ mod tests {
         assert_eq!((pc.noise_inputs, pc.snr_input, pc.vp_only), (2, true, false));
         assert!(kernel("ode").is_none());
         assert!(kernel_for_artifact("score").is_none());
-        // fused-dispatch facts: adaptive stays single-step, fixed-step
-        // kernels fuse, and the name round-trips through the helpers
-        assert_eq!(kernel("adaptive").unwrap().max_steps_per_dispatch, 1);
-        for name in ["em", "ddim", "pc"] {
+        // fused-dispatch facts: every served kernel fuses (adaptive via
+        // the device-side accept/reject fold), and the name round-trips
+        // through the helpers
+        for name in ["adaptive", "em", "ddim", "pc"] {
             let k = kernel(name).unwrap();
             assert!(k.max_steps_per_dispatch >= 8, "{name}");
             let fused = fused_artifact(k.artifact, 8);

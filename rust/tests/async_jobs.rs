@@ -243,4 +243,7 @@ fn hello_reports_version_ops_and_capabilities() {
     assert!(models.contains(&"vp"), "{models:?}");
     assert!(!h.get("solvers").unwrap().as_arr().unwrap().is_empty());
     assert!(h.get("binary").unwrap().as_bool().unwrap());
+    // fused-adaptive capability is always advertised (true only when an
+    // adaptive pool dispatches the device-side fold at k > 1)
+    assert!(h.get("fused_adaptive").is_some(), "hello must advertise fused_adaptive");
 }

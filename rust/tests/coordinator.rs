@@ -578,6 +578,160 @@ fn fused_pc_dispatch_is_bit_identical() {
     fused_dispatch_case(ServingSolver::Pc { steps: 19, snr: Some(0.17) }, 2, 11);
 }
 
+/// The adaptive tentpole acceptance criterion: the device-side
+/// accept/reject fold is a pure amortisation of Algorithm 1. Images,
+/// NFE, score_evals and rejections are bit-identical to k = 1 —
+/// rejected attempts still run the score net and are still billed,
+/// folded from the device attempt log — while dispatches and
+/// device->host traffic drop (the fold downloads 4k log scalars per
+/// lane instead of 2 full state rows per attempt).
+#[test]
+fn fused_adaptive_dispatch_is_bit_identical() {
+    let Some(dir) = common::artifacts() else { return };
+    if common::program_rungs(&dir, "adaptive_stepk8").is_empty() {
+        eprintln!("skipping: no adaptive_stepk8 artifacts at or below the engine bucket");
+        return;
+    }
+    let run = |k: usize| {
+        let mut cfg = EngineConfig::new(dir.clone(), "vp");
+        cfg.bucket = common::engine_bucket(&dir);
+        cfg.steps_per_dispatch = k;
+        let engine = Engine::start(cfg).unwrap();
+        let c = engine.client();
+        let r = c.generate_with("", ServingSolver::Adaptive, 3, 0.1, 42).unwrap();
+        (r, c.stats().unwrap())
+    };
+    let (r1, s1) = run(1);
+    let (r8, s8) = run(8);
+    assert_eq!(r8.images, r1.images, "adaptive fold altered samples");
+    assert_eq!(r8.nfe, r1.nfe, "adaptive fold altered NFE");
+    assert_eq!(s8.score_evals, s1.score_evals, "attempt billing drifted from k=1");
+    assert_eq!(s8.rejections, s1.rejections, "accept/reject outcomes drifted from k=1");
+    assert!(s1.rejections > 0, "case must exercise rejected attempts");
+    assert!(
+        s8.dispatches < s1.dispatches,
+        "adaptive k=8 did not amortise dispatches ({} vs {})",
+        s8.dispatches,
+        s1.dispatches
+    );
+    assert!(
+        s8.bytes_d2h < s1.bytes_d2h,
+        "adaptive k=8 did not shrink device->host traffic ({} vs {} bytes)",
+        s8.bytes_d2h,
+        s1.bytes_d2h
+    );
+}
+
+/// Bucket migration under the fused adaptive fold: a live lane crossing
+/// widths carries its full tuple `(t, h, eps_rel, nfe, rng, x, xprev)`
+/// through the slab download -> host row remap -> lazy re-upload
+/// bit-exactly. A tight-tolerance lane runs alone (the pool shrinks
+/// around it), a loose request grows it back, and the migrating k=8
+/// engine must match the pinned k=1 engine on samples, NFE and
+/// rejection counts.
+#[test]
+fn fused_adaptive_migration_matches_pinned_pool() {
+    let Some(dir) = common::artifacts() else { return };
+    let bucket = common::engine_bucket(&dir);
+    if common::program_rungs(&dir, "adaptive_step").len() < 2 {
+        eprintln!("skipping: needs >= 2 adaptive_step rungs at or below the engine bucket");
+        return;
+    }
+    if common::program_rungs(&dir, "adaptive_stepk8").len() < 2 {
+        eprintln!("skipping: needs >= 2 adaptive_stepk8 rungs (rebuild artifacts)");
+        return;
+    }
+    let run = |migrate: bool, k: usize| {
+        let mut cfg = EngineConfig::new(dir.clone(), "vp");
+        cfg.bucket = bucket;
+        cfg.migrate = migrate;
+        cfg.steps_per_dispatch = k;
+        cfg.diag_sample = 1; // trace every lane: markers must survive remap
+        let engine = Engine::start(cfg).unwrap();
+        let c_bg = engine.client();
+        let long = std::thread::spawn(move || {
+            c_bg.generate_with("", ServingSolver::Adaptive, 1, 0.01, 41).unwrap()
+        });
+        // wait until the long lane is live so the short request
+        // co-batches with (and then outlives-into) a width change
+        let c = engine.client();
+        while c.stats().unwrap().active_slots == 0 {
+            std::thread::yield_now();
+        }
+        let short = c.generate_with("", ServingSolver::Adaptive, 2, 0.5, 77).unwrap();
+        let long = long.join().unwrap();
+        let stats = c.stats().unwrap();
+        let diag = c.diag(gofast::coordinator::DiagQuery::default()).unwrap();
+        (long, short, stats, diag)
+    };
+    let (long_m, short_m, stats_m, diag_m) = run(true, 8);
+    let (long_f, short_f, stats_f, _) = run(false, 1);
+    assert_eq!(long_m.images, long_f.images, "migration altered the tight lane's trajectory");
+    assert_eq!(long_m.nfe, long_f.nfe);
+    assert_eq!(short_m.images, short_f.images, "migration altered the loose lanes");
+    assert_eq!(short_m.nfe, short_f.nfe);
+    assert_eq!(stats_m.rejections, stats_f.rejections, "migration altered accept/reject");
+    let ps = stats_m.programs.iter().find(|p| p.solver == "adaptive").expect("program stats");
+    let narrow: u64 =
+        ps.steps_per_bucket.iter().filter(|(b, _)| *b < bucket).map(|(_, s)| *s).sum();
+    assert!(narrow > 0, "no adaptive steps below max bucket: {:?}", ps.steps_per_bucket);
+    assert!(ps.migrations_up + ps.migrations_down > 0, "adaptive pool never switched width");
+    // sampled-trace markers must follow lanes through `PoolDiag::remap`:
+    // every trace closes cleanly, and the tight lane's trace covers its
+    // whole trajectory — one record per Algorithm-1 attempt (nfe counts
+    // 2 evals per attempt plus the final denoise)
+    let pool = diag_m
+        .pools
+        .iter()
+        .find(|p| p.solver == "adaptive" && p.model == "vp")
+        .expect("adaptive diag pool");
+    assert_eq!(pool.traces.len(), 3, "every lane must carry a trace");
+    assert!(pool.traces.iter().all(|t| t.done), "a trace lost its lane across migration");
+    let longest = pool.traces.iter().map(|t| t.steps.len() as u64).max().unwrap();
+    assert_eq!(longest, (long_m.nfe[0] - 1) / 2, "tight lane's trace is truncated");
+}
+
+/// Per-pool `--steps-per-dispatch` overrides: keyed entries resolve to
+/// their pools (model/solver key wins over the global default), pools
+/// without an override keep the global, and a key matching no served
+/// pool fails startup like a typo'd `--weights` key.
+#[test]
+fn steps_per_dispatch_overrides_resolve_per_pool() {
+    let Some(dir) = common::artifacts() else { return };
+    if common::program_rungs(&dir, "adaptive_stepk8").is_empty()
+        || common::program_rungs(&dir, "em_stepk4").is_empty()
+    {
+        eprintln!("skipping: needs fused adaptive_stepk8 and em_stepk4 artifacts");
+        return;
+    }
+    let bucket = common::engine_bucket(&dir);
+    let mut cfg = EngineConfig::new(dir.clone(), "vp");
+    cfg.bucket = bucket;
+    cfg.steps_per_dispatch = 1;
+    // ':' is the CLI-friendly alias for '/', normalized by the parser
+    cfg.steps_overrides = qos::parse_steps_spec("vp:adaptive=8,vp/em=4").unwrap().1;
+    let engine = Engine::start(cfg).unwrap();
+    let stats = engine.client().stats().unwrap();
+    let k_of = |solver: &str| {
+        stats.pool_qos.iter().find(|p| p.solver == solver).map(|p| p.steps_per_dispatch)
+    };
+    assert_eq!(k_of("adaptive"), Some(8), "adaptive override must win over the global");
+    assert_eq!(k_of("em"), Some(4), "em override must win over the global");
+    for solver in ["ddim", "pc"] {
+        if let Some(k) = k_of(solver) {
+            assert_eq!(k, 1, "{solver} pool must keep the global default");
+        }
+    }
+    let mut bad = EngineConfig::new(dir, "vp");
+    bad.bucket = bucket;
+    bad.steps_overrides = qos::parse_steps_spec("nope=4").unwrap().1;
+    let err = match Engine::start(bad) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("typo'd steps-per-dispatch key must fail startup"),
+    };
+    assert!(err.contains("matches no served pool"), "{err}");
+}
+
 /// A requested steps-per-dispatch with no lowered fused variant (k = 5;
 /// aot.py lowers FUSED_STEPS = 4, 8) resolves down to the largest
 /// available k instead of silently emptying the ladder and un-serving

@@ -1,14 +1,16 @@
 #!/usr/bin/env python3
 """Dispatch-amortisation regression gates for benches/perf.rs part 4.
 
-The perf bench's dispatch part (`cargo bench --bench perf`) runs the same
-em request through engines at steps-per-dispatch k in {1, 4, 8} and
-writes bench_out/perf_dispatch.json; this script turns it into a CI gate
-(mirroring tools/check_qos.py):
+The perf bench's dispatch part (`cargo bench --bench perf`) runs the
+same em and adaptive requests through engines at steps-per-dispatch
+k in {1, 4, 8} and writes bench_out/perf_dispatch.json; this script
+turns it into a CI gate (mirroring tools/check_qos.py):
 
   * equivalence: every k must produce bit-identical samples to k = 1
-    (outputs_match) and the identical per-sample NFE / total score-eval
-    budget — fusing amortises launches, it must never change the math.
+    (outputs_match), the identical per-sample NFE / total score-eval
+    budget, and — for the adaptive fold, whose rejected attempts still
+    run the score net — the identical rejection count. Fusing amortises
+    launches, it must never change the math or the billing.
   * amortisation: at k > 1 dispatches must fall roughly k-fold —
     dispatches(k) <= dispatches(1) / k * (1 + PERF_DISPATCH_TOL, env,
     default 0.10) + PERF_DISPATCH_SLACK (env, default 16: denoise calls
@@ -16,8 +18,13 @@ writes bench_out/perf_dispatch.json; this script turns it into a CI gate
     of k) — and must never increase.
   * transfers: device-resident lane state must shrink both transfer
     directions — bytes_h2d(k) < bytes_h2d(1) and
-    bytes_d2h(k) < bytes_d2h(1) (the per-step x round-trip is the bulk
-    of k = 1 traffic).
+    bytes_d2h(k) < bytes_d2h(1) (for fixed-step pools the per-step x
+    round-trip is the bulk of k = 1 traffic; for the adaptive fold the
+    per-attempt state download is replaced by the 4k-scalar-per-lane
+    attempt log).
+
+The JSON carries one entry per solver under "sweeps"; the pre-fold
+single-sweep shape ("sweep" at top level) is still accepted.
 
 Usage: python3 tools/check_perf.py bench_out/perf_dispatch.json
 Exits non-zero with a per-violation report on failure.
@@ -28,33 +35,30 @@ import os
 import sys
 
 
-def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "bench_out/perf_dispatch.json"
-    tol = float(os.environ.get("PERF_DISPATCH_TOL", "0.10"))
-    slack = float(os.environ.get("PERF_DISPATCH_SLACK", "16"))
-    with open(path) as f:
-        doc = json.load(f)
+def check_sweep(doc: dict, tol: float, slack: float) -> list[str]:
     errors = []
-
+    solver = doc.get("solver", "?")
     sweep = {int(e.get("k", 0)): e for e in doc.get("sweep", [])}
     base = sweep.get(1)
     if base is None:
-        errors.append("sweep: missing the k=1 baseline entry")
+        errors.append(f"{solver}: missing the k=1 baseline entry")
     fused = sorted(k for k in sweep if k > 1)
     if not fused:
-        errors.append(f"sweep: no fused entries (got k={sorted(sweep)})")
+        errors.append(f"{solver}: no fused entries (got k={sorted(sweep)})")
 
     if base is not None:
         for k in fused:
             e = sweep[k]
-            tag = f"k={k}"
+            tag = f"{solver} k={k}"
             if not e.get("outputs_match", False):
                 errors.append(f"{tag}: samples not bit-identical to k=1")
-            for key in ["nfe_total", "score_evals"]:
+            for key in ["nfe_total", "score_evals", "rejections"]:
+                if key not in base and key not in e:
+                    continue
                 if e.get(key) != base.get(key):
                     errors.append(
                         f"{tag}: {key} changed ({base.get(key)} -> {e.get(key)}); "
-                        f"fusing must not change the NFE budget"
+                        f"fusing must not change the NFE/attempt accounting"
                     )
             d1, dk = base.get("dispatches", 0), e.get("dispatches", 0)
             bound = d1 / k * (1 + tol) + slack
@@ -73,21 +77,46 @@ def main() -> int:
                         f"round-tripping instead of staying device-resident"
                     )
 
-    print(
-        f"[check_perf] {path}: solver {doc.get('solver')} x "
-        f"{doc.get('samples')} samples, k={sorted(sweep)}, "
-        f"tol={tol}, slack={slack}"
-    )
     if base is not None:
         for k in fused:
             e = sweep[k]
             d1 = max(base.get("dispatches", 0), 1)
             print(
-                f"[check_perf] k={k}: dispatches {base.get('dispatches')} -> "
-                f"{e.get('dispatches')} ({d1 / max(e.get('dispatches', 0), 1):.1f}x), "
+                f"[check_perf] {solver} k={k}: dispatches {base.get('dispatches')} "
+                f"-> {e.get('dispatches')} "
+                f"({d1 / max(e.get('dispatches', 0), 1):.1f}x), "
                 f"bytes/sample {base.get('bytes_per_sample', 0):.0f} -> "
                 f"{e.get('bytes_per_sample', 0):.0f}"
             )
+    return errors
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench_out/perf_dispatch.json"
+    tol = float(os.environ.get("PERF_DISPATCH_TOL", "0.10"))
+    slack = float(os.environ.get("PERF_DISPATCH_SLACK", "16"))
+    with open(path) as f:
+        doc = json.load(f)
+
+    # one sweep per solver; the pre-fold shape held a single em sweep
+    # at the top level
+    sweeps = doc.get("sweeps")
+    if sweeps is None:
+        sweeps = [doc]
+
+    print(
+        f"[check_perf] {path}: solvers "
+        f"{[d.get('solver') for d in sweeps]}, tol={tol}, slack={slack}"
+    )
+    errors = []
+    solvers = set()
+    for d in sweeps:
+        solvers.add(str(d.get("solver", "?")).split(":")[0])
+        errors.extend(check_sweep(d, tol, slack))
+    # the tentpole gate: a multi-sweep file must cover the adaptive fold
+    if len(sweeps) > 1 and "adaptive" not in solvers:
+        errors.append(f"sweeps missing the adaptive fold (got {sorted(solvers)})")
+
     if errors:
         for e in errors:
             print(f"[check_perf] FAIL: {e}", file=sys.stderr)

@@ -65,9 +65,11 @@ fi
 
 # Dispatch-amortisation gates: when the perf bench's k-sweep has run
 # (`cargo bench --bench perf` in the CI artifacts job), enforce
-# bit-identical samples and unchanged NFE across steps-per-dispatch
-# k in {1,4,8}, roughly k-fold fewer dispatches, and reduced
-# host<->device bytes on its JSON.
+# bit-identical samples, unchanged NFE/score_evals and — for the
+# adaptive accept/reject fold — unchanged rejections across
+# steps-per-dispatch k in {1,4,8}, roughly k-fold fewer dispatches,
+# and reduced host<->device bytes on its JSON (one sweep each for the
+# em and adaptive pools).
 if [ -f bench_out/perf_dispatch.json ]; then
   python3 tools/check_perf.py bench_out/perf_dispatch.json
 fi
